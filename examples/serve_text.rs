@@ -1,0 +1,112 @@
+//! End-to-end serving driver (the repo's headline e2e example): starts the
+//! full stack (engine thread → coordinator → TCP server), drives it with a
+//! multi-threaded client load generator issuing WS-DFM text requests, and
+//! reports latency percentiles + throughput. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example serve_text -- [n_clients] [reqs_per_client] [steps]
+//! ```
+
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+use wsfm::config::WsfmConfig;
+use wsfm::coordinator::Service;
+use wsfm::runtime::{EngineHandle, Manifest};
+use wsfm::server::{Client, TcpServer};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let reqs_per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(128);
+
+    // Boot the full stack.
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let engine = EngineHandle::spawn(manifest.clone())?;
+    let mut cfg = WsfmConfig::default();
+    cfg.batcher.max_batch = 8; // text8 largest compiled batch is 32
+    cfg.batcher.max_wait_us = 5_000;
+    let service = Service::start(engine.clone(), manifest.clone(), cfg);
+    let server = TcpServer::bind("127.0.0.1:0", service.clone(), manifest)?;
+    let addr = server.local_addr.to_string();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    println!("serving on {addr}; warming up the text8 WS pipeline...");
+
+    // Warm-up: compile the artifacts before measuring.
+    {
+        let mut c = Client::connect(&addr)?;
+        c.generate("text8", "ws_t080", "lstm", 1, 0.8, steps, 0, false)?;
+    }
+
+    // Load generation: n_clients threads, each issuing sequential requests.
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for client_id in 0..n_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<(u64, u64, usize)>> {
+            let mut client = Client::connect(&addr)?;
+            let mut stats = Vec::new();
+            for i in 0..reqs_per_client {
+                let t = Instant::now();
+                let reply = client.generate(
+                    "text8",
+                    "ws_t080",
+                    "lstm",
+                    2,
+                    0.8,
+                    steps,
+                    (client_id * 1000 + i) as u64,
+                    true,
+                )?;
+                stats.push((t.elapsed().as_micros() as u64, reply.queue_us, reply.nfe));
+            }
+            Ok(stats)
+        }));
+    }
+
+    let mut latencies = Vec::new();
+    let mut queue_waits = Vec::new();
+    let mut nfes = Vec::new();
+    for h in handles {
+        for (lat, qw, nfe) in h.join().unwrap()? {
+            latencies.push(lat);
+            queue_waits.push(qw);
+            nfes.push(nfe);
+        }
+    }
+    let wall = t_start.elapsed();
+
+    latencies.sort_unstable();
+    let pct = |p: f64| latencies[((p / 100.0) * (latencies.len() - 1) as f64).round() as usize];
+    let total_reqs = latencies.len();
+    let total_samples = total_reqs * 2;
+    println!("\n=== e2e serving results (text8, WS-DFM t0=0.8, {steps} cold steps) ===");
+    println!("clients={n_clients} requests={total_reqs} samples={total_samples}");
+    println!("NFE per request: {} (guaranteed ceil({steps}*0.2))", nfes[0]);
+    println!(
+        "request latency: p50={:.1}ms p95={:.1}ms max={:.1}ms",
+        pct(50.0) as f64 / 1e3,
+        pct(95.0) as f64 / 1e3,
+        *latencies.last().unwrap() as f64 / 1e3
+    );
+    println!(
+        "mean queue wait: {:.1}ms",
+        queue_waits.iter().sum::<u64>() as f64 / queue_waits.len() as f64 / 1e3
+    );
+    println!(
+        "throughput: {:.2} req/s, {:.2} samples/s (wall {:.2}s)",
+        total_reqs as f64 / wall.as_secs_f64(),
+        total_samples as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
+    );
+    println!("\nserver metrics:\n{}", service.metrics.report());
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join().unwrap();
+    service.shutdown();
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,487 @@
+"""AOT build pipeline: train every model, lower to HLO text, emit artifacts.
+
+This is the single build-time entrypoint (``make artifacts``). It:
+
+1. generates the synthetic datasets/corpora and writes them into
+   ``artifacts/`` (the Rust evaluators consume the same data),
+2. trains the cold DFM denoiser per domain, the draft models (LSTM / PCA),
+   and the WS-DFM fine-tunes per (draft, t0) configuration,
+3. lowers each *inference* entrypoint (fused denoise+update step; draft
+   samplers) to HLO **text** per compiled batch size — text, not serialized
+   protos: jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+   rejects, while the text parser reassigns ids (see /opt/xla-example),
+4. writes one ``<name>.meta.json`` per artifact plus a global
+   ``manifest.json`` the Rust runtime indexes.
+
+Model weights are baked into the HLO as constants (closure capture at
+lowering time), so the served artifact is fully self-contained — the request
+path transfers only tokens and three scalars per step.
+
+Build profiles: ``--profile fast`` (default; minutes on one CPU core) and
+``--profile full`` (4x training budgets). A content hash over the python
+sources + profile short-circuits rebuilds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, nn, refine, train
+from .kernels.dfm_update import dfm_update
+from .models import dit, lstm as lstm_model, mlp, pca
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Build configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Profile:
+    name: str
+    mult: float  # multiplies training step counts
+
+    def steps(self, base: int) -> int:
+        return max(10, int(base * self.mult))
+
+
+PROFILES = {"fast": Profile("fast", 1.0), "full": Profile("full", 4.0)}
+
+# Paper Table 1 WS configurations: draft kind -> t0 list.
+TWO_MOONS_WS = {
+    "good": [0.95, 0.9, 0.8],
+    "fair": [0.8, 0.5],
+    "poor": [0.8, 0.5, 0.35],
+}
+TEXT_WS_T0 = [0.8, 0.5]       # Tables 2 & 3
+IMG_WS_T0 = [0.8, 0.65, 0.5]  # Table 4
+
+BATCH_SIZES = {
+    "two_moons": [1, 64, 1024],
+    "text8": [1, 8, 32],
+    "wiki": [1, 8, 16],
+    "img_gray": [1, 8, 16],
+    "img_color": [1, 8],
+}
+
+DOMAIN_SHAPES = {
+    # (seq_len, vocab)
+    "two_moons": (2, 128),
+    "text8": (64, 27),
+    "wiki": (32, 256),
+    "img_gray": (256, 32),
+    "img_color": (192, 32),
+}
+
+
+# ---------------------------------------------------------------------------
+# HLO export
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange gotcha)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+@dataclass
+class Emitter:
+    out_dir: Path
+    artifacts: list[dict] = field(default_factory=list)
+
+    def emit(self, name: str, lowered, inputs: list[dict], outputs: list[dict], extra: dict | None = None) -> None:
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        (self.out_dir / hlo_file).write_text(hlo)
+        meta = {
+            "name": name,
+            "hlo_file": hlo_file,
+            "inputs": inputs,
+            "outputs": outputs,
+            "hlo_bytes": len(hlo),
+        }
+        if extra:
+            meta.update(extra)
+        (self.out_dir / f"{name}.meta.json").write_text(json.dumps(meta, indent=1))
+        self.artifacts.append(meta)
+        print(f"  emitted {name} ({len(hlo) / 1e6:.2f} MB hlo)", flush=True)
+
+
+def spec(shape: list[int], dtype: str, name: str) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def export_step_artifacts(em: Emitter, domain: str, tag: str, apply_fn, params, extra: dict) -> list[str]:
+    """Lower the fused denoise+update step for every compiled batch size.
+
+    Step signature (uniform across every domain/t0 — the Rust runtime
+    depends on this): ``(x_t i32[B,N], t f32[], h f32[], warp f32[]) ->
+    (probs f32[B,N,V],)``.
+    """
+    n, v = DOMAIN_SHAPES[domain]
+    names = []
+
+    def step(x_t, t, h, warp):
+        tb = jnp.full((x_t.shape[0],), t, jnp.float32)
+        logits = apply_fn(params, x_t, tb)
+        return (dfm_update(logits, x_t, t, h, warp, interpret=True),)
+
+    for b in BATCH_SIZES[domain]:
+        name = f"{domain}_{tag}_step_b{b}"
+        lowered = jax.jit(step).lower(
+            SDS((b, n), jnp.int32), SDS((), jnp.float32), SDS((), jnp.float32), SDS((), jnp.float32)
+        )
+        em.emit(
+            name,
+            lowered,
+            inputs=[
+                spec([b, n], "s32", "x_t"),
+                spec([], "f32", "t"),
+                spec([], "f32", "h"),
+                spec([], "f32", "warp"),
+            ],
+            outputs=[spec([b, n, v], "f32", "probs")],
+            extra={"domain": domain, "kind": "step", "tag": tag, "batch": b, "seq_len": n, "vocab": v, **extra},
+        )
+        names.append(name)
+    return names
+
+
+def export_lstm_draft(em: Emitter, domain: str, params, temperature: float) -> list[str]:
+    n, v = DOMAIN_SHAPES[domain]
+    names = []
+    for b in BATCH_SIZES[domain]:
+        name = f"{domain}_draft_lstm_b{b}"
+        lowered = jax.jit(
+            lambda g: (lstm_model.sample(params, g, temperature=temperature),)
+        ).lower(SDS((b, n, v), jnp.float32))
+        em.emit(
+            name,
+            lowered,
+            inputs=[spec([b, n, v], "f32", "gumbel")],
+            outputs=[spec([b, n], "s32", "tokens")],
+            extra={"domain": domain, "kind": "draft", "draft": "lstm", "batch": b, "seq_len": n, "vocab": v},
+        )
+        names.append(name)
+    return names
+
+
+def export_pca_draft(em: Emitter, domain: str, pca_params, k: int) -> list[str]:
+    n, v = DOMAIN_SHAPES[domain]
+    names = []
+    for b in BATCH_SIZES[domain]:
+        name = f"{domain}_draft_pca_b{b}"
+        lowered = jax.jit(lambda z: (pca.sample(pca_params, z, v),)).lower(SDS((b, k), jnp.float32))
+        em.emit(
+            name,
+            lowered,
+            inputs=[spec([b, k], "f32", "z")],
+            outputs=[spec([b, n], "s32", "tokens")],
+            extra={"domain": domain, "kind": "draft", "draft": "pca", "batch": b, "seq_len": n, "vocab": v, "latent_dim": k},
+        )
+        names.append(name)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Domain builders
+# ---------------------------------------------------------------------------
+
+
+def build_two_moons(em: Emitter, prof: Profile, seed: int = 0) -> dict:
+    print("[two_moons] building", flush=True)
+    rng = np.random.default_rng(seed)
+    n_tok, vocab = DOMAIN_SHAPES["two_moons"]
+    dataset = data.two_moons(8192, rng)
+
+    key = jax.random.PRNGKey(seed)
+    params = mlp.init(key, vocab=vocab, hidden=128, n_tokens=n_tok)
+    apply_fn = lambda p, x, t: mlp.apply(p, x, t)
+
+    cold = train.train_dfm(
+        apply_fn, params, train.pairs_noise_data(dataset, vocab, batch=256),
+        steps=prof.steps(800), lr=3e-4, t0=0.0, seed=seed, name="tm-cold",
+    )
+    export_step_artifacts(em, "two_moons", "cold", apply_fn, cold.params,
+                          {"t0": 0.0, "train_loss": [cold.loss_start, cold.loss_end]})
+
+    ws_tags: dict[str, list[dict]] = {}
+    for kind, t0s in TWO_MOONS_WS.items():
+        drafts = data.two_moons_draft(kind, 4096, rng)
+        # Paper §4.3 recipe: k-NN refinement plus random real injections so
+        # the coupling's right marginal approaches P1 (footnote 2). Pure
+        # NN-1 projection barely improves the marginal (measured SKL 1.47
+        # for the fair draft vs 0.37 with k=5 + 10 injections) and WS-DFM
+        # converges to the coupling marginal, so injection is load-bearing.
+        k_inject = {"good": 10, "fair": 10, "poor": 20}[kind]
+        x_src, x_1 = refine.knn_pairs(drafts, dataset, k=5, k_inject=k_inject, rng=rng)
+        for t0 in t0s:
+            tag = f"ws_{kind}_t{int(round(t0 * 100)):03d}"
+            ws = train.train_dfm(
+                apply_fn, cold.params, train.pairs_from_arrays(x_src, x_1, batch=256),
+                steps=prof.steps(1200), lr=2e-4, t0=t0, seed=seed + 1, name=f"tm-{tag}",
+            )
+            export_step_artifacts(em, "two_moons", tag, apply_fn, ws.params,
+                                  {"t0": t0, "draft": kind, "train_loss": [ws.loss_start, ws.loss_end]})
+            ws_tags.setdefault(kind, []).append({"t0": t0, "tag": tag})
+
+    return {
+        "seq_len": n_tok, "vocab": vocab, "grid": data.TWO_MOONS_GRID,
+        "draft_specs": data.DRAFT_SPECS, "ws": ws_tags, "cold_steps": 20,
+    }
+
+
+def _build_text_domain(
+    em: Emitter, prof: Profile, domain: str, corpus_tokens: np.ndarray,
+    seed: int, lstm_dim: int, refiner_order: int, dit_cfg: dict,
+) -> dict:
+    n, vocab = DOMAIN_SHAPES[domain]
+    seqs = data.text8_sequences(corpus_tokens, n, 4096, np.random.default_rng(seed))
+
+    key = jax.random.PRNGKey(seed)
+    params = dit.init(key, vocab=vocab, seq_len=n, **dit_cfg)
+    heads = dit_cfg.get("heads", 4)
+    train_apply = lambda p, x, t: dit.apply(p, x, t, use_pallas=False, heads=heads)
+    serve_apply = lambda p, x, t: dit.apply(p, x, t, use_pallas=True, heads=heads)
+
+    cold = train.train_dfm(
+        train_apply, params, train.pairs_noise_data(seqs, vocab, batch=32),
+        steps=prof.steps(400), lr=3e-4, t0=0.0, seed=seed, name=f"{domain}-cold",
+    )
+    export_step_artifacts(em, domain, "cold", serve_apply, cold.params,
+                          {"t0": 0.0, "train_loss": [cold.loss_start, cold.loss_end]})
+
+    # LSTM draft model.
+    lstm_params = lstm_model.init(jax.random.PRNGKey(seed + 7), vocab=vocab, dim=lstm_dim)
+    lres = train.train_lstm(lstm_params, seqs, steps=prof.steps(500), lr=2e-3, batch=32,
+                            seed=seed, name=f"{domain}-lstm")
+    export_lstm_draft(em, domain, lres.params, temperature=1.0)
+
+    # Draft sampling + oracle refinement -> WS training pairs.
+    n_pairs = 768 if prof.name == "fast" else 4096
+    sample_b = 64
+    gkey = jax.random.PRNGKey(seed + 11)
+    sample_jit = jax.jit(lambda g: lstm_model.sample(lres.params, g))
+    chunks = []
+    for _ in range(0, n_pairs, sample_b):
+        gkey, sub = jax.random.split(gkey)
+        g = jax.random.gumbel(sub, (sample_b, n, vocab), jnp.float32)
+        chunks.append(np.asarray(sample_jit(g)))
+    drafts = np.concatenate(chunks)[:n_pairs]
+
+    lm = refine.NgramLM(order=refiner_order, vocab=vocab).fit(corpus_tokens[:200_000])
+    refined = refine.refine_text_batch(drafts, lm, seed=seed + 13)
+    x_src, x_1 = refine.inject_real(drafts, refined, seqs, 0.15, np.random.default_rng(seed + 17))
+
+    ws_tags = []
+    for t0 in TEXT_WS_T0:
+        tag = f"ws_t{int(round(t0 * 100)):03d}"
+        ws = train.train_dfm(
+            train_apply, cold.params, train.pairs_from_arrays(x_src, x_1, batch=32),
+            steps=prof.steps(200), lr=3e-5, t0=t0, seed=seed + 1, name=f"{domain}-{tag}",
+        )
+        export_step_artifacts(em, domain, tag, serve_apply, ws.params,
+                              {"t0": t0, "draft": "lstm", "train_loss": [ws.loss_start, ws.loss_end]})
+        ws_tags.append({"t0": t0, "tag": tag})
+
+    return {"seq_len": n, "vocab": vocab, "ws": ws_tags, "lstm_dim": lstm_dim,
+            "lstm_params": nn.count_params(lres.params), "dit_params": nn.count_params(cold.params)}
+
+
+def build_text8(em: Emitter, prof: Profile, seed: int = 1) -> dict:
+    print("[text8] building", flush=True)
+    n_chars = 400_000 if prof.name == "fast" else 2_000_000
+    corpus = data.text8_corpus(n_chars, seed=seed)
+    eval_corpus = data.text8_corpus(n_chars // 4, seed=seed + 1000)
+    (em.out_dir / "text8_corpus.txt").write_text(corpus)
+    (em.out_dir / "text8_eval.txt").write_text(eval_corpus)
+    info = _build_text_domain(
+        em, prof, "text8", data.text8_encode(corpus),
+        seed=seed, lstm_dim=128, refiner_order=4,
+        dit_cfg={"dim": 128, "heads": 4, "blocks": 2},
+    )
+    info.update({"charset": data.TEXT8_CHARS, "corpus_file": "text8_corpus.txt", "eval_file": "text8_eval.txt"})
+    return info
+
+
+def build_wiki(em: Emitter, prof: Profile, seed: int = 2) -> dict:
+    print("[wiki] building", flush=True)
+    n_tokens = 300_000 if prof.name == "fast" else 1_500_000
+    corpus = data.wiki_corpus(n_tokens, seed=seed)
+    eval_corpus = data.wiki_corpus(n_tokens // 4, seed=seed + 1000)
+    corpus.astype(np.int32).tofile(em.out_dir / "wiki_corpus.bin")
+    eval_corpus.astype(np.int32).tofile(em.out_dir / "wiki_eval.bin")
+    (em.out_dir / "wiki_vocab.json").write_text(json.dumps(data.wiki_vocab()))
+    info = _build_text_domain(
+        em, prof, "wiki", corpus,
+        seed=seed, lstm_dim=128, refiner_order=3,
+        dit_cfg={"dim": 128, "heads": 4, "blocks": 2},
+    )
+    info.update({"vocab_file": "wiki_vocab.json", "corpus_file": "wiki_corpus.bin", "eval_file": "wiki_eval.bin"})
+    return info
+
+
+def _build_image_domain(em: Emitter, prof: Profile, domain: str, seed: int) -> dict:
+    n, vocab = DOMAIN_SHAPES[domain]
+    rng = np.random.default_rng(seed)
+    n_train = 4096 if prof.name == "fast" else 16384
+    if domain == "img_gray":
+        dataset, labels = data.shapes_gray(n_train, rng)
+        side, channels = data.GRAY_SIDE, 1
+    else:
+        dataset, labels = data.shapes_color(n_train, rng)
+        side, channels = data.COLOR_SIDE, 3
+    dataset.astype(np.uint8).tofile(em.out_dir / f"{domain}_train.bin")
+    labels.astype(np.uint8).tofile(em.out_dir / f"{domain}_labels.bin")
+
+    key = jax.random.PRNGKey(seed)
+    params = dit.init(key, vocab=vocab, seq_len=n, dim=128, heads=4, blocks=2)
+    train_apply = lambda p, x, t: dit.apply(p, x, t, use_pallas=False, heads=4)
+    serve_apply = lambda p, x, t: dit.apply(p, x, t, use_pallas=True, heads=4)
+
+    cold = train.train_dfm(
+        train_apply, params, train.pairs_noise_data(dataset, vocab, batch=8),
+        steps=prof.steps(300), lr=3e-4, t0=0.0, seed=seed, name=f"{domain}-cold",
+    )
+    export_step_artifacts(em, domain, "cold", serve_apply, cold.params,
+                          {"t0": 0.0, "train_loss": [cold.loss_start, cold.loss_end]})
+
+    # PCA-Gaussian draft (DC-GAN substitute, DESIGN.md §2).
+    k = 24
+    pca_params = pca.fit(dataset, k=k)
+    export_pca_draft(em, domain, pca_params, k=k)
+
+    # Draft sampling + paper §4.3 pairing: k-NN (k=5) + k'=5 random injections.
+    n_draft = 256 if prof.name == "fast" else 1024
+    z = rng.normal(size=(n_draft, k)).astype(np.float32)
+    drafts = np.asarray(jax.jit(lambda zz: pca.sample(pca_params, zz, vocab))(z))
+    x_src, x_1 = refine.knn_pairs(drafts, dataset, k=5, k_inject=5, rng=rng)
+
+    # Figure 11 aux: the k-NN examples for the first few drafts.
+    knn_idx = refine.nearest_neighbor(drafts[:8], dataset, k=5)
+    (em.out_dir / f"fig11_knn_{domain}.json").write_text(json.dumps(knn_idx.tolist()))
+
+    ws_tags = []
+    for t0 in IMG_WS_T0:
+        tag = f"ws_t{int(round(t0 * 100)):03d}"
+        ws = train.train_dfm(
+            train_apply, cold.params, train.pairs_from_arrays(x_src, x_1, batch=8),
+            steps=prof.steps(150), lr=1e-4, t0=t0, seed=seed + 1, name=f"{domain}-{tag}",
+        )
+        export_step_artifacts(em, domain, tag, serve_apply, ws.params,
+                              {"t0": t0, "draft": "pca", "train_loss": [ws.loss_start, ws.loss_end]})
+        ws_tags.append({"t0": t0, "tag": tag})
+
+    return {
+        "seq_len": n, "vocab": vocab, "side": side, "channels": channels,
+        "ws": ws_tags, "pca_k": k, "train_file": f"{domain}_train.bin",
+        "labels_file": f"{domain}_labels.bin", "n_train": n_train,
+    }
+
+
+def build_img_gray(em: Emitter, prof: Profile, seed: int = 3) -> dict:
+    print("[img_gray] building", flush=True)
+    return _build_image_domain(em, prof, "img_gray", seed)
+
+
+def build_img_color(em: Emitter, prof: Profile, seed: int = 4) -> dict:
+    print("[img_color] building", flush=True)
+    return _build_image_domain(em, prof, "img_color", seed)
+
+
+BUILDERS = {
+    "two_moons": build_two_moons,
+    "text8": build_text8,
+    "wiki": build_wiki,
+    "img_gray": build_img_gray,
+    "img_color": build_img_color,
+}
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def source_hash(profile: str) -> str:
+    h = hashlib.sha256()
+    root = Path(__file__).parent
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    h.update(profile.encode())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="wsfm AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", default=os.environ.get("WSFM_PROFILE", "fast"), choices=list(PROFILES))
+    ap.add_argument("--domains", default="all", help="comma list or 'all'")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    domains = list(BUILDERS) if args.domains == "all" else args.domains.split(",")
+    for d in domains:
+        if d not in BUILDERS:
+            raise SystemExit(f"unknown domain {d!r}; options: {list(BUILDERS)}")
+
+    # Per-domain incremental builds: the manifest accumulates across runs and
+    # a per-domain source hash (over all python sources + profile) decides
+    # staleness, so `make artifacts` is a no-op when nothing changed.
+    shash = source_hash(args.profile)
+    hash_file = out_dir / ".build_hash.json"
+    manifest_file = out_dir / "manifest.json"
+    hashes: dict = json.loads(hash_file.read_text()) if hash_file.exists() else {}
+    manifest: dict = (
+        json.loads(manifest_file.read_text())
+        if manifest_file.exists()
+        else {"batch_sizes": BATCH_SIZES, "domains": {}, "artifacts": []}
+    )
+
+    todo = [d for d in domains if args.force or hashes.get(d) != shash or d not in manifest["domains"]]
+    skipped = [d for d in domains if d not in todo]
+    if skipped:
+        print(f"up to date: {', '.join(skipped)}")
+    if not todo:
+        print("all requested domains up to date — nothing to build")
+        return
+
+    t_start = time.time()
+    em = Emitter(out_dir=out_dir)
+    for d in todo:
+        t0 = time.time()
+        info = BUILDERS[d](em, PROFILES[args.profile])
+        manifest["domains"][d] = info
+        hashes[d] = shash
+        # Replace this domain's artifact entries, keep the others.
+        manifest["artifacts"] = [a for a in manifest["artifacts"] if a.get("domain") != d]
+        manifest["artifacts"] += [a for a in em.artifacts if a.get("domain") == d]
+        manifest["profile"] = args.profile
+        manifest_file.write_text(json.dumps(manifest, indent=1))
+        hash_file.write_text(json.dumps(hashes, indent=1))
+        print(f"[{d}] done in {time.time() - t0:.1f}s", flush=True)
+
+    print(f"built {len(todo)} domains ({len(em.artifacts)} artifacts) in {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

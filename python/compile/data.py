@@ -1,0 +1,308 @@
+"""Synthetic datasets (build-time side).
+
+Offline substitutes for the paper's datasets (DESIGN.md §2):
+
+* **two moons** — the paper's §4.1 synthetic task, verbatim: points on a
+  128x128 integer grid (N=2 tokens, V=128), plus the three *contrived draft
+  models* (pretty good / fair / poor) as progressively noisier corruptions
+  of the target.
+* **synth-text8** — character-level English-like corpus (V=27: a-z + space)
+  generated from a word lexicon + simple sentence grammar; stands in for
+  Text-8.
+* **synth-wiki** — word-level article corpus over a 256-word vocabulary with
+  wiki-ish section structure; stands in for Wikitext-103.
+* **synth-shapes** — procedural 16x16 gray / 8x8 color images with 10 shape
+  classes, 5-bit pixel quantization (V=32); stands in for CIFAR-10.
+
+`make artifacts` materializes the corpora/datasets into ``artifacts/`` so the
+Rust side (evaluators, benches) consumes the *same* data the models were
+trained on. All generation is deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Two moons (paper §4.1): grid 128x128, N=2 tokens, V=128
+# ---------------------------------------------------------------------------
+
+TWO_MOONS_GRID = 128
+
+# Draft-model corruption constants. Shared (by value) with
+# rust/src/draft/mixture.rs; the cross-language consistency test compares
+# histograms. "pretty good" = small jitter; "fair" = moderate jitter + some
+# uniform outliers; "poor" = heavy jitter + many outliers (paper Fig. 4 c-e).
+DRAFT_SPECS = {
+    "good": {"jitter": 3.0, "uniform_frac": 0.02},
+    "fair": {"jitter": 8.0, "uniform_frac": 0.15},
+    "poor": {"jitter": 16.0, "uniform_frac": 0.40},
+}
+
+
+def two_moons(n: int, rng: np.random.Generator, noise: float = 0.06) -> np.ndarray:
+    """Target samples: ``[n, 2]`` int32 tokens on the 128^2 grid."""
+    half = n // 2
+    theta = rng.uniform(0.0, np.pi, size=n)
+    x = np.empty((n, 2), np.float64)
+    # Upper moon.
+    x[:half, 0] = np.cos(theta[:half])
+    x[:half, 1] = np.sin(theta[:half])
+    # Lower moon, shifted.
+    x[half:, 0] = 1.0 - np.cos(theta[half:])
+    x[half:, 1] = 0.5 - np.sin(theta[half:])
+    x += rng.normal(scale=noise, size=x.shape)
+    return quantize_moons(x)
+
+
+def quantize_moons(x: np.ndarray) -> np.ndarray:
+    """Map raw moon coordinates into ``[0, 128)^2`` integer tokens."""
+    g = TWO_MOONS_GRID
+    # Raw range is roughly x in [-1.25, 2.25], y in [-0.75, 1.25].
+    xs = (x[:, 0] + 1.25) / 3.5
+    ys = (x[:, 1] + 0.75) / 2.0
+    pts = np.stack([xs, ys], axis=1)
+    return np.clip(np.floor(pts * g), 0, g - 1).astype(np.int32)
+
+
+def two_moons_draft(kind: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Contrived lightweight draft model samples (paper Fig. 4 c-e).
+
+    Target samples corrupted by grid-space Gaussian jitter plus a uniform
+    outlier mixture — quality degrades good -> fair -> poor.
+    """
+    spec = DRAFT_SPECS[kind]
+    pts = two_moons(n, rng).astype(np.float64)
+    pts += rng.normal(scale=spec["jitter"], size=pts.shape)
+    uni = rng.uniform(0, TWO_MOONS_GRID, size=pts.shape)
+    mask = rng.uniform(size=(n, 1)) < spec["uniform_frac"]
+    pts = np.where(mask, uni, pts)
+    return np.clip(np.round(pts), 0, TWO_MOONS_GRID - 1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# synth-text8: character-level corpus, V = 27 (a-z, space)
+# ---------------------------------------------------------------------------
+
+TEXT8_VOCAB = 27  # 'a'..'z' + ' '
+TEXT8_CHARS = "abcdefghijklmnopqrstuvwxyz "
+
+# Word lexicon by part of speech. Deliberately compact but structured enough
+# that a character LM has real regularities to learn (articles, suffixes,
+# agreement-ish templates).
+_DET = ["the", "a", "one", "this", "that", "each", "some", "every"]
+_ADJ = [
+    "small", "large", "old", "young", "red", "blue", "green", "dark", "bright",
+    "quiet", "loud", "early", "late", "famous", "local", "ancient", "modern",
+    "cold", "warm", "heavy", "light", "rapid", "slow", "simple", "complex",
+]
+_NOUN = [
+    "city", "river", "mountain", "forest", "village", "castle", "bridge",
+    "library", "museum", "station", "garden", "island", "valley", "harbor",
+    "temple", "market", "road", "tower", "school", "house", "king", "queen",
+    "writer", "painter", "soldier", "farmer", "merchant", "scholar", "child",
+    "bird", "horse", "wolf", "fish", "tree", "stone", "book", "song", "war",
+    "storm", "winter", "summer", "country", "empire", "army", "ship", "train",
+]
+_VERB = [
+    "was", "became", "remained", "stood", "moved", "crossed", "entered",
+    "left", "reached", "followed", "carried", "built", "destroyed", "found",
+    "lost", "defended", "visited", "described", "painted", "wrote", "sang",
+    "ruled", "served", "joined", "formed", "covered", "crossed", "opened",
+]
+_ADV = ["quickly", "slowly", "often", "rarely", "finally", "suddenly", "quietly", "nearly"]
+_PREP = ["in", "on", "near", "under", "over", "beyond", "across", "through", "behind"]
+_CONJ = ["and", "but", "while", "because", "although", "before", "after"]
+_NUM = ["one", "two", "three", "four", "five", "six", "seven", "eight", "nine", "zero"]
+
+
+def _np_word(rng: np.random.Generator) -> list[str]:
+    """Noun phrase: DET (ADJ)? NOUN."""
+    out = [_DET[rng.integers(len(_DET))]]
+    if rng.uniform() < 0.6:
+        out.append(_ADJ[rng.integers(len(_ADJ))])
+    out.append(_NOUN[rng.integers(len(_NOUN))])
+    return out
+
+
+def _sentence(rng: np.random.Generator) -> list[str]:
+    """One clause, optionally coordinated (text8-style: no punctuation)."""
+    words = _np_word(rng)
+    words.append(_VERB[rng.integers(len(_VERB))])
+    if rng.uniform() < 0.4:
+        words.append(_ADV[rng.integers(len(_ADV))])
+    if rng.uniform() < 0.8:
+        words.append(_PREP[rng.integers(len(_PREP))])
+        words += _np_word(rng)
+    if rng.uniform() < 0.15:  # spelled-out year, like text8 number style
+        words += ["in", _NUM[rng.integers(len(_NUM))], _NUM[rng.integers(len(_NUM))],
+                  _NUM[rng.integers(len(_NUM))], _NUM[rng.integers(len(_NUM))]]
+    if rng.uniform() < 0.3:
+        words.append(_CONJ[rng.integers(len(_CONJ))])
+        words += _np_word(rng)
+        words.append(_VERB[rng.integers(len(_VERB))])
+    return words
+
+
+def text8_corpus(n_chars: int, seed: int) -> str:
+    """Generate a lowercase a-z+space corpus of exactly ``n_chars`` chars."""
+    rng = np.random.default_rng(seed)
+    parts: list[str] = []
+    total = 0
+    while total < n_chars + 64:
+        s = " ".join(_sentence(rng))
+        parts.append(s)
+        total += len(s) + 1
+    text = " ".join(parts)[:n_chars]
+    assert set(text) <= set(TEXT8_CHARS)
+    return text
+
+
+def text8_encode(text: str) -> np.ndarray:
+    """chars -> int32 tokens (a=0..z=25, space=26)."""
+    lut = {c: i for i, c in enumerate(TEXT8_CHARS)}
+    return np.asarray([lut[c] for c in text], np.int32)
+
+
+def text8_decode(tokens: np.ndarray) -> str:
+    return "".join(TEXT8_CHARS[int(t)] for t in tokens)
+
+
+def text8_sequences(corpus_tokens: np.ndarray, seq_len: int, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Random contiguous windows ``[n, seq_len]`` from the token stream."""
+    hi = len(corpus_tokens) - seq_len
+    starts = rng.integers(0, hi, size=n)
+    return np.stack([corpus_tokens[s : s + seq_len] for s in starts]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# synth-wiki: word-level corpus, V = 256
+# ---------------------------------------------------------------------------
+
+_WIKI_TOPICS = [
+    "battle", "album", "species", "hurricane", "railway", "cathedral",
+    "election", "dynasty", "expedition", "festival",
+]
+_WIKI_SECTIONS = ["history", "background", "description", "legacy", "reception", "career"]
+_WIKI_FILLER = [
+    "it", "he", "she", "they", "which", "first", "second", "later", "early",
+    "north", "south", "east", "west", "century", "period", "region", "work",
+    "record", "group", "member", "leader", "during", "between", "against",
+    "within", "without", "several", "many", "few", "most", "best", "known",
+    "called", "named", "made", "held", "given", "taken", "seen", "used",
+]
+
+
+def wiki_vocab() -> list[str]:
+    """The synth-wiki vocabulary: exactly 256 word types (incl. specials)."""
+    vocab = ["<unk>", "<eos>", "==", "==="]
+    pool = _WIKI_TOPICS + _WIKI_SECTIONS + _WIKI_FILLER + _DET + _ADJ + _NOUN + _VERB + _ADV + _PREP + _CONJ + _NUM
+    for w in pool:
+        if w not in vocab:
+            vocab.append(w)
+    i = 0
+    while len(vocab) < 256:  # pad with numerals like wiki years
+        tok = str(1800 + i)
+        if tok not in vocab:
+            vocab.append(tok)
+        i += 1
+    return vocab[:256]
+
+
+def wiki_corpus(n_tokens: int, seed: int) -> np.ndarray:
+    """Word-level token stream ``[n_tokens]`` int32 with section structure."""
+    vocab = wiki_vocab()
+    lut = {w: i for i, w in enumerate(vocab)}
+    rng = np.random.default_rng(seed)
+    out: list[int] = []
+
+    def emit(words: list[str]) -> None:
+        for w in words:
+            out.append(lut.get(w, 0))
+
+    while len(out) < n_tokens:
+        topic = _WIKI_TOPICS[rng.integers(len(_WIKI_TOPICS))]
+        emit(["==", "the", topic, str(1800 + int(rng.integers(0, 200))), "=="])
+        for _ in range(int(rng.integers(2, 5))):
+            emit(["===", _WIKI_SECTIONS[rng.integers(len(_WIKI_SECTIONS))], "==="])
+            for _ in range(int(rng.integers(2, 6))):
+                emit(_sentence(rng))
+                if rng.uniform() < 0.3:
+                    emit([_WIKI_FILLER[rng.integers(len(_WIKI_FILLER))] for _ in range(int(rng.integers(2, 6)))])
+                out.append(lut["<eos>"])
+    return np.asarray(out[:n_tokens], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# synth-shapes: procedural images, V = 32 (5-bit)
+# ---------------------------------------------------------------------------
+
+IMG_VOCAB = 32
+GRAY_SIDE = 16  # 16x16 gray  -> N = 256 tokens
+COLOR_SIDE = 8  # 8x8x3 color -> N = 192 tokens
+N_CLASSES = 10
+
+
+def _render_shape(cls: int, side: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one [side, side] float image in [0,1] for class `cls`."""
+    yy, xx = np.mgrid[0:side, 0:side].astype(np.float64)
+    yy = (yy + 0.5) / side
+    xx = (xx + 0.5) / side
+    cx, cy = rng.uniform(0.3, 0.7, size=2)
+    r = rng.uniform(0.15, 0.35)
+    bg = rng.uniform(0.05, 0.3)
+    fg = rng.uniform(0.6, 0.95)
+    img = np.full((side, side), bg)
+    d2 = (xx - cx) ** 2 + (yy - cy) ** 2
+    if cls == 0:  # disk
+        img = np.where(d2 < r * r, fg, img)
+    elif cls == 1:  # square
+        img = np.where(np.maximum(np.abs(xx - cx), np.abs(yy - cy)) < r, fg, img)
+    elif cls == 2:  # ring
+        img = np.where((d2 < r * r) & (d2 > (0.55 * r) ** 2), fg, img)
+    elif cls == 3:  # horizontal stripes
+        k = rng.integers(2, 5)
+        img = np.where(np.sin(yy * np.pi * 2 * k) > 0, fg, bg)
+    elif cls == 4:  # vertical stripes
+        k = rng.integers(2, 5)
+        img = np.where(np.sin(xx * np.pi * 2 * k) > 0, fg, bg)
+    elif cls == 5:  # diagonal gradient
+        img = bg + (fg - bg) * (xx + yy) / 2.0
+    elif cls == 6:  # cross
+        w = 0.4 * r
+        img = np.where((np.abs(xx - cx) < w) | (np.abs(yy - cy) < w), fg, img)
+    elif cls == 7:  # checkerboard
+        k = int(rng.integers(2, 4))
+        img = np.where(((np.floor(xx * k) + np.floor(yy * k)) % 2) > 0.5, fg, bg)
+    elif cls == 8:  # diamond
+        img = np.where(np.abs(xx - cx) + np.abs(yy - cy) < r, fg, img)
+    else:  # radial gradient
+        img = bg + (fg - bg) * np.clip(1.0 - np.sqrt(d2) / 0.7, 0, 1)
+    img += rng.normal(scale=0.03, size=img.shape)
+    return np.clip(img, 0.0, 1.0)
+
+
+def shapes_gray(n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """``([n, 256] int32 tokens, [n] labels)`` gray 16x16 images."""
+    imgs = np.empty((n, GRAY_SIDE * GRAY_SIDE), np.int32)
+    labels = np.empty((n,), np.int32)
+    for i in range(n):
+        cls = int(rng.integers(N_CLASSES))
+        img = _render_shape(cls, GRAY_SIDE, rng)
+        imgs[i] = np.clip(np.floor(img * IMG_VOCAB), 0, IMG_VOCAB - 1).reshape(-1)
+        labels[i] = cls
+    return imgs, labels
+
+
+def shapes_color(n: int, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """``([n, 192] int32 tokens, [n] labels)`` color 8x8x3 images (channel-last)."""
+    imgs = np.empty((n, COLOR_SIDE * COLOR_SIDE * 3), np.int32)
+    labels = np.empty((n,), np.int32)
+    for i in range(n):
+        cls = int(rng.integers(N_CLASSES))
+        base = _render_shape(cls, COLOR_SIDE, rng)
+        tint = rng.uniform(0.4, 1.0, size=3)
+        img = np.stack([np.clip(base * t + rng.normal(scale=0.02, size=base.shape), 0, 1) for t in tint], axis=-1)
+        imgs[i] = np.clip(np.floor(img * IMG_VOCAB), 0, IMG_VOCAB - 1).reshape(-1)
+        labels[i] = cls
+    return imgs, labels

@@ -1,0 +1,105 @@
+"""Pallas fused multi-head attention kernel (Layer 1).
+
+The DiT denoiser's hot spot. The kernel fuses QK^T → softmax → PV per
+(batch, head, q-block) grid cell so the score matrix never round-trips
+through HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each grid step streams one
+``(BLOCK_Q, Dh)`` query tile plus the full ``(N, Dh)`` key/value panels
+through VMEM; with the default shapes (N ≤ 256, Dh ≤ 64, f32) the working
+set is ≤ 1 MiB, far under the ~16 MiB VMEM budget, and the two matmuls are
+MXU-shaped (contraction dims Dh and N are multiples of 8). On this image the
+kernel always runs with ``interpret=True`` — real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode lowers
+to plain HLO ops so the same artifact runs on the Rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch*head, q-block) grid cell.
+
+    Block shapes: q_ref/o_ref ``[BLOCK_Q, Dh]``; k_ref/v_ref ``[N, Dh]``.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    # [BLOCK_Q, N] score tile lives entirely in VMEM/registers.
+    scores = jnp.dot(q, k.T) * scale
+    # Numerically stable softmax along the key axis.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v).astype(o_ref.dtype)
+
+
+def _pick_block_q(n: int) -> int:
+    """Largest power-of-two q-block ≤ 64 that divides N (N itself if tiny)."""
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if cand <= n and n % cand == 0:
+            return cand
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused multi-head attention via Pallas.
+
+    Args:
+      q, k, v: ``[B, H, N, Dh]`` arrays.
+      block_q: query tile size (must divide N); default picks automatically.
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      ``[B, H, N, Dh]`` attention output, same dtype as ``q``.
+    """
+    b, h, n, dh = q.shape
+    if k.shape != (b, h, n, dh) or v.shape != (b, h, n, dh):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    bq = block_q if block_q is not None else _pick_block_q(n)
+    if n % bq != 0:
+        raise ValueError(f"block_q={bq} must divide N={n}")
+    scale = 1.0 / (dh**0.5)
+
+    # Collapse (B, H) into one grid axis; q additionally tiles over N.
+    qf = q.reshape(b * h, n, dh)
+    kf = k.reshape(b * h, n, dh)
+    vf = v.reshape(b * h, n, dh)
+
+    grid = (b * h, n // bq)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, n, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, n, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, n, dh)
+
+
+def attention_vmem_bytes(n: int, dh: int, block_q: int | None = None, dtype_bytes: int = 4) -> int:
+    """Estimated per-grid-step VMEM working set (for DESIGN.md §Perf).
+
+    q-tile + k + v + score tile + output tile.
+    """
+    bq = block_q if block_q is not None else _pick_block_q(n)
+    return dtype_bytes * (bq * dh + 2 * n * dh + bq * n + bq * dh)

@@ -1,0 +1,129 @@
+"""Pallas fused DFM Euler-update kernel (Layer 1).
+
+The per-step tail of the sampling hot path: softmax over denoiser logits,
+CTMC velocity with (optional) warm-start time-warping, Euler transition
+probabilities, clip + renormalize — all in one pass over the ``[B, N, V]``
+logit tensor so the intermediate ``p1``/``delta``/``u`` tensors never hit
+HBM. This kernel is bandwidth-bound; fusing it removes three full
+HBM round-trips per sampler step (see EXPERIMENTS.md §Perf).
+
+TPU mapping: grid over (batch, n-block); each step streams one
+``(BLOCK_N, V)`` logit tile plus the matching ``(BLOCK_N,)`` token ids
+through VMEM. For the largest served shape (N=256, V=256, f32) a 32-row
+block is 32·256·4 ≈ 32 KiB — trivially VMEM-resident, so the schedule is a
+single linear sweep over HBM.
+
+Scalars (t, h, warp) are passed as ``[1]`` f32 arrays broadcast to every
+grid step. ``warp`` carries the warm-start semantics: the Rust coordinator
+passes ``1.0`` for cold DFM / the exact normalized warm path and ``1 - t0``
+for the paper's literal Fig. 3 rule, so a single compiled artifact serves
+every update-rule variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dfm_update_kernel(t_ref, h_ref, warp_ref, logits_ref, x_ref, o_ref):
+    """One (batch, n-block) grid cell.
+
+    Block shapes: logits_ref/o_ref ``[BLOCK_N, V]``; x_ref ``[BLOCK_N]``;
+    t/h/warp are ``[1]`` scalar refs.
+    """
+    logits = logits_ref[...].astype(jnp.float32)
+    x = x_ref[...]
+    t = t_ref[0]
+    h = h_ref[0]
+    warp = warp_ref[0]
+
+    # Stable softmax along V.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p1 = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    bn, v = logits.shape
+    delta = (jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1) == x[:, None]).astype(jnp.float32)
+
+    # Guard the 1/(1-t) pole; the sampler never calls with t >= 1 but the
+    # kernel must stay finite for any input. `coef` is capped at 1 so the
+    # final step (h = 1 - t) lands exactly on p1 and never overshoots.
+    inv = 1.0 / jnp.maximum(1.0 - t, 1e-6)
+    coef = jnp.minimum(h * warp * inv, 1.0)
+
+    probs = delta + coef * (p1 - delta)
+    probs = jnp.maximum(probs, 0.0)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[...] = probs
+
+
+def _pick_block_n(n: int) -> int:
+    for cand in (32, 16, 8, 4, 2, 1):
+        if cand <= n and n % cand == 0:
+            return cand
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dfm_update(
+    logits: jnp.ndarray,
+    x_t: jnp.ndarray,
+    t: jnp.ndarray,
+    h: jnp.ndarray,
+    warp: jnp.ndarray,
+    *,
+    block_n: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused DFM Euler-step transition probabilities via Pallas.
+
+    See ``ref.dfm_update_ref`` for exact semantics.
+
+    Args:
+      logits: ``[B, N, V]`` denoiser logits.
+      x_t: ``[B, N]`` int32 current tokens.
+      t, h, warp: scalar f32 (0-d arrays or python floats). ``warp = 1`` is
+        the cold/exact rule; ``warp = 1 - t0`` is the paper-literal warm rule.
+      block_n: token-block size (must divide N).
+      interpret: interpret mode (required on CPU PJRT).
+
+    Returns:
+      ``[B, N, V]`` f32 transition probabilities (rows sum to 1).
+    """
+    b, n, v = logits.shape
+    if x_t.shape != (b, n):
+        raise ValueError(f"x_t shape {x_t.shape} != {(b, n)}")
+    bn = block_n if block_n is not None else _pick_block_n(n)
+    if n % bn != 0:
+        raise ValueError(f"block_n={bn} must divide N={n}")
+
+    t1 = jnp.asarray(t, jnp.float32).reshape(1)
+    h1 = jnp.asarray(h, jnp.float32).reshape(1)
+    w1 = jnp.asarray(warp, jnp.float32).reshape(1)
+
+    grid = (b, n // bn)
+    return pl.pallas_call(
+        _dfm_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((None, bn, v), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bn, v), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, v), jnp.float32),
+        interpret=interpret,
+    )(t1, h1, w1, logits, x_t.astype(jnp.int32))
+
+
+def dfm_update_vmem_bytes(n: int, v: int, block_n: int | None = None) -> int:
+    """Estimated per-grid-step VMEM working set (for DESIGN.md §Perf)."""
+    bn = block_n if block_n is not None else _pick_block_n(n)
+    # logits tile + probs tile (f32) + token ids (i32) + p1/delta temporaries.
+    return 4 * (2 * bn * v + bn + 2 * bn * v)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations used by the pytest/hypothesis
+suite to validate the Pallas kernels (``attention.py``, ``dfm_update.py``)
+across shape and dtype sweeps. They are also usable directly by the L2 model
+code (training uses the reference attention; the AOT inference export swaps
+in the Pallas kernel, and the test suite asserts the two are allclose).
+"""
+
+from __future__ import annotations
+
+import jax.nn
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head scaled-dot-product attention (no masking).
+
+    Args:
+      q, k, v: ``[B, H, N, Dh]`` arrays (any float dtype).
+
+    Returns:
+      ``[B, H, N, Dh]`` attention output in the input dtype.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    probs = jax.nn.softmax(scores * scale, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def dfm_update_ref(
+    logits: jnp.ndarray,
+    x_t: jnp.ndarray,
+    t: jnp.ndarray,
+    h: jnp.ndarray,
+    warp: jnp.ndarray,
+) -> jnp.ndarray:
+    """Fused DFM Euler-step transition probabilities (reference).
+
+    Implements the inference update of the paper's Fig. 3: from denoiser
+    logits compute ``p1 = softmax(logits)``, the CTMC velocity
+    ``u = warp * (p1 - onehot(x_t)) / (1 - t)`` and the per-token transition
+    distribution ``P = onehot(x_t) + h * u``, clipped to be non-negative and
+    renormalized.
+
+    ``warp`` is the paper's literal time-warping factor ``(1 - t0)`` for
+    WS-DFM (Fig. 3 right), and ``1`` for cold DFM / the exact normalized
+    warm path — see DESIGN.md §1. The Rust coordinator owns this choice.
+
+    Args:
+      logits: ``[B, N, V]`` float array of denoiser outputs.
+      x_t:    ``[B, N]`` int32 current tokens.
+      t:      scalar float, current time in ``[t0, 1)``.
+      h:      scalar float, Euler step size.
+      warp:   scalar float time-warp factor.
+
+    Returns:
+      ``[B, N, V]`` float32 transition probabilities (rows sum to 1).
+    """
+    v = logits.shape[-1]
+    p1 = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    delta = jax.nn.one_hot(x_t, v, dtype=jnp.float32)
+    # Guard the 1/(1-t) pole; the sampler never calls with t >= 1 but the
+    # kernel must stay finite for any input.
+    inv = 1.0 / jnp.maximum(1.0 - t, 1e-6)
+    coef = jnp.minimum(h * warp * inv, 1.0)  # never overshoot past p1
+    probs = delta + coef * (p1 - delta)
+    probs = jnp.clip(probs, 0.0, None)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return probs

@@ -1,0 +1,2 @@
+# Layer-2 model zoo: denoisers (MLP, DiT-tiny) and draft generators
+# (LSTM LM, PCA-Gaussian sampler). All pure-jax, parameters as dict pytrees.

@@ -1,0 +1,105 @@
+"""DiT-tiny: transformer denoiser for text and image token sequences.
+
+Scaled-down version of the paper's generator (DiT, Peebles & Xie 2022; the
+paper uses 12 layers / 12 heads / d=768 — we use 2 blocks / 4 heads / d=128
+to fit the single-CPU build budget, DESIGN.md §2). Structure per block is
+DiT-faithful: adaLN-Zero conditioning on the time embedding (scale/shift/gate
+for both the attention and MLP branches), pre-LN, GELU MLP with 4x widening.
+
+The attention inner product runs through either the pure-jnp reference
+(training: fastest to trace/differentiate) or the Pallas fused kernel
+(AOT inference export — the kernel lowers into the served HLO). The test
+suite asserts both paths are allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..kernels.attention import attention as attention_pallas
+from ..kernels.ref import attention_ref
+
+
+def init(
+    key: jax.Array,
+    vocab: int,
+    seq_len: int,
+    dim: int = 128,
+    heads: int = 4,
+    blocks: int = 2,
+    mlp_ratio: int = 4,
+) -> nn.Params:
+    if dim % heads != 0:
+        raise ValueError(f"dim={dim} must be divisible by heads={heads}")
+    ks = iter(jax.random.split(key, 6 + 8 * blocks))
+    params = {
+        "embed": nn.embedding_init(next(ks), vocab, dim),
+        "pos": nn.embedding_init(next(ks), seq_len, dim),
+        "time1": nn.dense_init(next(ks), dim, dim),
+        "time2": nn.dense_init(next(ks), dim, dim),
+        "head_ln": nn.layer_norm_init(dim),
+        "head": nn.dense_init(next(ks), dim, vocab, scale=0.02),
+        "blocks": [],
+    }
+    for _ in range(blocks):
+        blk = {
+            "ln1": nn.layer_norm_init(dim),
+            "qkv": nn.dense_init(next(ks), dim, 3 * dim),
+            "proj": nn.dense_init(next(ks), dim, dim, scale=0.02),
+            "ln2": nn.layer_norm_init(dim),
+            "mlp1": nn.dense_init(next(ks), dim, mlp_ratio * dim),
+            "mlp2": nn.dense_init(next(ks), mlp_ratio * dim, dim, scale=0.02),
+            # adaLN-Zero: 6 modulation vectors (shift/scale/gate x 2 branches),
+            # zero-initialized so each block starts as identity.
+            "ada": {
+                "w": jnp.zeros((dim, 6 * dim), jnp.float32),
+                "b": jnp.zeros((6 * dim,), jnp.float32),
+            },
+        }
+        params["blocks"].append(blk)
+    return params
+
+
+def _modulate(x: jnp.ndarray, shift: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def apply(
+    params: nn.Params,
+    x_t: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    heads: int = 4,
+) -> jnp.ndarray:
+    """Denoiser forward: ``[B, N]`` int32 tokens + ``[B]`` times -> ``[B, N, V]`` logits."""
+    b, n = x_t.shape
+    dim = params["embed"].shape[1]
+    dh = dim // heads
+
+    z = params["embed"][x_t] + params["pos"][None, :n, :]
+    temb = nn.dense(params["time2"], nn.gelu(nn.dense(params["time1"], nn.time_embedding(t, dim))))
+
+    attn_fn = attention_pallas if use_pallas else attention_ref
+    for blk in params["blocks"]:
+        mod = nn.dense(blk["ada"], nn.gelu(temb))  # [B, 6*dim]
+        s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+        hx = _modulate(nn.layer_norm(blk["ln1"], z), s1, sc1)
+        qkv = nn.dense(blk["qkv"], hx)  # [B, N, 3*dim]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, n, heads, dh).transpose(0, 2, 1, 3)
+        o = attn_fn(q, k, v)  # [B, H, N, dh]
+        o = o.transpose(0, 2, 1, 3).reshape(b, n, dim)
+        z = z + g1[:, None, :] * nn.dense(blk["proj"], o)
+
+        hx = _modulate(nn.layer_norm(blk["ln2"], z), s2, sc2)
+        hx = nn.dense(blk["mlp2"], nn.gelu(nn.dense(blk["mlp1"], hx)))
+        z = z + g2[:, None, :] * hx
+
+    z = nn.layer_norm(params["head_ln"], z)
+    return nn.dense(params["head"], z)

@@ -1,0 +1,91 @@
+"""LSTM draft language model (the paper's lightweight text draft model).
+
+A single-layer LSTM LM (the paper uses 2x512 for Text-8 and 1x1024 for
+Wikitext; we scale to the CPU build budget). Two entrypoints:
+
+* :func:`apply_seq` — teacher-forced next-token logits for training.
+* :func:`sample`   — full-sequence ancestral sampling as ONE jax function
+  (``lax.scan`` over positions) so the whole draft generation lowers to a
+  single HLO artifact. Randomness enters via a Gumbel-noise *input* tensor —
+  the Rust coordinator owns the RNG, keeping the artifact deterministic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+def init(key: jax.Array, vocab: int, dim: int = 128) -> nn.Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": nn.embedding_init(ks[0], vocab, dim),
+        # Single fused gate matrix: [x, h] -> 4*dim (i, f, g, o).
+        "gates": nn.dense_init(ks[1], 2 * dim, 4 * dim),
+        "head": nn.dense_init(ks[2], dim, vocab, scale=0.02),
+    }
+
+
+def _cell(params: nn.Params, x_emb: jnp.ndarray, state: tuple[jnp.ndarray, jnp.ndarray]):
+    """One LSTM step. x_emb ``[B, D]``; state = (h, c) each ``[B, D]``."""
+    h, c = state
+    z = nn.dense(params["gates"], jnp.concatenate([x_emb, h], axis=-1))
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def apply_seq(params: nn.Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced logits: tokens ``[B, N]`` -> next-token logits ``[B, N, V]``.
+
+    Position i's logits predict token i (conditioned on tokens < i); the
+    first position is predicted from the zero state with a BOS-less
+    convention (embedding of token 0 is not consumed — we shift internally).
+    """
+    b, n = tokens.shape
+    dim = params["embed"].shape[1]
+    emb = params["embed"][tokens]  # [B, N, D]
+    # Shift right: input at step i is emb[i-1], zeros at i=0.
+    inp = jnp.concatenate([jnp.zeros((b, 1, dim), jnp.float32), emb[:, :-1, :]], axis=1)
+
+    def step(carry, x):
+        h, c = _cell(params, x, carry)
+        return (h, c), h
+
+    init_state = (jnp.zeros((b, dim), jnp.float32), jnp.zeros((b, dim), jnp.float32))
+    _, hs = jax.lax.scan(step, init_state, inp.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)  # [B, N, D]
+    return nn.dense(params["head"], hs)
+
+
+def sample(params: nn.Params, gumbel: jnp.ndarray, temperature: float = 1.0) -> jnp.ndarray:
+    """Ancestral sampling with externally-supplied Gumbel noise.
+
+    Args:
+      params: LSTM parameters.
+      gumbel: ``[B, N, V]`` f32 Gumbel(0,1) noise (one per position/vocab).
+      temperature: softmax temperature (static).
+
+    Returns:
+      ``[B, N]`` int32 sampled tokens.
+    """
+    b, n, vocab = gumbel.shape
+    dim = params["embed"].shape[1]
+
+    def step(carry, g):
+        h, c, prev_emb = carry
+        h, c = _cell(params, prev_emb, (h, c))
+        logits = nn.dense(params["head"], h) / temperature  # [B, V]
+        tok = jnp.argmax(logits + g, axis=-1).astype(jnp.int32)  # Gumbel-max
+        return (h, c, params["embed"][tok]), tok
+
+    init_state = (
+        jnp.zeros((b, dim), jnp.float32),
+        jnp.zeros((b, dim), jnp.float32),
+        jnp.zeros((b, dim), jnp.float32),
+    )
+    _, toks = jax.lax.scan(step, init_state, gumbel.transpose(1, 0, 2))
+    return toks.transpose(1, 0)  # [B, N]

@@ -1,0 +1,52 @@
+"""Two-moons DFM denoiser: embedding + 4-layer MLP (paper §4.1, verbatim).
+
+The state is two tokens (x, y grid coordinates), each over a vocabulary of
+V=128 bins. Each token is embedded to R^h via a table, the two embeddings are
+concatenated together with a time embedding, and a 4-layer MLP (hidden h=128)
+produces logits ``[B, 2, V]`` — the denoiser posterior over x_1 tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+def init(key: jax.Array, vocab: int = 128, hidden: int = 128, n_tokens: int = 2) -> nn.Params:
+    ks = jax.random.split(key, 8)
+    d_in = n_tokens * hidden + hidden  # token embs + time emb
+    return {
+        "embed": nn.embedding_init(ks[0], vocab, hidden),
+        "time_proj": nn.dense_init(ks[1], hidden, hidden),
+        "l1": nn.dense_init(ks[2], d_in, hidden),
+        "l2": nn.dense_init(ks[3], hidden, hidden),
+        "l3": nn.dense_init(ks[4], hidden, hidden),
+        "l4": nn.dense_init(ks[5], hidden, n_tokens * vocab, scale=0.02),
+    }
+
+
+def apply(params: nn.Params, x_t: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Denoiser forward.
+
+    Args:
+      params: pytree from :func:`init`.
+      x_t: ``[B, 2]`` int32 tokens.
+      t: ``[B]`` f32 times.
+
+    Returns:
+      logits ``[B, 2, V]``.
+    """
+    vocab = int(params["embed"].shape[0])
+    hidden = int(params["embed"].shape[1])
+    b, n = x_t.shape
+    emb = params["embed"][x_t]  # [B, N, h]
+    phi = emb.reshape(b, n * hidden)
+    temb = nn.gelu(nn.dense(params["time_proj"], nn.time_embedding(t, hidden)))
+    z = jnp.concatenate([phi, temb], axis=-1)
+    z = nn.gelu(nn.dense(params["l1"], z))
+    z = nn.gelu(nn.dense(params["l2"], z))
+    z = nn.gelu(nn.dense(params["l3"], z))
+    logits = nn.dense(params["l4"], z)
+    return logits.reshape(b, n, vocab)

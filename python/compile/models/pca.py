@@ -1,0 +1,58 @@
+"""PCA-Gaussian image draft sampler (the DC-GAN substitute, DESIGN.md §2).
+
+The paper uses a DC-GAN as the lightweight image draft model. GAN training
+is not feasible in this build's single-CPU budget, so we substitute the
+closest classical lightweight generative model: a PCA-Gaussian fitted to the
+training images. Samples are ``quantize(mean + U diag(s) z)`` with
+``z ~ N(0, I_k)`` — blurry, low-quality, but data-shaped drafts, which is
+precisely the role the DC-GAN plays (quality is *supposed* to be poor;
+WS-DFM refines it).
+
+The sampler is exported as one HLO artifact with the Gaussian noise ``z`` as
+an input tensor (Rust owns the RNG).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def fit(images: np.ndarray, k: int = 24) -> dict:
+    """Fit the PCA-Gaussian to quantized token images.
+
+    Args:
+      images: ``[M, N]`` uint8/int tokens (flattened pixels, values < vocab).
+      k: number of principal components.
+
+    Returns:
+      params dict with f32 arrays: mean ``[N]``, comps ``[k, N]``,
+      scales ``[k]`` (singular values / sqrt(M)).
+    """
+    x = images.astype(np.float32)
+    mean = x.mean(axis=0)
+    xc = x - mean
+    # Economy SVD of the centered data.
+    u, s, vt = np.linalg.svd(xc, full_matrices=False)
+    k = min(k, vt.shape[0])
+    return {
+        "mean": jnp.asarray(mean),
+        "comps": jnp.asarray(vt[:k]),
+        "scales": jnp.asarray(s[:k] / np.sqrt(max(1, x.shape[0]))),
+    }
+
+
+def sample(params: dict, z: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Draft images from latent noise.
+
+    Args:
+      params: from :func:`fit`.
+      z: ``[B, k]`` f32 standard-normal latents (input tensor; Rust RNG).
+      vocab: token vocabulary size (e.g. 32 for 5-bit pixels).
+
+    Returns:
+      ``[B, N]`` int32 token images in ``[0, vocab)``.
+    """
+    x = params["mean"][None, :] + (z * params["scales"][None, :]) @ params["comps"]
+    x = jnp.clip(jnp.round(x), 0, vocab - 1)
+    return x.astype(jnp.int32)

@@ -1,0 +1,121 @@
+"""Minimal neural-net toolkit shared by the Layer-2 models.
+
+The image vendors no flax/optax, so parameter initialization, the layers the
+models need, and the Adam/AMSGrad optimizer are implemented here directly on
+jax pytrees (nested dicts of ``jnp.ndarray``). Everything is deliberately
+small and explicit — these models are trained for minutes on one CPU core at
+build time (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Initializers / layers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, scale: float | None = None) -> Params:
+    """LeCun-normal dense layer parameters."""
+    s = scale if scale is not None else 1.0 / (d_in**0.5)
+    return {
+        "w": jax.random.normal(key, (d_in, d_out), jnp.float32) * s,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def embedding_init(key: jax.Array, vocab: int, dim: int, scale: float = 0.02) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * scale
+
+
+def layer_norm_init(dim: int) -> Params:
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def time_embedding(t: jnp.ndarray, dim: int, max_period: float = 1e4) -> jnp.ndarray:
+    """Sinusoidal time features for ``t in [0, 1]``: ``[B] -> [B, dim]``."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t[:, None] * freqs[None, :] * max_period  # spread t over many scales
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if dim % 2 == 1:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x)
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE. logits ``[..., V]``, targets int ``[...]``."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# AMSGrad (the paper trains with AMSGrad — Reddi et al. 2018)
+# ---------------------------------------------------------------------------
+
+
+class AmsGrad:
+    """AMSGrad optimizer over an arbitrary pytree of f32 arrays."""
+
+    def __init__(self, lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+
+    def init(self, params: Params) -> Params:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "vhat": jax.tree.map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Params, state: Params, params: Params) -> tuple[Params, Params]:
+        step = state["step"] + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        vhat = jax.tree.map(jnp.maximum, state["vhat"], v)
+        # Bias correction on the first moment only (AMSGrad convention).
+        corr = 1.0 - b1 ** step.astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, m_, vh: p - self.lr * (m_ / corr) / (jnp.sqrt(vh) + self.eps),
+            params,
+            m,
+            vhat,
+        )
+        return new_params, {"m": m, "v": v, "vhat": vhat, "step": step}
+
+
+def make_train_step(
+    loss_fn: Callable[[Params, jax.Array], jnp.ndarray], opt: AmsGrad
+) -> Callable[[Params, Params, jax.Array], tuple[Params, Params, jnp.ndarray]]:
+    """Jitted (params, opt_state, key) -> (params', opt_state', loss)."""
+
+    @jax.jit
+    def step(params, opt_state, key):
+        loss, grads = jax.value_and_grad(loss_fn)(params, key)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

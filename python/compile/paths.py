@@ -1,0 +1,83 @@
+"""Probability paths for cold DFM and warm-start DFM (Layer 2).
+
+Denoiser parameterization (DESIGN.md §1): per token i,
+
+    P_t(x^i | x_src, x_1) = (1 - kappa(t)) * delta_{x_src^i} + kappa(t) * delta_{x_1^i}
+
+with ``kappa(t) = t`` for the cold path on ``[0, 1]`` (x_src = pure noise)
+and ``kappa(t) = (t - t0) / (1 - t0)`` for the warm path on ``[t0, 1]``
+(x_src = draft samples). The warm path is the *normalized* convex version of
+the paper's stated interpolation (whose coefficients do not sum to one — see
+DESIGN.md §1); at ``t0 = 0`` it reduces exactly to the cold path, a property
+the test suite pins down.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kappa(t: jnp.ndarray, t0: float | jnp.ndarray = 0.0) -> jnp.ndarray:
+    """Mixing coefficient ``kappa(t) = (t - t0) / (1 - t0)``, clipped to [0, 1]."""
+    t0 = jnp.asarray(t0, jnp.float32)
+    k = (jnp.asarray(t, jnp.float32) - t0) / jnp.maximum(1.0 - t0, 1e-6)
+    return jnp.clip(k, 0.0, 1.0)
+
+
+def sample_t(key: jax.Array, batch: int, t0: float = 0.0) -> jnp.ndarray:
+    """Per-example training times ``t ~ U(t0, 1)`` (paper Fig. 2, right)."""
+    return t0 + (1.0 - t0) * jax.random.uniform(key, (batch,), jnp.float32)
+
+
+def interpolate(
+    key: jax.Array,
+    x_src: jnp.ndarray,
+    x_1: jnp.ndarray,
+    t: jnp.ndarray,
+    t0: float = 0.0,
+) -> jnp.ndarray:
+    """Sample ``x_t ~ P_t(. | x_src, x_1)`` token-wise.
+
+    Args:
+      key: PRNG key.
+      x_src: ``[B, N]`` int tokens from the source (noise or draft) dist.
+      x_1: ``[B, N]`` int tokens from the target (data or refined) dist.
+      t: ``[B]`` per-example times.
+      t0: warm-start time (python float; 0 = cold).
+
+    Returns:
+      ``[B, N]`` int32 interpolated tokens: each token independently equals
+      ``x_1`` with probability ``kappa(t)`` else ``x_src``.
+    """
+    if x_src.shape != x_1.shape:
+        raise ValueError(f"x_src {x_src.shape} != x_1 {x_1.shape}")
+    k = kappa(t, t0)[:, None]  # [B, 1]
+    u = jax.random.uniform(key, x_src.shape, jnp.float32)
+    take_x1 = u < k
+    return jnp.where(take_x1, x_1, x_src).astype(jnp.int32)
+
+
+def uniform_noise(key: jax.Array, shape: tuple[int, ...], vocab: int) -> jnp.ndarray:
+    """Pure-noise source: uniform over the vocabulary (paper Fig. 3 left)."""
+    return jax.random.randint(key, shape, 0, vocab, jnp.int32)
+
+
+def mask_noise(shape: tuple[int, ...], mask_token: int) -> jnp.ndarray:
+    """Mask-delta source: every token is the special mask state."""
+    return jnp.full(shape, mask_token, jnp.int32)
+
+
+def nfe(steps_cold: int, t0: float) -> int:
+    """The paper's guaranteed NFE: ``ceil(steps_cold * (1 - t0))``.
+
+    This is the whole headline claim — the warm sampler takes exactly this
+    many denoiser evaluations, a ``1/(1-t0)`` speed-up over ``steps_cold``.
+    Mirrored by ``rust/src/core/schedule.rs`` and pinned by tests on both
+    sides.
+    """
+    if not 0.0 <= t0 < 1.0:
+        raise ValueError(f"t0 must be in [0, 1), got {t0}")
+    import math
+
+    return max(1, math.ceil(steps_cold * (1.0 - t0) - 1e-9))

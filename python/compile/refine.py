@@ -1,0 +1,190 @@
+"""Refinement / pairing strategies (build-time).
+
+WS-DFM training needs a coupling ``Q(x_t0, x_1) = P_t0(x_t0) * P_refine(x_1 | x_t0)``
+(paper §3). Strategies implemented here:
+
+* :func:`nearest_neighbor` — map each draft to its nearest dataset sample
+  (used for two-moons and, with ``k > 1`` plus random injection, for images —
+  the paper's §4.3 recipe with k = k' = 5).
+* :class:`NgramLM` + :func:`oracle_refine` — the LLM-refinement substitute
+  for text (DESIGN.md §2): hill-climb the draft under a held-out n-gram LM,
+  resampling only the lowest-likelihood positions, bounded edit budget —
+  mirroring the paper's prompt "more natural ... but not too different".
+* :func:`inject_real` — mix ``x_1 ~ P_1`` pairs into the training set so the
+  coupling's right marginal approaches ``P_1`` (paper footnote 2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Nearest-neighbor refinement (two moons, images)
+# ---------------------------------------------------------------------------
+
+
+def nearest_neighbor(drafts: np.ndarray, dataset: np.ndarray, k: int = 1) -> np.ndarray:
+    """For each draft row, the ``k`` nearest dataset rows (squared L2).
+
+    Args:
+      drafts: ``[M, D]`` numeric array.
+      dataset: ``[R, D]`` numeric array.
+      k: neighbors per draft.
+
+    Returns:
+      ``[M, k]`` int64 indices into ``dataset``.
+    """
+    d = drafts.astype(np.float32)
+    ds = dataset.astype(np.float32)
+    # Chunked distance computation to bound memory.
+    out = np.empty((d.shape[0], k), np.int64)
+    ds_sq = (ds * ds).sum(axis=1)
+    chunk = max(1, 2_000_000 // max(1, ds.shape[0]))
+    for lo in range(0, d.shape[0], chunk):
+        hi = min(lo + chunk, d.shape[0])
+        dist = ds_sq[None, :] - 2.0 * d[lo:hi] @ ds.T  # + |d|^2 (constant per row)
+        out[lo:hi] = np.argpartition(dist, k - 1, axis=1)[:, :k]
+    return out
+
+
+def knn_pairs(
+    drafts: np.ndarray, dataset: np.ndarray, k: int, k_inject: int, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray]:
+    """The paper's §4.3 image pairing: k-NN refinement + k' random injections.
+
+    Returns ``(x_src, x_1)`` with ``M * (k + k_inject)`` rows each.
+    """
+    idx = nearest_neighbor(drafts, dataset, k=k)  # [M, k]
+    src = [np.repeat(drafts, k, axis=0)]
+    tgt = [dataset[idx.reshape(-1)]]
+    if k_inject > 0:
+        rnd = rng.integers(0, dataset.shape[0], size=drafts.shape[0] * k_inject)
+        src.append(np.repeat(drafts, k_inject, axis=0))
+        tgt.append(dataset[rnd])
+    return np.concatenate(src, axis=0), np.concatenate(tgt, axis=0)
+
+
+def inject_real(
+    x_src: np.ndarray, x_1: np.ndarray, dataset: np.ndarray, frac: float, rng: np.random.Generator
+) -> tuple[np.ndarray, np.ndarray]:
+    """Replace a fraction of pairs with (real, real) samples so the coupling's
+    right marginal mixes toward P_1 (paper footnote 2)."""
+    n = x_src.shape[0]
+    m = int(n * frac)
+    if m == 0:
+        return x_src, x_1
+    rows = rng.choice(n, size=m, replace=False)
+    real = dataset[rng.integers(0, dataset.shape[0], size=m)]
+    x_src = x_src.copy()
+    x_1 = x_1.copy()
+    x_src[rows] = real
+    x_1[rows] = real
+    return x_src, x_1
+
+
+# ---------------------------------------------------------------------------
+# Oracle text refiner (LLM substitute)
+# ---------------------------------------------------------------------------
+
+
+class NgramLM:
+    """Add-smoothed n-gram LM over int token sequences (the refiner oracle).
+
+    Deliberately simple — the *evaluator* LM lives in Rust
+    (``eval/ngram.rs``, Kneser-Ney); this one only guides refinement and is
+    trained on the build-time corpus.
+    """
+
+    def __init__(self, order: int, vocab: int, alpha: float = 0.1):
+        if order < 2:
+            raise ValueError("order must be >= 2")
+        self.order = order
+        self.vocab = vocab
+        self.alpha = alpha
+        self.counts: dict[tuple[int, ...], np.ndarray] = {}
+        self.backoff: np.ndarray = np.zeros(vocab, np.float64)
+
+    def fit(self, stream: np.ndarray) -> "NgramLM":
+        o = self.order
+        for i in range(len(stream)):
+            tok = int(stream[i])
+            self.backoff[tok] += 1
+            if i >= o - 1:
+                ctx = tuple(int(c) for c in stream[i - o + 1 : i])
+                row = self.counts.get(ctx)
+                if row is None:
+                    row = np.zeros(self.vocab, np.float32)
+                    self.counts[ctx] = row
+                row[tok] += 1
+        self.backoff = (self.backoff + 1.0) / (self.backoff.sum() + self.vocab)
+        return self
+
+    def cond_probs(self, ctx: tuple[int, ...]) -> np.ndarray:
+        """P(. | ctx) with add-alpha smoothing, backing off to unigram."""
+        row = self.counts.get(ctx)
+        if row is None:
+            return self.backoff
+        p = (row.astype(np.float64) + self.alpha * self.backoff) / (row.sum() + self.alpha)
+        return p / p.sum()
+
+    def token_logprobs(self, seq: np.ndarray) -> np.ndarray:
+        """Per-position log P(seq[i] | seq[i-o+1:i])."""
+        o = self.order
+        out = np.empty(len(seq), np.float64)
+        for i in range(len(seq)):
+            ctx = tuple(int(c) for c in seq[max(0, i - o + 1) : i])
+            if len(ctx) < o - 1:
+                p = self.backoff
+            else:
+                p = self.cond_probs(ctx)
+            out[i] = np.log(max(p[int(seq[i])], 1e-12))
+        return out
+
+
+def oracle_refine(
+    draft: np.ndarray,
+    lm: NgramLM,
+    rng: np.random.Generator,
+    max_edit_frac: float = 0.35,
+    passes: int = 2,
+) -> np.ndarray:
+    """Refine a draft sequence under the oracle LM, bounded edit distance.
+
+    Greedy coordinate ascent: repeatedly pick the position with the lowest
+    conditional log-probability and resample it from the LM conditional
+    (argmax with mild noise), stopping after ``max_edit_frac * len`` edits.
+    This mirrors the paper's LLM prompt: improve naturalness, stay close.
+    """
+    seq = draft.astype(np.int64).copy()
+    budget = max(1, int(len(seq) * max_edit_frac))
+    edited: set[int] = set()
+    o = lm.order
+    for _ in range(passes):
+        lp = lm.token_logprobs(seq)
+        order_idx = np.argsort(lp)  # worst first
+        for pos in order_idx:
+            if len(edited) >= budget:
+                break
+            pos = int(pos)
+            if pos in edited or pos < o - 1:
+                continue
+            ctx = tuple(int(c) for c in seq[pos - o + 1 : pos])
+            p = lm.cond_probs(ctx)
+            # Gumbel-max with low temperature: near-greedy but diverse.
+            g = rng.gumbel(size=p.shape)
+            new_tok = int(np.argmax(np.log(p + 1e-12) / 0.7 + g))
+            if np.log(max(p[new_tok], 1e-12)) > lp[pos]:
+                seq[pos] = new_tok
+                edited.add(pos)
+        if len(edited) >= budget:
+            break
+    return seq.astype(np.int32)
+
+
+def refine_text_batch(
+    drafts: np.ndarray, lm: NgramLM, seed: int, max_edit_frac: float = 0.35
+) -> np.ndarray:
+    """Vector wrapper: refine each row of ``[M, N]`` drafts."""
+    rng = np.random.default_rng(seed)
+    return np.stack([oracle_refine(d, lm, rng, max_edit_frac) for d in drafts])

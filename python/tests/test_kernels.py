@@ -1,0 +1,176 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, attention_vmem_bytes, _pick_block_q
+from compile.kernels.dfm_update import dfm_update, dfm_update_vmem_bytes, _pick_block_n
+from compile.kernels.ref import attention_ref, dfm_update_ref
+
+SETTINGS = dict(max_examples=24, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    n=st.sampled_from([1, 2, 4, 8, 16, 48, 64]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, n, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (jnp.asarray(rng.normal(size=(b, h, n, dh)).astype(np.float32)) for _ in range(3))
+    out = attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.normal(size=(2, 2, 16, 8)), dtype=dtype) for _ in range(3))
+    out = attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_attention_block_q_must_divide():
+    q = jnp.zeros((1, 1, 6, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        attention(q, q, q, block_q=4)
+
+
+def test_attention_shape_mismatch_rejected():
+    q = jnp.zeros((1, 1, 8, 4), jnp.float32)
+    k = jnp.zeros((1, 1, 4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        attention(q, k, q)
+
+
+def test_attention_softmax_rowsums():
+    # Output rows are convex combos of V rows: max(out) <= max(v).
+    rng = np.random.default_rng(1)
+    q, k = (jnp.asarray(rng.normal(size=(1, 1, 8, 4)).astype(np.float32)) for _ in range(2))
+    v = jnp.ones((1, 1, 8, 4), jnp.float32)
+    out = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.ones_like(out), rtol=1e-5)
+
+
+def test_pick_block_q_divides():
+    for n in [1, 2, 3, 6, 17, 64, 96, 256]:
+        bq = _pick_block_q(n)
+        assert n % bq == 0 and bq <= 64
+
+
+def test_attention_vmem_estimate_within_budget():
+    # DESIGN.md §Perf: served shapes fit far under a 16 MiB VMEM budget.
+    assert attention_vmem_bytes(256, 32) < 4 * 1024 * 1024
+    assert attention_vmem_bytes(64, 32) < 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# dfm_update
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([1, 2, 4, 8, 32, 64]),
+    v=st.sampled_from([2, 5, 27, 32, 128]),
+    t=st.floats(0.0, 0.99),
+    h=st.floats(0.001, 0.2),
+    warp=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dfm_update_matches_ref(b, n, v, t, h, warp, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, n, v)).astype(np.float32) * 3)
+    x = jnp.asarray(rng.integers(0, v, size=(b, n)).astype(np.int32))
+    out = dfm_update(logits, x, t, h, warp)
+    ref = dfm_update_ref(logits, x, jnp.float32(t), jnp.float32(h), jnp.float32(warp))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.floats(0.0, 0.999),
+    h=st.floats(0.0001, 1.0),
+    warp=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dfm_update_rows_are_distributions(t, h, warp, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 4, 11)).astype(np.float32) * 5)
+    x = jnp.asarray(rng.integers(0, 11, size=(2, 4)).astype(np.int32))
+    probs = np.asarray(dfm_update(logits, x, t, h, warp))
+    assert (probs >= 0).all()
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_dfm_update_final_step_full_commit():
+    # coef = h*warp/(1-t) capped at 1: with h = 1-t and warp=1 the output IS
+    # softmax(logits) — the final Euler step lands exactly on p1.
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(1, 3, 7)).astype(np.float32))
+    x = jnp.asarray(rng.integers(0, 7, size=(1, 3)).astype(np.int32))
+    probs = np.asarray(dfm_update(logits, x, 0.9, 0.1, 1.0))
+    p1 = np.asarray(jax.nn.softmax(logits, axis=-1))
+    np.testing.assert_allclose(probs, p1, rtol=1e-5, atol=1e-6)
+
+
+def test_dfm_update_zero_step_is_delta():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(1, 2, 5)).astype(np.float32))
+    x = jnp.asarray([[1, 4]], dtype=jnp.int32)
+    probs = np.asarray(dfm_update(logits, x, 0.5, 0.0, 1.0))
+    expected = np.zeros((1, 2, 5), np.float32)
+    expected[0, 0, 1] = 1.0
+    expected[0, 1, 4] = 1.0
+    np.testing.assert_allclose(probs, expected, atol=1e-6)
+
+
+def test_dfm_update_pole_guard():
+    # t >= 1 must not produce NaN/inf.
+    logits = jnp.zeros((1, 2, 4), jnp.float32)
+    x = jnp.zeros((1, 2), jnp.int32)
+    probs = np.asarray(dfm_update(logits, x, 1.0, 0.05, 1.0))
+    assert np.isfinite(probs).all()
+
+
+def test_dfm_update_literal_warp_scales_velocity():
+    # warp = 1-t0 < 1 moves less mass than warp = 1.
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(size=(1, 4, 9)).astype(np.float32) * 2)
+    x = jnp.asarray(rng.integers(0, 9, size=(1, 4)).astype(np.int32))
+    full = np.asarray(dfm_update(logits, x, 0.85, 0.05, 1.0))
+    part = np.asarray(dfm_update(logits, x, 0.85, 0.05, 0.2))
+    delta = np.eye(9, dtype=np.float32)[np.asarray(x)]
+    # Distance from the current-state delta: literal < exact.
+    assert np.abs(part - delta).sum() < np.abs(full - delta).sum()
+
+
+def test_pick_block_n_divides():
+    for n in [1, 2, 3, 30, 192, 256]:
+        bn = _pick_block_n(n)
+        assert n % bn == 0
+
+
+def test_dfm_update_vmem_estimate():
+    assert dfm_update_vmem_bytes(256, 256) < 2 * 1024 * 1024

@@ -1,0 +1,129 @@
+"""Model shape/behaviour tests (MLP, DiT, LSTM, PCA) + pallas/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nn
+from compile.models import dit, lstm, mlp, pca
+
+
+def test_mlp_shapes():
+    params = mlp.init(jax.random.PRNGKey(0), vocab=128, hidden=64, n_tokens=2)
+    x = jnp.asarray([[3, 100], [0, 127]], jnp.int32)
+    t = jnp.asarray([0.1, 0.9], jnp.float32)
+    logits = mlp.apply(params, x, t)
+    assert logits.shape == (2, 2, 128)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_mlp_time_conditioning_matters():
+    params = mlp.init(jax.random.PRNGKey(1), vocab=32, hidden=32)
+    x = jnp.asarray([[1, 2]], jnp.int32)
+    l0 = mlp.apply(params, x, jnp.asarray([0.1]))
+    l1 = mlp.apply(params, x, jnp.asarray([0.9]))
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_dit_shapes_and_finite():
+    params = dit.init(jax.random.PRNGKey(0), vocab=27, seq_len=16, dim=32, heads=2, blocks=2)
+    x = jnp.zeros((3, 16), jnp.int32)
+    t = jnp.full((3,), 0.5)
+    logits = dit.apply(params, x, t, heads=2)
+    assert logits.shape == (3, 16, 27)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_dit_pallas_matches_ref_path():
+    # The AOT export uses the Pallas attention; training uses the reference.
+    # They must agree numerically.
+    params = dit.init(jax.random.PRNGKey(2), vocab=27, seq_len=16, dim=32, heads=2, blocks=2)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 27, (2, 16)), jnp.int32)
+    t = jnp.asarray([0.3, 0.7])
+    a = dit.apply(params, x, t, use_pallas=False, heads=2)
+    b = dit.apply(params, x, t, use_pallas=True, heads=2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_dit_adaln_zero_init_means_near_identity_blocks():
+    # With adaLN-Zero, gates start at 0 so token mixing is initially off:
+    # permuting *other* positions' tokens must not change position 0's
+    # logits at init.
+    params = dit.init(jax.random.PRNGKey(3), vocab=11, seq_len=8, dim=16, heads=2, blocks=2)
+    x1 = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32) % 11
+    x2 = jnp.asarray([[1, 8, 7, 6, 5, 4, 3, 2]], jnp.int32) % 11
+    t = jnp.asarray([0.5])
+    l1 = dit.apply(params, x1, t, heads=2)
+    l2 = dit.apply(params, x2, t, heads=2)
+    np.testing.assert_allclose(np.asarray(l1)[0, 0], np.asarray(l2)[0, 0], atol=1e-5)
+
+
+def test_dit_rejects_bad_heads():
+    with pytest.raises(ValueError):
+        dit.init(jax.random.PRNGKey(0), vocab=5, seq_len=4, dim=30, heads=4)
+
+
+def test_lstm_teacher_forcing_shapes():
+    params = lstm.init(jax.random.PRNGKey(0), vocab=27, dim=32)
+    toks = jnp.zeros((4, 12), jnp.int32)
+    logits = lstm.apply_seq(params, toks)
+    assert logits.shape == (4, 12, 27)
+
+
+def test_lstm_causality():
+    # Changing a later token must not affect earlier logits.
+    params = lstm.init(jax.random.PRNGKey(1), vocab=11, dim=16)
+    a = jnp.asarray([[1, 2, 3, 4, 5]], jnp.int32)
+    b = jnp.asarray([[1, 2, 3, 9, 9]], jnp.int32)
+    la = lstm.apply_seq(params, a)
+    lb = lstm.apply_seq(params, b)
+    np.testing.assert_allclose(np.asarray(la)[:, :3], np.asarray(lb)[:, :3], atol=1e-6)
+    # Position 4 differs (conditioned on position 3).
+    assert not np.allclose(np.asarray(la)[:, 4], np.asarray(lb)[:, 4])
+
+
+def test_lstm_sample_deterministic_given_noise():
+    params = lstm.init(jax.random.PRNGKey(2), vocab=9, dim=16)
+    g = jax.random.gumbel(jax.random.PRNGKey(3), (2, 6, 9))
+    t1 = lstm.sample(params, g)
+    t2 = lstm.sample(params, g)
+    assert (np.asarray(t1) == np.asarray(t2)).all()
+    assert t1.shape == (2, 6)
+    assert np.asarray(t1).min() >= 0 and np.asarray(t1).max() < 9
+
+
+def test_pca_fit_sample_roundtrip():
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 32, size=(1, 64))
+    imgs = np.clip(base + rng.normal(scale=2.0, size=(200, 64)), 0, 31).astype(np.int32)
+    params = pca.fit(imgs, k=8)
+    z = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    out = np.asarray(pca.sample(params, z, 32))
+    assert out.shape == (16, 64)
+    assert out.min() >= 0 and out.max() < 32
+    # Samples should hug the dataset mean (low-variance data).
+    assert np.abs(out.mean(0) - imgs.mean(0)).mean() < 4.0
+
+
+def test_amsgrad_descends_quadratic():
+    opt = nn.AmsGrad(lr=0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.asarray([[[10.0, -10.0], [-10.0, 10.0]]])
+    targets = jnp.asarray([[0, 1]], jnp.int32)
+    assert float(nn.cross_entropy(logits, targets)) < 1e-4
+
+
+def test_count_params():
+    params = mlp.init(jax.random.PRNGKey(0), vocab=16, hidden=8, n_tokens=2)
+    n = nn.count_params(params)
+    assert n > 16 * 8  # at least the embedding

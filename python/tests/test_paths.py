@@ -1,0 +1,98 @@
+"""Probability-path properties (cold + warm) and the NFE guarantee."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import paths
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def test_kappa_boundaries():
+    assert float(paths.kappa(jnp.float32(0.0))) == 0.0
+    assert float(paths.kappa(jnp.float32(1.0))) == 1.0
+    assert float(paths.kappa(jnp.float32(0.8), 0.8)) == 0.0
+    assert float(paths.kappa(jnp.float32(1.0), 0.8)) == 1.0
+
+
+@settings(**SETTINGS)
+@given(t0=st.floats(0.0, 0.95), t=st.floats(0.0, 1.0))
+def test_kappa_in_unit_interval(t0, t):
+    k = float(paths.kappa(jnp.float32(t), t0))
+    assert 0.0 <= k <= 1.0
+
+
+def test_warm_path_reduces_to_cold_at_t0_zero():
+    t = jnp.linspace(0.0, 1.0, 11)
+    np.testing.assert_allclose(np.asarray(paths.kappa(t, 0.0)), np.asarray(t), atol=1e-6)
+
+
+def test_sample_t_range():
+    key = jax.random.PRNGKey(0)
+    t = np.asarray(paths.sample_t(key, 10_000, t0=0.8))
+    assert (t >= 0.8 - 1e-6).all() and (t <= 1.0).all()
+    assert abs(t.mean() - 0.9) < 0.005
+
+
+def test_interpolate_boundary_marginals():
+    key = jax.random.PRNGKey(1)
+    b, n = 2048, 8
+    x_src = jnp.zeros((b, n), jnp.int32)
+    x_1 = jnp.ones((b, n), jnp.int32)
+    # At t = t0 the sample is pure source; at t = 1 pure target.
+    at_t0 = paths.interpolate(key, x_src, x_1, jnp.full((b,), 0.8), t0=0.8)
+    assert (np.asarray(at_t0) == 0).all()
+    at_1 = paths.interpolate(key, x_src, x_1, jnp.ones((b,)), t0=0.8)
+    assert (np.asarray(at_1) == 1).all()
+
+
+@settings(**SETTINGS)
+@given(t0=st.floats(0.0, 0.9), frac=st.floats(0.05, 0.95))
+def test_interpolate_mixing_fraction(t0, frac):
+    key = jax.random.PRNGKey(42)
+    t_val = t0 + frac * (1.0 - t0)
+    b, n = 512, 32
+    x_src = jnp.zeros((b, n), jnp.int32)
+    x_1 = jnp.ones((b, n), jnp.int32)
+    x_t = np.asarray(paths.interpolate(key, x_src, x_1, jnp.full((b,), t_val), t0=t0))
+    measured = x_t.mean()
+    expected = float(paths.kappa(jnp.float32(t_val), t0))
+    assert abs(measured - expected) < 0.02, (measured, expected)
+
+
+def test_interpolate_shape_mismatch():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        paths.interpolate(key, jnp.zeros((2, 3), jnp.int32), jnp.zeros((2, 4), jnp.int32), jnp.zeros((2,)))
+
+
+def test_uniform_noise_covers_vocab():
+    key = jax.random.PRNGKey(3)
+    x = np.asarray(paths.uniform_noise(key, (64, 64), 27))
+    assert x.min() >= 0 and x.max() <= 26
+    assert len(np.unique(x)) == 27
+
+
+def test_mask_noise():
+    x = np.asarray(paths.mask_noise((3, 4), 27))
+    assert (x == 27).all()
+
+
+# The NFE guarantee (mirrored by rust core::schedule — same pinned values).
+@pytest.mark.parametrize(
+    "steps,t0,expected",
+    [(20, 0.95, 1), (20, 0.9, 2), (20, 0.8, 4), (20, 0.5, 10), (20, 0.35, 13),
+     (1024, 0.8, 205), (1024, 0.5, 512), (128, 0.0, 128)],
+)
+def test_nfe_guarantee_table(steps, t0, expected):
+    assert paths.nfe(steps, t0) == expected
+
+
+def test_nfe_rejects_bad_t0():
+    with pytest.raises(ValueError):
+        paths.nfe(10, 1.0)
+    with pytest.raises(ValueError):
+        paths.nfe(10, -0.1)

@@ -1,0 +1,136 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf) + update-rule ablation.
+//!
+//! Measures the L3 components around the PJRT engine call:
+//! categorical sampling, batcher offer/flush, queue handoff, JSON protocol
+//! encode/decode — and the engine step itself per domain/batch, so the
+//! "coordinator must not be the bottleneck" target is quantified.
+//!
+//! `cargo bench --bench hotpath`
+
+use std::time::Instant;
+use wsfm::coordinator::batcher::{Batcher, FlushPolicy};
+use wsfm::coordinator::request::{DraftSpec, GenRequest};
+use wsfm::core::prob;
+use wsfm::core::rng::Pcg64;
+use wsfm::core::schedule::WarpMode;
+use wsfm::harness::common::Env;
+use wsfm::runtime::Executor;
+use wsfm::util::bench::{black_box, Bench};
+
+fn bench_l3_components() {
+    let b = Bench::default();
+
+    // 1. Categorical sampling over a [32, 64, 27] probs tensor — the only
+    //    per-token L3 work per Euler step.
+    let mut rng = Pcg64::new(0);
+    let vocab = 27;
+    let rows = 32 * 64;
+    let probs: Vec<f32> = (0..rows * vocab).map(|_| rng.uniform_f32() + 0.01).collect();
+    let mut out = vec![0i32; rows];
+    b.run("categorical_batch 32x64x27", || {
+        prob::categorical_batch(black_box(&probs), vocab, &mut out, &mut rng);
+    });
+
+    // Larger image-shaped tensor.
+    let vocab2 = 32;
+    let rows2 = 16 * 256;
+    let probs2: Vec<f32> = (0..rows2 * vocab2).map(|_| rng.uniform_f32() + 0.01).collect();
+    let mut out2 = vec![0i32; rows2];
+    b.run("categorical_batch 16x256x32", || {
+        prob::categorical_batch(black_box(&probs2), vocab2, &mut out2, &mut rng);
+    });
+
+    // 2. Batcher offer+flush cycle.
+    let mk_req = |i: u64| GenRequest {
+        id: i,
+        domain: "text8".into(),
+        tag: "ws_t080".into(),
+        draft: DraftSpec::Lstm,
+        n_samples: 1,
+        t0: 0.8,
+        steps_cold: 128,
+        warp_mode: WarpMode::Literal,
+        seed: i,
+        submitted: Instant::now(),
+    };
+    b.run("batcher offer x32 + flush", || {
+        let mut batcher =
+            Batcher::new(FlushPolicy { max_batch: 32, max_wait: std::time::Duration::from_secs(1) });
+        for i in 0..32 {
+            if let Some(bundle) = batcher.offer(mk_req(i)) {
+                black_box(bundle.total_samples());
+            }
+        }
+        black_box(batcher.flush_all().len());
+    });
+
+    // 3. Wire protocol encode/decode.
+    let line = r#"{"cmd":"generate","domain":"text8","tag":"ws_t080","draft":"lstm","n_samples":4,"t0":0.8,"steps":1024,"seed":7,"decode":true}"#;
+    b.run("protocol parse_request", || {
+        black_box(wsfm::server::protocol::parse_request(black_box(line)).unwrap());
+    });
+
+    // 4. RNG noise fill (draft-model input generation, 32x64x27 gumbel).
+    let mut noise = vec![0.0f32; 32 * 64 * 27];
+    b.run("gumbel fill 32x64x27", || {
+        rng.fill_gumbel_f32(&mut noise);
+        black_box(noise[0]);
+    });
+}
+
+fn bench_engine_steps(env: &Env) {
+    let b = Bench { warmup: std::time::Duration::from_millis(300), samples: 8, ..Bench::default() };
+    // One engine step per served shape: the denominator for "L3 overhead".
+    let shapes: [(&str, &str, usize); 4] = [
+        ("two_moons", "cold", 64),
+        ("two_moons", "cold", 1024),
+        ("text8", "cold", 32),
+        ("img_gray", "cold", 16),
+    ];
+    for (domain, tag, batch) in shapes {
+        let Ok(meta) = env.manifest.find_step(domain, tag, batch) else {
+            eprintln!("skipping {domain}/b{batch} (not built)");
+            continue;
+        };
+        let meta = meta.clone();
+        let tokens = vec![1i32; meta.batch * meta.seq_len];
+        // Warm the compile cache first.
+        let _ = env.engine.step(&meta.name, &tokens, 0.5, 0.05, 1.0).unwrap();
+        b.run(&format!("engine step {domain} b{batch} (N={})", meta.seq_len), || {
+            black_box(env.engine.step(&meta.name, &tokens, 0.5, 0.05, 1.0).unwrap());
+        });
+    }
+}
+
+fn bench_update_rule_ablation(env: &Env) {
+    // Ablation: literal vs exact update rule, same artifact/schedule —
+    // quality measured in table1; here we confirm identical cost.
+    let Ok(meta) = env.manifest.find_step("two_moons", "ws_good_t080", 1024) else {
+        return;
+    };
+    let meta = meta.clone();
+    let b = Bench::quick();
+    let tokens = vec![1i32; meta.batch * meta.seq_len];
+    let _ = env.engine.step(&meta.name, &tokens, 0.85, 0.05, 1.0).unwrap();
+    for (label, warp) in [("exact(warp=1.0)", 1.0f32), ("literal(warp=0.2)", 0.2f32)] {
+        b.run(&format!("ws step {label}"), || {
+            black_box(env.engine.step(&meta.name, &tokens, 0.85, 0.05, warp).unwrap());
+        });
+    }
+}
+
+fn main() {
+    println!("== L3 coordinator components ==");
+    bench_l3_components();
+
+    match Env::load("artifacts") {
+        Ok(env) => {
+            println!("\n== engine steps (per served shape) ==");
+            bench_engine_steps(&env);
+            println!("\n== update-rule ablation (cost) ==");
+            bench_update_rule_ablation(&env);
+            env.engine.shutdown();
+        }
+        Err(e) => eprintln!("artifacts not built; engine benches skipped: {e:#}"),
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Table 1 (two-moons SKL/NFE) + per-row timing.
+//! `cargo bench --bench table1_two_moons`
+//!
+//! Uses the in-tree harness (criterion is not vendored — see DESIGN.md §2).
+
+use wsfm::harness::common::Env;
+use wsfm::harness::table1;
+
+fn main() {
+    let env = match Env::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping table1 bench (artifacts not built): {e:#}");
+            return;
+        }
+    };
+    let rows = table1::run(&env, 2048, 0).expect("table1 failed");
+    table1::print(&rows);
+
+    // Wall-clock scaling check: time-per-sample must scale ~ with NFE.
+    println!("\nNFE scaling (s/sample ratios vs cold):");
+    let cold = &rows[0];
+    for r in &rows[1..] {
+        println!(
+            "  {:<24} nfe_ratio={:.2}  time_ratio={:.2}",
+            r.label,
+            cold.nfe as f64 / r.nfe as f64,
+            cold.secs_per_sample / r.secs_per_sample.max(1e-12)
+        );
+    }
+    env.engine.shutdown();
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate paper Table 2 (synth-text8 NLL/entropy/time).
+//! `cargo bench --bench table2_text8`
+
+use wsfm::data::corpus::load_text8;
+use wsfm::harness::common::Env;
+use wsfm::harness::table2::{self, TextBenchCfg};
+
+fn main() {
+    let env = match Env::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping table2 bench (artifacts not built): {e:#}");
+            return;
+        }
+    };
+    let eval_stream = match load_text8(&env.manifest.dir.join("text8_eval.txt")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping (text8 corpus missing): {e:#}");
+            return;
+        }
+    };
+    let train_stream = load_text8(&env.manifest.dir.join("text8_corpus.txt")).unwrap();
+    let cfg = TextBenchCfg {
+        domain: "text8",
+        eval_file: "text8_eval.txt",
+        eval_order: 5,
+        refine_order: 4,
+        vocab: 27,
+        steps_cold: 128, // bench-speed resolution; CLI harness defaults to 256
+        n_eval: 16,
+        seed: 0,
+    };
+    let rows =
+        table2::run_text(&env, &cfg, &eval_stream, &train_stream[..train_stream.len().min(200_000)])
+            .expect("table2 failed");
+    table2::print("Table 2 (synth-text8) [bench profile]", &rows, table2::PAPER, false);
+    env.engine.shutdown();
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate paper Table 3 (synth-wiki perplexity/entropy/time).
+//! `cargo bench --bench table3_wikitext`
+
+use wsfm::data::corpus::load_i32_stream;
+use wsfm::harness::common::Env;
+use wsfm::harness::{table2, table3};
+
+fn main() {
+    let env = match Env::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping table3 bench (artifacts not built): {e:#}");
+            return;
+        }
+    };
+    let eval_stream = match load_i32_stream(&env.manifest.dir.join("wiki_eval.bin")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping (wiki corpus missing): {e:#}");
+            return;
+        }
+    };
+    let train_stream = load_i32_stream(&env.manifest.dir.join("wiki_corpus.bin")).unwrap();
+    let cfg = table2::TextBenchCfg {
+        domain: "wiki",
+        eval_file: "wiki_eval.bin",
+        eval_order: 3,
+        refine_order: 3,
+        vocab: 256,
+        steps_cold: 128,
+        n_eval: 16,
+        seed: 0,
+    };
+    let rows =
+        table2::run_text(&env, &cfg, &eval_stream, &train_stream[..train_stream.len().min(150_000)])
+            .expect("table3 failed");
+    table2::print("Table 3 (synth-wiki) [bench profile]", &rows, table3::PAPER, true);
+    env.engine.shutdown();
+}

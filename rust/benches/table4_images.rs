@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Table 4 (image FID/time, gray + color).
+//! `cargo bench --bench table4_images`
+
+use wsfm::data::shapes;
+use wsfm::harness::common::Env;
+use wsfm::harness::table4::{self, ImageCfg};
+
+fn main() {
+    let env = match Env::load("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping table4 bench (artifacts not built): {e:#}");
+            return;
+        }
+    };
+    for (domain, side, channels, col) in
+        [("img_gray", shapes::GRAY_SIDE, 1usize, 0usize), ("img_color", shapes::COLOR_SIDE, 3, 1)]
+    {
+        if env.manifest.for_domain(domain).is_empty() {
+            eprintln!("skipping {domain} (not built)");
+            continue;
+        }
+        let cfg = ImageCfg { domain: if col == 0 { "img_gray" } else { "img_color" }, side, channels, steps_cold: 48, n_eval: 48, seed: 0 };
+        let rows = table4::run_images(&env, &cfg).expect("table4 failed");
+        table4::print(&format!("Table 4 ({domain}) [bench profile]"), &rows, col);
+    }
+    env.engine.shutdown();
+}

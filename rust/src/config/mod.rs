@@ -1,0 +1,205 @@
+//! Typed configuration for the serving stack.
+//!
+//! Defaults ← JSON config file (`--config path`) ← CLI overrides, in that
+//! precedence order. The config is deliberately explicit: everything the
+//! coordinator, batcher, and sampler consult lives here, and `validate()`
+//! rejects inconsistent settings at startup rather than mid-request.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WsfmConfig {
+    /// Directory containing the AOT artifacts + manifest.
+    pub artifacts_dir: PathBuf,
+    /// TCP listen address for `wsfm serve`.
+    pub listen_addr: String,
+    pub batcher: BatcherConfig,
+    pub sampler: SamplerConfig,
+    /// Bounded admission queue size (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Global RNG seed (per-request RNGs are split from it).
+    pub seed: u64,
+}
+
+/// Dynamic batcher tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatcherConfig {
+    /// Flush when this many samples are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long (µs).
+    pub max_wait_us: u64,
+}
+
+/// Sampler defaults (overridable per request).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplerConfig {
+    /// Cold-run step count (the paper's NFE baseline, e.g. 20 or 1024).
+    pub steps_cold: usize,
+    /// Default warm-start time for WS requests.
+    pub t0: f64,
+    /// Update rule: "literal" (paper Fig. 3) or "exact".
+    pub warp_mode: String,
+}
+
+impl Default for WsfmConfig {
+    fn default() -> Self {
+        WsfmConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            listen_addr: "127.0.0.1:7871".to_string(),
+            batcher: BatcherConfig { max_batch: 32, max_wait_us: 2000 },
+            sampler: SamplerConfig { steps_cold: 128, t0: 0.8, warp_mode: "literal".into() },
+            queue_capacity: 256,
+            workers: 1,
+            seed: 0,
+        }
+    }
+}
+
+impl WsfmConfig {
+    /// Load from a JSON file, layered over defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&json)
+    }
+
+    /// Layer a JSON object over defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = WsfmConfig::default();
+        if let Some(s) = j.get("artifacts_dir").as_str() {
+            c.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = j.get("listen_addr").as_str() {
+            c.listen_addr = s.to_string();
+        }
+        if let Some(n) = j.get("queue_capacity").as_usize() {
+            c.queue_capacity = n;
+        }
+        if let Some(n) = j.get("workers").as_usize() {
+            c.workers = n;
+        }
+        if let Some(n) = j.get("seed").as_f64() {
+            c.seed = n as u64;
+        }
+        let b = j.get("batcher");
+        if let Some(n) = b.get("max_batch").as_usize() {
+            c.batcher.max_batch = n;
+        }
+        if let Some(n) = b.get("max_wait_us").as_f64() {
+            c.batcher.max_wait_us = n as u64;
+        }
+        let s = j.get("sampler");
+        if let Some(n) = s.get("steps_cold").as_usize() {
+            c.sampler.steps_cold = n;
+        }
+        if let Some(n) = s.get("t0").as_f64() {
+            c.sampler.t0 = n;
+        }
+        if let Some(m) = s.get("warp_mode").as_str() {
+            c.sampler.warp_mode = m.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Serialize (for `wsfm info` and test round-trips).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir", Json::str(self.artifacts_dir.to_string_lossy().to_string())),
+            ("listen_addr", Json::str(self.listen_addr.clone())),
+            ("queue_capacity", Json::num(self.queue_capacity as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "batcher",
+                Json::obj(vec![
+                    ("max_batch", Json::num(self.batcher.max_batch as f64)),
+                    ("max_wait_us", Json::num(self.batcher.max_wait_us as f64)),
+                ]),
+            ),
+            (
+                "sampler",
+                Json::obj(vec![
+                    ("steps_cold", Json::num(self.sampler.steps_cold as f64)),
+                    ("t0", Json::num(self.sampler.t0)),
+                    ("warp_mode", Json::str(self.sampler.warp_mode.clone())),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batcher.max_batch == 0 {
+            bail!("batcher.max_batch must be positive");
+        }
+        if self.queue_capacity == 0 {
+            bail!("queue_capacity must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be positive");
+        }
+        if self.sampler.steps_cold == 0 {
+            bail!("sampler.steps_cold must be positive");
+        }
+        if !(0.0..1.0).contains(&self.sampler.t0) {
+            bail!("sampler.t0 must be in [0, 1), got {}", self.sampler.t0);
+        }
+        crate::core::schedule::WarpMode::parse(&self.sampler.warp_mode)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        WsfmConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_layering() {
+        let j = Json::parse(
+            r#"{"listen_addr":"0.0.0.0:9000","batcher":{"max_batch":8},"sampler":{"t0":0.5}}"#,
+        )
+        .unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.listen_addr, "0.0.0.0:9000");
+        assert_eq!(c.batcher.max_batch, 8);
+        assert_eq!(c.sampler.t0, 0.5);
+        // Untouched fields keep defaults.
+        assert_eq!(c.queue_capacity, WsfmConfig::default().queue_capacity);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        for bad in [
+            r#"{"batcher":{"max_batch":0}}"#,
+            r#"{"sampler":{"t0":1.5}}"#,
+            r#"{"sampler":{"warp_mode":"sideways"}}"#,
+            r#"{"workers":0}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = WsfmConfig::default();
+        let j = c.to_json();
+        let c2 = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn from_file_missing_errors() {
+        assert!(WsfmConfig::from_file(Path::new("/nonexistent/wsfm.json")).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Dynamic batcher: groups compatible requests (same [`BundleKey`]) and
+//! flushes a bundle when it has enough samples or its oldest request has
+//! waited past the deadline — the standard continuous-batching trade
+//! between throughput (bigger batches) and tail latency (deadlines).
+//!
+//! Pure data structure (no threads): the service loop feeds `offer()` and
+//! polls `due()`. Property tests pin conservation (no request lost or
+//! duplicated) and FIFO within a bundle.
+
+use crate::coordinator::request::{BundleKey, GenRequest};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Flush tuning (from [`crate::config::BatcherConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FlushPolicy {
+    /// Flush when a bundle has at least this many samples pending.
+    pub max_batch: usize,
+    /// Flush when the oldest request in a bundle has waited this long.
+    pub max_wait: Duration,
+}
+
+/// A flushed group ready for the scheduler.
+#[derive(Debug)]
+pub struct WorkBundle {
+    pub key: BundleKey,
+    pub requests: Vec<GenRequest>,
+}
+
+impl WorkBundle {
+    pub fn total_samples(&self) -> usize {
+        self.requests.iter().map(|r| r.n_samples).sum()
+    }
+}
+
+#[derive(Debug)]
+struct PendingBundle {
+    requests: Vec<GenRequest>,
+    samples: usize,
+    oldest: Instant,
+}
+
+/// The batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: FlushPolicy,
+    pending: HashMap<BundleKey, PendingBundle>,
+}
+
+impl Batcher {
+    pub fn new(policy: FlushPolicy) -> Self {
+        Batcher { policy, pending: HashMap::new() }
+    }
+
+    /// Add a request. Returns a bundle if the addition makes one flushable
+    /// by size.
+    pub fn offer(&mut self, req: GenRequest) -> Option<WorkBundle> {
+        let key = req.bundle_key();
+        let entry = self.pending.entry(key.clone()).or_insert_with(|| PendingBundle {
+            requests: Vec::new(),
+            samples: 0,
+            oldest: req.submitted,
+        });
+        if entry.requests.is_empty() {
+            entry.oldest = req.submitted;
+        }
+        entry.samples += req.n_samples;
+        entry.requests.push(req);
+        if entry.samples >= self.policy.max_batch {
+            return self.take(&key);
+        }
+        None
+    }
+
+    /// Bundles whose deadline has passed (call periodically).
+    pub fn due(&mut self, now: Instant) -> Vec<WorkBundle> {
+        let keys: Vec<BundleKey> = self
+            .pending
+            .iter()
+            .filter(|(_, b)| {
+                !b.requests.is_empty() && now.duration_since(b.oldest) >= self.policy.max_wait
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.iter().filter_map(|k| self.take(k)).collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<WorkBundle> {
+        let keys: Vec<BundleKey> = self.pending.keys().cloned().collect();
+        keys.iter().filter_map(|k| self.take(k)).collect()
+    }
+
+    /// Earliest deadline among pending bundles (service sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter(|b| !b.requests.is_empty())
+            .map(|b| b.oldest + self.policy.max_wait)
+            .min()
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.pending.values().map(|b| b.requests.len()).sum()
+    }
+
+    pub fn pending_samples(&self) -> usize {
+        self.pending.values().map(|b| b.samples).sum()
+    }
+
+    fn take(&mut self, key: &BundleKey) -> Option<WorkBundle> {
+        let bundle = self.pending.remove(key)?;
+        if bundle.requests.is_empty() {
+            return None;
+        }
+        Some(WorkBundle { key: key.clone(), requests: bundle.requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::DraftSpec;
+    use crate::core::schedule::WarpMode;
+
+    fn req(id: u64, tag: &str, n: usize) -> GenRequest {
+        GenRequest {
+            id,
+            domain: "text8".into(),
+            tag: tag.into(),
+            draft: DraftSpec::Lstm,
+            n_samples: n,
+            t0: 0.8,
+            steps_cold: 64,
+            warp_mode: WarpMode::Literal,
+            seed: id,
+            submitted: Instant::now(),
+        }
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64) -> FlushPolicy {
+        FlushPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn size_triggered_flush() {
+        let mut b = Batcher::new(policy(8, 1000));
+        assert!(b.offer(req(1, "cold", 3)).is_none());
+        assert!(b.offer(req(2, "cold", 3)).is_none());
+        let bundle = b.offer(req(3, "cold", 3)).expect("should flush at 9 >= 8");
+        assert_eq!(bundle.requests.len(), 3);
+        assert_eq!(bundle.total_samples(), 9);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn different_keys_do_not_mix() {
+        let mut b = Batcher::new(policy(4, 1000));
+        assert!(b.offer(req(1, "cold", 3)).is_none());
+        // Different tag -> different bundle; neither flushes.
+        assert!(b.offer(req(2, "ws_t080", 3)).is_none());
+        assert_eq!(b.pending_requests(), 2);
+        let flushed = b.flush_all();
+        assert_eq!(flushed.len(), 2);
+        for bundle in &flushed {
+            assert_eq!(bundle.requests.len(), 1);
+            assert!(bundle.requests.iter().all(|r| r.bundle_key() == bundle.key));
+        }
+    }
+
+    #[test]
+    fn deadline_triggered_flush() {
+        let mut b = Batcher::new(policy(100, 0)); // immediate deadline
+        b.offer(req(1, "cold", 2));
+        std::thread::sleep(Duration::from_millis(1));
+        let due = b.due(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].total_samples(), 2);
+        assert!(b.due(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn deadline_not_early() {
+        let mut b = Batcher::new(policy(100, 10_000));
+        b.offer(req(1, "cold", 2));
+        assert!(b.due(Instant::now()).is_empty());
+        assert!(b.next_deadline().is_some());
+    }
+
+    #[test]
+    fn fifo_within_bundle() {
+        let mut b = Batcher::new(policy(100, 1000));
+        for i in 0..10 {
+            b.offer(req(i, "cold", 1));
+        }
+        let all = b.flush_all();
+        assert_eq!(all.len(), 1);
+        let ids: Vec<u64> = all[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conservation_property() {
+        // Random offers across keys: every request comes out exactly once.
+        use crate::util::prop::{check, Pair, UsizeRange, VecOf};
+        check(
+            "batcher conserves requests",
+            VecOf(Pair(UsizeRange(0, 3), UsizeRange(1, 9)), 40),
+            |ops| {
+                let tags = ["cold", "ws_t050", "ws_t080", "x"];
+                let mut b = Batcher::new(policy(8, 1000));
+                let mut submitted = Vec::new();
+                let mut emitted = Vec::new();
+                for (i, &(tag_i, n)) in ops.iter().enumerate() {
+                    let r = req(i as u64, tags[tag_i], n);
+                    submitted.push(r.id);
+                    if let Some(bundle) = b.offer(r) {
+                        emitted.extend(bundle.requests.iter().map(|r| r.id));
+                    }
+                }
+                for bundle in b.flush_all() {
+                    emitted.extend(bundle.requests.iter().map(|r| r.id));
+                }
+                let mut e = emitted.clone();
+                e.sort_unstable();
+                let mut s = submitted.clone();
+                s.sort_unstable();
+                if e != s {
+                    return Err(format!("lost/duplicated: in={s:?} out={e:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

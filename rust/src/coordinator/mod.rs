@@ -1,0 +1,28 @@
+//! The serving coordinator — the paper's system contribution realized as a
+//! vLLM-style inference data plane (DESIGN.md §5).
+//!
+//! Request lifecycle:
+//!
+//! ```text
+//! client → [request] → admission queue (bounded, backpressure)
+//!        → dynamic batcher (group by bundle key, flush on size/deadline)
+//!        → scheduler: phase DRAFT (lightweight model, negligible)
+//!                     phase REFINE (K = ceil(steps·(1-t0)) fused steps)
+//!        → per-request responses (+ NFE, timings)
+//! ```
+//!
+//! Invariants (property-tested): no request lost or duplicated; batch
+//! shapes ∈ compiled set; padding rows never leak into responses; FIFO
+//! order within a bundle; NFE == the paper's guaranteed formula.
+
+pub mod batcher;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod service;
+
+pub use batcher::{Batcher, FlushPolicy};
+pub use queue::BoundedQueue;
+pub use request::{BundleKey, DraftSpec, GenRequest, GenResponse};
+pub use scheduler::Scheduler;
+pub use service::Service;

@@ -1,0 +1,173 @@
+//! Bounded admission queue with backpressure.
+//!
+//! `push` fails fast with [`QueueFull`] when capacity is reached — the
+//! server surfaces that as a `busy` response instead of buffering without
+//! bound (DESIGN.md §5). Pop supports timeouts so the batcher can enforce
+//! flush deadlines, and `close()` drains cleanly at shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Error returned when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull;
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "admission queue full")
+    }
+}
+impl std::error::Error for QueueFull {}
+
+#[derive(Debug)]
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC bounded FIFO queue.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    capacity: usize,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            capacity,
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push; `Err(QueueFull)` applies backpressure.
+    pub fn push(&self, item: T) -> Result<(), QueueFull> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(QueueFull);
+        }
+        g.items.push_back(item);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout; `None` on timeout or when closed+empty.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                return g.items.pop_front();
+            }
+        }
+    }
+
+    /// Drain everything currently queued (non-blocking).
+    pub fn drain(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        g.items.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: further pushes fail; pops drain whatever remains then None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(i));
+        }
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(QueueFull));
+        assert_eq!(q.len(), 2);
+        q.pop_timeout(Duration::from_millis(1)).unwrap();
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_push_but_drains() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(QueueFull));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(7));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(64));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                while q2.push(i).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop_timeout(Duration::from_millis(200)) {
+            got.push(v);
+            if got.len() == 100 {
+                break;
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_takes_all() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.drain(), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+}

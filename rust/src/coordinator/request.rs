@@ -1,0 +1,209 @@
+//! Request/response types and the batching bundle key.
+
+use crate::core::schedule::WarpMode;
+use crate::data::two_moons::DraftKind;
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+/// Which draft model supplies the warm-start initial samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DraftSpec {
+    /// Uniform noise (cold DFM's implicit draft).
+    Noise,
+    /// LSTM HLO artifact (text domains).
+    Lstm,
+    /// PCA-Gaussian HLO artifact (image domains).
+    Pca,
+    /// Two-moons contrived mixtures.
+    Mixture(DraftKind),
+}
+
+impl DraftSpec {
+    pub fn parse(s: &str) -> Result<DraftSpec> {
+        Ok(match s {
+            "noise" => DraftSpec::Noise,
+            "lstm" => DraftSpec::Lstm,
+            "pca" => DraftSpec::Pca,
+            other => match DraftKind::parse(other) {
+                Some(k) => DraftSpec::Mixture(k),
+                None => bail!("unknown draft {other:?} (noise|lstm|pca|good|fair|poor)"),
+            },
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DraftSpec::Noise => "noise",
+            DraftSpec::Lstm => "lstm",
+            DraftSpec::Pca => "pca",
+            DraftSpec::Mixture(k) => k.name(),
+        }
+    }
+}
+
+/// One generation request (post-routing, pre-batching).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Domain ("two_moons", "text8", "wiki", "img_gray", "img_color").
+    pub domain: String,
+    /// Step-artifact tag ("cold", "ws_t080", "ws_good_t095", ...).
+    pub tag: String,
+    pub draft: DraftSpec,
+    /// Number of samples this request wants.
+    pub n_samples: usize,
+    /// Warm-start time (0 = cold).
+    pub t0: f64,
+    /// Cold-run step count (grid resolution).
+    pub steps_cold: usize,
+    pub warp_mode: WarpMode,
+    /// Request RNG seed (reproducibility).
+    pub seed: u64,
+    pub submitted: Instant,
+}
+
+impl GenRequest {
+    /// The batching key: requests sharing it can ride the same executor
+    /// batch (same artifact and identical sampler schedule).
+    pub fn bundle_key(&self) -> BundleKey {
+        BundleKey {
+            domain: self.domain.clone(),
+            tag: self.tag.clone(),
+            draft: self.draft,
+            t0_milli: (self.t0 * 1000.0).round() as u32,
+            steps_cold: self.steps_cold,
+            warp_literal: self.warp_mode == WarpMode::Literal,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_samples == 0 {
+            bail!("n_samples must be positive");
+        }
+        if self.n_samples > 1 << 16 {
+            bail!("n_samples too large ({})", self.n_samples);
+        }
+        if !(0.0..1.0).contains(&self.t0) {
+            bail!("t0 must be in [0, 1), got {}", self.t0);
+        }
+        if self.steps_cold == 0 || self.steps_cold > 1 << 16 {
+            bail!("steps_cold out of range: {}", self.steps_cold);
+        }
+        if self.domain.is_empty() || self.tag.is_empty() {
+            bail!("domain and tag must be set");
+        }
+        Ok(())
+    }
+}
+
+/// Batching compatibility key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BundleKey {
+    pub domain: String,
+    pub tag: String,
+    pub draft: DraftSpec,
+    pub t0_milli: u32,
+    pub steps_cold: usize,
+    pub warp_literal: bool,
+}
+
+impl BundleKey {
+    pub fn t0(&self) -> f64 {
+        self.t0_milli as f64 / 1000.0
+    }
+
+    pub fn warp_mode(&self) -> WarpMode {
+        if self.warp_literal {
+            WarpMode::Literal
+        } else {
+            WarpMode::Exact
+        }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// `n_samples` rows of `seq_len` tokens.
+    pub samples: Vec<Vec<i32>>,
+    /// Denoiser evaluations performed for the batch this request rode.
+    pub nfe: usize,
+    pub queue_wait: Duration,
+    pub draft_time: Duration,
+    pub refine_time: Duration,
+    pub total_time: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> GenRequest {
+        GenRequest {
+            id: 1,
+            domain: "text8".into(),
+            tag: "ws_t080".into(),
+            draft: DraftSpec::Lstm,
+            n_samples: 4,
+            t0: 0.8,
+            steps_cold: 1024,
+            warp_mode: WarpMode::Literal,
+            seed: 0,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn bundle_key_groups_compatible() {
+        let a = req();
+        let mut b = req();
+        b.id = 2;
+        b.seed = 99;
+        b.n_samples = 7;
+        assert_eq!(a.bundle_key(), b.bundle_key()); // seed/id/count don't split batches
+
+        let mut c = req();
+        c.t0 = 0.5;
+        assert_ne!(a.bundle_key(), c.bundle_key());
+        let mut d = req();
+        d.warp_mode = WarpMode::Exact;
+        assert_ne!(a.bundle_key(), d.bundle_key());
+        let mut e = req();
+        e.tag = "cold".into();
+        assert_ne!(a.bundle_key(), e.bundle_key());
+    }
+
+    #[test]
+    fn validation() {
+        assert!(req().validate().is_ok());
+        let mut r = req();
+        r.n_samples = 0;
+        assert!(r.validate().is_err());
+        let mut r = req();
+        r.t0 = 1.0;
+        assert!(r.validate().is_err());
+        let mut r = req();
+        r.steps_cold = 0;
+        assert!(r.validate().is_err());
+        let mut r = req();
+        r.domain = String::new();
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn draft_spec_parse() {
+        assert_eq!(DraftSpec::parse("noise").unwrap(), DraftSpec::Noise);
+        assert_eq!(DraftSpec::parse("lstm").unwrap(), DraftSpec::Lstm);
+        assert_eq!(DraftSpec::parse("good").unwrap(), DraftSpec::Mixture(DraftKind::Good));
+        assert!(DraftSpec::parse("bogus").is_err());
+        assert_eq!(DraftSpec::parse("pca").unwrap().name(), "pca");
+    }
+
+    #[test]
+    fn bundle_key_t0_roundtrip() {
+        let k = req().bundle_key();
+        assert!((k.t0() - 0.8).abs() < 1e-9);
+        assert_eq!(k.warp_mode(), WarpMode::Literal);
+    }
+}

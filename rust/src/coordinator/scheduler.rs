@@ -1,0 +1,314 @@
+//! The two-phase scheduler: DRAFT → REFINE over one flushed bundle.
+//!
+//! For a bundle of `n` total samples it plans executor chunks over the
+//! compiled batch shapes ([`crate::runtime::pool`]), generates draft
+//! samples for each chunk (LSTM/PCA artifact, two-moons mixture, or
+//! uniform noise), runs the warm-start Euler loop, strips batch padding,
+//! and scatters rows back to the originating requests in FIFO order.
+
+use crate::coordinator::batcher::WorkBundle;
+use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
+use crate::core::rng::Pcg64;
+use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
+use crate::metrics::ServingMetrics;
+use crate::runtime::engine::Executor;
+use crate::runtime::{plan_chunks, Manifest};
+use crate::sampler::dfm::{sample_warm, SamplerParams};
+use anyhow::{bail, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Executes bundles against an [`Executor`].
+pub struct Scheduler<'a> {
+    pub exec: &'a dyn Executor,
+    pub manifest: &'a Manifest,
+    pub metrics: &'a ServingMetrics,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(exec: &'a dyn Executor, manifest: &'a Manifest, metrics: &'a ServingMetrics) -> Self {
+        Scheduler { exec, manifest, metrics }
+    }
+
+    /// Resolve the draft model for a bundle at a given compiled batch size.
+    fn draft_for(&self, key_domain: &str, spec: DraftSpec, batch: usize, vocab: usize) -> Result<Box<dyn Draft + 'a>> {
+        Ok(match spec {
+            DraftSpec::Noise => Box::new(NoiseDraft { vocab }),
+            DraftSpec::Mixture(kind) => Box::new(MixtureDraft { draft_kind: kind }),
+            DraftSpec::Lstm => {
+                let meta = self.manifest.find_draft(key_domain, "lstm", batch)?;
+                Box::new(HloDraft::new(self.exec, meta.name.clone(), DraftNoise::Gumbel))
+            }
+            DraftSpec::Pca => {
+                let meta = self.manifest.find_draft(key_domain, "pca", batch)?;
+                Box::new(HloDraft::new(self.exec, meta.name.clone(), DraftNoise::Gaussian))
+            }
+        })
+    }
+
+    /// Execute one bundle, producing one response per request (same order).
+    pub fn run_bundle(&self, bundle: &WorkBundle, rng: &mut Pcg64) -> Result<Vec<GenResponse>> {
+        let key = &bundle.key;
+        let n_total = bundle.total_samples();
+        if n_total == 0 {
+            bail!("empty bundle");
+        }
+        let compiled = self.manifest.step_batches(&key.domain, &key.tag);
+        if compiled.is_empty() {
+            bail!("no step artifacts for {}/{}", key.domain, key.tag);
+        }
+        let plan = plan_chunks(n_total, &compiled)?;
+        let started = Instant::now();
+
+        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
+        let mut nfe = 0;
+        let mut draft_time = Duration::ZERO;
+        let mut refine_time = Duration::ZERO;
+
+        for &(chunk_len, exec_batch) in &plan {
+            let step_meta = self.manifest.find_step(&key.domain, &key.tag, exec_batch)?;
+            let (seq_len, vocab) = (step_meta.seq_len, step_meta.vocab);
+
+            // Phase DRAFT: generate exec_batch sequences (padding rows get
+            // real draft samples too — simplest shape-correct choice; they
+            // are stripped below and never leave the scheduler).
+            let t_draft = Instant::now();
+            let draft = self.draft_for(&key.domain, key.draft, exec_batch, vocab)?;
+            let init = draft
+                .generate(exec_batch, seq_len, rng)
+                .with_context(|| format!("draft {} for {}", draft.kind(), step_meta.name))?;
+            draft_time += t_draft.elapsed();
+            self.metrics.draft_calls.inc();
+
+            // Phase REFINE: the warm-start Euler loop.
+            let params = SamplerParams {
+                artifact: step_meta.name.clone(),
+                steps_cold: key.steps_cold,
+                t0: key.t0(),
+                warp_mode: key.warp_mode(),
+            };
+            let t_refine = Instant::now();
+            let out = sample_warm(self.exec, &params, init, rng, false)?;
+            refine_time += t_refine.elapsed();
+            nfe = out.nfe; // same schedule for every chunk in the bundle
+            self.metrics.denoiser_calls.add(out.nfe as u64);
+            self.metrics.batches_executed.inc();
+            self.metrics.padded_rows.add((exec_batch - chunk_len) as u64);
+
+            let mut tokens = out.tokens;
+            tokens.truncate(chunk_len); // strip padding — never leaks out
+            for r in 0..chunk_len {
+                rows.push(tokens.row(r).to_vec());
+            }
+        }
+        debug_assert_eq!(rows.len(), n_total);
+
+        // Scatter rows back to requests in FIFO order.
+        let total_time = started.elapsed();
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(bundle.requests.len());
+        let mut cursor = 0;
+        for req in &bundle.requests {
+            let samples = rows[cursor..cursor + req.n_samples].to_vec();
+            cursor += req.n_samples;
+            responses.push(GenResponse {
+                id: req.id,
+                samples,
+                nfe,
+                queue_wait: now.saturating_duration_since(req.submitted).saturating_sub(total_time),
+                draft_time,
+                refine_time,
+                total_time,
+            });
+            self.metrics.requests_completed.inc();
+            self.metrics.samples.record(req.n_samples as u64);
+        }
+        self.metrics.batch_exec.record(total_time);
+        Ok(responses)
+    }
+
+    /// Convenience for single local requests (CLI `wsfm generate`).
+    pub fn run_single(&self, req: GenRequest, rng: &mut Pcg64) -> Result<GenResponse> {
+        req.validate()?;
+        let key = req.bundle_key();
+        let bundle = WorkBundle { key, requests: vec![req] };
+        let mut rs = self.run_bundle(&bundle, rng)?;
+        Ok(rs.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::DraftSpec;
+    use crate::core::schedule::WarpMode;
+    use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Mock executor emulating the step artifact family at several batch
+    /// sizes; always moves tokens toward a fixed p1.
+    struct MockExec {
+        batches: Vec<usize>,
+        seq_len: usize,
+        vocab: usize,
+        steps: AtomicUsize,
+    }
+
+    impl MockExec {
+        fn meta_for(&self, name: &str) -> Option<ArtifactMeta> {
+            // names: mock_cold_step_b{B}
+            let b: usize = name.rsplit('b').next()?.parse().ok()?;
+            if !self.batches.contains(&b) {
+                return None;
+            }
+            Some(ArtifactMeta {
+                name: name.to_string(),
+                hlo_file: String::new(),
+                domain: "mock".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: b,
+                seq_len: self.seq_len,
+                vocab: self.vocab,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![],
+                outputs: vec![TensorSpec {
+                    name: "probs".into(),
+                    shape: vec![b, self.seq_len, self.vocab],
+                    dtype: "f32".into(),
+                }],
+            })
+        }
+    }
+
+    impl Executor for MockExec {
+        fn step(&self, _a: &str, tokens: &[i32], _t: f32, _h: f32, _w: f32) -> Result<Vec<f32>> {
+            self.steps.fetch_add(1, Ordering::SeqCst);
+            // Deterministic drift: everything becomes token 1.
+            let mut out = vec![0.0f32; tokens.len() * self.vocab];
+            for (i, _) in tokens.iter().enumerate() {
+                out[i * self.vocab + 1] = 1.0;
+            }
+            Ok(out)
+        }
+        fn draft(&self, _a: &str, _n: &[f32]) -> Result<Vec<i32>> {
+            bail!("no hlo drafts in mock")
+        }
+        fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+            self.meta_for(artifact).context("unknown")
+        }
+    }
+
+    fn mock_manifest(batches: &[usize], seq_len: usize, vocab: usize) -> Manifest {
+        let artifacts = batches
+            .iter()
+            .map(|&b| ArtifactMeta {
+                name: format!("mock_cold_step_b{b}"),
+                hlo_file: String::new(),
+                domain: "mock".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: b,
+                seq_len,
+                vocab,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![],
+                outputs: vec![],
+            })
+            .collect();
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts,
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    fn request(id: u64, n: usize) -> GenRequest {
+        GenRequest {
+            id,
+            domain: "mock".into(),
+            tag: "cold".into(),
+            draft: DraftSpec::Noise,
+            n_samples: n,
+            t0: 0.5,
+            steps_cold: 10,
+            warp_mode: WarpMode::Exact,
+            seed: id,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn bundle_scatters_rows_in_order() {
+        let exec = MockExec { batches: vec![1, 4, 8], seq_len: 3, vocab: 4, steps: AtomicUsize::new(0) };
+        let manifest = mock_manifest(&[1, 4, 8], 3, 4);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics);
+        let reqs = vec![request(1, 2), request(2, 3), request(3, 1)];
+        let key = reqs[0].bundle_key();
+        let bundle = WorkBundle { key, requests: reqs };
+        let mut rng = Pcg64::new(0);
+        let responses = sched.run_bundle(&bundle, &mut rng).unwrap();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(responses[0].samples.len(), 2);
+        assert_eq!(responses[1].samples.len(), 3);
+        assert_eq!(responses[2].samples.len(), 1);
+        // Everything converged to token 1 (drift target); padding stripped.
+        for r in &responses {
+            for s in &r.samples {
+                assert_eq!(s.len(), 3);
+                assert!(s.iter().all(|&t| t == 1));
+            }
+        }
+        // NFE guarantee: t0=0.5, steps_cold=10 -> 5.
+        assert_eq!(responses[0].nfe, 5);
+        assert_eq!(metrics.requests_completed.get(), 3);
+        assert!(metrics.padded_rows.get() <= 8);
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let exec = MockExec { batches: vec![1, 4], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
+        let manifest = mock_manifest(&[1, 4], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics);
+        let mut rng = Pcg64::new(1);
+        let resp = sched.run_single(request(9, 1), &mut rng).unwrap();
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.samples.len(), 1);
+        assert_eq!(resp.nfe, 5);
+    }
+
+    #[test]
+    fn large_request_splits_into_chunks() {
+        let exec = MockExec { batches: vec![1, 4], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
+        let manifest = mock_manifest(&[1, 4], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics);
+        let mut rng = Pcg64::new(2);
+        let resp = sched.run_single(request(1, 9), &mut rng).unwrap();
+        assert_eq!(resp.samples.len(), 9);
+        // 9 = 4 + 4 + 1 -> 3 chunks x 5 NFE each.
+        assert_eq!(exec.steps.load(Ordering::SeqCst), 15);
+        assert_eq!(metrics.batches_executed.get(), 3);
+    }
+
+    #[test]
+    fn missing_artifacts_error() {
+        let exec = MockExec { batches: vec![1], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
+        let manifest = mock_manifest(&[1], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics);
+        let mut rng = Pcg64::new(3);
+        let mut r = request(1, 1);
+        r.tag = "ws_t099".into();
+        assert!(sched.run_single(r, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,373 @@
+//! The serving loop: wires admission queue → batcher → scheduler → response
+//! channels, on a dedicated coordinator thread.
+//!
+//! One coordinator thread is the right shape here: the engine serializes on
+//! the single CPU PJRT stream, so extra schedulers would only contend. The
+//! thread blocks on the queue with a deadline derived from the batcher's
+//! earliest pending flush, so idle service costs no CPU.
+
+use crate::config::WsfmConfig;
+use crate::coordinator::batcher::{Batcher, FlushPolicy};
+use crate::coordinator::queue::{BoundedQueue, QueueFull};
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::coordinator::scheduler::Scheduler;
+use crate::core::rng::Pcg64;
+use crate::metrics::ServingMetrics;
+use crate::runtime::engine::Executor;
+use crate::runtime::Manifest;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// A submitted request waiting for its response.
+struct Envelope {
+    request: GenRequest,
+    resp: mpsc::Sender<Result<GenResponse, String>>,
+}
+
+/// Handle for submitting work; cloneable across server connections.
+#[derive(Clone)]
+pub struct Service {
+    queue: Arc<BoundedQueue<Envelope>>,
+    pub metrics: Arc<ServingMetrics>,
+    next_id: Arc<AtomicU64>,
+    running: Arc<AtomicBool>,
+}
+
+impl Service {
+    /// Start the coordinator thread over an executor + manifest.
+    pub fn start<E: Executor + 'static>(exec: E, manifest: Manifest, config: WsfmConfig) -> Service {
+        let queue = Arc::new(BoundedQueue::<Envelope>::new(config.queue_capacity));
+        let metrics = Arc::new(ServingMetrics::default());
+        let running = Arc::new(AtomicBool::new(true));
+
+        let q = queue.clone();
+        let m = metrics.clone();
+        let r = running.clone();
+        std::thread::Builder::new()
+            .name("wsfm-coordinator".into())
+            .spawn(move || {
+                coordinator_loop(exec, manifest, config, q, m, r);
+            })
+            .expect("spawning coordinator thread");
+
+        Service { queue, metrics, next_id: Arc::new(AtomicU64::new(1)), running }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    ///
+    /// `Err(QueueFull)` is backpressure — the caller should surface "busy".
+    pub fn submit(
+        &self,
+        mut request: GenRequest,
+    ) -> Result<mpsc::Receiver<Result<GenResponse, String>>, QueueFull> {
+        request.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        request.submitted = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        self.queue.push(Envelope { request, resp: tx }).map_err(|_| {
+            self.metrics.requests_rejected.inc();
+            QueueFull
+        })?;
+        self.metrics.requests_admitted.inc();
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn generate(&self, request: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(request).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => anyhow::bail!("generation failed: {msg}"),
+            Err(_) => anyhow::bail!("coordinator dropped the request"),
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain, stop the thread.
+    pub fn shutdown(&self) {
+        self.running.store(false, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+}
+
+fn coordinator_loop<E: Executor>(
+    exec: E,
+    manifest: Manifest,
+    config: WsfmConfig,
+    queue: Arc<BoundedQueue<Envelope>>,
+    metrics: Arc<ServingMetrics>,
+    running: Arc<AtomicBool>,
+) {
+    let policy = FlushPolicy {
+        max_batch: config.batcher.max_batch,
+        max_wait: Duration::from_micros(config.batcher.max_wait_us),
+    };
+    let mut batcher = Batcher::new(policy);
+    // Envelopes are held out-of-band, keyed by request id, so the batcher
+    // itself stays a pure GenRequest structure.
+    let mut envelopes: std::collections::HashMap<u64, mpsc::Sender<Result<GenResponse, String>>> =
+        std::collections::HashMap::new();
+    let mut rng = Pcg64::new(config.seed);
+    let scheduler = Scheduler::new(&exec, &manifest, &metrics);
+
+    let run_bundles = |bundles: Vec<crate::coordinator::batcher::WorkBundle>,
+                           envelopes: &mut std::collections::HashMap<u64, mpsc::Sender<Result<GenResponse, String>>>,
+                           rng: &mut Pcg64| {
+        for bundle in bundles {
+            match scheduler.run_bundle(&bundle, rng) {
+                Ok(responses) => {
+                    for resp in responses {
+                        metrics.queue_wait.record(resp.queue_wait);
+                        metrics.request_latency.record(resp.queue_wait + resp.total_time);
+                        if let Some(tx) = envelopes.remove(&resp.id) {
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    crate::error!("bundle {}/{} failed: {msg}", bundle.key.domain, bundle.key.tag);
+                    for req in &bundle.requests {
+                        if let Some(tx) = envelopes.remove(&req.id) {
+                            let _ = tx.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    loop {
+        // Sleep until the next flush deadline (or a short max when idle).
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match queue.pop_timeout(timeout.min(Duration::from_millis(50))) {
+            Some(env) => {
+                if let Err(e) = env.request.validate() {
+                    let _ = env.resp.send(Err(format!("invalid request: {e:#}")));
+                    continue;
+                }
+                envelopes.insert(env.request.id, env.resp);
+                if let Some(bundle) = batcher.offer(env.request) {
+                    run_bundles(vec![bundle], &mut envelopes, &mut rng);
+                }
+            }
+            None => {
+                if !running.load(Ordering::SeqCst) && queue.is_empty() {
+                    // Drain remaining bundles, then exit.
+                    let rest = batcher.flush_all();
+                    run_bundles(rest, &mut envelopes, &mut rng);
+                    break;
+                }
+            }
+        }
+        let due = batcher.due(Instant::now());
+        if !due.is_empty() {
+            run_bundles(due, &mut envelopes, &mut rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::DraftSpec;
+    use crate::core::schedule::WarpMode;
+    use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
+    use crate::util::json::Json;
+    use anyhow::Context;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    struct DriftExec {
+        batches: Vec<usize>,
+        seq_len: usize,
+        vocab: usize,
+    }
+
+    impl Executor for DriftExec {
+        fn step(&self, _a: &str, tokens: &[i32], _t: f32, _h: f32, _w: f32) -> Result<Vec<f32>> {
+            let mut out = vec![0.0f32; tokens.len() * self.vocab];
+            for i in 0..tokens.len() {
+                out[i * self.vocab + 2] = 1.0;
+            }
+            Ok(out)
+        }
+        fn draft(&self, _a: &str, _n: &[f32]) -> Result<Vec<i32>> {
+            anyhow::bail!("no drafts")
+        }
+        fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+            let b: usize = artifact.rsplit('b').next().context("bad")?.parse()?;
+            if !self.batches.contains(&b) {
+                anyhow::bail!("unknown batch");
+            }
+            Ok(ArtifactMeta {
+                name: artifact.to_string(),
+                hlo_file: String::new(),
+                domain: "mock".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: b,
+                seq_len: self.seq_len,
+                vocab: self.vocab,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![],
+                outputs: vec![TensorSpec {
+                    name: "probs".into(),
+                    shape: vec![b, self.seq_len, self.vocab],
+                    dtype: "f32".into(),
+                }],
+            })
+        }
+    }
+
+    fn manifest(batches: &[usize], seq_len: usize, vocab: usize) -> Manifest {
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts: batches
+                .iter()
+                .map(|&b| ArtifactMeta {
+                    name: format!("mock_cold_step_b{b}"),
+                    hlo_file: String::new(),
+                    domain: "mock".into(),
+                    kind: "step".into(),
+                    tag: "cold".into(),
+                    draft: None,
+                    batch: b,
+                    seq_len,
+                    vocab,
+                    t0: Some(0.0),
+                    latent_dim: None,
+                    inputs: vec![],
+                    outputs: vec![],
+                })
+                .collect(),
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    fn test_config() -> WsfmConfig {
+        let mut c = WsfmConfig::default();
+        c.batcher.max_batch = 4;
+        c.batcher.max_wait_us = 500;
+        c
+    }
+
+    fn request(n: usize) -> GenRequest {
+        GenRequest {
+            id: 0,
+            domain: "mock".into(),
+            tag: "cold".into(),
+            draft: DraftSpec::Noise,
+            n_samples: n,
+            t0: 0.5,
+            steps_cold: 8,
+            warp_mode: WarpMode::Exact,
+            seed: 1,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn end_to_end_generate() {
+        let svc = Service::start(
+            DriftExec { batches: vec![1, 4, 8], seq_len: 3, vocab: 4 },
+            manifest(&[1, 4, 8], 3, 4),
+            test_config(),
+        );
+        let resp = svc.generate(request(2)).unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        assert_eq!(resp.nfe, 4); // 8 cold steps, t0=0.5
+        assert!(resp.samples.iter().all(|s| s.iter().all(|&t| t == 2)));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let svc = Service::start(
+            DriftExec { batches: vec![1, 4, 8], seq_len: 2, vocab: 4 },
+            manifest(&[1, 4, 8], 2, 4),
+            test_config(),
+        );
+        let mut rxs = Vec::new();
+        for _ in 0..10 {
+            rxs.push(svc.submit(request(1)).unwrap());
+        }
+        let mut ok = 0;
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.samples.len(), 1);
+            ok += 1;
+        }
+        assert_eq!(ok, 10);
+        assert_eq!(svc.metrics.requests_completed.get(), 10);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_request_gets_error() {
+        let svc = Service::start(
+            DriftExec { batches: vec![1], seq_len: 2, vocab: 4 },
+            manifest(&[1], 2, 4),
+            test_config(),
+        );
+        let mut bad = request(1);
+        bad.t0 = 2.0;
+        let rx = svc.submit(bad).unwrap();
+        let result = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(result.is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue; requests park behind an artificial high max_wait so
+        // the queue fills faster than the coordinator drains at deadline.
+        let mut cfg = test_config();
+        cfg.queue_capacity = 2;
+        cfg.batcher.max_wait_us = 200_000;
+        cfg.batcher.max_batch = 1000;
+        let svc = Service::start(
+            DriftExec { batches: vec![1, 4], seq_len: 2, vocab: 4 },
+            manifest(&[1, 4], 2, 4),
+            cfg,
+        );
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..50 {
+            match svc.submit(request(1)) {
+                Ok(rx) => rxs.push(rx),
+                Err(QueueFull) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected some backpressure rejections");
+        // All admitted requests must still complete.
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_tag_fails_cleanly() {
+        let svc = Service::start(
+            DriftExec { batches: vec![1], seq_len: 2, vocab: 4 },
+            manifest(&[1], 2, 4),
+            test_config(),
+        );
+        let mut r = request(1);
+        r.tag = "ws_t999".into();
+        let rx = svc.submit(r).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_err());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,6 @@
+//! Numeric substrates: RNG, tensors, probability ops, time schedules.
+
+pub mod prob;
+pub mod rng;
+pub mod schedule;
+pub mod tensor;

@@ -1,0 +1,160 @@
+//! Probability utilities on the sampling hot path.
+//!
+//! Categorical sampling from the `[B, N, V]` transition-probability tensor
+//! returned by the fused `dfm_update` artifact is the only per-token work
+//! the coordinator does per Euler step, so it must be allocation-free and
+//! branch-light (see EXPERIMENTS.md §Perf).
+
+use crate::core::rng::Pcg64;
+
+/// In-place softmax over a slice.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Sample one index from an (unnormalized, non-negative) weight row via
+/// inverse-CDF. Robust to rows that don't sum exactly to 1.
+#[inline]
+pub fn categorical(weights: &[f32], rng: &mut Pcg64) -> usize {
+    debug_assert!(!weights.is_empty());
+    let total: f32 = weights.iter().sum();
+    let mut target = rng.uniform_f32() * total;
+    let mut last_nonzero = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 {
+            last_nonzero = i;
+            if target < w {
+                return i;
+            }
+            target -= w;
+        }
+    }
+    last_nonzero // float round-off fell off the end
+}
+
+/// Sample every token of a `[B, N, V]` probs tensor into `out` (`[B * N]`).
+///
+/// This is THE hot loop: one pass over the probs buffer, no allocation.
+pub fn categorical_batch(probs: &[f32], vocab: usize, out: &mut [i32], rng: &mut Pcg64) {
+    debug_assert_eq!(probs.len(), out.len() * vocab);
+    for (row_i, slot) in out.iter_mut().enumerate() {
+        let row = &probs[row_i * vocab..(row_i + 1) * vocab];
+        *slot = categorical(row, rng) as i32;
+    }
+}
+
+/// Argmax over a row (used for greedy final-step decoding variants).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Shannon entropy (nats) of a normalized distribution.
+pub fn entropy(p: &[f64]) -> f64 {
+    p.iter().filter(|&&x| x > 0.0).map(|&x| -x * x.ln()).sum()
+}
+
+/// Shannon entropy in bits.
+pub fn entropy_bits(p: &[f64]) -> f64 {
+    entropy(p) / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut xs = vec![1000.0, -1000.0];
+        softmax(&mut xs);
+        assert!((xs[0] - 1.0).abs() < 1e-6);
+        assert!(xs[1] >= 0.0);
+        softmax(&mut []); // no panic
+    }
+
+    #[test]
+    fn categorical_degenerate() {
+        let mut rng = Pcg64::new(0);
+        let w = vec![0.0, 0.0, 1.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(categorical(&w, &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies_match() {
+        let mut rng = Pcg64::new(1);
+        let w = vec![0.1f32, 0.2, 0.7];
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[categorical(&w, &mut rng)] += 1;
+        }
+        for (i, &target) in [0.1, 0.2, 0.7].iter().enumerate() {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - target).abs() < 0.01, "idx {i}: {f} vs {target}");
+        }
+    }
+
+    #[test]
+    fn categorical_unnormalized_ok() {
+        let mut rng = Pcg64::new(2);
+        let w = vec![1.0f32, 3.0]; // sums to 4
+        let n = 40_000;
+        let ones = (0..n).filter(|_| categorical(&w, &mut rng) == 1).count();
+        let f = ones as f64 / n as f64;
+        assert!((f - 0.75).abs() < 0.01, "{f}");
+    }
+
+    #[test]
+    fn categorical_batch_shapes() {
+        let mut rng = Pcg64::new(3);
+        let vocab = 4;
+        let probs = vec![0.25f32; 2 * 3 * vocab];
+        let mut out = vec![0i32; 6];
+        categorical_batch(&probs, vocab, &mut out, &mut rng);
+        assert!(out.iter().all(|&t| (0..4).contains(&t)));
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn entropy_known_values() {
+        assert!((entropy_bits(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!(entropy(&[1.0, 0.0]).abs() < 1e-12);
+        let u = vec![0.25; 4];
+        assert!((entropy_bits(&u) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,211 @@
+//! Deterministic PRNG (PCG64) + distribution sampling.
+//!
+//! The coordinator owns all request-path randomness (the HLO artifacts are
+//! pure functions; Gumbel/Gaussian noise is passed *into* them), so the RNG
+//! must be fast, seedable, and splittable per request for reproducibility.
+
+/// PCG-XSH-RR 64/32 with 64-bit output composed from two draws.
+///
+/// Small, fast, statistically solid for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream selection — used to split per-request RNGs.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(splitmix64(seed));
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent generator (e.g. one per request id).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ splitmix64(tag);
+        Pcg64::with_stream(seed, splitmix64(tag ^ 0x9e37_79b9_7f4a_7c15))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1) (hot path: one 32-bit draw).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection, unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut lo = m as u32;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller (pairs cached not needed at our rates).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gumbel(0, 1) — used for the draft-model Gumbel-max sampling inputs.
+    #[inline]
+    pub fn gumbel(&mut self) -> f64 {
+        let u = self.uniform().max(1e-300);
+        -(-u.ln()).ln()
+    }
+
+    /// Fill a f32 buffer with Gumbel noise.
+    pub fn fill_gumbel_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.gumbel() as f32;
+        }
+    }
+
+    /// Fill a f32 buffer with standard normal noise.
+    pub fn fill_normal_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Random permutation index (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — seed scrambler.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(Pcg64::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Pcg64::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        let mut rng = Pcg64::new(4);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.gumbel()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5772).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let overlaps = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(overlaps, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

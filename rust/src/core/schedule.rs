@@ -1,0 +1,169 @@
+//! Time discretization and the paper's guaranteed-NFE arithmetic.
+//!
+//! The headline claim of WS-FM: starting at `t0` instead of 0 with the same
+//! step size `h = 1/steps_cold` takes exactly `ceil(steps_cold * (1 - t0))`
+//! denoiser evaluations — a guaranteed `1/(1-t0)` speed-up. This module is
+//! the single source of truth for that arithmetic on the Rust side
+//! (mirrors `python/compile/paths.py::nfe`; both pinned by tests).
+
+use anyhow::{bail, Result};
+
+/// Update-rule variant (DESIGN.md §1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarpMode {
+    /// The paper's literal Fig. 3 rule: velocity scaled by `(1 - t0)`.
+    Literal,
+    /// The exact normalized-path rule (same as cold DFM's update).
+    Exact,
+}
+
+impl WarpMode {
+    pub fn warp_factor(self, t0: f64) -> f64 {
+        match self {
+            WarpMode::Literal => 1.0 - t0,
+            WarpMode::Exact => 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "literal" => Ok(WarpMode::Literal),
+            "exact" => Ok(WarpMode::Exact),
+            _ => bail!("unknown warp mode {s:?} (literal|exact)"),
+        }
+    }
+}
+
+/// An Euler integration schedule over `[t0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub t0: f64,
+    /// Step size, fixed to the cold run's `1/steps_cold` so warm runs use
+    /// the *same* grid (that is what makes the NFE claim comparable).
+    pub h: f64,
+    /// The time points at which the denoiser is evaluated.
+    pub times: Vec<f64>,
+}
+
+impl Schedule {
+    /// Build the schedule for a run starting at `t0` with a cold-run
+    /// resolution of `steps_cold`.
+    pub fn new(steps_cold: usize, t0: f64) -> Result<Schedule> {
+        if steps_cold == 0 {
+            bail!("steps_cold must be positive");
+        }
+        if !(0.0..1.0).contains(&t0) {
+            bail!("t0 must be in [0, 1), got {t0}");
+        }
+        let h = 1.0 / steps_cold as f64;
+        let n = guaranteed_nfe(steps_cold, t0);
+        // Evaluation times t0, t0+h, ... ; the final step uses a shortened
+        // h' = 1 - t_last so the trajectory lands exactly on t = 1.
+        let times: Vec<f64> = (0..n).map(|i| t0 + i as f64 * h).collect();
+        Ok(Schedule { t0, h, times })
+    }
+
+    /// Number of function evaluations (== `times.len()`).
+    pub fn nfe(&self) -> usize {
+        self.times.len()
+    }
+
+    /// The step size to use at step `i` (the last step is clipped to land
+    /// exactly on 1.0).
+    pub fn step_size(&self, i: usize) -> f64 {
+        let t = self.times[i];
+        if i + 1 == self.times.len() {
+            1.0 - t
+        } else {
+            self.h
+        }
+    }
+}
+
+/// `ceil(steps_cold * (1 - t0))` — the paper's guaranteed NFE.
+pub fn guaranteed_nfe(steps_cold: usize, t0: f64) -> usize {
+    ((steps_cold as f64) * (1.0 - t0) - 1e-9).ceil().max(1.0) as usize
+}
+
+/// The paper's guaranteed speed-up factor `1/(1-t0)`.
+pub fn speedup_factor(t0: f64) -> f64 {
+    1.0 / (1.0 - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_schedule_has_full_steps() {
+        let s = Schedule::new(20, 0.0).unwrap();
+        assert_eq!(s.nfe(), 20);
+        assert!((s.h - 0.05).abs() < 1e-12);
+        assert!((s.times[0]).abs() < 1e-12);
+        assert!((s.times[19] - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_table1_nfe_values() {
+        // Table 1: cold 20 steps; t0 = 0.95 -> 1, 0.9 -> 2, 0.8 -> 4,
+        // 0.5 -> 10, 0.35 -> 13.
+        assert_eq!(guaranteed_nfe(20, 0.95), 1);
+        assert_eq!(guaranteed_nfe(20, 0.9), 2);
+        assert_eq!(guaranteed_nfe(20, 0.8), 4);
+        assert_eq!(guaranteed_nfe(20, 0.5), 10);
+        assert_eq!(guaranteed_nfe(20, 0.35), 13);
+    }
+
+    #[test]
+    fn paper_table2_nfe_values() {
+        // Table 2: cold 1024 steps; t0 = 0.5 -> 512, t0 = 0.8 -> 205.
+        assert_eq!(guaranteed_nfe(1024, 0.5), 512);
+        assert_eq!(guaranteed_nfe(1024, 0.8), 205);
+    }
+
+    #[test]
+    fn schedule_lands_on_one() {
+        for (steps, t0) in [(20, 0.8), (1024, 0.8), (7, 0.33), (1, 0.0), (13, 0.95)] {
+            let s = Schedule::new(steps, t0).unwrap();
+            let mut t = s.times[0];
+            for i in 0..s.nfe() {
+                assert!((t - s.times[i]).abs() < 1e-9);
+                t += s.step_size(i);
+            }
+            assert!((t - 1.0).abs() < 1e-9, "steps={steps} t0={t0} ended at {t}");
+        }
+    }
+
+    #[test]
+    fn warm_nfe_never_exceeds_cold() {
+        for steps in [1usize, 5, 20, 100, 1024] {
+            for &t0 in &[0.0, 0.1, 0.35, 0.5, 0.65, 0.8, 0.9, 0.95, 0.99] {
+                let warm = guaranteed_nfe(steps, t0);
+                assert!(warm <= steps);
+                assert!(warm >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn warp_factors() {
+        assert!((WarpMode::Literal.warp_factor(0.8) - 0.2).abs() < 1e-12);
+        assert!((WarpMode::Exact.warp_factor(0.8) - 1.0).abs() < 1e-12);
+        assert!(WarpMode::parse("literal").is_ok());
+        assert!(WarpMode::parse("exact").is_ok());
+        assert!(WarpMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn speedup_matches_paper() {
+        assert!((speedup_factor(0.8) - 5.0).abs() < 1e-9);
+        assert!((speedup_factor(0.5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(Schedule::new(0, 0.0).is_err());
+        assert!(Schedule::new(10, 1.0).is_err());
+        assert!(Schedule::new(10, -0.1).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Small dense tensors for the request path.
+//!
+//! Only what the coordinator needs: contiguous row-major storage for f32 /
+//! i32 with shape tracking, views by leading index, and cheap reuse
+//! (`TokenBatch` is the per-request generation state buffer).
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorF32 { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, numel(shape), data.len());
+        }
+        Ok(TensorF32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` of a rank-2+ tensor (all trailing dims flattened).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let stride = numel(&self.shape[1..]);
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let stride = numel(&self.shape[1..]);
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI32 { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, numel(shape), data.len());
+        }
+        Ok(TensorI32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let stride = numel(&self.shape[1..]);
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let stride = numel(&self.shape[1..]);
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+}
+
+/// A batch of token sequences `[B, N]` — the sampler's mutable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenBatch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenBatch {
+    pub fn zeros(batch: usize, seq_len: usize) -> Self {
+        TokenBatch { batch, seq_len, tokens: vec![0; batch * seq_len] }
+    }
+
+    pub fn from_rows(rows: &[Vec<i32>]) -> Result<Self> {
+        if rows.is_empty() {
+            bail!("empty token batch");
+        }
+        let n = rows[0].len();
+        if rows.iter().any(|r| r.len() != n) {
+            bail!("ragged rows in token batch");
+        }
+        let mut tokens = Vec::with_capacity(rows.len() * n);
+        for r in rows {
+            tokens.extend_from_slice(r);
+        }
+        Ok(TokenBatch { batch: rows.len(), seq_len: n, tokens })
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Pad to `target_batch` rows by repeating the last row (batcher use:
+    /// compiled executables have fixed B; padding rows are discarded on the
+    /// way out and never leak into responses — property-tested).
+    pub fn pad_to(&self, target_batch: usize) -> Result<TokenBatch> {
+        if target_batch < self.batch {
+            bail!("pad_to({target_batch}) smaller than batch {}", self.batch);
+        }
+        let mut tokens = self.tokens.clone();
+        let last = self.row(self.batch - 1).to_vec();
+        for _ in self.batch..target_batch {
+            tokens.extend_from_slice(&last);
+        }
+        Ok(TokenBatch { batch: target_batch, seq_len: self.seq_len, tokens })
+    }
+
+    /// Keep only the first `n` rows (drop batch padding).
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.batch);
+        self.tokens.truncate(n * self.seq_len);
+        self.batch = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_shape_checks() {
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+        let t = TensorF32::zeros(&[4, 2, 5]);
+        assert_eq!(t.numel(), 40);
+        assert_eq!(t.row(1).len(), 10);
+    }
+
+    #[test]
+    fn i32_rows() {
+        let t = TensorI32::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(t.row(0), &[1, 2, 3]);
+        assert_eq!(t.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn token_batch_from_rows_and_pad() {
+        let tb = TokenBatch::from_rows(&[vec![1, 2], vec![3, 4], vec![5, 6]]).unwrap();
+        assert_eq!((tb.batch, tb.seq_len), (3, 2));
+        let padded = tb.pad_to(5).unwrap();
+        assert_eq!(padded.batch, 5);
+        assert_eq!(padded.row(3), &[5, 6]);
+        assert_eq!(padded.row(4), &[5, 6]);
+        let mut back = padded.clone();
+        back.truncate(3);
+        assert_eq!(back, tb);
+    }
+
+    #[test]
+    fn token_batch_ragged_rejected() {
+        assert!(TokenBatch::from_rows(&[vec![1], vec![2, 3]]).is_err());
+        assert!(TokenBatch::from_rows(&[]).is_err());
+    }
+
+    #[test]
+    fn pad_smaller_rejected() {
+        let tb = TokenBatch::zeros(4, 2);
+        assert!(tb.pad_to(2).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Loaders for the build-time datasets materialized in `artifacts/`.
+//!
+//! Formats (written by `python/compile/aot.py` / `data.py`):
+//! * `text8_corpus.txt`, `text8_eval.txt` — raw text (a-z + space).
+//! * `wiki_corpus.bin`, `wiki_eval.bin`   — little-endian i32 token stream.
+//! * `wiki_vocab.json`                    — JSON array of 256 words.
+//! * `img_{gray,color}_train.bin`         — u8 tokens, row-major `[M, N]`.
+//! * `img_{gray,color}_labels.bin`        — u8 labels `[M]`.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Load a text corpus file and encode to char tokens.
+pub fn load_text8(path: &Path) -> Result<Vec<i32>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    crate::data::tokenizer::CharTokenizer.encode(&text)
+}
+
+/// Load a little-endian i32 token stream.
+pub fn load_i32_stream(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load a u8 token matrix `[rows, row_len]`.
+pub fn load_u8_matrix(path: &Path, row_len: usize) -> Result<Vec<Vec<i32>>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if row_len == 0 || bytes.len() % row_len != 0 {
+        bail!("{path:?}: length {} not divisible by row_len {row_len}", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(row_len)
+        .map(|row| row.iter().map(|&b| b as i32).collect())
+        .collect())
+}
+
+/// Load u8 labels.
+pub fn load_u8_labels(path: &Path) -> Result<Vec<usize>> {
+    Ok(std::fs::read(path)
+        .with_context(|| format!("reading {path:?}"))?
+        .into_iter()
+        .map(|b| b as usize)
+        .collect())
+}
+
+/// Split a token stream into contiguous windows of `seq_len` (the eval-side
+/// counterpart of python `text8_sequences`, but deterministic/striding).
+pub fn windows(stream: &[i32], seq_len: usize, max_n: usize) -> Vec<Vec<i32>> {
+    stream
+        .chunks_exact(seq_len)
+        .take(max_n)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("wsfm_corpus_{name}_{}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn i32_stream_roundtrip() {
+        let vals: Vec<i32> = vec![0, 1, -5, 1_000_000];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let p = tmpfile("i32", &bytes);
+        assert_eq!(load_i32_stream(&p).unwrap(), vals);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn i32_stream_bad_length() {
+        let p = tmpfile("i32bad", &[1, 2, 3]);
+        assert!(load_i32_stream(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn u8_matrix_shapes() {
+        let p = tmpfile("mat", &[1, 2, 3, 4, 5, 6]);
+        let m = load_u8_matrix(&p, 3).unwrap();
+        assert_eq!(m, vec![vec![1, 2, 3], vec![4, 5, 6]]);
+        assert!(load_u8_matrix(&p, 4).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn text8_loader_encodes() {
+        let p = tmpfile("txt", b"abc z");
+        // Rename to .txt-ish is irrelevant; content is what matters.
+        let toks = load_text8(&p).unwrap();
+        assert_eq!(toks, vec![0, 1, 2, 26, 25]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn windows_chunking() {
+        let stream: Vec<i32> = (0..10).collect();
+        let w = windows(&stream, 3, 10);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[2], vec![6, 7, 8]);
+        assert_eq!(windows(&stream, 3, 2).len(), 2);
+    }
+}

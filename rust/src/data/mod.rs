@@ -1,0 +1,14 @@
+//! Datasets & tokenization (Rust side).
+//!
+//! The canonical corpora/datasets are generated at build time by
+//! `python/compile/data.py` and materialized into `artifacts/` — the
+//! evaluators load those files ([`corpus`]). The generators here mirror the
+//! same distributions (identical constants/grammar) for unit tests and for
+//! request-path sampling of two-moons draft points; a cross-language
+//! consistency test compares summary statistics of the two implementations.
+
+pub mod corpus;
+pub mod shapes;
+pub mod textgen;
+pub mod tokenizer;
+pub mod two_moons;

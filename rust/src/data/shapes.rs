@@ -1,0 +1,221 @@
+//! Procedural shape images (Rust mirror of python synth-shapes).
+//!
+//! Renders the same 10 classes over the same quantization (V=32) for unit
+//! tests and figure dumps; the canonical training set consumed by FID lives
+//! in `artifacts/img_*_train.bin` ([`super::corpus`]).
+
+use crate::core::rng::Pcg64;
+
+pub const IMG_VOCAB: usize = 32;
+pub const GRAY_SIDE: usize = 16;
+pub const COLOR_SIDE: usize = 8;
+pub const N_CLASSES: usize = 10;
+
+/// Render one gray image: `side*side` tokens in `[0, 32)`.
+pub fn render_gray(cls: usize, side: usize, rng: &mut Pcg64) -> Vec<i32> {
+    render_float(cls, side, rng).iter().map(|&v| quantize(v)).collect()
+}
+
+/// Render one color image (channel-last `side*side*3` tokens).
+pub fn render_color(cls: usize, side: usize, rng: &mut Pcg64) -> Vec<i32> {
+    let base = render_float(cls, side, rng);
+    let tint: Vec<f64> = (0..3).map(|_| 0.4 + rng.uniform() * 0.6).collect();
+    let mut out = Vec::with_capacity(base.len() * 3);
+    for &v in &base {
+        for t in &tint {
+            let noisy = (v * t + rng.normal() * 0.02).clamp(0.0, 1.0);
+            out.push(quantize(noisy));
+        }
+    }
+    out
+}
+
+fn quantize(v: f64) -> i32 {
+    ((v * IMG_VOCAB as f64).floor()).clamp(0.0, (IMG_VOCAB - 1) as f64) as i32
+}
+
+/// Float image in [0,1] for a class (mirrors python `_render_shape`).
+pub fn render_float(cls: usize, side: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let cx = 0.3 + rng.uniform() * 0.4;
+    let cy = 0.3 + rng.uniform() * 0.4;
+    let r = 0.15 + rng.uniform() * 0.2;
+    let bg = 0.05 + rng.uniform() * 0.25;
+    let fg = 0.6 + rng.uniform() * 0.35;
+    let stripes_k = 2.0 + rng.below(3) as f64;
+    let checker_k = 2 + rng.below(2) as i64;
+
+    let mut img = vec![0.0f64; side * side];
+    for yy in 0..side {
+        for xx in 0..side {
+            let x = (xx as f64 + 0.5) / side as f64;
+            let y = (yy as f64 + 0.5) / side as f64;
+            let d2 = (x - cx).powi(2) + (y - cy).powi(2);
+            let v = match cls {
+                0 => {
+                    if d2 < r * r {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                1 => {
+                    if (x - cx).abs().max((y - cy).abs()) < r {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                2 => {
+                    if d2 < r * r && d2 > (0.55 * r).powi(2) {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                3 => {
+                    if (y * std::f64::consts::PI * 2.0 * stripes_k).sin() > 0.0 {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                4 => {
+                    if (x * std::f64::consts::PI * 2.0 * stripes_k).sin() > 0.0 {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                5 => bg + (fg - bg) * (x + y) / 2.0,
+                6 => {
+                    let w = 0.4 * r;
+                    if (x - cx).abs() < w || (y - cy).abs() < w {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                7 => {
+                    if ((x * checker_k as f64).floor() as i64 + (y * checker_k as f64).floor() as i64) % 2 != 0 {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                8 => {
+                    if (x - cx).abs() + (y - cy).abs() < r {
+                        fg
+                    } else {
+                        bg
+                    }
+                }
+                _ => bg + (fg - bg) * (1.0 - d2.sqrt() / 0.7).clamp(0.0, 1.0),
+            };
+            img[yy * side + xx] = (v + rng.normal() * 0.03).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+/// A labeled batch.
+pub fn batch_gray(n: usize, rng: &mut Pcg64) -> (Vec<Vec<i32>>, Vec<usize>) {
+    let mut imgs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cls = rng.below(N_CLASSES as u32) as usize;
+        imgs.push(render_gray(cls, GRAY_SIDE, rng));
+        labels.push(cls);
+    }
+    (imgs, labels)
+}
+
+/// Write a PGM (gray) image from tokens — for figure dumps (Fig 6/7/12).
+pub fn write_pgm(path: &std::path::Path, tokens: &[i32], side: usize) -> std::io::Result<()> {
+    let mut out = format!("P2\n{side} {side}\n255\n");
+    for row in 0..side {
+        let line: Vec<String> = (0..side)
+            .map(|c| ((tokens[row * side + c].clamp(0, 31) * 255) / 31).to_string())
+            .collect();
+        out.push_str(&line.join(" "));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// Write a PPM (color, channel-last tokens) image (Fig 8/9/13).
+pub fn write_ppm(path: &std::path::Path, tokens: &[i32], side: usize) -> std::io::Result<()> {
+    let mut out = format!("P3\n{side} {side}\n255\n");
+    for row in 0..side {
+        let mut line = Vec::with_capacity(side * 3);
+        for c in 0..side {
+            for ch in 0..3 {
+                let t = tokens[(row * side + c) * 3 + ch].clamp(0, 31);
+                line.push(((t * 255) / 31).to_string());
+            }
+        }
+        out.push_str(&line.join(" "));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_tokens_in_vocab() {
+        let mut rng = Pcg64::new(0);
+        for cls in 0..N_CLASSES {
+            let img = render_gray(cls, GRAY_SIDE, &mut rng);
+            assert_eq!(img.len(), GRAY_SIDE * GRAY_SIDE);
+            assert!(img.iter().all(|&t| (0..IMG_VOCAB as i32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn color_has_three_channels() {
+        let mut rng = Pcg64::new(1);
+        let img = render_color(0, COLOR_SIDE, &mut rng);
+        assert_eq!(img.len(), COLOR_SIDE * COLOR_SIDE * 3);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Disk (0) vs gradient (5): different spatial variance profiles.
+        let mut rng = Pcg64::new(2);
+        let disk = render_float(0, 16, &mut rng);
+        let grad = render_float(5, 16, &mut rng);
+        let var = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().map(|x| (x - m).powi(2)).sum::<f64>() / v.len() as f64
+        };
+        // Both are valid images with nonzero variance.
+        assert!(var(&disk) > 1e-4);
+        assert!(var(&grad) > 1e-4);
+    }
+
+    #[test]
+    fn pgm_ppm_written() {
+        let dir = std::env::temp_dir();
+        let mut rng = Pcg64::new(3);
+        let g = render_gray(0, GRAY_SIDE, &mut rng);
+        let p = dir.join("wsfm_test.pgm");
+        write_pgm(&p, &g, GRAY_SIDE).unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().starts_with("P2"));
+        let c = render_color(1, COLOR_SIDE, &mut rng);
+        let p2 = dir.join("wsfm_test.ppm");
+        write_ppm(&p2, &c, COLOR_SIDE).unwrap();
+        assert!(std::fs::read_to_string(&p2).unwrap().starts_with("P3"));
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(p2);
+    }
+
+    #[test]
+    fn batch_labels_in_range() {
+        let mut rng = Pcg64::new(4);
+        let (imgs, labels) = batch_gray(50, &mut rng);
+        assert_eq!(imgs.len(), 50);
+        assert!(labels.iter().all(|&l| l < N_CLASSES));
+    }
+}

@@ -1,0 +1,129 @@
+//! Synthetic English-like corpus generator (Rust mirror of
+//! `python/compile/data.py`'s synth-text8 grammar).
+//!
+//! Used by unit tests and as a fallback corpus source when `artifacts/` is
+//! absent; the canonical corpus for evaluation is the file written by the
+//! AOT pipeline. The lexicon/grammar constants are copied verbatim from the
+//! python side — `tests/cross_lang.rs` checks the two implementations'
+//! character statistics agree.
+
+use crate::core::rng::Pcg64;
+
+pub const DET: &[&str] = &["the", "a", "one", "this", "that", "each", "some", "every"];
+pub const ADJ: &[&str] = &[
+    "small", "large", "old", "young", "red", "blue", "green", "dark", "bright", "quiet", "loud",
+    "early", "late", "famous", "local", "ancient", "modern", "cold", "warm", "heavy", "light",
+    "rapid", "slow", "simple", "complex",
+];
+pub const NOUN: &[&str] = &[
+    "city", "river", "mountain", "forest", "village", "castle", "bridge", "library", "museum",
+    "station", "garden", "island", "valley", "harbor", "temple", "market", "road", "tower",
+    "school", "house", "king", "queen", "writer", "painter", "soldier", "farmer", "merchant",
+    "scholar", "child", "bird", "horse", "wolf", "fish", "tree", "stone", "book", "song", "war",
+    "storm", "winter", "summer", "country", "empire", "army", "ship", "train",
+];
+pub const VERB: &[&str] = &[
+    "was", "became", "remained", "stood", "moved", "crossed", "entered", "left", "reached",
+    "followed", "carried", "built", "destroyed", "found", "lost", "defended", "visited",
+    "described", "painted", "wrote", "sang", "ruled", "served", "joined", "formed", "covered",
+    "crossed", "opened",
+];
+pub const ADV: &[&str] =
+    &["quickly", "slowly", "often", "rarely", "finally", "suddenly", "quietly", "nearly"];
+pub const PREP: &[&str] =
+    &["in", "on", "near", "under", "over", "beyond", "across", "through", "behind"];
+pub const CONJ: &[&str] = &["and", "but", "while", "because", "although", "before", "after"];
+pub const NUM: &[&str] =
+    &["one", "two", "three", "four", "five", "six", "seven", "eight", "nine", "zero"];
+
+fn pick<'a>(rng: &mut Pcg64, xs: &[&'a str]) -> &'a str {
+    xs[rng.below(xs.len() as u32) as usize]
+}
+
+fn noun_phrase(rng: &mut Pcg64, out: &mut Vec<&'static str>) {
+    out.push(pick(rng, DET));
+    if rng.uniform() < 0.6 {
+        out.push(pick(rng, ADJ));
+    }
+    out.push(pick(rng, NOUN));
+}
+
+/// One clause (mirrors python `_sentence`).
+pub fn sentence(rng: &mut Pcg64) -> Vec<&'static str> {
+    let mut words = Vec::with_capacity(16);
+    noun_phrase(rng, &mut words);
+    words.push(pick(rng, VERB));
+    if rng.uniform() < 0.4 {
+        words.push(pick(rng, ADV));
+    }
+    if rng.uniform() < 0.8 {
+        words.push(pick(rng, PREP));
+        noun_phrase(rng, &mut words);
+    }
+    if rng.uniform() < 0.15 {
+        words.push("in");
+        for _ in 0..4 {
+            words.push(pick(rng, NUM));
+        }
+    }
+    if rng.uniform() < 0.3 {
+        words.push(pick(rng, CONJ));
+        noun_phrase(rng, &mut words);
+        words.push(pick(rng, VERB));
+    }
+    words
+}
+
+/// Generate a corpus of exactly `n_chars` characters (a-z + space).
+pub fn corpus(n_chars: usize, seed: u64) -> String {
+    let mut rng = Pcg64::new(seed);
+    let mut text = String::with_capacity(n_chars + 80);
+    while text.len() < n_chars + 64 {
+        if !text.is_empty() {
+            text.push(' ');
+        }
+        let words = sentence(&mut rng);
+        text.push_str(&words.join(" "));
+    }
+    text.truncate(n_chars);
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_alphabet_and_length() {
+        let c = corpus(10_000, 1);
+        assert_eq!(c.len(), 10_000);
+        assert!(c.chars().all(|ch| ch == ' ' || ch.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn corpus_deterministic_per_seed() {
+        assert_eq!(corpus(500, 7), corpus(500, 7));
+        assert_ne!(corpus(500, 7), corpus(500, 8));
+    }
+
+    #[test]
+    fn sentences_have_grammar_shape() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let s = sentence(&mut rng);
+            assert!(s.len() >= 3, "sentence too short: {s:?}");
+            assert!(DET.contains(&s[0]), "must start with determiner: {s:?}");
+            // A verb appears somewhere.
+            assert!(s.iter().any(|w| VERB.contains(w)), "no verb: {s:?}");
+        }
+    }
+
+    #[test]
+    fn word_frequencies_reasonable() {
+        // Space frequency in word-joined text should be ~1/6 (avg word ~5
+        // chars); check a loose band to catch grammar regressions.
+        let c = corpus(50_000, 5);
+        let spaces = c.chars().filter(|&ch| ch == ' ').count() as f64 / c.len() as f64;
+        assert!((0.10..0.25).contains(&spaces), "space freq {spaces}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Tokenizers: char-level (synth-text8) and word-level (synth-wiki).
+//!
+//! Mirrors the python encodings exactly: text8 maps 'a'..'z' -> 0..25 and
+//! ' ' -> 26; wiki uses the 256-word vocabulary shipped in
+//! `artifacts/wiki_vocab.json`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Character-level tokenizer over `a-z` + space (V = 27).
+#[derive(Debug, Clone, Default)]
+pub struct CharTokenizer;
+
+pub const TEXT8_CHARS: &str = "abcdefghijklmnopqrstuvwxyz ";
+pub const TEXT8_VOCAB: usize = 27;
+
+impl CharTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        TEXT8_VOCAB
+    }
+
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| match c {
+                'a'..='z' => Ok(c as i32 - 'a' as i32),
+                ' ' => Ok(26),
+                _ => bail!("character {c:?} outside text8 alphabet"),
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| match t {
+                0..=25 => (b'a' + t as u8) as char,
+                _ => ' ',
+            })
+            .collect()
+    }
+}
+
+/// Word-level tokenizer backed by an explicit vocabulary list.
+#[derive(Debug, Clone)]
+pub struct WordTokenizer {
+    vocab: Vec<String>,
+    lut: HashMap<String, i32>,
+    unk: i32,
+}
+
+impl WordTokenizer {
+    pub fn new(vocab: Vec<String>) -> Result<Self> {
+        if vocab.is_empty() {
+            bail!("empty vocabulary");
+        }
+        let lut: HashMap<String, i32> =
+            vocab.iter().enumerate().map(|(i, w)| (w.clone(), i as i32)).collect();
+        let unk = lut.get("<unk>").copied().unwrap_or(0);
+        Ok(WordTokenizer { vocab, lut, unk })
+    }
+
+    /// Load from the JSON array written by the AOT pipeline.
+    pub fn from_json(json_text: &str) -> Result<Self> {
+        let v = crate::util::json::Json::parse(json_text)?;
+        let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("vocab json must be an array"))?;
+        let vocab: Vec<String> = arr
+            .iter()
+            .map(|j| j.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow::anyhow!("vocab entries must be strings"))?;
+        Self::new(vocab)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| *self.lut.get(w).unwrap_or(&self.unk)).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                self.vocab
+                    .get(t as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<unk>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_roundtrip() {
+        let t = CharTokenizer;
+        let s = "the quick brown fox";
+        let toks = t.encode(s).unwrap();
+        assert_eq!(t.decode(&toks), s);
+        assert_eq!(toks[0], 19); // 't'
+        assert_eq!(toks[3], 26); // ' '
+    }
+
+    #[test]
+    fn char_rejects_outside_alphabet() {
+        let t = CharTokenizer;
+        assert!(t.encode("Hello").is_err());
+        assert!(t.encode("a1b").is_err());
+    }
+
+    #[test]
+    fn char_decode_clamps_unknown() {
+        let t = CharTokenizer;
+        assert_eq!(t.decode(&[0, 99, 25]), "a z");
+    }
+
+    #[test]
+    fn word_roundtrip() {
+        let t = WordTokenizer::new(
+            ["<unk>", "the", "cat", "sat"].iter().map(|s| s.to_string()).collect(),
+        )
+        .unwrap();
+        let toks = t.encode("the cat sat");
+        assert_eq!(toks, vec![1, 2, 3]);
+        assert_eq!(t.decode(&toks), "the cat sat");
+    }
+
+    #[test]
+    fn word_unknown_maps_to_unk() {
+        let t = WordTokenizer::new(
+            ["<unk>", "the"].iter().map(|s| s.to_string()).collect(),
+        )
+        .unwrap();
+        assert_eq!(t.encode("the zebra"), vec![1, 0]);
+        assert_eq!(t.decode(&[1, 7]), "the <unk>");
+    }
+
+    #[test]
+    fn word_from_json() {
+        let t = WordTokenizer::from_json(r#"["<unk>","a","b"]"#).unwrap();
+        assert_eq!(t.vocab_size(), 3);
+        assert_eq!(t.encode("b a"), vec![2, 1]);
+        assert!(WordTokenizer::from_json("{}").is_err());
+        assert!(WordTokenizer::from_json("[1,2]").is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Two-moons dataset + the three contrived draft models (paper §4.1, Fig 4).
+//!
+//! Mirrors `python/compile/data.py` exactly (same constants, same
+//! quantization) so the Rust-side drafts/targets follow the same
+//! distributions the WS-DFM artifacts were trained on.
+
+use crate::core::rng::Pcg64;
+
+pub const GRID: usize = 128;
+pub const N_TOKENS: usize = 2;
+
+/// Draft-model corruption levels (paper Fig. 4 c–e). Values mirror
+/// `data.DRAFT_SPECS` in python.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DraftSpec {
+    pub jitter: f64,
+    pub uniform_frac: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DraftKind {
+    Good,
+    Fair,
+    Poor,
+}
+
+impl DraftKind {
+    pub fn spec(self) -> DraftSpec {
+        match self {
+            DraftKind::Good => DraftSpec { jitter: 3.0, uniform_frac: 0.02 },
+            DraftKind::Fair => DraftSpec { jitter: 8.0, uniform_frac: 0.15 },
+            DraftKind::Poor => DraftSpec { jitter: 16.0, uniform_frac: 0.40 },
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DraftKind> {
+        match s {
+            "good" => Some(DraftKind::Good),
+            "fair" => Some(DraftKind::Fair),
+            "poor" => Some(DraftKind::Poor),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DraftKind::Good => "good",
+            DraftKind::Fair => "fair",
+            DraftKind::Poor => "poor",
+        }
+    }
+}
+
+/// One target sample: `[x, y]` tokens on the 128x128 grid.
+pub fn sample(rng: &mut Pcg64, noise: f64) -> [i32; 2] {
+    let theta = rng.uniform() * std::f64::consts::PI;
+    let upper = rng.uniform() < 0.5;
+    let (mut x, mut y) = if upper {
+        (theta.cos(), theta.sin())
+    } else {
+        (1.0 - theta.cos(), 0.5 - theta.sin())
+    };
+    x += rng.normal() * noise;
+    y += rng.normal() * noise;
+    quantize(x, y)
+}
+
+/// Quantize raw moon coordinates into grid tokens (mirrors
+/// `data.quantize_moons`).
+pub fn quantize(x: f64, y: f64) -> [i32; 2] {
+    let g = GRID as f64;
+    let xs = (x + 1.25) / 3.5;
+    let ys = (y + 0.75) / 2.0;
+    let xi = (xs * g).floor().clamp(0.0, g - 1.0) as i32;
+    let yi = (ys * g).floor().clamp(0.0, g - 1.0) as i32;
+    [xi, yi]
+}
+
+/// A batch of target samples, shape `[n][2]`.
+pub fn sample_batch(n: usize, rng: &mut Pcg64) -> Vec<[i32; 2]> {
+    (0..n).map(|_| sample(rng, 0.06)).collect()
+}
+
+/// One draft-model sample (the lightweight generative model): a target
+/// sample corrupted by jitter + uniform outliers.
+pub fn draft_sample(kind: DraftKind, rng: &mut Pcg64) -> [i32; 2] {
+    let spec = kind.spec();
+    let base = sample(rng, 0.06);
+    if rng.uniform() < spec.uniform_frac {
+        return [rng.below(GRID as u32) as i32, rng.below(GRID as u32) as i32];
+    }
+    let x = base[0] as f64 + rng.normal() * spec.jitter;
+    let y = base[1] as f64 + rng.normal() * spec.jitter;
+    [
+        x.round().clamp(0.0, (GRID - 1) as f64) as i32,
+        y.round().clamp(0.0, (GRID - 1) as f64) as i32,
+    ]
+}
+
+pub fn draft_batch(kind: DraftKind, n: usize, rng: &mut Pcg64) -> Vec<[i32; 2]> {
+    (0..n).map(|_| draft_sample(kind, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_grid() {
+        let mut rng = Pcg64::new(0);
+        for _ in 0..1000 {
+            let [x, y] = sample(&mut rng, 0.06);
+            assert!((0..GRID as i32).contains(&x));
+            assert!((0..GRID as i32).contains(&y));
+        }
+    }
+
+    #[test]
+    fn quantize_corners() {
+        // Extremes clamp into the grid.
+        assert_eq!(quantize(-10.0, -10.0), [0, 0]);
+        assert_eq!(quantize(10.0, 10.0), [(GRID - 1) as i32, (GRID - 1) as i32]);
+    }
+
+    #[test]
+    fn two_modes_present() {
+        // Both moons should appear: check y spread is bimodal-ish by
+        // verifying samples above and below the grid midline.
+        let mut rng = Pcg64::new(1);
+        let batch = sample_batch(2000, &mut rng);
+        let above = batch.iter().filter(|p| p[1] > 64).count();
+        assert!(above > 400 && above < 1600, "above = {above}");
+    }
+
+    #[test]
+    fn draft_quality_ordering() {
+        // Poorer drafts deviate more from clean target samples: measure mean
+        // min-distance to a reference target cloud.
+        let mut rng = Pcg64::new(2);
+        let target = sample_batch(1500, &mut rng);
+        let mean_min_d2 = |kind: DraftKind, rng: &mut Pcg64| {
+            let drafts = draft_batch(kind, 300, rng);
+            drafts
+                .iter()
+                .map(|d| {
+                    target
+                        .iter()
+                        .map(|t| {
+                            let dx = (d[0] - t[0]) as f64;
+                            let dy = (d[1] - t[1]) as f64;
+                            dx * dx + dy * dy
+                        })
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .sum::<f64>()
+                / 300.0
+        };
+        let dg = mean_min_d2(DraftKind::Good, &mut rng);
+        let df = mean_min_d2(DraftKind::Fair, &mut rng);
+        let dp = mean_min_d2(DraftKind::Poor, &mut rng);
+        assert!(dg < df && df < dp, "ordering violated: {dg} {df} {dp}");
+    }
+
+    #[test]
+    fn draft_kind_parse_roundtrip() {
+        for k in [DraftKind::Good, DraftKind::Fair, DraftKind::Poor] {
+            assert_eq!(DraftKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DraftKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,164 @@
+//! Draft models: the "computationally lightweight generative models" of the
+//! paper (§3) that supply warm-start initial samples at `t0`.
+//!
+//! * [`HloDraft`] — LSTM / PCA samplers exported as HLO artifacts; the
+//!   coordinator feeds them Gumbel / Gaussian noise (Rust owns RNG).
+//! * [`MixtureDraft`] — the two-moons contrived drafts (good/fair/poor),
+//!   computed directly in Rust (paper Fig. 4 c-e).
+//! * [`NoiseDraft`] — pure uniform noise (what cold DFM starts from);
+//!   exists so every sampler run can be expressed as "draft + refine".
+
+use crate::core::rng::Pcg64;
+use crate::core::tensor::TokenBatch;
+use crate::data::two_moons::{self, DraftKind};
+use crate::runtime::engine::Executor;
+use anyhow::{bail, Result};
+
+/// A draft model produces a `[B, N]` batch of initial token sequences.
+pub trait Draft: Send + Sync {
+    /// Human-readable kind ("lstm", "pca", "good", "noise", ...).
+    fn kind(&self) -> &str;
+    /// Generate `batch` sequences of `seq_len` tokens.
+    fn generate(&self, batch: usize, seq_len: usize, rng: &mut Pcg64) -> Result<TokenBatch>;
+}
+
+/// Uniform-noise draft over a vocabulary.
+pub struct NoiseDraft {
+    pub vocab: usize,
+}
+
+impl Draft for NoiseDraft {
+    fn kind(&self) -> &str {
+        "noise"
+    }
+
+    fn generate(&self, batch: usize, seq_len: usize, rng: &mut Pcg64) -> Result<TokenBatch> {
+        let mut tb = TokenBatch::zeros(batch, seq_len);
+        for t in tb.tokens.iter_mut() {
+            *t = rng.below(self.vocab as u32) as i32;
+        }
+        Ok(tb)
+    }
+}
+
+/// Two-moons contrived draft models (paper Fig. 4 c-e).
+pub struct MixtureDraft {
+    pub draft_kind: DraftKind,
+}
+
+impl Draft for MixtureDraft {
+    fn kind(&self) -> &str {
+        self.draft_kind.name()
+    }
+
+    fn generate(&self, batch: usize, seq_len: usize, rng: &mut Pcg64) -> Result<TokenBatch> {
+        if seq_len != two_moons::N_TOKENS {
+            bail!("two-moons drafts have seq_len 2, asked for {seq_len}");
+        }
+        let mut tb = TokenBatch::zeros(batch, seq_len);
+        for i in 0..batch {
+            let p = two_moons::draft_sample(self.draft_kind, rng);
+            tb.row_mut(i).copy_from_slice(&p);
+        }
+        Ok(tb)
+    }
+}
+
+/// Noise kind an HLO draft artifact expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftNoise {
+    /// Gumbel(0,1) per (position, vocab) — LSTM Gumbel-max sampling.
+    Gumbel,
+    /// Standard normal latents — PCA-Gaussian sampler.
+    Gaussian,
+}
+
+/// A draft model backed by an AOT HLO artifact (LSTM or PCA).
+pub struct HloDraft<'a> {
+    pub exec: &'a dyn Executor,
+    /// Artifact name (fixed batch shape, e.g. `text8_draft_lstm_b32`).
+    pub artifact: String,
+    pub noise: DraftNoise,
+    kind_name: String,
+}
+
+impl<'a> HloDraft<'a> {
+    pub fn new(exec: &'a dyn Executor, artifact: impl Into<String>, noise: DraftNoise) -> Self {
+        let artifact = artifact.into();
+        let kind_name = match noise {
+            DraftNoise::Gumbel => "lstm".to_string(),
+            DraftNoise::Gaussian => "pca".to_string(),
+        };
+        HloDraft { exec, artifact, noise, kind_name }
+    }
+}
+
+impl<'a> Draft for HloDraft<'a> {
+    fn kind(&self) -> &str {
+        &self.kind_name
+    }
+
+    fn generate(&self, batch: usize, seq_len: usize, rng: &mut Pcg64) -> Result<TokenBatch> {
+        let meta = self.exec.meta(&self.artifact)?;
+        if meta.batch != batch || meta.seq_len != seq_len {
+            bail!(
+                "draft artifact {} is [{}, {}], asked for [{}, {}]",
+                self.artifact,
+                meta.batch,
+                meta.seq_len,
+                batch,
+                seq_len
+            );
+        }
+        let in_spec = meta.inputs.first().ok_or_else(|| anyhow::anyhow!("draft missing input"))?;
+        let mut noise = vec![0.0f32; in_spec.numel()];
+        match self.noise {
+            DraftNoise::Gumbel => rng.fill_gumbel_f32(&mut noise),
+            DraftNoise::Gaussian => rng.fill_normal_f32(&mut noise),
+        }
+        let tokens = self.exec.draft(&self.artifact, &noise)?;
+        Ok(TokenBatch { batch, seq_len, tokens })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_draft_in_vocab() {
+        let d = NoiseDraft { vocab: 7 };
+        let mut rng = Pcg64::new(0);
+        let tb = d.generate(10, 5, &mut rng).unwrap();
+        assert_eq!((tb.batch, tb.seq_len), (10, 5));
+        assert!(tb.tokens.iter().all(|&t| (0..7).contains(&t)));
+        assert_eq!(d.kind(), "noise");
+    }
+
+    #[test]
+    fn mixture_draft_shapes() {
+        let d = MixtureDraft { draft_kind: DraftKind::Fair };
+        let mut rng = Pcg64::new(1);
+        let tb = d.generate(32, 2, &mut rng).unwrap();
+        assert_eq!(tb.batch, 32);
+        assert!(tb.tokens.iter().all(|&t| (0..128).contains(&t)));
+        assert_eq!(d.kind(), "fair");
+        // Wrong seq_len rejected.
+        assert!(d.generate(4, 3, &mut rng).is_err());
+    }
+
+    #[test]
+    fn noise_draft_distribution_uniform() {
+        let d = NoiseDraft { vocab: 4 };
+        let mut rng = Pcg64::new(2);
+        let tb = d.generate(100, 100, &mut rng).unwrap();
+        let mut counts = [0usize; 4];
+        for &t in &tb.tokens {
+            counts[t as usize] += 1;
+        }
+        for c in counts {
+            let f = c as f64 / 10_000.0;
+            assert!((f - 0.25).abs() < 0.03, "{f}");
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Fréchet distance over fixed random-conv features — the FID substitute
+//! (paper Table 4; DESIGN.md §2).
+//!
+//! The paper computes FID with Inception features. No pretrained Inception
+//! exists in this offline image, so we use the standard substitute for
+//! small synthetic imagery: a *fixed* (seeded) random convolutional feature
+//! extractor shared by every system under comparison, followed by the exact
+//! Fréchet formula
+//!
+//! ```text
+//! d^2 = |mu_a - mu_b|^2 + tr(Ca + Cb - 2 (Ca Cb)^{1/2})
+//! ```
+//!
+//! with the matrix square root from [`super::stats`]. Relative orderings —
+//! which Table 4 is about — are preserved under any fixed feature map that
+//! separates the distributions.
+
+use crate::core::rng::Pcg64;
+use crate::eval::stats::{mean_cov, sqrtm_psd, Mat};
+
+/// Fixed random 3x3-conv + pooling feature extractor.
+#[derive(Debug, Clone)]
+pub struct FeatureExtractor {
+    pub side: usize,
+    pub channels: usize,
+    pub n_filters: usize,
+    /// `[n_filters][channels * 9]` kernels.
+    kernels: Vec<Vec<f64>>,
+    bias: Vec<f64>,
+}
+
+impl FeatureExtractor {
+    /// Deterministic extractor (same seed => same features everywhere).
+    pub fn new(side: usize, channels: usize, n_filters: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let kernels = (0..n_filters)
+            .map(|_| (0..channels * 9).map(|_| rng.normal() / 3.0).collect())
+            .collect();
+        let bias = (0..n_filters).map(|_| rng.normal() * 0.1).collect();
+        FeatureExtractor { side, channels, n_filters, kernels, bias }
+    }
+
+    /// Feature vector: per-filter ReLU conv with 2x2-quadrant mean AND
+    /// second-moment pooling (`n_filters * 8` dims), plus per-channel mean,
+    /// variance, and gradient energy. The second moments are what separate
+    /// blurry PCA drafts from sharp data — mean-only pooling cannot
+    /// (EXPERIMENTS.md §Perf iteration log).
+    pub fn features(&self, tokens: &[i32]) -> Vec<f64> {
+        let s = self.side;
+        let c = self.channels;
+        assert_eq!(tokens.len(), s * s * c, "token count mismatch");
+        // Dequantize to [0, 1] (V = 32).
+        let img: Vec<f64> = tokens.iter().map(|&t| t as f64 / 31.0).collect();
+        let mut feats = Vec::with_capacity(self.n_filters * 8 + 3 * c);
+        let half = s / 2;
+        for (f, kern) in self.kernels.iter().enumerate() {
+            // Pooled quadrant accumulators (mean + mean-square).
+            let mut quad = [0.0f64; 4];
+            let mut quad2 = [0.0f64; 4];
+            let mut qn = [0.0f64; 4];
+            for y in 0..s {
+                for x in 0..s {
+                    // 3x3 conv with zero padding.
+                    let mut acc = self.bias[f];
+                    for dy in 0..3usize {
+                        for dx in 0..3usize {
+                            let yy = y as isize + dy as isize - 1;
+                            let xx = x as isize + dx as isize - 1;
+                            if yy < 0 || xx < 0 || yy >= s as isize || xx >= s as isize {
+                                continue;
+                            }
+                            for ch in 0..c {
+                                let pix = img[((yy as usize) * s + xx as usize) * c + ch];
+                                acc += pix * kern[(dy * 3 + dx) * c + ch];
+                            }
+                        }
+                    }
+                    let v = acc.max(0.0); // ReLU
+                    let q = (y >= half) as usize * 2 + (x >= half) as usize;
+                    quad[q] += v;
+                    quad2[q] += v * v;
+                    qn[q] += 1.0;
+                }
+            }
+            for q in 0..4 {
+                let n = qn[q].max(1.0);
+                feats.push(quad[q] / n);
+                feats.push(quad2[q] / n);
+            }
+        }
+        // Per-channel mean, variance and horizontal gradient energy ground
+        // the features in raw intensity + sharpness.
+        for ch in 0..c {
+            let vals: Vec<f64> = (0..s * s).map(|i| img[i * c + ch]).collect();
+            let mean: f64 = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var: f64 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            let mut grad = 0.0;
+            for y in 0..s {
+                for x in 1..s {
+                    let d = vals[y * s + x] - vals[y * s + x - 1];
+                    grad += d * d;
+                }
+            }
+            feats.push(mean);
+            feats.push(var);
+            feats.push(grad / ((s * (s - 1)) as f64));
+        }
+        feats
+    }
+}
+
+/// Fréchet distance between two feature clouds.
+pub fn frechet(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let (mu_a, ca) = mean_cov(a);
+    let (mu_b, cb) = mean_cov(b);
+    frechet_from_moments(&mu_a, &ca, &mu_b, &cb)
+}
+
+/// Fréchet distance from precomputed moments.
+pub fn frechet_from_moments(mu_a: &[f64], ca: &Mat, mu_b: &[f64], cb: &Mat) -> f64 {
+    let mean_term: f64 = mu_a.iter().zip(mu_b).map(|(x, y)| (x - y) * (x - y)).sum();
+    // tr(Ca + Cb - 2 sqrt(Ca Cb)); symmetrize the product for stability.
+    let prod = ca.matmul(cb);
+    let sym = {
+        let t = prod.transpose();
+        let mut s = prod.add(&t);
+        for v in &mut s.a {
+            *v *= 0.5;
+        }
+        s
+    };
+    let sqrt = sqrtm_psd(&sym);
+    let d2 = mean_term + ca.trace() + cb.trace() - 2.0 * sqrt.trace();
+    d2.max(0.0)
+}
+
+/// Convenience: FID-style score between two token-image sets.
+pub fn fid_images(
+    extractor: &FeatureExtractor,
+    set_a: &[Vec<i32>],
+    set_b: &[Vec<i32>],
+) -> f64 {
+    let fa: Vec<Vec<f64>> = set_a.iter().map(|img| extractor.features(img)).collect();
+    let fb: Vec<Vec<f64>> = set_b.iter().map(|img| extractor.features(img)).collect();
+    frechet(&fa, &fb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shapes;
+
+    fn gray_extractor() -> FeatureExtractor {
+        FeatureExtractor::new(shapes::GRAY_SIDE, 1, 8, 1234)
+    }
+
+    #[test]
+    fn identical_sets_have_near_zero_fid() {
+        let mut rng = Pcg64::new(0);
+        let (imgs, _) = shapes::batch_gray(80, &mut rng);
+        let d = fid_images(&gray_extractor(), &imgs, &imgs);
+        assert!(d < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn same_distribution_fid_small_vs_noise() {
+        let mut rng = Pcg64::new(1);
+        let (a, _) = shapes::batch_gray(150, &mut rng);
+        let (b, _) = shapes::batch_gray(150, &mut rng);
+        // Uniform-noise images.
+        let noise: Vec<Vec<i32>> = (0..150)
+            .map(|_| (0..shapes::GRAY_SIDE * shapes::GRAY_SIDE).map(|_| rng.below(32) as i32).collect())
+            .collect();
+        let ex = gray_extractor();
+        let d_same = fid_images(&ex, &a, &b);
+        let d_noise = fid_images(&ex, &a, &noise);
+        assert!(d_same < d_noise, "same-dist {d_same} should be < noise {d_noise}");
+        assert!(d_noise > 5.0 * d_same.max(1e-6), "separation too weak: {d_same} vs {d_noise}");
+    }
+
+    #[test]
+    fn fid_is_symmetric() {
+        let mut rng = Pcg64::new(2);
+        let (a, _) = shapes::batch_gray(60, &mut rng);
+        let (b, _) = shapes::batch_gray(60, &mut rng);
+        let ex = gray_extractor();
+        let d1 = fid_images(&ex, &a, &b);
+        let d2 = fid_images(&ex, &b, &a);
+        assert!((d1 - d2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn extractor_is_deterministic() {
+        let mut rng = Pcg64::new(3);
+        let img = shapes::render_gray(0, shapes::GRAY_SIDE, &mut rng);
+        let f1 = FeatureExtractor::new(16, 1, 8, 7).features(&img);
+        let f2 = FeatureExtractor::new(16, 1, 8, 7).features(&img);
+        assert_eq!(f1, f2);
+        let f3 = FeatureExtractor::new(16, 1, 8, 8).features(&img);
+        assert_ne!(f1, f3);
+    }
+
+    #[test]
+    fn color_features_shape() {
+        let mut rng = Pcg64::new(4);
+        let img = shapes::render_color(2, shapes::COLOR_SIDE, &mut rng);
+        let ex = FeatureExtractor::new(shapes::COLOR_SIDE, 3, 6, 11);
+        let f = ex.features(&img);
+        assert_eq!(f.len(), 6 * 8 + 3 * 3);
+    }
+
+    #[test]
+    fn frechet_known_gaussians() {
+        // Two 1-sigma clouds separated by delta in mean: d^2 ≈ |delta|^2.
+        let mut rng = Pcg64::new(5);
+        let a: Vec<Vec<f64>> = (0..4000).map(|_| vec![rng.normal(), rng.normal()]).collect();
+        let b: Vec<Vec<f64>> =
+            (0..4000).map(|_| vec![rng.normal() + 3.0, rng.normal()]).collect();
+        let d = frechet(&a, &b);
+        assert!((d - 9.0).abs() < 0.7, "{d}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics reproducing the paper's protocol (DESIGN.md §2):
+//! symmetric KL for two-moons (Table 1), n-gram-LM NLL / perplexity /
+//! entropy for text (Tables 2-3, substituting for GPT-J-6B), and Fréchet
+//! distance over fixed features for images (Table 4, substituting for FID).
+
+pub mod fid;
+pub mod ngram;
+pub mod skl;
+pub mod stats;

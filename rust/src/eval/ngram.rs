@@ -1,0 +1,232 @@
+//! Kneser-Ney-smoothed n-gram language model — the evaluator LM.
+//!
+//! Substitutes for the paper's GPT-J-6B proxy-true-model (DESIGN.md §2):
+//! trained on the *held-out* corpus (never seen by any generator), it scores
+//! generated samples with per-token NLL, perplexity, and predictive entropy
+//! (the paper's Tables 2-3 metrics).
+//!
+//! Interpolated absolute-discounting KN over orders 1..=N with hash-map
+//! context tables; vocabulary-smoothed at the unigram floor so every token
+//! has nonzero mass.
+
+use std::collections::HashMap;
+
+/// KN-smoothed n-gram LM.
+#[derive(Debug)]
+pub struct NgramLM {
+    pub order: usize,
+    pub vocab: usize,
+    discount: f64,
+    /// counts[k] maps a length-k context to (token -> count, total).
+    counts: Vec<HashMap<Vec<i32>, ContextRow>>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ContextRow {
+    tokens: HashMap<i32, f64>,
+    total: f64,
+}
+
+impl NgramLM {
+    pub fn fit(stream: &[i32], order: usize, vocab: usize) -> Self {
+        assert!(order >= 1, "order must be >= 1");
+        assert!(vocab > 0);
+        let mut counts: Vec<HashMap<Vec<i32>, ContextRow>> = vec![HashMap::new(); order];
+        for i in 0..stream.len() {
+            let tok = stream[i];
+            for k in 0..order {
+                if i < k {
+                    continue;
+                }
+                let ctx: Vec<i32> = stream[i - k..i].to_vec();
+                let row = counts[k].entry(ctx).or_default();
+                *row.tokens.entry(tok).or_insert(0.0) += 1.0;
+                row.total += 1.0;
+            }
+        }
+        NgramLM { order, vocab, discount: 0.75, counts }
+    }
+
+    /// P(tok | ctx) via interpolated absolute discounting, recursing down
+    /// to a uniform-smoothed unigram.
+    pub fn prob(&self, ctx: &[i32], tok: i32) -> f64 {
+        let k = ctx.len().min(self.order - 1);
+        let ctx = &ctx[ctx.len() - k..];
+        self.prob_rec(ctx, tok)
+    }
+
+    fn prob_rec(&self, ctx: &[i32], tok: i32) -> f64 {
+        if ctx.is_empty() {
+            // Unigram with add-one smoothing over the full vocabulary.
+            let row = self.counts[0].get(&Vec::new());
+            let (c, total) = match row {
+                Some(r) => (r.tokens.get(&tok).copied().unwrap_or(0.0), r.total),
+                None => (0.0, 0.0),
+            };
+            return (c + 1.0) / (total + self.vocab as f64);
+        }
+        let k = ctx.len();
+        match self.counts[k].get(ctx) {
+            Some(row) if row.total > 0.0 => {
+                let c = row.tokens.get(&tok).copied().unwrap_or(0.0);
+                let d = self.discount;
+                let distinct = row.tokens.len() as f64;
+                let p_cont = self.prob_rec(&ctx[1..], tok);
+                ((c - d).max(0.0) + d * distinct * p_cont) / row.total
+            }
+            _ => self.prob_rec(&ctx[1..], tok),
+        }
+    }
+
+    /// Per-token negative log-likelihood (nats) of a sequence.
+    pub fn nll(&self, seq: &[i32]) -> f64 {
+        if seq.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for i in 0..seq.len() {
+            let lo = i.saturating_sub(self.order - 1);
+            let p = self.prob(&seq[lo..i], seq[i]);
+            total += -p.max(1e-12).ln();
+        }
+        total / seq.len() as f64
+    }
+
+    /// Perplexity = exp(mean NLL).
+    pub fn perplexity(&self, seq: &[i32]) -> f64 {
+        self.nll(seq).exp()
+    }
+
+    /// Mean predictive entropy (nats) along a sequence: H(P(.|ctx_i)).
+    ///
+    /// This is the paper's "entropy of the model's next-token prediction
+    /// probability" diversity proxy, computed under the evaluator.
+    pub fn predictive_entropy(&self, seq: &[i32]) -> f64 {
+        if seq.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for i in 0..seq.len() {
+            let lo = i.saturating_sub(self.order - 1);
+            let ctx = &seq[lo..i];
+            let mut h = 0.0;
+            for tok in 0..self.vocab as i32 {
+                let p = self.prob(ctx, tok);
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            total += h;
+        }
+        total / seq.len() as f64
+    }
+
+    /// Corpus-level metrics over many sequences: (mean NLL, perplexity,
+    /// mean predictive entropy in bits).
+    pub fn evaluate(&self, seqs: &[Vec<i32>]) -> TextMetrics {
+        let mut nll_sum = 0.0;
+        let mut ent_sum = 0.0;
+        for s in seqs {
+            nll_sum += self.nll(s);
+            ent_sum += self.predictive_entropy(s);
+        }
+        let n = seqs.len().max(1) as f64;
+        let nll = nll_sum / n;
+        TextMetrics {
+            nll,
+            perplexity: nll.exp(),
+            entropy_bits: (ent_sum / n) / std::f64::consts::LN_2,
+        }
+    }
+}
+
+/// Text evaluation result (Tables 2-3 columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TextMetrics {
+    pub nll: f64,
+    pub perplexity: f64,
+    pub entropy_bits: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_stream() -> Vec<i32> {
+        // "abab...ab" with occasional "c": strong bigram structure.
+        let mut s = Vec::new();
+        for i in 0..500 {
+            s.push(0);
+            s.push(1);
+            if i % 10 == 0 {
+                s.push(2);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let lm = NgramLM::fit(&toy_stream(), 3, 5);
+        for ctx in [vec![], vec![0], vec![0, 1], vec![4, 4]] {
+            let total: f64 = (0..5).map(|t| lm.prob(&ctx, t)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "ctx {ctx:?} sums to {total}");
+        }
+    }
+
+    #[test]
+    fn learns_bigram_structure() {
+        let lm = NgramLM::fit(&toy_stream(), 3, 5);
+        // After 'a'(0), 'b'(1) is overwhelmingly likely.
+        assert!(lm.prob(&[0], 1) > 0.9);
+        assert!(lm.prob(&[0], 0) < 0.05);
+    }
+
+    #[test]
+    fn in_distribution_nll_lower_than_noise() {
+        let stream = toy_stream();
+        let lm = NgramLM::fit(&stream, 3, 5);
+        let good: Vec<i32> = stream[..100].to_vec();
+        let noise: Vec<i32> = (0..100).map(|i| (i * 7 % 5) as i32).collect();
+        assert!(lm.nll(&good) < lm.nll(&noise));
+    }
+
+    #[test]
+    fn perplexity_is_exp_nll() {
+        let lm = NgramLM::fit(&toy_stream(), 2, 5);
+        let seq = vec![0, 1, 0, 1];
+        assert!((lm.perplexity(&seq) - lm.nll(&seq).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_uniform_upper_bound() {
+        let lm = NgramLM::fit(&toy_stream(), 2, 5);
+        let seq = vec![0, 1, 0, 1, 2];
+        let h = lm.predictive_entropy(&seq);
+        assert!(h >= 0.0 && h <= (5.0f64).ln() + 1e-9, "h = {h}");
+    }
+
+    #[test]
+    fn unseen_tokens_have_nonzero_prob() {
+        let lm = NgramLM::fit(&toy_stream(), 3, 10);
+        // Token 9 never appears.
+        assert!(lm.prob(&[0, 1], 9) > 0.0);
+        assert!(lm.prob(&[], 9) > 0.0);
+    }
+
+    #[test]
+    fn evaluate_aggregates() {
+        let lm = NgramLM::fit(&toy_stream(), 2, 5);
+        let m = lm.evaluate(&[vec![0, 1, 0, 1], vec![2, 0, 1, 0]]);
+        assert!(m.nll > 0.0);
+        assert!(m.perplexity > 1.0);
+        assert!(m.entropy_bits > 0.0);
+    }
+
+    #[test]
+    fn empty_sequence_is_zero() {
+        let lm = NgramLM::fit(&toy_stream(), 2, 5);
+        assert_eq!(lm.nll(&[]), 0.0);
+        assert_eq!(lm.predictive_entropy(&[]), 0.0);
+    }
+}

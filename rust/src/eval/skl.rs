@@ -1,0 +1,133 @@
+//! Symmetric KL divergence between sample sets on the two-moons grid
+//! (paper Table 1's metric).
+//!
+//! Both sample sets are histogrammed onto a coarsened grid (with add-one
+//! smoothing so the divergence stays finite), then
+//! `SKL = KL(P||Q) + KL(Q||P)` is computed over the bins.
+
+use crate::data::two_moons::GRID;
+
+/// 2D histogram over the token grid, coarsened by `bin` cells per axis.
+#[derive(Debug, Clone)]
+pub struct GridHistogram {
+    pub bins_per_axis: usize,
+    pub counts: Vec<f64>,
+    pub total: f64,
+}
+
+impl GridHistogram {
+    pub fn new(bin: usize) -> Self {
+        assert!(bin > 0 && GRID % bin == 0, "bin must divide {GRID}");
+        let bins = GRID / bin;
+        GridHistogram { bins_per_axis: bins, counts: vec![0.0; bins * bins], total: 0.0 }
+    }
+
+    pub fn add(&mut self, p: [i32; 2]) {
+        let bin = GRID / self.bins_per_axis;
+        let x = (p[0].clamp(0, GRID as i32 - 1) as usize) / bin;
+        let y = (p[1].clamp(0, GRID as i32 - 1) as usize) / bin;
+        self.counts[y * self.bins_per_axis + x] += 1.0;
+        self.total += 1.0;
+    }
+
+    pub fn add_all(&mut self, pts: &[[i32; 2]]) {
+        for &p in pts {
+            self.add(p);
+        }
+    }
+
+    /// Smoothed probability of bin `i`.
+    fn prob(&self, i: usize, alpha: f64) -> f64 {
+        (self.counts[i] + alpha) / (self.total + alpha * self.counts.len() as f64)
+    }
+}
+
+/// Symmetric KL between two histograms (natural log).
+pub fn symmetric_kl(p: &GridHistogram, q: &GridHistogram, alpha: f64) -> f64 {
+    assert_eq!(p.counts.len(), q.counts.len(), "histogram shapes differ");
+    let mut kl_pq = 0.0;
+    let mut kl_qp = 0.0;
+    for i in 0..p.counts.len() {
+        let pi = p.prob(i, alpha);
+        let qi = q.prob(i, alpha);
+        kl_pq += pi * (pi / qi).ln();
+        kl_qp += qi * (qi / pi).ln();
+    }
+    kl_pq + kl_qp
+}
+
+/// Convenience: SKL between two point sets with the default binning used in
+/// the Table 1 harness (32x32 bins, alpha = 0.5).
+pub fn skl_points(a: &[[i32; 2]], b: &[[i32; 2]]) -> f64 {
+    let mut ha = GridHistogram::new(4);
+    let mut hb = GridHistogram::new(4);
+    ha.add_all(a);
+    hb.add_all(b);
+    symmetric_kl(&ha, &hb, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::data::two_moons;
+
+    #[test]
+    fn identical_sets_have_near_zero_skl() {
+        let mut rng = Pcg64::new(0);
+        let pts = two_moons::sample_batch(4000, &mut rng);
+        let d = skl_points(&pts, &pts);
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn same_distribution_small_skl() {
+        let mut rng = Pcg64::new(1);
+        let a = two_moons::sample_batch(5000, &mut rng);
+        let b = two_moons::sample_batch(5000, &mut rng);
+        let d = skl_points(&a, &b);
+        assert!(d < 0.3, "same-dist SKL should be small, got {d}");
+    }
+
+    #[test]
+    fn different_distributions_large_skl() {
+        let mut rng = Pcg64::new(2);
+        let a = two_moons::sample_batch(4000, &mut rng);
+        // Uniform noise.
+        let b: Vec<[i32; 2]> =
+            (0..4000).map(|_| [rng.below(128) as i32, rng.below(128) as i32]).collect();
+        let d = skl_points(&a, &b);
+        assert!(d > 1.0, "uniform-vs-moons SKL should be large, got {d}");
+    }
+
+    #[test]
+    fn skl_is_symmetric() {
+        let mut rng = Pcg64::new(3);
+        let a = two_moons::sample_batch(2000, &mut rng);
+        let b = two_moons::draft_batch(two_moons::DraftKind::Poor, 2000, &mut rng);
+        let d1 = skl_points(&a, &b);
+        let d2 = skl_points(&b, &a);
+        assert!((d1 - d2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn draft_quality_ordering_in_skl() {
+        // Mirrors paper Fig. 4: SKL(target, good) < SKL(target, fair) <
+        // SKL(target, poor).
+        let mut rng = Pcg64::new(4);
+        let target = two_moons::sample_batch(6000, &mut rng);
+        let good = two_moons::draft_batch(two_moons::DraftKind::Good, 6000, &mut rng);
+        let fair = two_moons::draft_batch(two_moons::DraftKind::Fair, 6000, &mut rng);
+        let poor = two_moons::draft_batch(two_moons::DraftKind::Poor, 6000, &mut rng);
+        let dg = skl_points(&target, &good);
+        let df = skl_points(&target, &fair);
+        let dp = skl_points(&target, &poor);
+        assert!(dg < df && df < dp, "SKL ordering violated: {dg} {df} {dp}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_bin_panics() {
+        GridHistogram::new(7); // 7 does not divide 128
+    }
+}

@@ -1,0 +1,274 @@
+//! Dense linear algebra for the FID metric: mean/covariance estimation,
+//! symmetric eigendecomposition (cyclic Jacobi), and the matrix square
+//! root needed by the Fréchet distance.
+
+/// Column-major-free small dense symmetric matrix ops (row-major `Vec<f64>`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        Mat { n: self.n, a: self.a.iter().zip(&other.a).map(|(x, y)| x + y).collect() }
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Max |a_ij - a_ji| (symmetry check).
+    pub fn asymmetry(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n {
+            for j in 0..i {
+                m = m.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        m
+    }
+}
+
+/// Sample mean and covariance of rows in `data` (`[m][d]`).
+pub fn mean_cov(data: &[Vec<f64>]) -> (Vec<f64>, Mat) {
+    let m = data.len();
+    assert!(m > 1, "need >= 2 samples");
+    let d = data[0].len();
+    let mut mean = vec![0.0; d];
+    for row in data {
+        for (mi, &x) in mean.iter_mut().zip(row.iter()) {
+            *mi += x;
+        }
+    }
+    for mi in &mut mean {
+        *mi /= m as f64;
+    }
+    let mut cov = Mat::zeros(d);
+    for row in data {
+        for i in 0..d {
+            let ci = row[i] - mean[i];
+            for j in i..d {
+                let cj = row[j] - mean[j];
+                cov.a[i * d + j] += ci * cj;
+            }
+        }
+    }
+    let denom = (m - 1) as f64;
+    for i in 0..d {
+        for j in i..d {
+            let v = cov.get(i, j) / denom;
+            cov.set(i, j, v);
+            cov.set(j, i, v);
+        }
+    }
+    (mean, cov)
+}
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+///
+/// Returns (eigenvalues, eigenvectors as rows of V st A = V^T diag(w) V).
+pub fn sym_eig(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    let n = a.n;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off < 1e-20 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vpk = v.get(p, k);
+                    let vqk = v.get(q, k);
+                    v.set(p, k, c * vpk - s * vqk);
+                    v.set(q, k, s * vpk + c * vqk);
+                }
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    (w, v)
+}
+
+/// Symmetric positive-semidefinite square root via eigendecomposition.
+pub fn sqrtm_psd(a: &Mat) -> Mat {
+    let (w, v) = sym_eig(a, 50);
+    let n = a.n;
+    // sqrt(A) = V^T diag(sqrt(max(w,0))) V.
+    let mut out = Mat::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for (k, &wk) in w.iter().enumerate() {
+                s += v.get(k, i) * wk.max(0.0).sqrt() * v.get(k, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_cov_known() {
+        let data = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let (mean, cov) = mean_cov(&data);
+        assert_eq!(mean, vec![3.0, 4.0]);
+        assert!((cov.get(0, 0) - 4.0).abs() < 1e-12);
+        assert!((cov.get(0, 1) - 4.0).abs() < 1e-12);
+        assert!((cov.get(1, 1) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let mut a = Mat::zeros(3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 1.0);
+        a.set(2, 2, 2.0);
+        let (mut w, _) = sym_eig(&a, 30);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-9);
+        assert!((w[1] - 2.0).abs() < 1e-9);
+        assert!((w[2] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let mut a = Mat::zeros(2);
+        a.set(0, 0, 2.0);
+        a.set(0, 1, 1.0);
+        a.set(1, 0, 1.0);
+        a.set(1, 1, 2.0);
+        let (mut w, _) = sym_eig(&a, 30);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-9, "{w:?}");
+        assert!((w[1] - 3.0).abs() < 1e-9, "{w:?}");
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // Random-ish SPD matrix: A = B B^T + I.
+        let n = 5;
+        let mut b = Mat::zeros(n);
+        let mut seed = 1u64;
+        for i in 0..n * n {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            b.a[i] = ((seed >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+        }
+        let a = b.matmul(&b.transpose()).add(&Mat::eye(n));
+        let s = sqrtm_psd(&a);
+        let s2 = s.matmul(&s);
+        for i in 0..n * n {
+            assert!((s2.a[i] - a.a[i]).abs() < 1e-6, "i={i}: {} vs {}", s2.a[i], a.a[i]);
+        }
+        assert!(s.asymmetry() < 1e-8);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let i3 = Mat::eye(3);
+        let mut a = Mat::zeros(3);
+        for (k, v) in a.a.iter_mut().enumerate() {
+            *v = k as f64;
+        }
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn trace_and_transpose() {
+        let mut a = Mat::zeros(2);
+        a.set(0, 0, 1.0);
+        a.set(0, 1, 5.0);
+        a.set(1, 1, 2.0);
+        assert_eq!(a.trace(), 3.0);
+        assert_eq!(a.transpose().get(1, 0), 5.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Shared harness plumbing: engine setup, system execution, oracle text
+//! refinement (the Rust-side mirror of the build-time refiner), and row
+//! formatting.
+
+use crate::coordinator::request::{DraftSpec, GenRequest};
+use crate::coordinator::Scheduler;
+use crate::core::rng::Pcg64;
+use crate::core::schedule::WarpMode;
+use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
+use crate::eval::ngram::NgramLM;
+use crate::metrics::ServingMetrics;
+use crate::runtime::{EngineHandle, Executor, Manifest};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Loaded environment for a harness run.
+pub struct Env {
+    pub manifest: Manifest,
+    pub engine: EngineHandle,
+    pub metrics: ServingMetrics,
+}
+
+impl Env {
+    pub fn load(artifacts: &str) -> Result<Env> {
+        let manifest = Manifest::load(Path::new(artifacts))?;
+        let engine = EngineHandle::spawn(manifest.clone())?;
+        Ok(Env { manifest, engine, metrics: ServingMetrics::default() })
+    }
+
+    pub fn scheduler(&self) -> Scheduler<'_> {
+        Scheduler::new(&self.engine, &self.manifest, &self.metrics)
+    }
+
+    /// Run one "system" (a tag + draft + t0 triple) for `n` samples.
+    /// Returns (samples, nfe, refine wall-clock).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_system(
+        &self,
+        domain: &str,
+        tag: &str,
+        draft: DraftSpec,
+        t0: f64,
+        steps_cold: usize,
+        warp: WarpMode,
+        n: usize,
+        seed: u64,
+    ) -> Result<(Vec<Vec<i32>>, usize, Duration)> {
+        let req = GenRequest {
+            id: 0,
+            domain: domain.to_string(),
+            tag: tag.to_string(),
+            draft,
+            n_samples: n,
+            t0,
+            steps_cold,
+            warp_mode: warp,
+            seed,
+            submitted: Instant::now(),
+        };
+        let mut rng = Pcg64::new(seed);
+        let resp = self.scheduler().run_single(req, &mut rng)?;
+        Ok((resp.samples, resp.nfe, resp.refine_time))
+    }
+
+    /// Generate `n` draft-only samples (the "LSTM"/"DC-GAN" table rows),
+    /// returning the samples and total wall-clock.
+    pub fn run_draft_only(
+        &self,
+        domain: &str,
+        draft: DraftSpec,
+        n: usize,
+        seed: u64,
+    ) -> Result<(Vec<Vec<i32>>, Duration)> {
+        let first = self
+            .manifest
+            .for_domain(domain)
+            .first()
+            .cloned()
+            .cloned()
+            .with_context(|| format!("no artifacts for {domain}"))?;
+        let (seq_len, vocab) = (first.seq_len, first.vocab);
+        let mut rng = Pcg64::new(seed);
+        let start = Instant::now();
+        let mut rows = Vec::with_capacity(n);
+        match draft {
+            DraftSpec::Noise => {
+                let d = NoiseDraft { vocab };
+                let tb = d.generate(n, seq_len, &mut rng)?;
+                for i in 0..n {
+                    rows.push(tb.row(i).to_vec());
+                }
+            }
+            DraftSpec::Mixture(kind) => {
+                let d = MixtureDraft { draft_kind: kind };
+                let tb = d.generate(n, seq_len, &mut rng)?;
+                for i in 0..n {
+                    rows.push(tb.row(i).to_vec());
+                }
+            }
+            DraftSpec::Lstm | DraftSpec::Pca => {
+                let kind = if draft == DraftSpec::Lstm { "lstm" } else { "pca" };
+                // Use the largest compiled draft batch.
+                let mut batches: Vec<usize> = self
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.domain == domain && a.kind == "draft" && a.draft.as_deref() == Some(kind))
+                    .map(|a| a.batch)
+                    .collect();
+                batches.sort_unstable();
+                let b = *batches.last().with_context(|| format!("no {kind} drafts for {domain}"))?;
+                let meta = self.manifest.find_draft(domain, kind, b)?;
+                let noise =
+                    if kind == "lstm" { DraftNoise::Gumbel } else { DraftNoise::Gaussian };
+                let d = HloDraft::new(&self.engine as &dyn Executor, meta.name.clone(), noise);
+                while rows.len() < n {
+                    let tb = d.generate(b, seq_len, &mut rng)?;
+                    for i in 0..b.min(n - rows.len()) {
+                        rows.push(tb.row(i).to_vec());
+                    }
+                }
+            }
+        }
+        Ok((rows, start.elapsed()))
+    }
+}
+
+/// WS tag naming convention shared with the AOT pipeline.
+pub fn ws_tag(t0: f64) -> String {
+    format!("ws_t{:03}", (t0 * 100.0).round() as u32)
+}
+
+pub fn ws_tag_draft(kind: &str, t0: f64) -> String {
+    format!("ws_{kind}_t{:03}", (t0 * 100.0).round() as u32)
+}
+
+/// Oracle text refiner (Rust mirror of `python/compile/refine.py`): resample
+/// the lowest-likelihood positions under `lm`, bounded edit budget. Used for
+/// the "Refined by <oracle>" table rows.
+pub fn oracle_refine(seq: &[i32], lm: &NgramLM, rng: &mut Pcg64, max_edit_frac: f64) -> Vec<i32> {
+    let mut out: Vec<i32> = seq.to_vec();
+    let order = lm.order;
+    let budget = ((seq.len() as f64) * max_edit_frac).max(1.0) as usize;
+    // Score positions.
+    let mut scored: Vec<(usize, f64)> = (order - 1..out.len())
+        .map(|i| {
+            let lo = i.saturating_sub(order - 1);
+            (i, lm.prob(&out[lo..i], out[i]).max(1e-12).ln())
+        })
+        .collect();
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for &(pos, old_lp) in scored.iter().take(budget) {
+        let lo = pos.saturating_sub(order - 1);
+        let ctx: Vec<i32> = out[lo..pos].to_vec();
+        // Low-temperature Gumbel-max over the LM conditional.
+        let mut best_tok = out[pos];
+        let mut best_score = f64::NEG_INFINITY;
+        for tok in 0..lm.vocab as i32 {
+            let lp = lm.prob(&ctx, tok).max(1e-12).ln();
+            let score = lp / 0.7 + rng.gumbel();
+            if score > best_score {
+                best_score = score;
+                best_tok = tok;
+            }
+        }
+        let new_lp = lm.prob(&ctx, best_tok).max(1e-12).ln();
+        if new_lp > old_lp {
+            out[pos] = best_tok;
+        }
+    }
+    out
+}
+
+/// Table formatting: fixed-width row with a paper-reference column.
+pub fn print_table_header(title: &str, cols: &[&str]) {
+    println!("\n=== {title} ===");
+    let head: Vec<String> = cols.iter().map(|c| format!("{c:>14}")).collect();
+    println!("{:<34}{}", "system", head.join(""));
+    println!("{}", "-".repeat(34 + 14 * cols.len()));
+}
+
+pub fn print_row(label: &str, cells: &[String]) {
+    let body: Vec<String> = cells.iter().map(|c| format!("{c:>14}")).collect();
+    println!("{label:<34}{}", body.join(""));
+}
+
+pub fn fmt_secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ws_tags_match_aot_convention() {
+        assert_eq!(ws_tag(0.8), "ws_t080");
+        assert_eq!(ws_tag(0.5), "ws_t050");
+        assert_eq!(ws_tag(0.65), "ws_t065");
+        assert_eq!(ws_tag(0.95), "ws_t095");
+        assert_eq!(ws_tag(0.35), "ws_t035");
+        assert_eq!(ws_tag_draft("good", 0.95), "ws_good_t095");
+        assert_eq!(ws_tag_draft("poor", 0.35), "ws_poor_t035");
+    }
+
+    #[test]
+    fn oracle_refine_improves_likelihood_and_bounds_edits() {
+        // Train an LM on structured text, refine noise toward it.
+        let stream: Vec<i32> = (0..4000).map(|i| (i % 4) as i32).collect();
+        let lm = NgramLM::fit(&stream, 3, 8);
+        let mut rng = Pcg64::new(0);
+        let noisy: Vec<i32> = (0..64).map(|_| rng.below(8) as i32).collect();
+        let refined = oracle_refine(&noisy, &lm, &mut rng, 0.35);
+        assert_eq!(refined.len(), noisy.len());
+        let edits = noisy.iter().zip(&refined).filter(|(a, b)| a != b).count();
+        assert!(edits <= (64.0 * 0.35) as usize + 1, "edits {edits}");
+        assert!(lm.nll(&refined) <= lm.nll(&noisy) + 1e-9, "refinement should not hurt NLL");
+    }
+}

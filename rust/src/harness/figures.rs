@@ -1,0 +1,92 @@
+//! `wsfm figures` — dump every paper figure's data in one pass:
+//! Fig 4/5 (two moons), Fig 10/14 (texts), Fig 6-9 (images), Fig 11 (k-NN
+//! refinement examples from the build-time pairing).
+
+use crate::data::shapes;
+use crate::data::tokenizer::{CharTokenizer, WordTokenizer};
+use crate::harness::common::Env;
+use crate::harness::{table1, table2, table4};
+use crate::util::cli::Cli;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Fig 11: render the k-NN refinement examples recorded by the AOT
+/// pipeline (`fig11_knn_<domain>.json` + the train-set images).
+pub fn dump_fig11(env: &Env, out_dir: &Path, domain: &str, side: usize, channels: usize) -> Result<()> {
+    let json_path = env.manifest.dir.join(format!("fig11_knn_{domain}.json"));
+    let idx_json = Json::parse(&std::fs::read_to_string(&json_path).with_context(|| format!("{json_path:?}"))?)?;
+    let train = crate::data::corpus::load_u8_matrix(
+        &env.manifest.dir.join(format!("{domain}_train.bin")),
+        side * side * channels,
+    )?;
+    std::fs::create_dir_all(out_dir)?;
+    let gray = channels == 1;
+    for (row, neighbors) in idx_json.as_arr().unwrap_or(&[]).iter().enumerate().take(4) {
+        for (col, idx) in neighbors.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let i = idx.as_usize().context("bad index")?;
+            let img = &train[i.min(train.len() - 1)];
+            let ext = if gray { "pgm" } else { "ppm" };
+            let path = out_dir.join(format!("fig11_{domain}_draft{row}_nn{col}.{ext}"));
+            if gray {
+                shapes::write_pgm(&path, img, side)?;
+            } else {
+                shapes::write_ppm(&path, img, side)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// CLI entry (`wsfm figures`).
+pub fn main(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm figures", "dump all paper-figure data")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("out", "out", "output directory")
+        .opt("steps", "64", "cold-run step count for generation figures")
+        .opt("text-steps", "256", "cold-run step count for text figures");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let env = Env::load(args.get("artifacts"))?;
+    let out = Path::new(args.get("out"));
+    let steps = args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?;
+    let text_steps = args.get_usize("text-steps").map_err(|m| anyhow::anyhow!(m))?;
+
+    println!("[figures] two moons (Fig 4/5)...");
+    table1::dump_figures(&env, out, 1)?;
+
+    println!("[figures] text samples (Fig 10/14)...");
+    table2::dump_samples(&env, out, text_steps, 7)?;
+    let vocab_text = std::fs::read_to_string(env.manifest.dir.join("wiki_vocab.json"))?;
+    let wtok = WordTokenizer::from_json(&vocab_text)?;
+    table2::dump_samples_generic(&env, out, "wiki", "fig14", text_steps, 7, &|s| wtok.decode(s))?;
+    // Keep the char tokenizer referenced for doc parity.
+    let _ = CharTokenizer;
+
+    println!("[figures] images (Fig 6-9)...");
+    let gray_cfg = table4::ImageCfg {
+        domain: "img_gray",
+        side: shapes::GRAY_SIDE,
+        channels: 1,
+        steps_cold: steps,
+        n_eval: 4,
+        seed: 0,
+    };
+    table4::dump_figures(&env, out, &gray_cfg)?;
+    let color_cfg = table4::ImageCfg {
+        domain: "img_color",
+        side: shapes::COLOR_SIDE,
+        channels: 3,
+        steps_cold: steps,
+        n_eval: 4,
+        seed: 0,
+    };
+    table4::dump_figures(&env, out, &color_cfg)?;
+
+    println!("[figures] k-NN refinement examples (Fig 11)...");
+    dump_fig11(&env, out, "img_gray", shapes::GRAY_SIDE, 1)?;
+    dump_fig11(&env, out, "img_color", shapes::COLOR_SIDE, 3)?;
+
+    println!("all figure data in {out:?}");
+    env.engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §4).
+//!
+//! Each harness regenerates the corresponding table rows side-by-side with
+//! the paper's reported values. Entry points are shared by the `wsfm`
+//! subcommands (`bench-table1`...) and the cargo bench binaries
+//! (`rust/benches/*.rs`).
+
+pub mod common;
+pub mod figures;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;

@@ -1,0 +1,217 @@
+//! Paper Table 1 + Figs 4/5: two-moons SKL vs NFE.
+//!
+//! Rows: original (cold) DFM at 20 steps, then WS-DFM for the three
+//! contrived draft models at the paper's t0 grid. For each WS row we print
+//! the measured SKL, the guaranteed NFE, and whether quality is no worse
+//! than cold DFM's (the paper's ✓/✗ marks). Paper reference values are
+//! shown in the last column.
+
+use crate::coordinator::request::DraftSpec;
+use crate::core::rng::Pcg64;
+use crate::core::schedule::{guaranteed_nfe, WarpMode};
+use crate::data::two_moons::{self, DraftKind};
+use crate::eval::skl::skl_points;
+use crate::harness::common::{self, Env};
+use crate::sampler::dfm::{sample_warm, SamplerParams};
+use crate::util::cli::Cli;
+use anyhow::Result;
+use std::io::Write;
+
+/// Paper Table 1 reference rows: (draft, t0, paper SKL, paper NFE).
+pub const PAPER_ROWS: &[(&str, f64, f64, usize)] = &[
+    ("good", 0.95, 0.74, 1),
+    ("good", 0.9, 0.54, 2),
+    ("good", 0.8, 0.37, 4),
+    ("fair", 0.8, 0.86, 4),
+    ("fair", 0.5, 0.51, 10),
+    ("poor", 0.8, 1.35, 4),
+    ("poor", 0.5, 0.64, 10),
+    ("poor", 0.35, 0.54, 13),
+];
+pub const PAPER_COLD_SKL: f64 = 0.62;
+pub const STEPS_COLD: usize = 20;
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub skl: f64,
+    pub nfe: usize,
+    pub secs_per_sample: f64,
+    pub ok: Option<bool>,
+}
+
+/// Run the full table; returns rows (cold first).
+pub fn run(env: &Env, n_eval: usize, seed: u64) -> Result<Vec<Row>> {
+    run_with_warp(env, n_eval, seed, WarpMode::Literal)
+}
+
+/// Run with an explicit update-rule variant (the DESIGN.md ablation).
+pub fn run_with_warp(env: &Env, n_eval: usize, seed: u64, warp: WarpMode) -> Result<Vec<Row>> {
+    let mut rng = Pcg64::new(seed ^ 0x7a0);
+    let target = two_moons::sample_batch(n_eval, &mut rng);
+    let mut rows = Vec::new();
+
+    // Cold DFM baseline.
+    let (samples, nfe, elapsed) = env.run_system(
+        "two_moons",
+        "cold",
+        DraftSpec::Noise,
+        0.0,
+        STEPS_COLD,
+        WarpMode::Exact,
+        n_eval,
+        seed,
+    )?;
+    let pts: Vec<[i32; 2]> = samples.iter().map(|s| [s[0], s[1]]).collect();
+    let cold_skl = skl_points(&target, &pts);
+    rows.push(Row {
+        label: "Original DFM (t0=0)".into(),
+        skl: cold_skl,
+        nfe,
+        secs_per_sample: elapsed.as_secs_f64() / n_eval as f64,
+        ok: None,
+    });
+
+    for &(kind, t0, _, _) in PAPER_ROWS {
+        let tag = common::ws_tag_draft(kind, t0);
+        let draft = DraftSpec::Mixture(DraftKind::parse(kind).unwrap());
+        let (samples, nfe, elapsed) = env.run_system(
+            "two_moons",
+            &tag,
+            draft,
+            t0,
+            STEPS_COLD,
+            warp,
+            n_eval,
+            seed + 1,
+        )?;
+        let pts: Vec<[i32; 2]> = samples.iter().map(|s| [s[0], s[1]]).collect();
+        let skl = skl_points(&target, &pts);
+        assert_eq!(nfe, guaranteed_nfe(STEPS_COLD, t0), "NFE guarantee violated");
+        rows.push(Row {
+            label: format!("WS-DFM {kind} t0={t0}"),
+            skl,
+            nfe,
+            secs_per_sample: elapsed.as_secs_f64() / n_eval as f64,
+            // The paper's criterion: no worse than cold DFM (small slack for
+            // sampling noise in the SKL estimate).
+            ok: Some(skl <= cold_skl * 1.05),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Row]) {
+    common::print_table_header(
+        "Table 1 (two moons): SKL / NFE",
+        &["SKL", "NFE", "s/sample", "paper SKL", "paper NFE"],
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let (p_skl, p_nfe) = if i == 0 {
+            (PAPER_COLD_SKL, STEPS_COLD)
+        } else {
+            let (_, _, ps, pn) = PAPER_ROWS[i - 1];
+            (ps, pn)
+        };
+        let mark = match r.ok {
+            None => String::new(),
+            Some(true) => " ok".into(),
+            Some(false) => " X".into(),
+        };
+        common::print_row(
+            &format!("{}{}", r.label, mark),
+            &[
+                format!("{:.3}", r.skl),
+                format!("{}", r.nfe),
+                format!("{:.4}", r.secs_per_sample),
+                format!("{p_skl:.2}"),
+                format!("{p_nfe}"),
+            ],
+        );
+    }
+}
+
+/// Fig 4 + Fig 5 data dumps (CSV histograms and generation traces).
+pub fn dump_figures(env: &Env, out_dir: &std::path::Path, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let n = 4096;
+    let mut rng = Pcg64::new(seed);
+
+    // Fig 4: target / noise / draft distributions as point CSVs.
+    let dump_pts = |name: &str, pts: &[[i32; 2]]| -> Result<()> {
+        let mut f = std::fs::File::create(out_dir.join(name))?;
+        writeln!(f, "x,y")?;
+        for p in pts {
+            writeln!(f, "{},{}", p[0], p[1])?;
+        }
+        Ok(())
+    };
+    dump_pts("fig4_a_target.csv", &two_moons::sample_batch(n, &mut rng))?;
+    let noise: Vec<[i32; 2]> =
+        (0..n).map(|_| [rng.below(128) as i32, rng.below(128) as i32]).collect();
+    dump_pts("fig4_b_noise.csv", &noise)?;
+    for (panel, kind) in [("c", DraftKind::Good), ("d", DraftKind::Fair), ("e", DraftKind::Poor)] {
+        dump_pts(
+            &format!("fig4_{panel}_draft_{}.csv", kind.name()),
+            &two_moons::draft_batch(kind, n, &mut rng),
+        )?;
+    }
+
+    // Fig 5: generation traces (cold + best WS per draft model).
+    let trace_cfgs: [(&str, &str, f64, DraftSpec); 4] = [
+        ("fig5_a_cold.csv", "cold", 0.0, DraftSpec::Noise),
+        ("fig5_b_good_t080.csv", "ws_good_t080", 0.8, DraftSpec::Mixture(DraftKind::Good)),
+        ("fig5_c_fair_t050.csv", "ws_fair_t050", 0.5, DraftSpec::Mixture(DraftKind::Fair)),
+        ("fig5_d_poor_t035.csv", "ws_poor_t035", 0.35, DraftSpec::Mixture(DraftKind::Poor)),
+    ];
+    for (file, tag, t0, draft) in trace_cfgs {
+        let meta = env.manifest.find_step("two_moons", tag, 1024)?;
+        let init = match draft {
+            DraftSpec::Noise => {
+                let d = crate::draft::NoiseDraft { vocab: meta.vocab };
+                crate::draft::Draft::generate(&d, 1024, 2, &mut rng)?
+            }
+            DraftSpec::Mixture(kind) => {
+                let d = crate::draft::MixtureDraft { draft_kind: kind };
+                crate::draft::Draft::generate(&d, 1024, 2, &mut rng)?
+            }
+            _ => unreachable!(),
+        };
+        let params = SamplerParams {
+            artifact: meta.name.clone(),
+            steps_cold: STEPS_COLD,
+            t0,
+            warp_mode: WarpMode::Literal,
+        };
+        let out = sample_warm(&env.engine, &params, init, &mut rng, true)?;
+        out.trace.unwrap().write_points_csv(&out_dir.join(file))?;
+    }
+    println!("figure data written to {out_dir:?}");
+    Ok(())
+}
+
+/// CLI entry (`wsfm bench-table1`).
+pub fn main(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm bench-table1", "two-moons SKL/NFE (paper Table 1)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("n", "4096", "eval samples per system")
+        .opt("seed", "0", "rng seed")
+        .opt("warp", "literal", "update rule (literal|exact)")
+        .opt("out", "out", "figure output directory")
+        .flag("dump-figures", "also dump Fig 4/5 CSVs");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let env = Env::load(args.get("artifacts"))?;
+    let rows = run_with_warp(
+        &env,
+        args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?,
+        args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
+        WarpMode::parse(args.get("warp"))?,
+    )?;
+    print(&rows);
+    if args.flag("dump-figures") {
+        dump_figures(&env, std::path::Path::new(args.get("out")), 1)?;
+    }
+    env.engine.shutdown();
+    Ok(())
+}

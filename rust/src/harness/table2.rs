@@ -1,0 +1,208 @@
+//! Paper Table 2 + Fig 10: synth-text8 NLL / entropy / generation time.
+//!
+//! Systems: LSTM draft only, cold DFM, WS-DFM (t0=0.8, t0=0.5), and the
+//! oracle refiner (the Gemma3-27B substitute — DESIGN.md §2). The evaluator
+//! is a Kneser-Ney char 5-gram trained on the *held-out* corpus (the
+//! GPT-J-6B substitute).
+
+use crate::coordinator::request::DraftSpec;
+use crate::core::rng::Pcg64;
+use crate::core::schedule::WarpMode;
+use crate::data::tokenizer::{CharTokenizer, TEXT8_VOCAB};
+use crate::eval::ngram::NgramLM;
+use crate::harness::common::{self, Env};
+use crate::util::cli::Cli;
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+/// Paper Table 2 reference: (system, NLL, entropy, seconds/sentence).
+pub const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("LSTM", 6.87, 7.19, 0.0),
+    ("Original DFM", 6.58, 7.14, 6.56),
+    ("WS-DFM t0=0.8", 6.54, 7.11, 1.36),
+    ("WS-DFM t0=0.5", 6.48, 7.05, 3.36),
+    ("Refined (oracle)", 6.54, 7.18, 0.0),
+];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub nll: f64,
+    pub entropy_bits: f64,
+    pub nfe: usize,
+    pub secs_per_sentence: f64,
+}
+
+pub struct TextBenchCfg {
+    pub domain: &'static str,
+    pub eval_file: &'static str,
+    pub eval_order: usize,
+    pub refine_order: usize,
+    pub vocab: usize,
+    pub steps_cold: usize,
+    pub n_eval: usize,
+    pub seed: u64,
+}
+
+/// Shared text-domain harness (tables 2 and 3 differ only in config).
+pub fn run_text(env: &Env, cfg: &TextBenchCfg, eval_stream: &[i32], train_stream: &[i32]) -> Result<Vec<Row>> {
+    let lm = NgramLM::fit(eval_stream, cfg.eval_order, cfg.vocab);
+    let mut rows = Vec::new();
+    let mut eval_rows = |label: &str, samples: &[Vec<i32>], nfe: usize, total: Duration| {
+        let m = lm.evaluate(samples);
+        rows.push(Row {
+            label: label.to_string(),
+            nll: m.nll,
+            entropy_bits: m.entropy_bits,
+            nfe,
+            secs_per_sentence: total.as_secs_f64() / samples.len().max(1) as f64,
+        });
+    };
+
+    // LSTM draft only.
+    let (drafts, draft_time) = env.run_draft_only(cfg.domain, DraftSpec::Lstm, cfg.n_eval, cfg.seed)?;
+    eval_rows("LSTM (draft only)", &drafts, 0, draft_time);
+
+    // Cold DFM.
+    let (cold, nfe, t) = env.run_system(
+        cfg.domain,
+        "cold",
+        DraftSpec::Noise,
+        0.0,
+        cfg.steps_cold,
+        WarpMode::Exact,
+        cfg.n_eval,
+        cfg.seed + 1,
+    )?;
+    eval_rows("Original DFM", &cold, nfe, t);
+
+    // WS-DFM at the paper's two warm starts.
+    for t0 in [0.8, 0.5] {
+        let tag = common::ws_tag(t0);
+        let (samples, nfe, t) = env.run_system(
+            cfg.domain,
+            &tag,
+            DraftSpec::Lstm,
+            t0,
+            cfg.steps_cold,
+            WarpMode::Literal,
+            cfg.n_eval,
+            cfg.seed + 2,
+        )?;
+        eval_rows(&format!("WS-DFM t0={t0}"), &samples, nfe, t);
+    }
+
+    // Oracle-refined drafts (the LLM-refinement substitute).
+    let refine_lm = NgramLM::fit(train_stream, cfg.refine_order, cfg.vocab);
+    let mut rng = Pcg64::new(cfg.seed + 3);
+    let refined: Vec<Vec<i32>> =
+        drafts.iter().map(|d| common::oracle_refine(d, &refine_lm, &mut rng, 0.35)).collect();
+    eval_rows("Refined (oracle)", &refined, 0, Duration::ZERO);
+
+    Ok(rows)
+}
+
+pub fn print(title: &str, rows: &[Row], paper: &[(&str, f64, f64, f64)], ppl: bool) {
+    let metric = if ppl { "ppl" } else { "NLL" };
+    common::print_table_header(
+        title,
+        &[metric, "entropy", "NFE", "s/sentence", &format!("paper {metric}"), "paper s"],
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let (p_m, p_t) = paper.get(i).map(|p| (p.1, p.3)).unwrap_or((f64::NAN, f64::NAN));
+        let m = if ppl { r.nll.exp() } else { r.nll };
+        common::print_row(
+            &r.label,
+            &[
+                format!("{m:.3}"),
+                format!("{:.3}", r.entropy_bits),
+                format!("{}", r.nfe),
+                format!("{:.3}", r.secs_per_sentence),
+                format!("{p_m:.2}"),
+                format!("{p_t:.2}"),
+            ],
+        );
+    }
+}
+
+/// Dump Fig 10/14-style sample texts for any text domain.
+pub fn dump_samples_generic(
+    env: &Env,
+    out_dir: &std::path::Path,
+    domain: &str,
+    prefix: &str,
+    steps_cold: usize,
+    seed: u64,
+    decode: &dyn Fn(&[i32]) -> String,
+) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let systems: [(&str, &str, f64, WarpMode); 4] = [
+        ("dfm", "cold", 0.0, WarpMode::Exact),
+        ("ws_t080", "ws_t080", 0.8, WarpMode::Literal),
+        ("ws_t050", "ws_t050", 0.5, WarpMode::Literal),
+        ("lstm", "", 0.0, WarpMode::Exact),
+    ];
+    for (name, tag, t0, warp) in systems {
+        let samples = if tag.is_empty() {
+            env.run_draft_only(domain, DraftSpec::Lstm, 3, seed)?.0
+        } else {
+            let draft = if tag == "cold" { DraftSpec::Noise } else { DraftSpec::Lstm };
+            env.run_system(domain, tag, draft, t0, steps_cold, warp, 3, seed)?.0
+        };
+        let text: Vec<String> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("(Sample {})\n{}", i + 1, decode(s)))
+            .collect();
+        std::fs::write(out_dir.join(format!("{prefix}_{name}.txt")), text.join("\n\n"))?;
+    }
+    println!("sample texts written to {out_dir:?}");
+    Ok(())
+}
+
+/// Dump Fig 10 sample texts (text8).
+pub fn dump_samples(env: &Env, out_dir: &std::path::Path, steps_cold: usize, seed: u64) -> Result<()> {
+    let tok = CharTokenizer;
+    dump_samples_generic(env, out_dir, "text8", "fig10", steps_cold, seed, &|s| tok.decode(s))
+}
+
+/// CLI entry (`wsfm bench-table2`).
+pub fn main(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm bench-table2", "text8 NLL/entropy/time (paper Table 2)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("n", "48", "sentences per system")
+        .opt("steps", "256", "cold-run step count (paper: 1024)")
+        .opt("seed", "0", "rng seed")
+        .opt("out", "out", "sample output directory")
+        .flag("dump-samples", "also dump Fig 10 sample texts");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let env = Env::load(args.get("artifacts"))?;
+
+    let eval_path = env.manifest.dir.join("text8_eval.txt");
+    let eval_stream = crate::data::corpus::load_text8(&eval_path)
+        .with_context(|| format!("loading {eval_path:?}"))?;
+    let train_stream = crate::data::corpus::load_text8(&env.manifest.dir.join("text8_corpus.txt"))?;
+
+    let steps = args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?;
+    let cfg = TextBenchCfg {
+        domain: "text8",
+        eval_file: "text8_eval.txt",
+        eval_order: 5,
+        refine_order: 4,
+        vocab: TEXT8_VOCAB,
+        steps_cold: steps,
+        n_eval: args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?,
+        seed: args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
+    };
+    let rows = run_text(&env, &cfg, &eval_stream, &train_stream[..train_stream.len().min(200_000)])?;
+    print("Table 2 (synth-text8)", &rows, PAPER, false);
+    println!(
+        "\nnote: steps_cold={} here (paper: 1024); NFE ratios and the paper's\nordering are the comparison target, not absolute values (DESIGN.md §2).",
+        steps
+    );
+    if args.flag("dump-samples") {
+        dump_samples(&env, std::path::Path::new(args.get("out")), steps, 7)?;
+    }
+    env.engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Paper Table 3 + Fig 14: synth-wiki perplexity / entropy / time.
+//!
+//! Same harness as Table 2 (shared `run_text`), word-level domain: KN word
+//! 3-gram evaluator on the held-out wiki corpus, perplexity instead of NLL.
+
+use crate::data::corpus::load_i32_stream;
+use crate::data::tokenizer::WordTokenizer;
+use crate::harness::common::Env;
+use crate::harness::table2::{dump_samples_generic, run_text, TextBenchCfg};
+use crate::util::cli::Cli;
+use anyhow::{Context, Result};
+
+/// Paper Table 3 reference: (system, perplexity, entropy, seconds).
+pub const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("LSTM", 171.23, 7.56, 0.0),
+    ("Original DFM", 69.06, 7.42, 8.33),
+    ("WS-DFM t0=0.8", 67.86, 7.19, 1.70),
+    ("WS-DFM t0=0.5", 64.68, 7.16, 4.20),
+    ("Refined (oracle)", 32.88, 7.14, 0.0),
+];
+
+/// CLI entry (`wsfm bench-table3`).
+pub fn main(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm bench-table3", "wiki perplexity (paper Table 3)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("n", "48", "sentences per system")
+        .opt("steps", "256", "cold-run step count (paper: 1024)")
+        .opt("seed", "0", "rng seed")
+        .opt("out", "out", "sample output directory")
+        .flag("dump-samples", "also dump Fig 14 sample texts");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let env = Env::load(args.get("artifacts"))?;
+
+    let eval_stream = load_i32_stream(&env.manifest.dir.join("wiki_eval.bin"))
+        .context("loading wiki_eval.bin")?;
+    let train_stream = load_i32_stream(&env.manifest.dir.join("wiki_corpus.bin"))?;
+
+    let steps = args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?;
+    let cfg = TextBenchCfg {
+        domain: "wiki",
+        eval_file: "wiki_eval.bin",
+        eval_order: 3,
+        refine_order: 3,
+        vocab: 256,
+        steps_cold: steps,
+        n_eval: args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?,
+        seed: args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
+    };
+    let rows = run_text(&env, &cfg, &eval_stream, &train_stream[..train_stream.len().min(150_000)])?;
+    crate::harness::table2::print("Table 3 (synth-wiki)", &rows, PAPER, true);
+    println!(
+        "\nnote: steps_cold={} here (paper: 1024); orderings are the target\n(DESIGN.md §2).",
+        steps
+    );
+
+    if args.flag("dump-samples") {
+        let vocab_text = std::fs::read_to_string(env.manifest.dir.join("wiki_vocab.json"))?;
+        let tok = WordTokenizer::from_json(&vocab_text)?;
+        let out_dir = std::path::Path::new(args.get("out"));
+        dump_samples_generic(&env, out_dir, "wiki", "fig14", steps, 7, &|s| tok.decode(s))?;
+    }
+    env.engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Paper Table 4 + Figs 6-9/12-13: image FID / generation time.
+//!
+//! Systems per color mode: PCA draft only (the DC-GAN substitute), cold
+//! DFM, WS-DFM at t0 ∈ {0.8, 0.65, 0.5}. FID is the Fréchet distance over
+//! the fixed random-conv features (DESIGN.md §2), referenced against the
+//! training set the models were fitted on.
+
+use crate::coordinator::request::DraftSpec;
+use crate::core::schedule::WarpMode;
+use crate::data::corpus::{load_u8_matrix};
+use crate::data::shapes;
+use crate::eval::fid::{fid_images, FeatureExtractor};
+use crate::harness::common::{self, Env};
+use crate::util::cli::Cli;
+use anyhow::{Context, Result};
+
+/// Paper Table 4 reference: (system, gray FID, gray s, color FID, color s).
+pub const PAPER: &[(&str, f64, f64, f64, f64)] = &[
+    ("DC-GAN (draft)", 74.64, 0.0, 80.91, 0.0),
+    ("Original DFM", 30.46, 0.62, 36.91, 2.64),
+    ("WS-DFM t0=0.8", 23.59, 0.13, 37.02, 0.55),
+    ("WS-DFM t0=0.65", 22.75, 0.23, 36.47, 0.94),
+    ("WS-DFM t0=0.5", 19.47, 0.32, 34.65, 1.34),
+];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub fid: f64,
+    pub nfe: usize,
+    pub secs_per_image: f64,
+}
+
+pub struct ImageCfg {
+    pub domain: &'static str,
+    pub side: usize,
+    pub channels: usize,
+    pub steps_cold: usize,
+    pub n_eval: usize,
+    pub seed: u64,
+}
+
+pub fn run_images(env: &Env, cfg: &ImageCfg) -> Result<Vec<Row>> {
+    let n_tokens = cfg.side * cfg.side * cfg.channels;
+    let train_path = env.manifest.dir.join(format!("{}_train.bin", cfg.domain));
+    let train = load_u8_matrix(&train_path, n_tokens)
+        .with_context(|| format!("loading {train_path:?}"))?;
+    let reference: Vec<Vec<i32>> = train.into_iter().take(2048).collect();
+    let extractor = FeatureExtractor::new(cfg.side, cfg.channels, 8, 0xF1D);
+
+    let mut rows = Vec::new();
+
+    // PCA draft only.
+    let (drafts, t) = env.run_draft_only(cfg.domain, DraftSpec::Pca, cfg.n_eval, cfg.seed)?;
+    rows.push(Row {
+        label: "PCA draft (DC-GAN sub)".into(),
+        fid: fid_images(&extractor, &reference, &drafts),
+        nfe: 0,
+        secs_per_image: t.as_secs_f64() / cfg.n_eval as f64,
+    });
+
+    // Cold DFM.
+    let (cold, nfe, t) = env.run_system(
+        cfg.domain,
+        "cold",
+        DraftSpec::Noise,
+        0.0,
+        cfg.steps_cold,
+        WarpMode::Exact,
+        cfg.n_eval,
+        cfg.seed + 1,
+    )?;
+    rows.push(Row {
+        label: "Original DFM".into(),
+        fid: fid_images(&extractor, &reference, &cold),
+        nfe,
+        secs_per_image: t.as_secs_f64() / cfg.n_eval as f64,
+    });
+
+    for t0 in [0.8, 0.65, 0.5] {
+        let tag = common::ws_tag(t0);
+        let (samples, nfe, t) = env.run_system(
+            cfg.domain,
+            &tag,
+            DraftSpec::Pca,
+            t0,
+            cfg.steps_cold,
+            WarpMode::Literal,
+            cfg.n_eval,
+            cfg.seed + 2,
+        )?;
+        rows.push(Row {
+            label: format!("WS-DFM t0={t0}"),
+            fid: fid_images(&extractor, &reference, &samples),
+            nfe,
+            secs_per_image: t.as_secs_f64() / cfg.n_eval as f64,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(title: &str, rows: &[Row], paper_col: usize) {
+    common::print_table_header(title, &["FID*", "NFE", "s/image", "paper FID", "paper s"]);
+    for (i, r) in rows.iter().enumerate() {
+        let (p_fid, p_s) = PAPER
+            .get(i)
+            .map(|p| if paper_col == 0 { (p.1, p.2) } else { (p.3, p.4) })
+            .unwrap_or((f64::NAN, f64::NAN));
+        common::print_row(
+            &r.label,
+            &[
+                format!("{:.2}", r.fid),
+                format!("{}", r.nfe),
+                format!("{:.3}", r.secs_per_image),
+                format!("{p_fid:.2}"),
+                format!("{p_s:.2}"),
+            ],
+        );
+    }
+}
+
+/// Dump Fig 6/8 sample grids (PGM/PPM) and Fig 7/9 progress strips.
+pub fn dump_figures(env: &Env, out_dir: &std::path::Path, cfg: &ImageCfg) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let gray = cfg.channels == 1;
+    let fig_grid = if gray { "fig6" } else { "fig8" };
+    let fig_strip = if gray { "fig7" } else { "fig9" };
+    let write = |path: &std::path::Path, tokens: &[i32]| -> Result<()> {
+        if gray {
+            shapes::write_pgm(path, tokens, cfg.side)?;
+        } else {
+            shapes::write_ppm(path, tokens, cfg.side)?;
+        }
+        Ok(())
+    };
+
+    // Fig 6/8: grids for each system (4 images each).
+    let systems: [(&str, &str, DraftSpec, f64); 3] = [
+        ("dfm", "cold", DraftSpec::Noise, 0.0),
+        ("ws_t080", "ws_t080", DraftSpec::Pca, 0.8),
+        ("ws_t050", "ws_t050", DraftSpec::Pca, 0.5),
+    ];
+    for (name, tag, draft, t0) in systems {
+        let warp = if tag == "cold" { WarpMode::Exact } else { WarpMode::Literal };
+        let (samples, _, _) =
+            env.run_system(cfg.domain, tag, draft, t0, cfg.steps_cold, warp, 4, 11)?;
+        for (i, s) in samples.iter().enumerate() {
+            let ext = if gray { "pgm" } else { "ppm" };
+            write(&out_dir.join(format!("{fig_grid}_{name}_{i}.{ext}")), s)?;
+        }
+    }
+    // Draft-only panel.
+    let (drafts, _) = env.run_draft_only(cfg.domain, DraftSpec::Pca, 4, 11)?;
+    for (i, s) in drafts.iter().enumerate() {
+        let ext = if gray { "pgm" } else { "ppm" };
+        write(&out_dir.join(format!("{fig_grid}_draft_{i}.{ext}")), s)?;
+    }
+
+    // Fig 7/9: refinement progress strips (t0=0.5, a few snapshots).
+    let tag = common::ws_tag(0.5);
+    let batches = env.manifest.step_batches(cfg.domain, &tag);
+    let b = *batches.first().context("no ws_t050 artifacts")?;
+    let meta = env.manifest.find_step(cfg.domain, &tag, b)?;
+    let mut rng = crate::core::rng::Pcg64::new(13);
+    let draft_meta = env.manifest.find_draft(cfg.domain, "pca", b)?;
+    let d = crate::draft::HloDraft::new(
+        &env.engine as &dyn crate::runtime::Executor,
+        draft_meta.name.clone(),
+        crate::draft::DraftNoise::Gaussian,
+    );
+    let init = crate::draft::Draft::generate(&d, b, meta.seq_len, &mut rng)?;
+    let params = crate::sampler::SamplerParams {
+        artifact: meta.name.clone(),
+        steps_cold: cfg.steps_cold,
+        t0: 0.5,
+        warp_mode: WarpMode::Literal,
+    };
+    let out = crate::sampler::dfm::sample_warm(&env.engine, &params, init, &mut rng, true)?;
+    let trace = out.trace.unwrap();
+    for row in 0..b.min(4) {
+        for (j, (_, tokens)) in trace.row_snapshots(row, 6).iter().enumerate() {
+            let ext = if gray { "pgm" } else { "ppm" };
+            write(&out_dir.join(format!("{fig_strip}_row{row}_step{j}.{ext}")), tokens)?;
+        }
+    }
+    println!("image figures written to {out_dir:?}");
+    Ok(())
+}
+
+/// CLI entry (`wsfm bench-table4`).
+pub fn main(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm bench-table4", "image FID/time (paper Table 4)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("n", "128", "images per system")
+        .opt("steps", "64", "cold-run step count (paper: 1024)")
+        .opt("seed", "0", "rng seed")
+        .opt("mode", "both", "gray|color|both")
+        .opt("out", "out", "figure output directory")
+        .flag("dump-figures", "also dump Figs 6-9");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let env = Env::load(args.get("artifacts"))?;
+    let n = args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?;
+    let steps = args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?;
+    let seed = args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?;
+    let mode = args.get("mode").to_string();
+
+    if mode == "gray" || mode == "both" {
+        let cfg = ImageCfg {
+            domain: "img_gray",
+            side: shapes::GRAY_SIDE,
+            channels: 1,
+            steps_cold: steps,
+            n_eval: n,
+            seed,
+        };
+        let rows = run_images(&env, &cfg)?;
+        print("Table 4 (synth-shapes, gray)", &rows, 0);
+        if args.flag("dump-figures") {
+            dump_figures(&env, std::path::Path::new(args.get("out")), &cfg)?;
+        }
+    }
+    if mode == "color" || mode == "both" {
+        let cfg = ImageCfg {
+            domain: "img_color",
+            side: shapes::COLOR_SIDE,
+            channels: 3,
+            steps_cold: steps,
+            n_eval: n,
+            seed,
+        };
+        let rows = run_images(&env, &cfg)?;
+        print("Table 4 (synth-shapes, color)", &rows, 1);
+        if args.flag("dump-figures") {
+            dump_figures(&env, std::path::Path::new(args.get("out")), &cfg)?;
+        }
+    }
+    println!("\n* FID here is Fréchet over fixed random-conv features (DESIGN.md §2);\ncompare orderings and the WS-vs-cold gap, not absolute values.");
+    env.engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! # wsfm — Warm-Start Flow Matching serving stack
+//!
+//! A three-layer reproduction of *"Warm-Start Flow Matching for Guaranteed
+//! Fast Text/Image Generation"* (Kim, 2026):
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request router,
+//!   dynamic batcher, draft→refine scheduler, per-request state, metrics,
+//!   TCP server, CLI. Python never runs on the request path.
+//! * **Layer 2** — JAX denoiser/draft models, AOT-lowered to HLO text at
+//!   build time (`python/compile/aot.py`), executed here via PJRT
+//!   ([`runtime`]).
+//! * **Layer 1** — Pallas kernels (fused attention, fused DFM Euler update)
+//!   lowered into the same HLO artifacts.
+//!
+//! The paper's headline feature — warm-start sampling with a guaranteed
+//! `1/(1-t0)` NFE reduction — lives in [`sampler`] and is exercised
+//! end-to-end by the [`coordinator`].
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod draft;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based; the only external deps are `xla`
+/// and `anyhow` — everything else is implemented in-tree, DESIGN.md §2).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,241 @@
+//! `wsfm` — CLI entrypoint for the Warm-Start Flow Matching serving stack.
+//!
+//! Subcommands:
+//! * `serve`       — start the TCP serving front-end.
+//! * `generate`    — one-shot local generation (no server).
+//! * `info`        — artifact/manifest inventory.
+//! * `selfcheck`   — validate artifacts + run a smoke execution.
+//! * `bench-table1..4` — regenerate the paper's tables (see EXPERIMENTS.md).
+//! * `figures`     — dump the paper's figure data (Fig 4/5/6/7/10/14).
+
+use anyhow::{bail, Context, Result};
+use wsfm::config::WsfmConfig;
+use wsfm::coordinator::request::{DraftSpec, GenRequest};
+use wsfm::coordinator::Service;
+use wsfm::core::schedule::WarpMode;
+use wsfm::harness;
+use wsfm::runtime::{EngineHandle, Manifest};
+use wsfm::server::TcpServer;
+use wsfm::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+wsfm — Warm-Start Flow Matching serving stack
+
+USAGE: wsfm <subcommand> [options]
+
+SUBCOMMANDS:
+  serve          start the TCP server (line-delimited JSON protocol)
+  generate       one-shot local generation
+  info           print the artifact inventory
+  selfcheck      validate artifacts and run a smoke execution
+  bench-table1   two-moons SKL/NFE table (paper Table 1, Figs 4/5)
+  bench-table2   text8 NLL/entropy/time table (paper Table 2, Fig 10)
+  bench-table3   wiki perplexity table (paper Table 3, Fig 14)
+  bench-table4   image FID/time table (paper Table 4, Figs 6-9)
+  figures        dump all figure data
+
+Run `wsfm <subcommand> --help` for options.";
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
+        "info" => cmd_info(rest),
+        "selfcheck" => cmd_selfcheck(rest),
+        "bench-table1" => harness::table1::main(rest),
+        "bench-table2" => harness::table2::main(rest),
+        "bench-table3" => harness::table3::main(rest),
+        "bench-table4" => harness::table4::main(rest),
+        "figures" => harness::figures::main(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &wsfm::util::cli::Args) -> Result<WsfmConfig> {
+    let mut cfg = if args.get("config").is_empty() {
+        WsfmConfig::default()
+    } else {
+        WsfmConfig::from_file(std::path::Path::new(args.get("config")))?
+    };
+    if !args.get("artifacts").is_empty() {
+        cfg.artifacts_dir = args.get("artifacts").into();
+    }
+    if !args.get("listen").is_empty() {
+        cfg.listen_addr = args.get("listen").to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm serve", "start the TCP serving front-end")
+        .opt("config", "", "JSON config file")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("listen", "", "listen address (overrides config)")
+        .opt("preload", "", "comma list of domains to precompile (e.g. text8)");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    manifest.selfcheck()?;
+    let engine = EngineHandle::spawn(manifest.clone())?;
+
+    if !args.get("preload").is_empty() {
+        for domain in args.get("preload").split(',') {
+            let names: Vec<String> =
+                manifest.for_domain(domain).iter().map(|a| a.name.clone()).collect();
+            if names.is_empty() {
+                bail!("no artifacts for preload domain {domain:?}");
+            }
+            println!("preloading {} artifacts for {domain}...", names.len());
+            engine.preload(&names)?;
+        }
+    }
+
+    let service = Service::start(engine.clone(), manifest.clone(), cfg.clone());
+    let server = TcpServer::bind(&cfg.listen_addr, service.clone(), manifest)?;
+    println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
+    server.run()?;
+    println!("server stopped; final metrics:\n{}", service.metrics.report());
+    service.shutdown();
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_generate(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm generate", "one-shot local generation")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .req("domain", "domain (two_moons|text8|wiki|img_gray|img_color)")
+        .opt("tag", "cold", "step tag (cold|ws_t080|ws_good_t095|...)")
+        .opt("draft", "noise", "draft model (noise|lstm|pca|good|fair|poor)")
+        .opt("n", "4", "number of samples")
+        .opt("t0", "0.0", "warm-start time")
+        .opt("steps", "128", "cold-run step count")
+        .opt("warp", "literal", "update rule (literal|exact)")
+        .opt("seed", "0", "rng seed")
+        .flag("decode", "decode tokens to text (text domains)");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
+    let engine = EngineHandle::spawn(manifest.clone())?;
+    let metrics = wsfm::metrics::ServingMetrics::default();
+    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics);
+
+    let req = GenRequest {
+        id: 0,
+        domain: args.get("domain").to_string(),
+        tag: args.get("tag").to_string(),
+        draft: DraftSpec::parse(args.get("draft"))?,
+        n_samples: args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?,
+        t0: args.get_f64("t0").map_err(|m| anyhow::anyhow!(m))?,
+        steps_cold: args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?,
+        warp_mode: WarpMode::parse(args.get("warp"))?,
+        seed: args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
+        submitted: std::time::Instant::now(),
+    };
+    let mut rng = wsfm::core::rng::Pcg64::new(req.seed);
+    let resp = scheduler.run_single(req.clone(), &mut rng)?;
+    println!(
+        "generated {} samples  nfe={}  draft={:?} refine={:?} total={:?}",
+        resp.samples.len(),
+        resp.nfe,
+        resp.draft_time,
+        resp.refine_time,
+        resp.total_time
+    );
+    if args.flag("decode") && req.domain == "text8" {
+        let tok = wsfm::data::tokenizer::CharTokenizer;
+        for (i, s) in resp.samples.iter().enumerate() {
+            println!("--- sample {i} ---\n{}", tok.decode(s));
+        }
+    } else if args.flag("decode") && req.domain == "wiki" {
+        let vocab = std::fs::read_to_string(manifest.dir.join("wiki_vocab.json"))?;
+        let tok = wsfm::data::tokenizer::WordTokenizer::from_json(&vocab)?;
+        for (i, s) in resp.samples.iter().enumerate() {
+            println!("--- sample {i} ---\n{}", tok.decode(s));
+        }
+    } else {
+        for (i, s) in resp.samples.iter().enumerate() {
+            let shown: Vec<i32> = s.iter().take(16).copied().collect();
+            println!("sample {i}: {shown:?}{}", if s.len() > 16 { " ..." } else { "" });
+        }
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let cli =
+        Cli::new("wsfm info", "artifact inventory").opt("artifacts", "artifacts", "artifacts directory");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
+    println!("artifacts dir: {:?}", manifest.dir);
+    println!("domains:");
+    for d in manifest.domain_names() {
+        let tags = manifest.step_tags(&d);
+        let arts = manifest.for_domain(&d);
+        let first = arts.first().context("empty domain")?;
+        println!("  {d:<10} N={:<4} V={:<4} tags={:?}", first.seq_len, first.vocab, tags);
+    }
+    println!("total artifacts: {}", manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_selfcheck(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm selfcheck", "validate artifacts, smoke-run one step")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("domain", "two_moons", "domain to smoke-run");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
+    manifest.selfcheck()?;
+    println!("manifest ok: {} artifacts", manifest.artifacts.len());
+
+    let domain = args.get("domain");
+    let batches = manifest.step_batches(domain, "cold");
+    let b = *batches.first().context("no cold artifacts for domain")?;
+    let engine = EngineHandle::spawn(manifest.clone())?;
+    let metrics = wsfm::metrics::ServingMetrics::default();
+    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics);
+    let mut rng = wsfm::core::rng::Pcg64::new(0);
+    let req = GenRequest {
+        id: 0,
+        domain: domain.to_string(),
+        tag: "cold".into(),
+        draft: DraftSpec::Noise,
+        n_samples: b,
+        t0: 0.0,
+        steps_cold: 8,
+        warp_mode: WarpMode::Exact,
+        seed: 0,
+        submitted: std::time::Instant::now(),
+    };
+    let resp = scheduler.run_single(req, &mut rng)?;
+    println!(
+        "smoke run ok: {} samples of len {} in {:?} ({} NFE)",
+        resp.samples.len(),
+        resp.samples[0].len(),
+        resp.total_time,
+        resp.nfe
+    );
+    engine.shutdown();
+    Ok(())
+}

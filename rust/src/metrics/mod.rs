@@ -1,0 +1,262 @@
+//! Serving metrics: counters, latency histograms with percentile queries,
+//! and throughput meters. Lock-cheap (atomics + a mutex-guarded histogram)
+//! and shared across coordinator workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exact percentiles over a bounded reservoir.
+///
+/// Keeps up to `cap` most-recent samples (ring buffer); p50/p95/p99 queries
+/// sort a snapshot. At serving rates of ~1e3-1e5 samples this is exact
+/// enough and allocation-stable.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    cap: usize,
+    inner: Mutex<HistInner>,
+}
+
+#[derive(Debug)]
+struct HistInner {
+    samples: Vec<u64>, // nanos, ring buffer
+    next: usize,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new(cap: usize) -> Self {
+        LatencyHistogram {
+            cap: cap.max(16),
+            inner: Mutex::new(HistInner { samples: Vec::new(), next: 0, count: 0, sum_ns: 0, max_ns: 0 }),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let mut g = self.inner.lock().unwrap();
+        if g.samples.len() < self.cap {
+            g.samples.push(ns);
+        } else {
+            let idx = g.next;
+            g.samples[idx] = ns;
+            g.next = (g.next + 1) % self.cap;
+        }
+        g.count += 1;
+        g.sum_ns += ns as u128;
+        g.max_ns = g.max_ns.max(ns);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut v = g.samples.clone();
+        v.sort_unstable();
+        let pct = |p: f64| -> Duration {
+            if v.is_empty() {
+                return Duration::ZERO;
+            }
+            let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+            Duration::from_nanos(v[idx])
+        };
+        LatencySnapshot {
+            count: g.count,
+            mean: if g.count > 0 {
+                Duration::from_nanos((g.sum_ns / g.count as u128) as u64)
+            } else {
+                Duration::ZERO
+            },
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: Duration::from_nanos(g.max_ns),
+        }
+    }
+}
+
+/// Point-in-time percentile view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl LatencySnapshot {
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.2?} p50={:.2?} p95={:.2?} p99={:.2?} max={:.2?}",
+            self.count, self.mean, self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
+/// Throughput meter: events per second over the meter's lifetime.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    events: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), events: Counter::default() }
+    }
+    pub fn record(&self, n: u64) {
+        self.events.add(n);
+    }
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.events.get() as f64 / secs
+    }
+    pub fn total(&self) -> u64 {
+        self.events.get()
+    }
+}
+
+/// The serving metrics bundle shared by the coordinator.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    pub requests_admitted: Counter,
+    pub requests_rejected: Counter,
+    pub requests_completed: Counter,
+    pub batches_executed: Counter,
+    pub denoiser_calls: Counter,
+    pub draft_calls: Counter,
+    pub padded_rows: Counter,
+    pub queue_wait: LatencyHistogram,
+    pub batch_exec: LatencyHistogram,
+    pub request_latency: LatencyHistogram,
+    pub samples: Throughput,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            requests_admitted: Counter::default(),
+            requests_rejected: Counter::default(),
+            requests_completed: Counter::default(),
+            batches_executed: Counter::default(),
+            denoiser_calls: Counter::default(),
+            draft_calls: Counter::default(),
+            padded_rows: Counter::default(),
+            queue_wait: LatencyHistogram::new(4096),
+            batch_exec: LatencyHistogram::new(4096),
+            request_latency: LatencyHistogram::new(4096),
+            samples: Throughput::new(),
+        }
+    }
+}
+
+impl ServingMetrics {
+    pub fn report(&self) -> String {
+        format!(
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} padded_rows={} samples/s={:.2}\n  {}\n  {}\n  {}",
+            self.requests_admitted.get(),
+            self.requests_rejected.get(),
+            self.requests_completed.get(),
+            self.batches_executed.get(),
+            self.denoiser_calls.get(),
+            self.draft_calls.get(),
+            self.padded_rows.get(),
+            self.samples.per_second(),
+            self.queue_wait.snapshot().report("queue_wait"),
+            self.batch_exec.snapshot().report("batch_exec"),
+            self.request_latency.snapshot().report("request_latency"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new(1000);
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, Duration::from_micros(100));
+        assert!((s.p50.as_micros() as i64 - 50).abs() <= 2, "{:?}", s.p50);
+    }
+
+    #[test]
+    fn histogram_ring_buffer_wraps() {
+        let h = LatencyHistogram::new(16);
+        for i in 0..100u64 {
+            h.record(Duration::from_nanos(i));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        // Only recent 16 retained; p50 should be among the high values.
+        assert!(s.p50 >= Duration::from_nanos(84));
+    }
+
+    #[test]
+    fn empty_histogram_snapshot() {
+        let s = LatencyHistogram::new(64).snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.record(10);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(t.total(), 10);
+        assert!(t.per_second() > 0.0);
+    }
+
+    #[test]
+    fn serving_metrics_report_contains_fields() {
+        let m = ServingMetrics::default();
+        m.requests_admitted.inc();
+        let r = m.report();
+        assert!(r.contains("admitted=1"));
+        assert!(r.contains("request_latency"));
+    }
+}

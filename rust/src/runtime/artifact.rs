@@ -1,0 +1,275 @@
+//! Artifact metadata: the `*.meta.json` sidecars and `manifest.json`
+//! emitted by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input/output tensor spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.get("name").as_str().context("spec missing name")?.to_string();
+        let dtype = j.get("dtype").as_str().context("spec missing dtype")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("spec missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata for one compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo_file: String,
+    pub domain: String,
+    /// "step" (fused denoise+update) or "draft".
+    pub kind: String,
+    /// For steps: the training tag ("cold", "ws_t080", "ws_good_t095", ...).
+    pub tag: String,
+    /// For drafts: "lstm" | "pca". For steps trained warm: the draft kind.
+    pub draft: Option<String>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub t0: Option<f64>,
+    pub latent_dim: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get_str = |k: &str| j.get(k).as_str().map(|s| s.to_string());
+        Ok(ArtifactMeta {
+            name: get_str("name").context("artifact missing name")?,
+            hlo_file: get_str("hlo_file").context("artifact missing hlo_file")?,
+            domain: get_str("domain").unwrap_or_default(),
+            kind: get_str("kind").unwrap_or_default(),
+            tag: get_str("tag").unwrap_or_default(),
+            draft: get_str("draft"),
+            batch: j.get("batch").as_usize().unwrap_or(0),
+            seq_len: j.get("seq_len").as_usize().unwrap_or(0),
+            vocab: j.get("vocab").as_usize().unwrap_or(0),
+            t0: j.get("t0").as_f64(),
+            latent_dim: j.get("latent_dim").as_usize(),
+            inputs: j
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: j
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// The artifact index: everything the AOT pipeline emitted.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub domains: Json,
+    pub batch_sizes: BTreeMap<String, Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut batch_sizes = BTreeMap::new();
+        if let Some(obj) = j.get("batch_sizes").as_obj() {
+            for (k, v) in obj {
+                let sizes = v
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect::<Vec<_>>();
+                batch_sizes.insert(k.clone(), sizes);
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, domains: j.get("domains").clone(), batch_sizes })
+    }
+
+    /// All artifacts for a domain.
+    pub fn for_domain(&self, domain: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.domain == domain).collect()
+    }
+
+    /// Find a step artifact by (domain, tag, batch).
+    pub fn find_step(&self, domain: &str, tag: &str, batch: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.domain == domain && a.kind == "step" && a.tag == tag && a.batch == batch)
+            .with_context(|| format!("no step artifact for {domain}/{tag}/b{batch}"))
+    }
+
+    /// Find a draft artifact by (domain, draft kind, batch).
+    pub fn find_draft(&self, domain: &str, draft: &str, batch: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.domain == domain
+                    && a.kind == "draft"
+                    && a.draft.as_deref() == Some(draft)
+                    && a.batch == batch
+            })
+            .with_context(|| format!("no draft artifact for {domain}/{draft}/b{batch}"))
+    }
+
+    /// Compiled batch sizes available for (domain, tag) steps, ascending.
+    pub fn step_batches(&self, domain: &str, tag: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.domain == domain && a.kind == "step" && a.tag == tag)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// All step tags for a domain (e.g. ["cold", "ws_t050", "ws_t080"]).
+    pub fn step_tags(&self, domain: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.domain == domain && a.kind == "step")
+            .map(|a| a.tag.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Domain names present.
+    pub fn domain_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.artifacts.iter().map(|a| a.domain.clone()).filter(|d| !d.is_empty()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.hlo_file)
+    }
+
+    /// Validate structural invariants (every referenced file exists, specs
+    /// are consistent). Used by `wsfm selfcheck`.
+    pub fn selfcheck(&self) -> Result<()> {
+        if self.artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        for a in &self.artifacts {
+            let p = self.hlo_path(a);
+            if !p.exists() {
+                bail!("artifact {} references missing file {:?}", a.name, p);
+            }
+            if a.kind == "step" {
+                if a.inputs.len() != 4 {
+                    bail!("step {} should have 4 inputs, has {}", a.name, a.inputs.len());
+                }
+                if a.inputs[0].shape != vec![a.batch, a.seq_len] {
+                    bail!("step {} x_t spec mismatch", a.name);
+                }
+                if a.outputs[0].shape != vec![a.batch, a.seq_len, a.vocab] {
+                    bail!("step {} probs spec mismatch", a.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json() -> Json {
+        Json::parse(
+            r#"{
+              "name":"d_cold_step_b4","hlo_file":"d_cold_step_b4.hlo.txt",
+              "domain":"d","kind":"step","tag":"cold","batch":4,"seq_len":8,"vocab":16,
+              "t0":0.0,
+              "inputs":[{"name":"x_t","shape":[4,8],"dtype":"s32"},
+                        {"name":"t","shape":[],"dtype":"f32"},
+                        {"name":"h","shape":[],"dtype":"f32"},
+                        {"name":"warp","shape":[],"dtype":"f32"}],
+              "outputs":[{"name":"probs","shape":[4,8,16],"dtype":"f32"}]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn artifact_meta_parses() {
+        let m = ArtifactMeta::from_json(&meta_json()).unwrap();
+        assert_eq!(m.name, "d_cold_step_b4");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.outputs[0].numel(), 4 * 8 * 16);
+        assert_eq!(m.t0, Some(0.0));
+    }
+
+    #[test]
+    fn manifest_lookup() {
+        let m = Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts: vec![ArtifactMeta::from_json(&meta_json()).unwrap()],
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+        };
+        assert!(m.find_step("d", "cold", 4).is_ok());
+        assert!(m.find_step("d", "cold", 8).is_err());
+        assert!(m.find_step("d", "ws_t080", 4).is_err());
+        assert_eq!(m.step_batches("d", "cold"), vec![4]);
+        assert_eq!(m.step_tags("d"), vec!["cold"]);
+        assert_eq!(m.domain_names(), vec!["d"]);
+        assert!(m.find_draft("d", "lstm", 4).is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn manifest_load_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! The PJRT execution engine.
+//!
+//! `xla::PjRtClient` is `Rc`-based and not `Send`, so all PJRT work runs on
+//! one dedicated **engine thread** (the machine has one accelerator — the
+//! CPU plugin — so a single execution stream is also the right throughput
+//! model). The rest of the stack talks to it through [`EngineHandle`], a
+//! cloneable, `Send + Sync` channel front-end implementing [`Executor`].
+//!
+//! Artifacts are compiled lazily on first use and cached for the process
+//! lifetime; `preload` warms them eagerly at startup.
+
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Executable kinds the engine knows how to drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutableKind {
+    /// `(x_t i32[B,N], t f32[], h f32[], warp f32[]) -> (probs f32[B,N,V],)`
+    Step,
+    /// `(noise f32[...]) -> (tokens i32[B,N],)`
+    Draft,
+}
+
+/// Abstract executor — the seam between the coordinator/sampler and PJRT.
+/// Tests substitute a mock; production uses [`EngineHandle`].
+pub trait Executor: Send + Sync {
+    /// Run a fused denoise+update step artifact.
+    fn step(&self, artifact: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>>;
+    /// Run a draft sampler artifact with externally-generated noise.
+    fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>>;
+    /// Metadata lookup.
+    fn meta(&self, artifact: &str) -> Result<ArtifactMeta>;
+}
+
+/// Marker alias used in public re-exports.
+pub type StepFn = dyn Executor;
+
+// ---------------------------------------------------------------------------
+// Engine thread internals
+// ---------------------------------------------------------------------------
+
+enum Req {
+    Step { name: String, tokens: Vec<i32>, t: f32, h: f32, warp: f32, resp: mpsc::Sender<Result<Vec<f32>>> },
+    Draft { name: String, noise: Vec<f32>, resp: mpsc::Sender<Result<Vec<i32>>> },
+    Preload { names: Vec<String>, resp: mpsc::Sender<Result<()>> },
+    Stats { resp: mpsc::Sender<EngineStats> },
+    Shutdown,
+}
+
+/// Compile/exec statistics (surfaced in `wsfm info` and §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub compiled: usize,
+    pub executions: u64,
+    pub compile_ms_total: u64,
+    pub exec_ms_total: u64,
+}
+
+/// The engine proper (lives on the engine thread; `!Send` by content).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .cloned()
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?;
+        let path = self.manifest.hlo_path(&meta);
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.compile_ms_total += start.elapsed().as_millis() as u64;
+        self.stats.compiled += 1;
+        crate::info!("compiled {name} in {:?}", start.elapsed());
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a step artifact.
+    pub fn exec_step(&mut self, name: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "step" {
+            bail!("artifact {name} is not a step (kind={})", meta.kind);
+        }
+        let (b, n, v) = (meta.batch, meta.seq_len, meta.vocab);
+        if tokens.len() != b * n {
+            bail!("step {name}: tokens len {} != {}x{}", tokens.len(), b, n);
+        }
+        self.ensure_compiled(name)?;
+        let start = Instant::now();
+        let x = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| anyhow!("reshape x_t: {e:?}"))?;
+        let args =
+            [x, xla::Literal::scalar(t), xla::Literal::scalar(h), xla::Literal::scalar(warp)];
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute(&args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let probs = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if probs.len() != b * n * v {
+            bail!("step {name}: output len {} != {}", probs.len(), b * n * v);
+        }
+        self.stats.executions += 1;
+        self.stats.exec_ms_total += start.elapsed().as_millis() as u64;
+        Ok(probs)
+    }
+
+    /// Execute a draft artifact.
+    pub fn exec_draft(&mut self, name: &str, noise: &[f32]) -> Result<Vec<i32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "draft" {
+            bail!("artifact {name} is not a draft (kind={})", meta.kind);
+        }
+        let in_spec = meta.inputs.first().context("draft missing input spec")?;
+        if noise.len() != in_spec.numel() {
+            bail!("draft {name}: noise len {} != {}", noise.len(), in_spec.numel());
+        }
+        self.ensure_compiled(name)?;
+        let start = Instant::now();
+        let dims: Vec<i64> = in_spec.shape.iter().map(|&d| d as i64).collect();
+        let z = xla::Literal::vec1(noise).reshape(&dims).map_err(|e| anyhow!("reshape noise: {e:?}"))?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute(&[z]).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let tokens = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if tokens.len() != meta.batch * meta.seq_len {
+            bail!("draft {name}: output len {} != {}", tokens.len(), meta.batch * meta.seq_len);
+        }
+        self.stats.executions += 1;
+        self.stats.exec_ms_total += start.elapsed().as_millis() as u64;
+        Ok(tokens)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread + handle
+// ---------------------------------------------------------------------------
+
+/// Cloneable, thread-safe front-end to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Req>,
+    manifest: std::sync::Arc<Manifest>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread over a loaded manifest.
+    pub fn spawn(manifest: Manifest) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let manifest_arc = std::sync::Arc::new(manifest.clone());
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("wsfm-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(manifest) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Step { name, tokens, t, h, warp, resp } => {
+                            let _ = resp.send(engine.exec_step(&name, &tokens, t, h, warp));
+                        }
+                        Req::Draft { name, noise, resp } => {
+                            let _ = resp.send(engine.exec_draft(&name, &noise));
+                        }
+                        Req::Preload { names, resp } => {
+                            let mut r = Ok(());
+                            for n in &names {
+                                if let Err(e) = engine.ensure_compiled(n) {
+                                    r = Err(e);
+                                    break;
+                                }
+                            }
+                            let _ = resp.send(r);
+                        }
+                        Req::Stats { resp } => {
+                            let _ = resp.send(engine.stats());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning engine thread")?;
+        ready_rx.recv().context("engine thread died during init")??;
+        Ok(EngineHandle { tx, manifest: manifest_arc })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Eagerly compile a set of artifacts.
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Preload { names: names.to_vec(), resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (resp, rx) = mpsc::channel();
+        self.tx.send(Req::Stats { resp }).map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+impl Executor for EngineHandle {
+    fn step(&self, artifact: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Step { name: artifact.to_string(), tokens: tokens.to_vec(), t, h, warp, resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Draft { name: artifact.to_string(), noise: noise.to_vec(), resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == artifact)
+            .cloned()
+            .with_context(|| format!("unknown artifact {artifact:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests requiring real artifacts live in rust/tests/runtime.rs
+    // (they need `make artifacts` to have run). Here we only check the
+    // handle's error paths with an empty manifest.
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts: vec![],
+            domains: crate::util::json::Json::Null,
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let h = EngineHandle::spawn(empty_manifest()).unwrap();
+        assert!(h.meta("nope").is_err());
+        assert!(Executor::step(&h, "nope", &[0], 0.0, 0.1, 1.0).is_err());
+        assert!(h.draft("nope", &[0.0]).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let h = EngineHandle::spawn(empty_manifest()).unwrap();
+        let s = h.stats().unwrap();
+        assert_eq!(s.compiled, 0);
+        h.shutdown();
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+
+pub mod artifact;
+pub mod engine;
+pub mod pool;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use engine::{Engine, EngineHandle, ExecutableKind, Executor};
+pub use pool::{best_fit, padding_cost, plan_chunks};

@@ -1,0 +1,334 @@
+//! The Euler CTMC sampling loop (paper Fig. 3, both columns).
+//!
+//! Cold DFM (left column):
+//! ```text
+//! t = 0; x ~ uniform noise
+//! while t < 1: probs = step(x, t, h, warp=1); x ~ Cat(probs); t += h
+//! ```
+//! WS-DFM (right column): start at `t0` from draft samples and (in the
+//! paper's literal rule) scale the velocity by `1 - t0`:
+//! ```text
+//! t = t0; x ~ draft model
+//! while t < 1: probs = step(x, t, h, warp=1-t0); x ~ Cat(probs); t += h
+//! ```
+//! The softmax→velocity→Euler-transition math is *inside* the AOT artifact
+//! (the fused Pallas `dfm_update` kernel); this loop owns time stepping,
+//! categorical sampling, RNG, and NFE accounting. The NFE is guaranteed by
+//! construction: the loop runs exactly `Schedule::nfe()` iterations.
+
+use crate::core::prob;
+use crate::core::rng::Pcg64;
+use crate::core::schedule::{Schedule, WarpMode};
+use crate::core::tensor::TokenBatch;
+use crate::runtime::engine::Executor;
+use crate::sampler::trace::Trace;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Everything a sampling run needs besides the initial state.
+#[derive(Debug, Clone)]
+pub struct SamplerParams {
+    /// Step artifact name (fixed batch shape).
+    pub artifact: String,
+    /// Cold-run step count (grid resolution; e.g. 20 for two-moons).
+    pub steps_cold: usize,
+    /// Warm-start time (0.0 = cold DFM).
+    pub t0: f64,
+    /// Update-rule variant.
+    pub warp_mode: WarpMode,
+}
+
+/// Result of one batched sampling run.
+#[derive(Debug, Clone)]
+pub struct SampleOutput {
+    pub tokens: TokenBatch,
+    /// Number of denoiser evaluations actually performed.
+    pub nfe: usize,
+    /// Wall-clock of the refinement loop.
+    pub elapsed: std::time::Duration,
+    /// Optional per-step snapshots (for Fig. 5/7 dumps).
+    pub trace: Option<Trace>,
+}
+
+/// Run the warm-start sampling loop from `init` (draft samples at `t0`).
+///
+/// `init` must match the artifact's compiled `[B, N]` shape. The returned
+/// NFE equals `schedule::guaranteed_nfe(steps_cold, t0)` — the paper's
+/// guarantee, pinned by tests.
+pub fn sample_warm(
+    exec: &dyn Executor,
+    params: &SamplerParams,
+    init: TokenBatch,
+    rng: &mut Pcg64,
+    want_trace: bool,
+) -> Result<SampleOutput> {
+    let meta = exec.meta(&params.artifact)?;
+    if meta.batch != init.batch || meta.seq_len != init.seq_len {
+        bail!(
+            "init shape [{}, {}] != artifact {} shape [{}, {}]",
+            init.batch,
+            init.seq_len,
+            params.artifact,
+            meta.batch,
+            meta.seq_len
+        );
+    }
+    let schedule = Schedule::new(params.steps_cold, params.t0)?;
+    let warp = params.warp_mode.warp_factor(params.t0) as f32;
+    let vocab = meta.vocab;
+
+    let start = Instant::now();
+    let mut x = init;
+    let mut trace = want_trace.then(|| {
+        let mut tr = Trace::new();
+        tr.push(schedule.t0, &x);
+        tr
+    });
+
+    for i in 0..schedule.nfe() {
+        let t = schedule.times[i] as f32;
+        let h = schedule.step_size(i) as f32;
+        let probs = exec.step(&params.artifact, &x.tokens, t, h, warp)?;
+        if probs.len() != x.batch * x.seq_len * vocab {
+            bail!("artifact {} returned {} probs, want {}", params.artifact, probs.len(), x.batch * x.seq_len * vocab);
+        }
+        prob::categorical_batch(&probs, vocab, &mut x.tokens, rng);
+        if let Some(tr) = trace.as_mut() {
+            tr.push(schedule.times[i] + schedule.step_size(i), &x);
+        }
+    }
+
+    Ok(SampleOutput { nfe: schedule.nfe(), elapsed: start.elapsed(), tokens: x, trace })
+}
+
+/// Cold DFM: uniform-noise init at `t = 0` (paper Fig. 3 left).
+pub fn sample_cold(
+    exec: &dyn Executor,
+    artifact: &str,
+    steps: usize,
+    rng: &mut Pcg64,
+    want_trace: bool,
+) -> Result<SampleOutput> {
+    let meta = exec.meta(artifact)?;
+    let mut init = TokenBatch::zeros(meta.batch, meta.seq_len);
+    for tok in init.tokens.iter_mut() {
+        *tok = rng.below(meta.vocab as u32) as i32;
+    }
+    let params = SamplerParams {
+        artifact: artifact.to_string(),
+        steps_cold: steps,
+        t0: 0.0,
+        warp_mode: WarpMode::Exact, // warp factor is 1 either way at t0=0
+    };
+    sample_warm(exec, &params, init, rng, want_trace)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! A mock executor implementing an *analytic* DFM over a tiny vocab:
+    //! the "denoiser" always predicts a fixed target distribution `p1`.
+    //! This lets sampler tests verify transport behaviour without
+    //! artifacts.
+    use super::*;
+    use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    pub struct MockStep {
+        pub batch: usize,
+        pub seq_len: usize,
+        pub vocab: usize,
+        /// Fixed target distribution over the vocab.
+        pub p1: Vec<f32>,
+        pub calls: AtomicUsize,
+    }
+
+    impl MockStep {
+        pub fn new(batch: usize, seq_len: usize, p1: Vec<f32>) -> Self {
+            MockStep { batch, seq_len, vocab: p1.len(), p1, calls: AtomicUsize::new(0) }
+        }
+    }
+
+    impl Executor for MockStep {
+        fn step(&self, _a: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            let v = self.vocab;
+            let mut out = Vec::with_capacity(tokens.len() * v);
+            let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
+            for &tok in tokens {
+                for j in 0..v {
+                    let delta = if j as i32 == tok { 1.0 } else { 0.0 };
+                    out.push((delta + coef * (self.p1[j] - delta)).max(0.0));
+                }
+            }
+            Ok(out)
+        }
+
+        fn draft(&self, _a: &str, _noise: &[f32]) -> Result<Vec<i32>> {
+            Ok(vec![0; self.batch * self.seq_len])
+        }
+
+        fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+            Ok(ArtifactMeta {
+                name: artifact.to_string(),
+                hlo_file: String::new(),
+                domain: "mock".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: self.batch,
+                seq_len: self.seq_len,
+                vocab: self.vocab,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![TensorSpec {
+                    name: "x_t".into(),
+                    shape: vec![self.batch, self.seq_len],
+                    dtype: "s32".into(),
+                }],
+                outputs: vec![TensorSpec {
+                    name: "probs".into(),
+                    shape: vec![self.batch, self.seq_len, self.vocab],
+                    dtype: "f32".into(),
+                }],
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::MockStep;
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn cold_nfe_equals_steps() {
+        let mock = MockStep::new(4, 3, vec![0.7, 0.2, 0.1]);
+        let mut rng = Pcg64::new(0);
+        let out = sample_cold(&mock, "m", 20, &mut rng, false).unwrap();
+        assert_eq!(out.nfe, 20);
+        assert_eq!(mock.calls.load(Ordering::SeqCst), 20);
+        assert_eq!(out.tokens.batch, 4);
+    }
+
+    #[test]
+    fn warm_nfe_guarantee() {
+        // The headline: t0=0.8 with 20 cold steps -> exactly 4 calls.
+        let mock = MockStep::new(2, 2, vec![0.5, 0.5]);
+        let params = SamplerParams {
+            artifact: "m".into(),
+            steps_cold: 20,
+            t0: 0.8,
+            warp_mode: WarpMode::Literal,
+        };
+        let mut rng = Pcg64::new(1);
+        let init = TokenBatch::zeros(2, 2);
+        let out = sample_warm(&mock, &params, init, &mut rng, false).unwrap();
+        assert_eq!(out.nfe, 4);
+        assert_eq!(mock.calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn transports_to_target_distribution() {
+        // With the analytic denoiser, final tokens must follow p1.
+        let p1 = vec![0.6f32, 0.3, 0.1];
+        let mock = MockStep::new(64, 16, p1.clone());
+        let mut rng = Pcg64::new(2);
+        let out = sample_cold(&mock, "m", 50, &mut rng, false).unwrap();
+        let mut counts = [0usize; 3];
+        for &t in &out.tokens.tokens {
+            counts[t as usize] += 1;
+        }
+        let n = out.tokens.tokens.len() as f64;
+        for (i, &target) in p1.iter().enumerate() {
+            let f = counts[i] as f64 / n;
+            assert!((f - target as f64).abs() < 0.06, "token {i}: {f} vs {target}");
+        }
+    }
+
+    #[test]
+    fn warm_transport_also_reaches_target() {
+        let p1 = vec![0.1f32, 0.1, 0.8];
+        let mock = MockStep::new(64, 8, p1.clone());
+        let params = SamplerParams {
+            artifact: "m".into(),
+            steps_cold: 40,
+            t0: 0.5,
+            warp_mode: WarpMode::Exact,
+        };
+        // Drafts: all token 0 (far from target).
+        let init = TokenBatch::zeros(64, 8);
+        let mut rng = Pcg64::new(3);
+        let out = sample_warm(&mock, &params, init, &mut rng, false).unwrap();
+        let frac2 = out.tokens.tokens.iter().filter(|&&t| t == 2).count() as f64
+            / out.tokens.tokens.len() as f64;
+        assert!((frac2 - 0.8).abs() < 0.08, "{frac2}");
+        assert_eq!(out.nfe, 20);
+    }
+
+    #[test]
+    fn exact_rule_lands_on_p1_but_literal_undershoots() {
+        // The exact rule's final step has coef = h/(1-t) = 1, committing
+        // fully to p1. The paper's literal Fig. 3 rule scales velocity by
+        // (1-t0) and therefore only moves a (1-t0) fraction of the
+        // remaining mass even on the last step — WS-DFM outputs stay close
+        // to the draft (visible in the paper's Fig. 14, where WS samples
+        // are light edits of the LSTM text). Pin both behaviours; the
+        // trade-off is ablated in benches/hotpath.rs.
+        let p1 = vec![0.0f32, 1.0];
+        let run = |warp_mode| {
+            let mock = MockStep::new(64, 4, p1.clone());
+            let params = SamplerParams {
+                artifact: "m".into(),
+                steps_cold: 20,
+                t0: 0.8,
+                warp_mode,
+            };
+            let init = TokenBatch::zeros(64, 4);
+            let mut rng = Pcg64::new(4);
+            let out = sample_warm(&mock, &params, init, &mut rng, false).unwrap();
+            out.tokens.tokens.iter().filter(|&&t| t == 1).count() as f64
+                / out.tokens.tokens.len() as f64
+        };
+        assert_eq!(run(WarpMode::Exact), 1.0, "exact rule must fully commit at t=1");
+        let lit = run(WarpMode::Literal);
+        // Analytic switch probability: 1 - prod(1 - coef_i) ≈ 0.36.
+        assert!(lit > 0.2 && lit < 0.55, "literal-rule switch fraction {lit}");
+    }
+
+    #[test]
+    fn trace_records_steps() {
+        let mock = MockStep::new(2, 2, vec![0.5, 0.5]);
+        let mut rng = Pcg64::new(5);
+        let out = sample_cold(&mock, "m", 10, &mut rng, true).unwrap();
+        let tr = out.trace.unwrap();
+        assert_eq!(tr.len(), 11); // init + one per step
+        assert!((tr.times[0] - 0.0).abs() < 1e-9);
+        assert!((tr.times[10] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mock = MockStep::new(2, 2, vec![0.5, 0.5]);
+        let params = SamplerParams {
+            artifact: "m".into(),
+            steps_cold: 10,
+            t0: 0.5,
+            warp_mode: WarpMode::Exact,
+        };
+        let init = TokenBatch::zeros(3, 2); // wrong batch
+        let mut rng = Pcg64::new(6);
+        assert!(sample_warm(&mock, &params, init, &mut rng, false).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mock = MockStep::new(4, 4, vec![0.3, 0.3, 0.4]);
+        let run = |seed| {
+            let mut rng = Pcg64::new(seed);
+            sample_cold(&mock, "m", 15, &mut rng, false).unwrap().tokens.tokens
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

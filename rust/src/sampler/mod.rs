@@ -1,0 +1,12 @@
+//! DFM / WS-DFM sampling (paper Fig. 3).
+//!
+//! [`dfm`] implements the Euler CTMC integration loop over the fused
+//! denoise+update artifacts; cold DFM is the `t0 = 0` special case of the
+//! warm sampler, so there is one loop with two entry points. [`trace`]
+//! captures per-step snapshots for the paper's Fig. 5/7/9 progress figures.
+
+pub mod dfm;
+pub mod trace;
+
+pub use dfm::{sample_cold, sample_warm, SampleOutput, SamplerParams};
+pub use trace::Trace;

@@ -1,0 +1,127 @@
+//! Per-step generation snapshots (paper Fig. 5 / Fig. 7 / Fig. 9).
+//!
+//! The trace stores the full token state after every Euler step so the
+//! figure harnesses can dump "progress strips": the draft on the left,
+//! refinement steps in between, the final sample on the right.
+
+use crate::core::tensor::TokenBatch;
+use std::io::Write;
+use std::path::Path;
+
+/// A recorded trajectory of token states.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub times: Vec<f64>,
+    pub states: Vec<TokenBatch>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, t: f64, state: &TokenBatch) {
+        self.times.push(t);
+        self.states.push(state.clone());
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Pick roughly `k` evenly spaced snapshot indices (always includes the
+    /// first and last) — the paper shows "every other" step in Fig. 5.
+    pub fn snapshot_indices(&self, k: usize) -> Vec<usize> {
+        let n = self.len();
+        if n == 0 {
+            return vec![];
+        }
+        if k >= n || k < 2 {
+            return (0..n).collect();
+        }
+        let mut idx: Vec<usize> =
+            (0..k).map(|i| (i as f64 * (n - 1) as f64 / (k - 1) as f64).round() as usize).collect();
+        idx.dedup();
+        idx
+    }
+
+    /// Dump a CSV of point states (for the two-moons Fig. 5 panels):
+    /// columns `time,row,x,y`.
+    pub fn write_points_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "time,row,x,y")?;
+        for (ti, state) in self.times.iter().zip(&self.states) {
+            for r in 0..state.batch {
+                let row = state.row(r);
+                writeln!(f, "{ti},{r},{},{}", row[0], row[1])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dump one row's trajectory as a sequence of token vectors (for image
+    /// progress strips): returns (time, tokens) pairs at `k` snapshots.
+    pub fn row_snapshots(&self, row: usize, k: usize) -> Vec<(f64, Vec<i32>)> {
+        self.snapshot_indices(k)
+            .into_iter()
+            .map(|i| (self.times[i], self.states[i].row(row).to_vec()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_trace(steps: usize) -> Trace {
+        let mut tr = Trace::new();
+        for i in 0..=steps {
+            let mut tb = TokenBatch::zeros(2, 2);
+            tb.tokens = vec![i as i32; 4];
+            tr.push(i as f64 / steps as f64, &tb);
+        }
+        tr
+    }
+
+    #[test]
+    fn push_and_len() {
+        let tr = toy_trace(10);
+        assert_eq!(tr.len(), 11);
+        assert!(!tr.is_empty());
+    }
+
+    #[test]
+    fn snapshot_indices_include_ends() {
+        let tr = toy_trace(20);
+        let idx = tr.snapshot_indices(5);
+        assert_eq!(*idx.first().unwrap(), 0);
+        assert_eq!(*idx.last().unwrap(), 20);
+        assert!(idx.len() <= 5);
+        // Small traces return everything.
+        assert_eq!(toy_trace(2).snapshot_indices(10), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn row_snapshots_track_rows() {
+        let tr = toy_trace(4);
+        let snaps = tr.row_snapshots(1, 3);
+        assert_eq!(snaps.len(), 3);
+        assert_eq!(snaps[0].1, vec![0, 0]);
+        assert_eq!(snaps[2].1, vec![4, 4]);
+    }
+
+    #[test]
+    fn points_csv_dump() {
+        let tr = toy_trace(2);
+        let p = std::env::temp_dir().join(format!("wsfm_trace_{}.csv", std::process::id()));
+        tr.write_points_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("time,row,x,y"));
+        assert_eq!(text.lines().count(), 1 + 3 * 2); // header + 3 times x 2 rows
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,122 @@
+//! Blocking line-protocol client (used by examples, integration tests, and
+//! the load-generator in `examples/serve_text.rs`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One connection to a `wsfm serve` instance.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Parsed generate reply.
+#[derive(Debug, Clone)]
+pub struct GenerateReply {
+    pub nfe: usize,
+    pub total_us: u64,
+    pub queue_us: u64,
+    pub samples: Vec<Vec<i32>>,
+    pub texts: Vec<String>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(600)))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSON line, read one JSON line.
+    pub fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        if reply.is_empty() {
+            bail!("server closed connection");
+        }
+        Ok(Json::parse(&reply)?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let j = self.roundtrip(r#"{"cmd":"ping"}"#)?;
+        Ok(j.get("pong").as_bool().unwrap_or(false))
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"metrics"}"#)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.roundtrip(r#"{"cmd":"shutdown"}"#)?;
+        Ok(())
+    }
+
+    /// Issue a generate command.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        &mut self,
+        domain: &str,
+        tag: &str,
+        draft: &str,
+        n_samples: usize,
+        t0: f64,
+        steps: usize,
+        seed: u64,
+        decode: bool,
+    ) -> Result<GenerateReply> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("generate")),
+            ("domain", Json::str(domain)),
+            ("tag", Json::str(tag)),
+            ("draft", Json::str(draft)),
+            ("n_samples", Json::num(n_samples as f64)),
+            ("t0", Json::num(t0)),
+            ("steps", Json::num(steps as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("decode", Json::Bool(decode)),
+        ]);
+        let j = self.roundtrip(&req.to_string())?;
+        if j.get("ok").as_bool() != Some(true) {
+            let busy = j.get("busy").as_bool().unwrap_or(false);
+            bail!(
+                "generate failed{}: {}",
+                if busy { " (busy)" } else { "" },
+                j.get("error").as_str().unwrap_or("?")
+            );
+        }
+        let samples = j
+            .get("samples")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_i64().unwrap_or(0) as i32)
+                    .collect()
+            })
+            .collect();
+        let texts = j
+            .get("texts")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|t| t.as_str().map(|s| s.to_string()))
+            .collect();
+        Ok(GenerateReply {
+            nfe: j.get("nfe").as_usize().unwrap_or(0),
+            total_us: j.get("total_us").as_f64().unwrap_or(0.0) as u64,
+            queue_us: j.get("queue_us").as_f64().unwrap_or(0.0) as u64,
+            samples,
+            texts,
+        })
+    }
+}

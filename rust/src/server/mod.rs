@@ -1,0 +1,12 @@
+//! TCP serving front-end: newline-delimited JSON protocol over a threaded
+//! accept loop (no async runtime in the vendored crate set — and the
+//! engine serializes on one PJRT stream anyway, so thread-per-connection
+//! with a shared [`crate::coordinator::Service`] is the right shape).
+
+pub mod client;
+pub mod protocol;
+pub mod tcp;
+
+pub use client::Client;
+pub use protocol::{parse_request, render_error, render_response, WireRequest};
+pub use tcp::TcpServer;

@@ -1,0 +1,182 @@
+//! Wire protocol: one JSON object per line.
+//!
+//! Request:
+//! ```json
+//! {"cmd":"generate","domain":"text8","tag":"ws_t080","draft":"lstm",
+//!  "n_samples":2,"t0":0.8,"steps":1024,"warp":"literal","seed":7,
+//!  "decode":true}
+//! ```
+//! Other commands: `{"cmd":"metrics"}`, `{"cmd":"info"}`, `{"cmd":"ping"}`.
+//!
+//! Response (generate):
+//! ```json
+//! {"ok":true,"id":3,"nfe":205,"queue_us":120,"draft_us":900,
+//!  "refine_us":52000,"total_us":53100,"samples":[[1,2,...]],
+//!  "texts":["the old city ..."]}
+//! ```
+//! Errors: `{"ok":false,"error":"...","busy":true?}`.
+
+use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
+use crate::core::schedule::WarpMode;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Parsed wire command.
+#[derive(Debug)]
+pub enum WireRequest {
+    Generate { request: GenRequest, decode: bool },
+    Metrics,
+    Info,
+    Ping,
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let j = Json::parse(line.trim()).context("malformed json")?;
+    let cmd = j.get("cmd").as_str().context("missing cmd")?;
+    match cmd {
+        "ping" => Ok(WireRequest::Ping),
+        "metrics" => Ok(WireRequest::Metrics),
+        "info" => Ok(WireRequest::Info),
+        "shutdown" => Ok(WireRequest::Shutdown),
+        "generate" => {
+            let domain = j.get("domain").as_str().context("missing domain")?.to_string();
+            let tag = j.get("tag").as_str().unwrap_or("cold").to_string();
+            let draft = DraftSpec::parse(j.get("draft").as_str().unwrap_or("noise"))?;
+            let n_samples = j.get("n_samples").as_usize().unwrap_or(1);
+            let t0 = j.get("t0").as_f64().unwrap_or(0.0);
+            let steps_cold = j.get("steps").as_usize().unwrap_or(128);
+            let warp_mode = WarpMode::parse(j.get("warp").as_str().unwrap_or("literal"))?;
+            let seed = j.get("seed").as_f64().unwrap_or(0.0) as u64;
+            let decode = j.get("decode").as_bool().unwrap_or(false);
+            let request = GenRequest {
+                id: 0,
+                domain,
+                tag,
+                draft,
+                n_samples,
+                t0,
+                steps_cold,
+                warp_mode,
+                seed,
+                submitted: Instant::now(),
+            };
+            request.validate()?;
+            Ok(WireRequest::Generate { request, decode })
+        }
+        other => bail!("unknown cmd {other:?}"),
+    }
+}
+
+/// Render a successful generate response. `texts` is optional decoded
+/// output (char/word domains).
+pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(resp.id as f64)),
+        ("nfe", Json::num(resp.nfe as f64)),
+        ("queue_us", Json::num(resp.queue_wait.as_micros() as f64)),
+        ("draft_us", Json::num(resp.draft_time.as_micros() as f64)),
+        ("refine_us", Json::num(resp.refine_time.as_micros() as f64)),
+        ("total_us", Json::num(resp.total_time.as_micros() as f64)),
+        (
+            "samples",
+            Json::arr(
+                resp.samples
+                    .iter()
+                    .map(|row| Json::arr(row.iter().map(|&t| Json::num(t as f64)))),
+            ),
+        ),
+    ];
+    if let Some(ts) = texts {
+        fields.push(("texts", Json::arr(ts.into_iter().map(Json::str))));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Render an error (busy = backpressure).
+pub fn render_error(msg: &str, busy: bool) -> String {
+    let mut fields = vec![("ok", Json::Bool(false)), ("error", Json::str(msg))];
+    if busy {
+        fields.push(("busy", Json::Bool(true)));
+    }
+    Json::obj(fields).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_generate_full() {
+        let line = r#"{"cmd":"generate","domain":"text8","tag":"ws_t080","draft":"lstm","n_samples":2,"t0":0.8,"steps":1024,"warp":"literal","seed":7,"decode":true}"#;
+        match parse_request(line).unwrap() {
+            WireRequest::Generate { request, decode } => {
+                assert_eq!(request.domain, "text8");
+                assert_eq!(request.tag, "ws_t080");
+                assert_eq!(request.n_samples, 2);
+                assert!((request.t0 - 0.8).abs() < 1e-9);
+                assert_eq!(request.steps_cold, 1024);
+                assert_eq!(request.seed, 7);
+                assert!(decode);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let line = r#"{"cmd":"generate","domain":"two_moons"}"#;
+        match parse_request(line).unwrap() {
+            WireRequest::Generate { request, decode } => {
+                assert_eq!(request.tag, "cold");
+                assert_eq!(request.n_samples, 1);
+                assert_eq!(request.t0, 0.0);
+                assert!(!decode);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_other_cmds_and_errors() {
+        assert!(matches!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), WireRequest::Ping));
+        assert!(matches!(parse_request(r#"{"cmd":"metrics"}"#).unwrap(), WireRequest::Metrics));
+        assert!(matches!(parse_request(r#"{"cmd":"info"}"#).unwrap(), WireRequest::Info));
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"no":"cmd"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"explode"}"#).is_err());
+        // Invalid t0 rejected at parse time.
+        assert!(parse_request(r#"{"cmd":"generate","domain":"x","t0":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let resp = GenResponse {
+            id: 3,
+            samples: vec![vec![1, 2], vec![3, 4]],
+            nfe: 205,
+            queue_wait: Duration::from_micros(120),
+            draft_time: Duration::from_micros(900),
+            refine_time: Duration::from_micros(52_000),
+            total_time: Duration::from_micros(53_100),
+        };
+        let line = render_response(&resp, Some(vec!["ab".into()]));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("nfe").as_usize(), Some(205));
+        assert_eq!(j.get("samples").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("texts").as_arr().unwrap()[0].as_str(), Some("ab"));
+    }
+
+    #[test]
+    fn render_error_busy() {
+        let line = render_error("queue full", true);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("busy").as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,158 @@
+//! Threaded TCP server: accept loop + one handler thread per connection,
+//! all sharing the coordinator [`Service`].
+
+use crate::coordinator::request::GenResponse;
+use crate::coordinator::Service;
+use crate::data::tokenizer::{CharTokenizer, WordTokenizer};
+use crate::runtime::Manifest;
+use crate::server::protocol::{parse_request, render_error, render_response, WireRequest};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// The server. `run()` blocks until `shutdown` (or a client sends
+/// `{"cmd":"shutdown"}`).
+pub struct TcpServer {
+    pub service: Service,
+    pub manifest: Arc<Manifest>,
+    word_tok: Option<Arc<WordTokenizer>>,
+    stop: Arc<AtomicBool>,
+    pub local_addr: std::net::SocketAddr,
+    listener: TcpListener,
+}
+
+impl TcpServer {
+    /// Bind. Pass `addr = "127.0.0.1:0"` for an ephemeral port (tests).
+    pub fn bind(addr: &str, service: Service, manifest: Manifest) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        // Word tokenizer for the wiki domain, if its vocab is present.
+        let vocab_path = manifest.dir.join("wiki_vocab.json");
+        let word_tok = std::fs::read_to_string(&vocab_path)
+            .ok()
+            .and_then(|t| WordTokenizer::from_json(&t).ok())
+            .map(Arc::new);
+        Ok(TcpServer {
+            service,
+            manifest: Arc::new(manifest),
+            word_tok,
+            stop: Arc::new(AtomicBool::new(false)),
+            local_addr,
+            listener,
+        })
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop. Returns when stopped.
+    pub fn run(&self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        crate::info!("listening on {}", self.local_addr);
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    crate::debug!("connection from {peer}");
+                    stream.set_nonblocking(false).ok();
+                    let service = self.service.clone();
+                    let manifest = self.manifest.clone();
+                    let word_tok = self.word_tok.clone();
+                    let stop = self.stop.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, service, manifest, word_tok, stop) {
+                            crate::debug!("connection ended: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn decode_samples(
+    domain: &str,
+    resp: &GenResponse,
+    word_tok: &Option<Arc<WordTokenizer>>,
+) -> Option<Vec<String>> {
+    match domain {
+        "text8" => {
+            let tok = CharTokenizer;
+            Some(resp.samples.iter().map(|s| tok.decode(s)).collect())
+        }
+        "wiki" => word_tok.as_ref().map(|t| resp.samples.iter().map(|s| t.decode(s)).collect()),
+        _ => None,
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Service,
+    manifest: Arc<Manifest>,
+    word_tok: Option<Arc<WordTokenizer>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Err(e) => render_error(&format!("{e:#}"), false),
+            Ok(WireRequest::Ping) => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
+            Ok(WireRequest::Metrics) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", Json::str(service.metrics.report())),
+                ("samples_per_sec", Json::num(service.metrics.samples.per_second())),
+                ("completed", Json::num(service.metrics.requests_completed.get() as f64)),
+                ("rejected", Json::num(service.metrics.requests_rejected.get() as f64)),
+            ])
+            .to_string(),
+            Ok(WireRequest::Info) => {
+                let domains = manifest.domain_names();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("domains", Json::arr(domains.iter().map(|d| Json::str(d.clone())))),
+                    ("artifacts", Json::num(manifest.artifacts.len() as f64)),
+                ])
+                .to_string()
+            }
+            Ok(WireRequest::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+            }
+            Ok(WireRequest::Generate { request, decode }) => {
+                let domain = request.domain.clone();
+                match service.submit(request) {
+                    Err(_) => render_error("queue full", true),
+                    Ok(rx) => match rx.recv() {
+                        Ok(Ok(resp)) => {
+                            let texts =
+                                if decode { decode_samples(&domain, &resp, &word_tok) } else { None };
+                            render_response(&resp, texts)
+                        }
+                        Ok(Err(msg)) => render_error(&msg, false),
+                        Err(_) => render_error("coordinator gone", false),
+                    },
+                }
+            }
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Criterion-style micro-benchmark harness (criterion is not vendored).
+//!
+//! Warm-up, multi-iteration timed samples, mean/median/p95 and a throughput
+//! line. Used by the `rust/benches/*.rs` table harnesses and `hotpath.rs`.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    pub iters_per_sample: u32,
+}
+
+impl BenchStats {
+    fn per_iter_ns(&self) -> Vec<f64> {
+        self.samples
+            .iter()
+            .map(|d| d.as_nanos() as f64 / self.iters_per_sample as f64)
+            .collect()
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let v = self.per_iter_ns();
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        percentile(&mut self.per_iter_ns(), 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&mut self.per_iter_ns(), 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  median {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples.len(),
+            self.iters_per_sample
+        )
+    }
+}
+
+fn percentile(v: &mut [f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// The harness. Runs `f` for `warmup`, then collects `samples` timed samples
+/// of `iters` iterations each.
+pub struct Bench {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            min_sample_time: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(20),
+            samples: 5,
+            min_sample_time: Duration::from_millis(10),
+        }
+    }
+
+    /// Benchmark a closure; `f` is called once per iteration.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warm-up and iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut calls: u64 = 0;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            f();
+            calls += 1;
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls as f64;
+        let iters = ((self.min_sample_time.as_secs_f64() / per_call).ceil() as u64).clamp(1, 1 << 24) as u32;
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed());
+        }
+        let stats = BenchStats { name: name.to_string(), samples, iters_per_sample: iters };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench { warmup: Duration::from_millis(5), samples: 3, min_sample_time: Duration::from_millis(2) };
+        let mut acc = 0u64;
+        let stats = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(stats.mean_ns() > 0.0);
+        assert_eq!(stats.samples.len(), 3);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e10).contains("s"));
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_nanos(100),
+                Duration::from_nanos(200),
+                Duration::from_nanos(900),
+            ],
+            iters_per_sample: 1,
+        };
+        assert!(s.median_ns() <= s.p95_ns());
+        assert!(s.mean_ns() >= 100.0 && s.mean_ns() <= 900.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands, with generated `--help` text. Declarative enough for the
+//! `wsfm` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub name: String,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: impl Into<String>, about: &'static str) -> Self {
+        Cli { name: name.into(), about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "OPTIONS:");
+        for o in &self.opts {
+            let kind = if o.is_flag { "".to_string() } else { " <value>".to_string() };
+            let def = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{kind}\n      {}{def}", o.name, o.help);
+        }
+        s
+    }
+
+    /// Parse a token list (without the program/subcommand name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // Fill defaults; check required.
+        for o in &self.opts {
+            if o.is_flag {
+                continue;
+            }
+            if !args.values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required option --{}", o.name)),
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be a number, got {:?}", self.get(name)))
+    }
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "a test command")
+            .opt("count", "5", "how many")
+            .req("name", "who")
+            .flag("verbose", "talk more")
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = cli().parse(&toks("--name alice")).unwrap();
+        assert_eq!(a.get("name"), "alice");
+        assert_eq!(a.get_usize("count").unwrap(), 5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_and_flags_and_positional() {
+        let a = cli().parse(&toks("--count=9 --verbose --name=bob extra1 extra2")).unwrap();
+        assert_eq!(a.get_usize("count").unwrap(), 9);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&toks("--count 1")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&toks("--name x --bogus 1")).is_err());
+    }
+
+    #[test]
+    fn value_missing_errors() {
+        assert!(cli().parse(&toks("--name")).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cli().parse(&toks("--name x --verbose=1")).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--count"));
+        assert!(h.contains("default: 5"));
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let a = cli().parse(&toks("--name x --count zebra")).unwrap();
+        assert!(a.get_usize("count").is_err());
+    }
+}

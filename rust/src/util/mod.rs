@@ -1,0 +1,9 @@
+//! In-tree substrates replacing unavailable crates (DESIGN.md §2):
+//! JSON codec, CLI parser, micro-benchmark harness, property-testing
+//! framework, and a tiny logger.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;

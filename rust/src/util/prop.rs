@@ -1,0 +1,215 @@
+//! Property-based testing mini-framework (proptest is not vendored).
+//!
+//! Randomized-input properties with deterministic seeding and linear input
+//! shrinking: on failure, the framework retries with "smaller" versions of
+//! the failing case (halving sizes / values) and reports the smallest
+//! reproduction found. Used across the coordinator invariants (batching,
+//! routing, state) per the repo testing strategy.
+
+use crate::core::rng::Pcg64;
+
+/// Number of cases per property (override with WSFM_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("WSFM_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+/// A value generator + shrinker.
+pub trait Strategy {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller versions of `v` (ordered, most aggressive first).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs; panics with the smallest
+/// failing input found after shrinking.
+pub fn check<S: Strategy, F: Fn(&S::Value) -> Result<(), String>>(name: &str, strat: S, prop: F) {
+    let seed = std::env::var("WSFM_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE_u64);
+    let mut rng = Pcg64::new(seed);
+    for case in 0..default_cases() {
+        let v = strat.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Shrink loop: greedily walk to smaller failing inputs.
+            let mut cur = v;
+            let mut cur_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in strat.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}):\n  input: {cur:?}\n  error: {cur_msg}",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in strategies
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi].
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Strategy for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u32) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in [lo, hi).
+pub struct F64Range(pub f64, pub f64);
+
+impl Strategy for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        self.0 + rng.uniform() * (self.1 - self.0)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.0 + self.1) / 2.0;
+        if (*v - self.0).abs() > 1e-9 {
+            vec![self.0, (self.0 + *v) / 2.0, mid.min(*v)]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec of values from an element strategy, length in [0, max_len].
+pub struct VecOf<S>(pub S, pub usize);
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<S::Value> {
+        let len = rng.below(self.1 as u32 + 1) as usize;
+        (0..len).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+        // Shrink one element.
+        for (i, elem) in v.iter().enumerate().take(4) {
+            for cand in self.0.shrink(elem) {
+                let mut w = v.clone();
+                w[i] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("usize in range", UsizeRange(3, 9), |&v| {
+            if (3..=9).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_shrunk_input() {
+        check("always fails above 0", UsizeRange(0, 100), |&v| {
+            if v == 0 {
+                Ok(())
+            } else {
+                Err("nope".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // Property fails for v >= 10; the shrinker should land near 10.
+        let strat = UsizeRange(0, 1000);
+        let mut failed_at = None;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("fails >= 10", strat, |&v| if v < 10 { Ok(()) } else { Err(format!("v={v}")) });
+        }));
+        if let Err(e) = result {
+            let msg = e.downcast_ref::<String>().cloned().unwrap_or_default();
+            // Extract the shrunk input from the panic message.
+            if let Some(pos) = msg.find("input: ") {
+                let rest = &msg[pos + 7..];
+                let num: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                failed_at = num.parse::<usize>().ok();
+            }
+        }
+        let v = failed_at.expect("property should have failed");
+        assert!(v >= 10 && v <= 20, "shrunk to {v}, expected near 10");
+    }
+
+    #[test]
+    fn vec_strategy_lengths() {
+        let strat = VecOf(UsizeRange(0, 5), 8);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let v = strat.generate(&mut rng);
+            assert!(v.len() <= 8);
+            assert!(v.iter().all(|&x| x <= 5));
+        }
+    }
+
+    #[test]
+    fn pair_strategy_shrinks_both_sides() {
+        let strat = Pair(UsizeRange(0, 10), F64Range(0.0, 1.0));
+        let shrunk = strat.shrink(&(5, 0.7));
+        assert!(!shrunk.is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! Cross-language consistency: the Rust data generators must match the
+//! distributions of the Python generators that trained the models
+//! (DESIGN.md §2 — same constants, same grammar, independent RNGs).
+//!
+//! These tests compare summary statistics of the Rust generators against
+//! the *materialized* Python corpora in `artifacts/` (skipped when absent).
+
+use wsfm::core::rng::Pcg64;
+use wsfm::data::{corpus, textgen, two_moons};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn text8_char_frequencies_match_python_corpus() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let py = match corpus::load_text8(&dir.join("text8_corpus.txt")) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("skipping: text8 corpus not built");
+            return;
+        }
+    };
+    let rust_corpus = textgen::corpus(120_000, 99);
+    let rs = wsfm::data::tokenizer::CharTokenizer.encode(&rust_corpus).unwrap();
+
+    let freq = |toks: &[i32]| -> Vec<f64> {
+        let mut c = vec![0f64; 27];
+        for &t in toks {
+            c[t as usize] += 1.0;
+        }
+        let n = toks.len() as f64;
+        c.iter().map(|x| x / n).collect()
+    };
+    let fp = freq(&py[..py.len().min(200_000)]);
+    let fr = freq(&rs);
+    // Total variation distance between char distributions must be tiny —
+    // the two generators implement the same grammar.
+    let tv: f64 = fp.iter().zip(&fr).map(|(a, b)| (a - b).abs()).sum::<f64>() / 2.0;
+    assert!(tv < 0.02, "char TV distance {tv}");
+}
+
+#[test]
+fn two_moons_histogram_matches_mirrored_generator() {
+    // Rust-vs-Rust seeds differ but distribution identical; and if the
+    // python-trained artifacts exist, the trained cold model's samples are
+    // checked against the rust target generator in integration.rs. Here:
+    // pin the quantization function against golden values (shared with
+    // python's quantize_moons).
+    assert_eq!(two_moons::quantize(0.0, 0.0), [45, 48]);
+    assert_eq!(two_moons::quantize(1.0, 0.5), [82, 80]);
+    assert_eq!(two_moons::quantize(-1.0, 1.0), [9, 112]);
+    // And the full sampler stays distributionally stable across seeds.
+    let mut a_rng = Pcg64::new(1);
+    let mut b_rng = Pcg64::new(2);
+    let a = two_moons::sample_batch(6000, &mut a_rng);
+    let b = two_moons::sample_batch(6000, &mut b_rng);
+    let d = wsfm::eval::skl::skl_points(&a, &b);
+    assert!(d < 0.25, "self-SKL {d}");
+}
+
+#[test]
+fn wiki_vocab_loads_and_covers_corpus() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let Ok(vocab_text) = std::fs::read_to_string(dir.join("wiki_vocab.json")) else {
+        eprintln!("skipping: wiki not built");
+        return;
+    };
+    let tok = wsfm::data::tokenizer::WordTokenizer::from_json(&vocab_text).unwrap();
+    assert_eq!(tok.vocab_size(), 256);
+    let stream = corpus::load_i32_stream(&dir.join("wiki_corpus.bin")).unwrap();
+    assert!(stream.iter().all(|&t| (0..256).contains(&t)));
+    // Round-trip a window through decode/encode.
+    let window = &stream[..64];
+    let text = tok.decode(window);
+    let back = tok.encode(&text);
+    assert_eq!(back, window);
+}
+
+#[test]
+fn image_train_set_matches_shape_constants() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let Ok(gray) = corpus::load_u8_matrix(&dir.join("img_gray_train.bin"), 256) else {
+        eprintln!("skipping: img_gray not built");
+        return;
+    };
+    assert!(!gray.is_empty());
+    for img in gray.iter().take(50) {
+        assert!(img.iter().all(|&t| (0..32).contains(&t)));
+    }
+    // Python-rendered and Rust-rendered images live in the same value
+    // range with similar global statistics.
+    let mut rng = Pcg64::new(0);
+    let (rust_imgs, _) = wsfm::data::shapes::batch_gray(200, &mut rng);
+    let mean = |set: &[Vec<i32>]| -> f64 {
+        set.iter().flat_map(|v| v.iter()).map(|&t| t as f64).sum::<f64>()
+            / (set.len() * set[0].len()) as f64
+    };
+    let mp = mean(&gray[..200.min(gray.len())]);
+    let mr = mean(&rust_imgs);
+    assert!((mp - mr).abs() < 4.0, "mean tokens: python {mp} vs rust {mr}");
+}
