@@ -1,44 +1,79 @@
 //! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf) + update-rule ablation.
 //!
-//! Measures the L3 components around the PJRT engine call:
-//! categorical sampling, batcher offer/flush, queue handoff, JSON protocol
-//! encode/decode — and the engine step itself per domain/batch, so the
-//! "coordinator must not be the bottleneck" target is quantified.
+//! Measures the L3 components around the PJRT engine call — categorical
+//! sampling (scalar, substream-sequential, and row-parallel), the sampling
+//! loop's channel round-trip cost (per-step vs engine-resident), batcher
+//! offer/flush, queue handoff, JSON protocol encode/decode — and the
+//! engine step itself per domain/batch, so the "coordinator must not be
+//! the bottleneck" target is quantified.
+//!
+//! Results additionally land in `BENCH_hotpath.json` (benchmark name →
+//! mean ns/iter) so the perf trajectory is tracked across PRs.
 //!
 //! `cargo bench --bench hotpath`
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 use std::time::Instant;
 use wsfm::coordinator::batcher::{Batcher, FlushPolicy};
 use wsfm::coordinator::request::{DraftSpec, GenRequest};
 use wsfm::core::prob;
 use wsfm::core::rng::Pcg64;
 use wsfm::core::schedule::WarpMode;
+use wsfm::core::tensor::TokenBatch;
+use wsfm::core::workers::WorkerPool;
 use wsfm::harness::common::Env;
-use wsfm::runtime::Executor;
-use wsfm::util::bench::{black_box, Bench};
+use wsfm::runtime::{ArtifactMeta, Executor, LoopReport, LoopScratch, LoopSpec, TensorSpec};
+use wsfm::sampler::{sample_warm, sample_warm_stepwise, SamplerParams};
+use wsfm::util::bench::{black_box, Bench, BenchStats};
+use wsfm::util::json::Json;
 
-fn bench_l3_components() {
+/// Accumulate a finished benchmark into the machine-readable results.
+fn rec(results: &mut Vec<(String, f64)>, stats: BenchStats) {
+    results.push((stats.name.clone(), stats.mean_ns()));
+}
+
+fn bench_l3_components(results: &mut Vec<(String, f64)>) {
     let b = Bench::default();
 
     // 1. Categorical sampling over a [32, 64, 27] probs tensor — the only
-    //    per-token L3 work per Euler step.
+    //    per-token L3 work per Euler step. Scalar baseline first.
     let mut rng = Pcg64::new(0);
     let vocab = 27;
     let rows = 32 * 64;
     let probs: Vec<f32> = (0..rows * vocab).map(|_| rng.uniform_f32() + 0.01).collect();
     let mut out = vec![0i32; rows];
-    b.run("categorical_batch 32x64x27", || {
+    rec(results, b.run("categorical_batch 32x64x27", || {
         prob::categorical_batch(black_box(&probs), vocab, &mut out, &mut rng);
-    });
+    }));
 
-    // Larger image-shaped tensor.
+    // Larger image-shaped tensor: scalar vs substream vs parallel. The
+    // substream path (one stateless Pcg64 per row) is the determinism
+    // contract that makes the parallel path bitwise-reproducible.
     let vocab2 = 32;
     let rows2 = 16 * 256;
     let probs2: Vec<f32> = (0..rows2 * vocab2).map(|_| rng.uniform_f32() + 0.01).collect();
     let mut out2 = vec![0i32; rows2];
-    b.run("categorical_batch 16x256x32", || {
+    rec(results, b.run("categorical_batch 16x256x32", || {
         prob::categorical_batch(black_box(&probs2), vocab2, &mut out2, &mut rng);
-    });
+    }));
+    let mut step = 0u64;
+    rec(results, b.run("categorical_batch_seeded 16x256x32", || {
+        prob::categorical_batch_seeded(black_box(&probs2), vocab2, &mut out2, 42, step);
+        step += 1;
+    }));
+    let single = WorkerPool::new(1);
+    rec(results, b.run("categorical_batch_par 16x256x32 t1", || {
+        prob::categorical_batch_par(black_box(&probs2), vocab2, &mut out2, 42, step, &single);
+        step += 1;
+    }));
+    let pool = WorkerPool::shared();
+    // "shared-tN" keeps the key distinct from the t1 baseline even when
+    // the machine (or WSFM_WORKERS) only offers one worker.
+    rec(results, b.run(&format!("categorical_batch_par 16x256x32 shared-t{}", pool.threads()), || {
+        prob::categorical_batch_par(black_box(&probs2), vocab2, &mut out2, 42, step, pool);
+        step += 1;
+    }));
 
     // 2. Batcher offer+flush cycle.
     let mk_req = |i: u64| GenRequest {
@@ -53,7 +88,7 @@ fn bench_l3_components() {
         seed: i,
         submitted: Instant::now(),
     };
-    b.run("batcher offer x32 + flush", || {
+    rec(results, b.run("batcher offer x32 + flush", || {
         let mut batcher =
             Batcher::new(FlushPolicy { max_batch: 32, max_wait: std::time::Duration::from_secs(1) });
         for i in 0..32 {
@@ -62,23 +97,221 @@ fn bench_l3_components() {
             }
         }
         black_box(batcher.flush_all().len());
-    });
+    }));
 
     // 3. Wire protocol encode/decode.
     let line = r#"{"cmd":"generate","domain":"text8","tag":"ws_t080","draft":"lstm","n_samples":4,"t0":0.8,"steps":1024,"seed":7,"decode":true}"#;
-    b.run("protocol parse_request", || {
+    rec(results, b.run("protocol parse_request", || {
         black_box(wsfm::server::protocol::parse_request(black_box(line)).unwrap());
-    });
+    }));
 
     // 4. RNG noise fill (draft-model input generation, 32x64x27 gumbel).
     let mut noise = vec![0.0f32; 32 * 64 * 27];
-    b.run("gumbel fill 32x64x27", || {
+    rec(results, b.run("gumbel fill 32x64x27", || {
         rng.fill_gumbel_f32(&mut noise);
         black_box(noise[0]);
-    });
+    }));
 }
 
-fn bench_engine_steps(env: &Env) {
+// ---------------------------------------------------------------------------
+// Sampling-loop round-trip cost (mock executor, no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Analytic drift denoiser used to isolate loop/coordination overhead.
+struct LoopMock {
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    calls: AtomicUsize,
+}
+
+impl LoopMock {
+    fn new(batch: usize, seq_len: usize, vocab: usize) -> Self {
+        LoopMock { batch, seq_len, vocab, calls: AtomicUsize::new(0) }
+    }
+}
+
+impl Executor for LoopMock {
+    fn step_into(
+        &self,
+        _a: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
+        out.clear();
+        out.reserve(tokens.len() * self.vocab);
+        let base = coef / self.vocab as f32;
+        for &tok in tokens {
+            for j in 0..self.vocab {
+                let stay = if j as i32 == tok { 1.0 - coef } else { 0.0 };
+                out.push(stay + base);
+            }
+        }
+        Ok(())
+    }
+
+    fn draft(&self, _a: &str, _n: &[f32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::bail!("no drafts")
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        Ok(ArtifactMeta {
+            name: artifact.to_string(),
+            hlo_file: String::new(),
+            domain: "mock".into(),
+            kind: "step".into(),
+            tag: "cold".into(),
+            draft: None,
+            batch: self.batch,
+            seq_len: self.seq_len,
+            vocab: self.vocab,
+            t0: Some(0.0),
+            latent_dim: None,
+            inputs: vec![TensorSpec {
+                name: "x_t".into(),
+                shape: vec![self.batch, self.seq_len],
+                dtype: "s32".into(),
+            }],
+            outputs: vec![TensorSpec {
+                name: "probs".into(),
+                shape: vec![self.batch, self.seq_len, self.vocab],
+                dtype: "f32".into(),
+            }],
+        })
+    }
+}
+
+/// A [`LoopMock`] behind a dedicated thread + mpsc channel — the same
+/// shape as the production engine thread, so the difference between the
+/// per-step path (`sample_warm_stepwise`: one round-trip *per Euler step*,
+/// plus a tokens copy and a fresh probs vec each crossing) and the
+/// engine-resident path (`sample_warm` via `run_loop`: one round-trip per
+/// *run*) is exactly the overhead the tentpole removes.
+enum WireReq {
+    Step { tokens: Vec<i32>, t: f32, h: f32, warp: f32, resp: mpsc::Sender<anyhow::Result<Vec<f32>>> },
+    Loop { spec: LoopSpec, tokens: Vec<i32>, resp: mpsc::Sender<anyhow::Result<(Vec<i32>, LoopReport)>> },
+    Stop,
+}
+
+struct ChannelExec {
+    tx: mpsc::Sender<WireReq>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl ChannelExec {
+    fn spawn(batch: usize, seq_len: usize, vocab: usize) -> ChannelExec {
+        let (tx, rx) = mpsc::channel::<WireReq>();
+        std::thread::spawn(move || {
+            let mock = LoopMock::new(batch, seq_len, vocab);
+            let mut scratch = LoopScratch::default();
+            while let Ok(req) = rx.recv() {
+                match req {
+                    WireReq::Step { tokens, t, h, warp, resp } => {
+                        let _ = resp.send(mock.step("m", &tokens, t, h, warp));
+                    }
+                    WireReq::Loop { spec, mut tokens, resp } => {
+                        let r = mock
+                            .run_loop(&spec, &mut tokens, &mut scratch)
+                            .map(|rep| (tokens, rep));
+                        let _ = resp.send(r);
+                    }
+                    WireReq::Stop => break,
+                }
+            }
+        });
+        ChannelExec { tx, batch, seq_len, vocab }
+    }
+
+    fn stop(&self) {
+        let _ = self.tx.send(WireReq::Stop);
+    }
+}
+
+impl Executor for ChannelExec {
+    fn step(&self, _a: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> anyhow::Result<Vec<f32>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(WireReq::Step { tokens: tokens.to_vec(), t, h, warp, resp })
+            .map_err(|_| anyhow::anyhow!("bench engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("bench engine thread gone"))?
+    }
+
+    fn draft(&self, _a: &str, _n: &[f32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::bail!("no drafts")
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        LoopMock::new(self.batch, self.seq_len, self.vocab).meta(artifact)
+    }
+
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        _scratch: &mut LoopScratch,
+    ) -> anyhow::Result<LoopReport> {
+        let (resp, rx) = mpsc::channel();
+        let staged = std::mem::take(tokens);
+        self.tx
+            .send(WireReq::Loop { spec: spec.clone(), tokens: staged, resp })
+            .map_err(|_| anyhow::anyhow!("bench engine thread gone"))?;
+        let (final_tokens, report) =
+            rx.recv().map_err(|_| anyhow::anyhow!("bench engine thread gone"))??;
+        *tokens = final_tokens;
+        Ok(report)
+    }
+}
+
+fn bench_loop_roundtrip(results: &mut Vec<(String, f64)>) {
+    let b = Bench::quick();
+    let (batch, seq_len, vocab, steps) = (8usize, 64usize, 27usize, 32usize);
+    let params = SamplerParams {
+        artifact: "m".into(),
+        steps_cold: steps,
+        t0: 0.0,
+        warp_mode: WarpMode::Exact,
+    };
+
+    // In-process: loop-body cost without any channel (upper bound).
+    let mock = LoopMock::new(batch, seq_len, vocab);
+    let mut rng = Pcg64::new(1);
+    rec(results, b.run(&format!("loop in-proc stepwise {steps}x {batch}x{seq_len}x{vocab}"), || {
+        let out =
+            sample_warm_stepwise(&mock, &params, TokenBatch::zeros(batch, seq_len), &mut rng, false)
+                .unwrap();
+        black_box(out.nfe);
+    }));
+    rec(results, b.run(&format!("loop in-proc resident {steps}x {batch}x{seq_len}x{vocab}"), || {
+        let out = sample_warm(&mock, &params, TokenBatch::zeros(batch, seq_len), &mut rng, false)
+            .unwrap();
+        black_box(out.nfe);
+    }));
+
+    // Cross-thread: the production shape. Stepwise pays `steps` channel
+    // round-trips + copies; resident pays exactly one.
+    let chan = ChannelExec::spawn(batch, seq_len, vocab);
+    rec(results, b.run(&format!("loop x-thread per-step {steps}x {batch}x{seq_len}x{vocab}"), || {
+        let out =
+            sample_warm_stepwise(&chan, &params, TokenBatch::zeros(batch, seq_len), &mut rng, false)
+                .unwrap();
+        black_box(out.nfe);
+    }));
+    rec(results, b.run(&format!("loop x-thread resident {steps}x {batch}x{seq_len}x{vocab}"), || {
+        let out = sample_warm(&chan, &params, TokenBatch::zeros(batch, seq_len), &mut rng, false)
+            .unwrap();
+        black_box(out.nfe);
+    }));
+    chan.stop();
+}
+
+fn bench_engine_steps(env: &Env, results: &mut Vec<(String, f64)>) {
     let b = Bench { warmup: std::time::Duration::from_millis(300), samples: 8, ..Bench::default() };
     // One engine step per served shape: the denominator for "L3 overhead".
     let shapes: [(&str, &str, usize); 4] = [
@@ -96,9 +329,30 @@ fn bench_engine_steps(env: &Env) {
         let tokens = vec![1i32; meta.batch * meta.seq_len];
         // Warm the compile cache first.
         let _ = env.engine.step(&meta.name, &tokens, 0.5, 0.05, 1.0).unwrap();
-        b.run(&format!("engine step {domain} b{batch} (N={})", meta.seq_len), || {
+        rec(results, b.run(&format!("engine step {domain} b{batch} (N={})", meta.seq_len), || {
             black_box(env.engine.step(&meta.name, &tokens, 0.5, 0.05, 1.0).unwrap());
-        });
+        }));
+
+        // The engine-resident loop over the same artifact: total time for a
+        // short warm run, one channel round-trip.
+        let params = SamplerParams {
+            artifact: meta.name.clone(),
+            steps_cold: 20,
+            t0: 0.8,
+            warp_mode: WarpMode::Literal,
+        };
+        let mut rng = Pcg64::new(0);
+        rec(results, Bench::quick().run(&format!("engine loop {domain} b{batch} 4 steps"), || {
+            let out = sample_warm(
+                &env.engine,
+                &params,
+                TokenBatch::zeros(meta.batch, meta.seq_len),
+                &mut rng,
+                false,
+            )
+            .unwrap();
+            black_box(out.nfe);
+        }));
     }
 }
 
@@ -119,18 +373,35 @@ fn bench_update_rule_ablation(env: &Env) {
     }
 }
 
+fn write_results(results: &[(String, f64)]) {
+    let pairs: Vec<(&str, Json)> =
+        results.iter().map(|(name, ns)| (name.as_str(), Json::num(*ns))).collect();
+    let doc = Json::obj(pairs);
+    match std::fs::write("BENCH_hotpath.json", format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} entries, mean ns/iter)", results.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
+}
+
 fn main() {
+    let mut results: Vec<(String, f64)> = Vec::new();
+
     println!("== L3 coordinator components ==");
-    bench_l3_components();
+    bench_l3_components(&mut results);
+
+    println!("\n== sampling-loop round-trips (mock executor, {} workers) ==", WorkerPool::shared().threads());
+    bench_loop_roundtrip(&mut results);
 
     match Env::load("artifacts") {
         Ok(env) => {
             println!("\n== engine steps (per served shape) ==");
-            bench_engine_steps(&env);
+            bench_engine_steps(&env, &mut results);
             println!("\n== update-rule ablation (cost) ==");
             bench_update_rule_ablation(&env);
             env.engine.shutdown();
         }
         Err(e) => eprintln!("artifacts not built; engine benches skipped: {e:#}"),
     }
+
+    write_results(&results);
 }

@@ -11,22 +11,31 @@ use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
 use crate::core::rng::Pcg64;
 use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
 use crate::metrics::ServingMetrics;
-use crate::runtime::engine::Executor;
+use crate::runtime::engine::{Executor, LoopScratch};
 use crate::runtime::{plan_chunks, Manifest};
-use crate::sampler::dfm::{sample_warm, SamplerParams};
+use crate::sampler::dfm::{sample_warm_with_scratch, SamplerParams};
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
 /// Executes bundles against an [`Executor`].
+///
+/// The refinement loop runs engine-resident (`Executor::run_loop`): one
+/// engine round-trip per executor chunk, not per Euler step. `scratch` is
+/// the loop staging buffer reused across bundles for in-process executors
+/// (the production [`crate::runtime::EngineHandle`] keeps its own per
+/// artifact on the engine thread); a `RefCell` because the scheduler runs
+/// on a single coordinator thread.
 pub struct Scheduler<'a> {
     pub exec: &'a dyn Executor,
     pub manifest: &'a Manifest,
     pub metrics: &'a ServingMetrics,
+    scratch: RefCell<LoopScratch>,
 }
 
 impl<'a> Scheduler<'a> {
     pub fn new(exec: &'a dyn Executor, manifest: &'a Manifest, metrics: &'a ServingMetrics) -> Self {
-        Scheduler { exec, manifest, metrics }
+        Scheduler { exec, manifest, metrics, scratch: RefCell::new(LoopScratch::default()) }
     }
 
     /// Resolve the draft model for a bundle at a given compiled batch size.
@@ -87,7 +96,14 @@ impl<'a> Scheduler<'a> {
                 warp_mode: key.warp_mode(),
             };
             let t_refine = Instant::now();
-            let out = sample_warm(self.exec, &params, init, rng, false)?;
+            let out = sample_warm_with_scratch(
+                self.exec,
+                &params,
+                init,
+                rng,
+                false,
+                &mut self.scratch.borrow_mut(),
+            )?;
             refine_time += t_refine.elapsed();
             nfe = out.nfe; // same schedule for every chunk in the bundle
             self.metrics.denoiser_calls.add(out.nfe as u64);

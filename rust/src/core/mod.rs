@@ -1,6 +1,8 @@
-//! Numeric substrates: RNG, tensors, probability ops, time schedules.
+//! Numeric substrates: RNG, tensors, probability ops, time schedules, and
+//! the scoped-thread worker pool behind the parallel sampling path.
 
 pub mod prob;
 pub mod rng;
 pub mod schedule;
 pub mod tensor;
+pub mod workers;

@@ -2,10 +2,34 @@
 //!
 //! Categorical sampling from the `[B, N, V]` transition-probability tensor
 //! returned by the fused `dfm_update` artifact is the only per-token work
-//! the coordinator does per Euler step, so it must be allocation-free and
-//! branch-light (see EXPERIMENTS.md §Perf).
+//! the coordinator does per Euler step, so it must be allocation-free,
+//! branch-light, and — for the engine-resident loop — parallelizable with
+//! a deterministic result (see EXPERIMENTS.md §Perf).
+//!
+//! Two sampling surfaces exist:
+//!
+//! * [`categorical`] / [`categorical_batch`] — draw from a caller-owned
+//!   sequential [`Pcg64`]; RNG state threads through every row in order.
+//! * [`categorical_batch_seeded`] / [`categorical_batch_par`] — every row
+//!   of every step draws from its own stateless substream
+//!   ([`Pcg64::substream`]), so rows are order- and thread-independent and
+//!   the parallel path is bitwise-identical to the sequential one.
+//!
+//! Degenerate rows: a row with no strictly-positive finite weight (all
+//! zeros, all NaN, or a non-finite total) carries no usable distribution.
+//! Every sampler here deterministically returns [`DEGENERATE_TOKEN`] for
+//! such rows instead of silently falling through — pinned by tests.
 
 use crate::core::rng::Pcg64;
+use crate::core::workers::WorkerPool;
+
+/// The documented fallback index for degenerate weight rows.
+pub const DEGENERATE_TOKEN: usize = 0;
+
+/// Rows-per-chunk floor for the parallel path: below roughly this many
+/// rows, scoped-spawn overhead beats the row work, so the pool runs the
+/// batch inline (keeping small-batch sampling spawn- and alloc-free).
+pub const PAR_MIN_ROWS: usize = 512;
 
 /// In-place softmax over a slice.
 pub fn softmax(xs: &mut [f32]) {
@@ -24,35 +48,121 @@ pub fn softmax(xs: &mut [f32]) {
     }
 }
 
-/// Sample one index from an (unnormalized, non-negative) weight row via
-/// inverse-CDF. Robust to rows that don't sum exactly to 1.
+/// Sample one index from an (unnormalized, non-negative) weight row in a
+/// **single pass** via online replacement: element `i` (with positive
+/// finite weight `w_i` and running total `S_i`) replaces the current
+/// winner with probability `w_i / S_i`, which yields exactly
+/// `P(i) = w_i / S_n`. Robust to rows that don't sum to 1; NaN and
+/// non-positive weights are skipped; a fully degenerate row returns
+/// [`DEGENERATE_TOKEN`].
+///
+/// Consumes one uniform draw per usable weight — for single-row use where
+/// that cost is irrelevant. The batched hot path ([`categorical_batch`]
+/// and friends) instead uses the one-draw-per-row inverse-CDF kernel
+/// [`sample_row_icdf`].
 #[inline]
 pub fn categorical(weights: &[f32], rng: &mut Pcg64) -> usize {
     debug_assert!(!weights.is_empty());
-    let total: f32 = weights.iter().sum();
-    let mut target = rng.uniform_f32() * total;
-    let mut last_nonzero = 0;
+    let mut total = 0.0f32;
+    let mut winner = DEGENERATE_TOKEN;
+    let mut found = false;
     for (i, &w) in weights.iter().enumerate() {
-        if w > 0.0 {
-            last_nonzero = i;
+        if w > 0.0 && w.is_finite() {
+            total += w;
+            if !found || rng.uniform_f32() * total < w {
+                winner = i;
+                found = true;
+            }
+        }
+    }
+    winner
+}
+
+/// One-draw inverse-CDF over the positive finite weights of a row, given a
+/// pre-drawn uniform `u ∈ [0, 1)`. Returns `None` for degenerate rows
+/// (no positive finite weight, or a non-finite total).
+///
+/// This is THE per-row hot kernel: two linear passes over one or two cache
+/// lines of weights, no allocation, exactly one uniform consumed (by the
+/// caller). Float round-off that pushes the target past the end resolves
+/// to the last usable index.
+#[inline]
+pub fn sample_row_icdf(weights: &[f32], u: f32) -> Option<usize> {
+    let mut total = 0.0f32;
+    for &w in weights {
+        if w > 0.0 && w.is_finite() {
+            total += w;
+        }
+    }
+    if !(total > 0.0) || !total.is_finite() {
+        return None;
+    }
+    let mut target = u * total;
+    let mut last = DEGENERATE_TOKEN;
+    let mut found = false;
+    for (i, &w) in weights.iter().enumerate() {
+        if w > 0.0 && w.is_finite() {
+            last = i;
+            found = true;
             if target < w {
-                return i;
+                return Some(i);
             }
             target -= w;
         }
     }
-    last_nonzero // float round-off fell off the end
+    found.then_some(last)
 }
 
-/// Sample every token of a `[B, N, V]` probs tensor into `out` (`[B * N]`).
-///
-/// This is THE hot loop: one pass over the probs buffer, no allocation.
+/// Sample every token of a `[B, N, V]` probs tensor into `out` (`[B * N]`),
+/// drawing one uniform per row from the shared sequential `rng`.
 pub fn categorical_batch(probs: &[f32], vocab: usize, out: &mut [i32], rng: &mut Pcg64) {
     debug_assert_eq!(probs.len(), out.len() * vocab);
     for (row_i, slot) in out.iter_mut().enumerate() {
         let row = &probs[row_i * vocab..(row_i + 1) * vocab];
-        *slot = categorical(row, rng) as i32;
+        *slot = sample_row_icdf(row, rng.uniform_f32()).unwrap_or(DEGENERATE_TOKEN) as i32;
     }
+}
+
+#[inline]
+fn sample_row_seeded(row: &[f32], seed: u64, step: u64, row_i: u64) -> i32 {
+    let u = Pcg64::substream(seed, step, row_i).uniform_f32();
+    sample_row_icdf(row, u).unwrap_or(DEGENERATE_TOKEN) as i32
+}
+
+/// Sequential reference for the substream sampling path: row `r` at Euler
+/// step `step` draws from `Pcg64::substream(seed, step, r)`. Bitwise-equal
+/// to [`categorical_batch_par`] by construction (pinned by tests).
+pub fn categorical_batch_seeded(probs: &[f32], vocab: usize, out: &mut [i32], seed: u64, step: u64) {
+    debug_assert_eq!(probs.len(), out.len() * vocab);
+    for (row_i, slot) in out.iter_mut().enumerate() {
+        let row = &probs[row_i * vocab..(row_i + 1) * vocab];
+        *slot = sample_row_seeded(row, seed, step, row_i as u64);
+    }
+}
+
+/// Parallel categorical sampling across rows on a [`WorkerPool`].
+///
+/// Rows are statically chunked; each row's draw comes from its own
+/// `(seed, step, row)` substream, so the result is bitwise-identical to
+/// [`categorical_batch_seeded`] for any worker count. Batches smaller than
+/// [`PAR_MIN_ROWS`] run inline on the calling thread (no spawn, no
+/// allocation) — large `[B, N]` shapes use all cores.
+pub fn categorical_batch_par(
+    probs: &[f32],
+    vocab: usize,
+    out: &mut [i32],
+    seed: u64,
+    step: u64,
+    pool: &WorkerPool,
+) {
+    debug_assert_eq!(probs.len(), out.len() * vocab);
+    pool.par_chunks_mut(out, PAR_MIN_ROWS, |offset, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            let row_i = offset + j;
+            let row = &probs[row_i * vocab..(row_i + 1) * vocab];
+            *slot = sample_row_seeded(row, seed, step, row_i as u64);
+        }
+    });
 }
 
 /// Argmax over a row (used for greedy final-step decoding variants).
@@ -110,6 +220,38 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_rows_hit_documented_fallback() {
+        let mut rng = Pcg64::new(9);
+        // All-zero, all-NaN, and negative rows fall back deterministically.
+        assert_eq!(categorical(&[0.0, 0.0, 0.0], &mut rng), DEGENERATE_TOKEN);
+        assert_eq!(categorical(&[f32::NAN, f32::NAN], &mut rng), DEGENERATE_TOKEN);
+        assert_eq!(categorical(&[-1.0, -2.0], &mut rng), DEGENERATE_TOKEN);
+        assert_eq!(sample_row_icdf(&[0.0, 0.0], 0.5), None);
+        assert_eq!(sample_row_icdf(&[f32::NAN, f32::NAN], 0.5), None);
+        // Non-finite weights are unusable and skipped like NaN: finite
+        // mass still samples, an all-infinite row is degenerate.
+        assert_eq!(sample_row_icdf(&[f32::INFINITY, 1.0], 0.5), Some(1));
+        assert_eq!(sample_row_icdf(&[f32::INFINITY, f32::INFINITY], 0.5), None);
+        // NaN alongside usable mass is skipped, never sampled.
+        for _ in 0..200 {
+            let k = categorical(&[f32::NAN, 1.0, 3.0], &mut rng);
+            assert!(k == 1 || k == 2);
+        }
+        for i in 0..100 {
+            let u = i as f32 / 100.0;
+            let k = sample_row_icdf(&[f32::NAN, 1.0, 3.0], u).unwrap();
+            assert!(k == 1 || k == 2);
+        }
+        // Batched samplers inherit the fallback.
+        let probs = vec![0.0f32; 2 * 3];
+        let mut out = vec![7i32; 2];
+        categorical_batch(&probs, 3, &mut out, &mut rng);
+        assert_eq!(out, vec![DEGENERATE_TOKEN as i32; 2]);
+        categorical_batch_seeded(&probs, 3, &mut out, 1, 0);
+        assert_eq!(out, vec![DEGENERATE_TOKEN as i32; 2]);
+    }
+
+    #[test]
     fn categorical_frequencies_match() {
         let mut rng = Pcg64::new(1);
         let w = vec![0.1f32, 0.2, 0.7];
@@ -122,6 +264,22 @@ mod tests {
             let f = counts[i] as f64 / n as f64;
             assert!((f - target).abs() < 0.01, "idx {i}: {f} vs {target}");
         }
+    }
+
+    #[test]
+    fn icdf_kernel_frequencies_match() {
+        // The batched kernel (one pre-drawn uniform) matches the weights.
+        let mut rng = Pcg64::new(4);
+        let w = vec![1.0f32, 3.0]; // unnormalized, sums to 4
+        let n = 40_000;
+        let ones = (0..n)
+            .filter(|_| sample_row_icdf(&w, rng.uniform_f32()) == Some(1))
+            .count();
+        let f = ones as f64 / n as f64;
+        assert!((f - 0.75).abs() < 0.01, "{f}");
+        // u -> index is monotone and covers the support.
+        assert_eq!(sample_row_icdf(&w, 0.0), Some(0));
+        assert_eq!(sample_row_icdf(&w, 0.9999), Some(1));
     }
 
     #[test]
@@ -142,6 +300,68 @@ mod tests {
         let mut out = vec![0i32; 6];
         categorical_batch(&probs, vocab, &mut out, &mut rng);
         assert!(out.iter().all(|&t| (0..4).contains(&t)));
+    }
+
+    fn random_probs(rows: usize, vocab: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..rows * vocab).map(|_| rng.uniform_f32() + 0.01).collect()
+    }
+
+    #[test]
+    fn parallel_path_is_bitwise_equal_to_sequential() {
+        // Large enough that the pool actually splits into several chunks.
+        let (rows, vocab) = (4096, 32);
+        let probs = random_probs(rows, vocab, 11);
+        let mut seq = vec![0i32; rows];
+        let mut par = vec![0i32; rows];
+        for step in [0u64, 1, 17] {
+            categorical_batch_seeded(&probs, vocab, &mut seq, 42, step);
+            for threads in [1, 2, 3, 8] {
+                let pool = WorkerPool::new(threads);
+                categorical_batch_par(&probs, vocab, &mut par, 42, step, &pool);
+                assert_eq!(seq, par, "threads={threads} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_rows_are_order_independent_and_reproducible() {
+        let (rows, vocab) = (64, 8);
+        let probs = random_probs(rows, vocab, 5);
+        let mut a = vec![0i32; rows];
+        let mut b = vec![0i32; rows];
+        categorical_batch_seeded(&probs, vocab, &mut a, 7, 3);
+        categorical_batch_seeded(&probs, vocab, &mut b, 7, 3);
+        assert_eq!(a, b);
+        categorical_batch_seeded(&probs, vocab, &mut b, 8, 3);
+        assert_ne!(a, b, "different run seed must change samples");
+        // Different steps decorrelate too.
+        categorical_batch_seeded(&probs, vocab, &mut b, 7, 4);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn seeded_batch_frequencies_match() {
+        // Distributional sanity for the substream path: over many steps,
+        // every row tracks the row's distribution.
+        let vocab = 3;
+        let w = [0.6f32, 0.3, 0.1];
+        let rows = 32;
+        let probs: Vec<f32> = (0..rows).flat_map(|_| w).collect();
+        let mut out = vec![0i32; rows];
+        let mut counts = [0usize; 3];
+        let steps = 2000;
+        for step in 0..steps {
+            categorical_batch_seeded(&probs, vocab, &mut out, 123, step);
+            for &t in &out {
+                counts[t as usize] += 1;
+            }
+        }
+        let n = (rows * steps as usize) as f64;
+        for (i, &target) in w.iter().enumerate() {
+            let f = counts[i] as f64 / n;
+            assert!((f - target as f64).abs() < 0.01, "idx {i}: {f} vs {target}");
+        }
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! In-tree scoped-thread worker pool (DESIGN.md §2 — rayon is not an
+//! allowed dependency).
+//!
+//! [`WorkerPool`] fans data-parallel row work out over `std::thread::scope`
+//! threads. Scoped spawning keeps the implementation 100% safe (borrowed
+//! slices cross into workers without `'static` gymnastics) at the cost of a
+//! few tens of microseconds of spawn overhead per invocation — negligible
+//! next to the row work it parallelizes and the engine step it hides behind
+//! (quantified in `benches/hotpath.rs`). Small inputs run inline on the
+//! calling thread, so the sampling hot path stays allocation- and
+//! spawn-free for the batch shapes unit tests use.
+//!
+//! Work partitioning is static (contiguous chunks), so any row-indexed
+//! computation whose per-row result depends only on the row index — like
+//! the per-row RNG substreams of [`crate::core::prob`] — is deterministic
+//! regardless of worker count.
+
+use std::sync::OnceLock;
+
+/// A fixed-width pool of scoped workers.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// A pool sized to the machine: `WSFM_WORKERS` if set, otherwise
+    /// `available_parallelism`.
+    pub fn with_default_parallelism() -> WorkerPool {
+        let threads = std::env::var("WSFM_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        WorkerPool::new(threads)
+    }
+
+    /// The process-wide shared pool (sized once, on first use).
+    pub fn shared() -> &'static WorkerPool {
+        static SHARED: OnceLock<WorkerPool> = OnceLock::new();
+        SHARED.get_or_init(WorkerPool::with_default_parallelism)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `data` into at most `threads` contiguous chunks of at least
+    /// `min_chunk` items and run `f(offset, chunk)` on each, in parallel.
+    ///
+    /// `offset` is the chunk's start index within `data`, so `f` can
+    /// recover absolute item indices. When one chunk suffices (small input
+    /// or a 1-thread pool) `f` runs inline on the calling thread — no
+    /// spawn, no allocation.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        let min_chunk = min_chunk.max(1);
+        // Floor division: splitting must never produce chunks below the
+        // min_chunk floor (that is exactly the regime where spawn overhead
+        // beats the work) — inputs under 2*min_chunk run inline.
+        let max_chunks = self.threads.min(n / min_chunk).max(1);
+        if max_chunks == 1 {
+            f(0, data);
+            return;
+        }
+        let chunk = (n + max_chunks - 1) / max_chunks;
+        std::thread::scope(|scope| {
+            let f = &f;
+            for (i, part) in data.chunks_mut(chunk).enumerate() {
+                let offset = i * chunk;
+                scope.spawn(move || f(offset, part));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_item_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u32; 10_000];
+        pool.par_chunks_mut(&mut data, 16, |offset, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x += (offset + j) as u32 + 1;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1, "item {i} visited wrong number of times");
+        }
+    }
+
+    #[test]
+    fn small_input_runs_inline_in_one_chunk() {
+        let pool = WorkerPool::new(8);
+        let calls = AtomicUsize::new(0);
+        let caller = std::thread::current().id();
+        let mut data = vec![0u8; 100];
+        pool.par_chunks_mut(&mut data, 512, |offset, chunk| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(offset, 0);
+            assert_eq!(chunk.len(), 100);
+            assert_eq!(std::thread::current().id(), caller);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn chunk_count_bounded_by_threads_and_min_chunk() {
+        let pool = WorkerPool::new(3);
+        let calls = AtomicUsize::new(0);
+        let mut data = vec![0u8; 1000];
+        pool.par_chunks_mut(&mut data, 10, |_, _| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        let c = calls.load(Ordering::SeqCst);
+        assert!(c >= 2 && c <= 3, "chunks = {c}");
+
+        // min_chunk dominates when items are scarce.
+        let calls2 = AtomicUsize::new(0);
+        let mut data2 = vec![0u8; 25];
+        pool.par_chunks_mut(&mut data2, 10, |_, _| {
+            calls2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(calls2.load(Ordering::SeqCst) <= 3);
+    }
+
+    #[test]
+    fn empty_and_single_thread_pools() {
+        let pool = WorkerPool::new(0); // clamps to 1
+        assert_eq!(pool.threads(), 1);
+        let mut nothing: Vec<u8> = vec![];
+        pool.par_chunks_mut(&mut nothing, 1, |_, _| panic!("no work expected"));
+        assert!(WorkerPool::shared().threads() >= 1);
+    }
+}

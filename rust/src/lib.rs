@@ -16,6 +16,18 @@
 //! `1/(1-t0)` NFE reduction — lives in [`sampler`] and is exercised
 //! end-to-end by the [`coordinator`].
 //!
+//! ## The hot path
+//!
+//! The NFE guarantee only buys wall-clock if per-step overhead is
+//! negligible, so the Euler loop is **engine-resident**: [`sampler`]
+//! resolves a `LoopSpec` and ships the whole run to the engine thread in
+//! one channel round-trip (`runtime::engine::Req::RunLoop`), where
+//! per-artifact scratch buffers make the steady state allocation-free and
+//! categorical sampling fans out over a scoped-thread worker pool
+//! ([`core::workers`]) with stateless per-`(step, row)` RNG substreams —
+//! bitwise-reproducible for a given seed regardless of worker count or of
+//! where the loop runs. See EXPERIMENTS.md §Perf.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 

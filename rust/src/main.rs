@@ -116,6 +116,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
+    if let Ok(s) = engine.stats() {
+        println!("engine: {}", s.summary());
+    }
     service.shutdown();
     engine.shutdown();
     Ok(())
@@ -236,6 +239,10 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
         resp.total_time,
         resp.nfe
     );
+    // Microsecond-resolution engine counters (sub-ms steps used to
+    // truncate to 0 under the old as_millis() accounting).
+    let stats = engine.stats()?;
+    println!("engine: {}", stats.summary());
     engine.shutdown();
     Ok(())
 }

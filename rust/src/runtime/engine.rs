@@ -8,12 +8,38 @@
 //!
 //! Artifacts are compiled lazily on first use and cached for the process
 //! lifetime; `preload` warms them eagerly at startup.
+//!
+//! ## The engine-resident sampling loop
+//!
+//! The Euler refinement loop used to live in the sampler and cross the
+//! engine channel once **per step** (plus a `tokens.to_vec()` copy and a
+//! fresh `[B, N, V]` probs allocation each time). `Req::RunLoop` moves
+//! the whole loop onto the engine thread: schedule + init tokens go in,
+//! final tokens (+ optional trace snapshots) come out — **one** channel
+//! round-trip per run, with per-artifact [`LoopScratch`] buffers reused
+//! across steps and across runs, and categorical sampling parallelized
+//! over rows with deterministic per-row RNG substreams
+//! ([`crate::core::prob::categorical_batch_par`]). The shared loop body
+//! [`drive_loop`] also backs [`Executor::run_loop`]'s default
+//! implementation, so mock executors and the legacy per-step path sample
+//! identically (seed-parity is pinned by tests).
+//!
+//! When the `pjrt` cargo feature is off, the API-compatible
+//! [`crate::runtime::xla_stub`] stands in for the `xla` crate: the engine
+//! thread spawns and serves metadata, and compilation/execution error
+//! with a descriptive message (tests over real artifacts skip).
 
+use crate::core::prob;
+use crate::core::schedule::Schedule;
+use crate::core::workers::WorkerPool;
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla_stub as xla;
 
 /// Executable kinds the engine knows how to drive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,15 +50,176 @@ pub enum ExecutableKind {
     Draft,
 }
 
+/// Everything an engine-resident Euler run needs besides the init tokens.
+#[derive(Debug, Clone)]
+pub struct LoopSpec {
+    /// Step artifact name (fixed `[B, N]` shape).
+    pub artifact: String,
+    /// Cold-run step count (grid resolution).
+    pub steps_cold: usize,
+    /// Warm-start time (`0.0` = cold DFM).
+    pub t0: f64,
+    /// Pre-resolved warp factor (`WarpMode::warp_factor(t0)`).
+    pub warp: f32,
+    /// Run seed. Every `(step, row)` categorical draw derives its own
+    /// substream from it (`Pcg64::substream`), making results independent
+    /// of worker count and of where the loop runs.
+    pub seed: u64,
+    /// Capture per-step token snapshots (Fig. 5/7 dumps; costs one
+    /// `[B, N]` clone per step, so off on the serving path).
+    pub want_trace: bool,
+}
+
+/// Reusable scratch for the sampling loop. In steady state the loop
+/// performs **zero heap allocations per Euler step**: the probs buffer is
+/// written in place every iteration and retains its `B·N·V` capacity
+/// across steps (and, for the engine-resident path, across runs — the
+/// engine keeps one per artifact). Pinned by the buffer-reuse test.
+#[derive(Debug, Default)]
+pub struct LoopScratch {
+    /// `[B * N * V]` probs output staging, reused across steps.
+    pub probs: Vec<f32>,
+}
+
+/// What a loop run reports besides the final tokens.
+#[derive(Debug, Clone)]
+pub struct LoopReport {
+    /// Denoiser evaluations performed (`== Schedule::nfe()` by construction).
+    pub nfe: usize,
+    /// Wall-clock of the refinement loop.
+    pub elapsed: Duration,
+    /// `(time, tokens)` snapshots including the initial state, when
+    /// `want_trace` was set.
+    pub snapshots: Option<Vec<(f64, Vec<i32>)>>,
+}
+
+/// Drive the Euler CTMC loop over a step callback: the single loop body
+/// shared by the engine thread ([`Engine::exec_loop`]) and the default
+/// [`Executor::run_loop`], so every executor samples identically.
+///
+/// `step_into` must fill `out` with the `[B, N, V]` transition probs for
+/// the current tokens; `tokens` is resampled in place after every step.
+pub fn drive_loop<F>(
+    spec: &LoopSpec,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    tokens: &mut Vec<i32>,
+    scratch: &mut LoopScratch,
+    mut step_into: F,
+) -> Result<LoopReport>
+where
+    F: FnMut(&[i32], f32, f32, f32, &mut Vec<f32>) -> Result<()>,
+{
+    if tokens.len() != batch * seq_len {
+        bail!(
+            "loop {}: tokens len {} != {}x{}",
+            spec.artifact,
+            tokens.len(),
+            batch,
+            seq_len
+        );
+    }
+    let schedule = Schedule::new(spec.steps_cold, spec.t0)?;
+    let want = batch * seq_len * vocab;
+    scratch.probs.clear();
+    scratch.probs.reserve(want); // one-time growth; steady state reuses it
+
+    let start = Instant::now();
+    let mut snapshots = spec.want_trace.then(|| {
+        let mut v = Vec::with_capacity(schedule.nfe() + 1);
+        v.push((schedule.t0, tokens.clone()));
+        v
+    });
+    for i in 0..schedule.nfe() {
+        let t = schedule.times[i] as f32;
+        let h = schedule.step_size(i) as f32;
+        step_into(tokens.as_slice(), t, h, spec.warp, &mut scratch.probs)?;
+        if scratch.probs.len() != want {
+            bail!(
+                "artifact {} returned {} probs, want {}",
+                spec.artifact,
+                scratch.probs.len(),
+                want
+            );
+        }
+        prob::categorical_batch_par(
+            &scratch.probs,
+            vocab,
+            tokens.as_mut_slice(),
+            spec.seed,
+            i as u64,
+            WorkerPool::shared(),
+        );
+        if let Some(sn) = snapshots.as_mut() {
+            sn.push((schedule.times[i] + schedule.step_size(i), tokens.clone()));
+        }
+    }
+    Ok(LoopReport { nfe: schedule.nfe(), elapsed: start.elapsed(), snapshots })
+}
+
 /// Abstract executor — the seam between the coordinator/sampler and PJRT.
 /// Tests substitute a mock; production uses [`EngineHandle`].
+///
+/// `step` and `step_into` are defined in terms of each other: implement at
+/// least one (allocation-sensitive executors should implement `step_into`).
 pub trait Executor: Send + Sync {
-    /// Run a fused denoise+update step artifact.
-    fn step(&self, artifact: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>>;
+    /// Run a fused denoise+update step artifact, returning a fresh buffer.
+    fn step(&self, artifact: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.step_into(artifact, tokens, t, h, warp, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run a step artifact, writing probs into `out` (cleared and refilled;
+    /// capacity is retained across calls so steady-state use is
+    /// allocation-free).
+    fn step_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let probs = self.step(artifact, tokens, t, h, warp)?;
+        out.clear();
+        out.extend_from_slice(&probs);
+        Ok(())
+    }
+
     /// Run a draft sampler artifact with externally-generated noise.
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>>;
+
     /// Metadata lookup.
     fn meta(&self, artifact: &str) -> Result<ArtifactMeta>;
+
+    /// Run the whole Euler sampling loop, resampling `tokens` in place.
+    ///
+    /// The default drives [`drive_loop`] through `step_into` using the
+    /// caller's `scratch` — zero per-step allocations when `step_into` is
+    /// allocation-free. [`EngineHandle`] overrides this to ship the loop
+    /// to the engine thread in a single channel round-trip (the engine
+    /// keeps its own persistent per-artifact scratch; the caller's is then
+    /// untouched). On error, `tokens` content is unspecified.
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        scratch: &mut LoopScratch,
+    ) -> Result<LoopReport> {
+        let meta = self.meta(&spec.artifact)?;
+        drive_loop(
+            spec,
+            meta.batch,
+            meta.seq_len,
+            meta.vocab,
+            tokens,
+            scratch,
+            |toks, t, h, warp, out| self.step_into(&spec.artifact, toks, t, h, warp, out),
+        )
+    }
 }
 
 /// Marker alias used in public re-exports.
@@ -44,19 +231,49 @@ pub type StepFn = dyn Executor;
 
 enum Req {
     Step { name: String, tokens: Vec<i32>, t: f32, h: f32, warp: f32, resp: mpsc::Sender<Result<Vec<f32>>> },
+    /// The engine-resident Euler loop: one request per *run*, not per step.
+    RunLoop { spec: LoopSpec, tokens: Vec<i32>, resp: mpsc::Sender<Result<(Vec<i32>, LoopReport)>> },
     Draft { name: String, noise: Vec<f32>, resp: mpsc::Sender<Result<Vec<i32>>> },
     Preload { names: Vec<String>, resp: mpsc::Sender<Result<()>> },
     Stats { resp: mpsc::Sender<EngineStats> },
     Shutdown,
 }
 
-/// Compile/exec statistics (surfaced in `wsfm info` and §Perf).
+/// Compile/exec statistics (surfaced in `wsfm selfcheck`/`serve` and
+/// EXPERIMENTS.md §Perf). Counters are microseconds — engine steps on
+/// small shapes run well under a millisecond, and the old `as_millis()`
+/// counters truncated them all to zero.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub compiled: usize,
     pub executions: u64,
-    pub compile_ms_total: u64,
-    pub exec_ms_total: u64,
+    /// Engine-resident loop runs completed (each covering `nfe` executions).
+    pub loop_runs: u64,
+    pub compile_us_total: u64,
+    pub exec_us_total: u64,
+}
+
+impl EngineStats {
+    pub fn compile_ms(&self) -> f64 {
+        self.compile_us_total as f64 / 1e3
+    }
+
+    pub fn exec_ms(&self) -> f64 {
+        self.exec_us_total as f64 / 1e3
+    }
+
+    /// One-line human rendering (used by the CLI).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} compiled in {:.1} ms; {} execs ({} loop runs) in {:.1} ms ({:.1} µs/exec)",
+            self.compiled,
+            self.compile_ms(),
+            self.executions,
+            self.loop_runs,
+            self.exec_ms(),
+            self.exec_us_total as f64 / (self.executions.max(1) as f64)
+        )
+    }
 }
 
 /// The engine proper (lives on the engine thread; `!Send` by content).
@@ -64,13 +281,21 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Per-artifact loop scratch, reused across steps and runs.
+    scratch: HashMap<String, LoopScratch>,
     stats: EngineStats,
 }
 
 impl Engine {
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            scratch: HashMap::new(),
+            stats: EngineStats::default(),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -98,41 +323,88 @@ impl Engine {
             .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.stats.compile_ms_total += start.elapsed().as_millis() as u64;
+        self.stats.compile_us_total += start.elapsed().as_micros() as u64;
         self.stats.compiled += 1;
         crate::info!("compiled {name} in {:?}", start.elapsed());
         self.cache.insert(name.to_string(), exe);
         Ok(())
     }
 
-    /// Execute a step artifact.
-    pub fn exec_step(&mut self, name: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
-        let meta = self.meta(name)?;
+    /// Execute a step artifact into `out` given its (pre-looked-up) meta.
+    /// The probs copy lands in `out` so callers can reuse one buffer across
+    /// steps; the PJRT readback itself (`to_vec`) still allocates — that is
+    /// an `xla` API constraint, noted in EXPERIMENTS.md §Perf.
+    fn exec_step_with_meta(
+        &mut self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         if meta.kind != "step" {
-            bail!("artifact {name} is not a step (kind={})", meta.kind);
+            bail!("artifact {} is not a step (kind={})", meta.name, meta.kind);
         }
         let (b, n, v) = (meta.batch, meta.seq_len, meta.vocab);
         if tokens.len() != b * n {
-            bail!("step {name}: tokens len {} != {}x{}", tokens.len(), b, n);
+            bail!("step {}: tokens len {} != {}x{}", meta.name, tokens.len(), b, n);
         }
-        self.ensure_compiled(name)?;
+        self.ensure_compiled(&meta.name)?;
         let start = Instant::now();
         let x = xla::Literal::vec1(tokens)
             .reshape(&[b as i64, n as i64])
             .map_err(|e| anyhow!("reshape x_t: {e:?}"))?;
         let args =
             [x, xla::Literal::scalar(t), xla::Literal::scalar(h), xla::Literal::scalar(warp)];
-        let exe = self.cache.get(name).unwrap();
-        let result = exe.execute(&args).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let exe = self.cache.get(&meta.name).unwrap();
+        let result = exe.execute(&args).map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
         let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let probs = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let tup = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let probs = tup.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
         if probs.len() != b * n * v {
-            bail!("step {name}: output len {} != {}", probs.len(), b * n * v);
+            bail!("step {}: output len {} != {}", meta.name, probs.len(), b * n * v);
         }
+        // Move, don't copy: to_vec() already allocated this run's buffer.
+        *out = probs;
         self.stats.executions += 1;
-        self.stats.exec_ms_total += start.elapsed().as_millis() as u64;
-        Ok(probs)
+        self.stats.exec_us_total += start.elapsed().as_micros() as u64;
+        Ok(())
+    }
+
+    /// Execute a step artifact.
+    pub fn exec_step(&mut self, name: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        let meta = self.meta(name)?;
+        let mut out = Vec::new();
+        self.exec_step_with_meta(&meta, tokens, t, h, warp, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run the whole Euler loop on the engine thread (the `Req::RunLoop`
+    /// service routine). Scratch buffers persist per artifact, so
+    /// steady-state runs allocate nothing per step beyond what the PJRT
+    /// readback API imposes.
+    pub fn exec_loop(&mut self, spec: &LoopSpec, tokens: &mut Vec<i32>) -> Result<LoopReport> {
+        let meta = self.meta(&spec.artifact)?;
+        if meta.kind != "step" {
+            bail!("artifact {} is not a step (kind={})", meta.name, meta.kind);
+        }
+        self.ensure_compiled(&spec.artifact)?;
+        let mut scratch = self.scratch.remove(&spec.artifact).unwrap_or_default();
+        let result = drive_loop(
+            spec,
+            meta.batch,
+            meta.seq_len,
+            meta.vocab,
+            tokens,
+            &mut scratch,
+            |toks, t, h, warp, out| self.exec_step_with_meta(&meta, toks, t, h, warp, out),
+        );
+        self.scratch.insert(spec.artifact.clone(), scratch);
+        if result.is_ok() {
+            self.stats.loop_runs += 1;
+        }
+        result
     }
 
     /// Execute a draft artifact.
@@ -158,7 +430,7 @@ impl Engine {
             bail!("draft {name}: output len {} != {}", tokens.len(), meta.batch * meta.seq_len);
         }
         self.stats.executions += 1;
-        self.stats.exec_ms_total += start.elapsed().as_millis() as u64;
+        self.stats.exec_us_total += start.elapsed().as_micros() as u64;
         Ok(tokens)
     }
 
@@ -201,6 +473,10 @@ impl EngineHandle {
                     match req {
                         Req::Step { name, tokens, t, h, warp, resp } => {
                             let _ = resp.send(engine.exec_step(&name, &tokens, t, h, warp));
+                        }
+                        Req::RunLoop { spec, mut tokens, resp } => {
+                            let r = engine.exec_loop(&spec, &mut tokens).map(|rep| (tokens, rep));
+                            let _ = resp.send(r);
                         }
                         Req::Draft { name, noise, resp } => {
                             let _ = resp.send(engine.exec_draft(&name, &noise));
@@ -276,13 +552,33 @@ impl Executor for EngineHandle {
             .cloned()
             .with_context(|| format!("unknown artifact {artifact:?}"))
     }
+
+    /// One channel round-trip for the entire run (vs one per step through
+    /// `step`). Token storage moves to the engine thread and back, so no
+    /// copy is made; the engine's persistent per-artifact scratch is used
+    /// and the caller's `scratch` stays untouched.
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        _scratch: &mut LoopScratch,
+    ) -> Result<LoopReport> {
+        let (resp, rx) = mpsc::channel();
+        let staged = std::mem::take(tokens);
+        self.tx
+            .send(Req::RunLoop { spec: spec.clone(), tokens: staged, resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        let (final_tokens, report) = rx.recv().map_err(|_| anyhow!("engine thread gone"))??;
+        *tokens = final_tokens;
+        Ok(report)
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    // Engine tests requiring real artifacts live in rust/tests/runtime.rs
-    // (they need `make artifacts` to have run). Here we only check the
-    // handle's error paths with an empty manifest.
+    // Engine tests requiring real artifacts live in rust/tests/ (they need
+    // `make artifacts` to have run). Here we only check the handle's error
+    // paths with an empty manifest.
     use super::*;
     use std::collections::BTreeMap;
     use std::path::PathBuf;
@@ -302,6 +598,17 @@ mod tests {
         assert!(h.meta("nope").is_err());
         assert!(Executor::step(&h, "nope", &[0], 0.0, 0.1, 1.0).is_err());
         assert!(h.draft("nope", &[0.0]).is_err());
+        let spec = LoopSpec {
+            artifact: "nope".into(),
+            steps_cold: 4,
+            t0: 0.0,
+            warp: 1.0,
+            seed: 0,
+            want_trace: false,
+        };
+        let mut tokens = vec![0i32; 4];
+        let mut scratch = LoopScratch::default();
+        assert!(h.run_loop(&spec, &mut tokens, &mut scratch).is_err());
         h.shutdown();
     }
 
@@ -310,6 +617,8 @@ mod tests {
         let h = EngineHandle::spawn(empty_manifest()).unwrap();
         let s = h.stats().unwrap();
         assert_eq!(s.compiled, 0);
+        assert_eq!(s.loop_runs, 0);
+        assert!(s.summary().contains("0 compiled"));
         h.shutdown();
     }
 }

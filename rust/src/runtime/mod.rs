@@ -1,10 +1,17 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
-//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin)
+//! behind the `pjrt` cargo feature; without it, [`xla_stub`] keeps the
+//! engine API compiling (execution paths error, artifact tests skip).
 
 pub mod artifact;
 pub mod engine;
 pub mod pool;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
-pub use engine::{Engine, EngineHandle, ExecutableKind, Executor};
+pub use engine::{
+    drive_loop, Engine, EngineHandle, EngineStats, ExecutableKind, Executor, LoopReport,
+    LoopScratch, LoopSpec,
+};
 pub use pool::{best_fit, padding_cost, plan_chunks};

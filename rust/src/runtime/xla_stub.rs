@@ -1,0 +1,197 @@
+//! API-compatible stand-in for the `xla` crate (enabled when the `pjrt`
+//! cargo feature is off).
+//!
+//! The real backend needs the xla_extension native library at build time,
+//! which not every environment has. This stub mirrors exactly the slice of
+//! the `xla` API the engine uses so the whole crate — engine thread,
+//! coordinator, server, benches — compiles and unit-tests without it:
+//!
+//! * client construction succeeds (the engine thread spawns normally),
+//! * host-side [`Literal`] staging is fully functional (and unit-tested),
+//! * anything requiring the native runtime (`HloModuleProto::from_text_file`,
+//!   `PjRtClient::compile`, `PjRtLoadedExecutable::execute`) returns a
+//!   descriptive error, which surfaces as the usual "artifacts not built"
+//!   skip path in tests and harnesses.
+//!
+//! Build with `--features pjrt` to link the real crate instead; the alias
+//! in [`crate::runtime::engine`] switches over and this module is unused.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}` rendering.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: wsfm was built without the `pjrt` feature \
+         (xla_extension not linked); rebuild with `--features pjrt`"
+    ))
+}
+
+/// Host-side literal payload. Only the dtypes the engine stages (s32 tokens
+/// in, f32 probs/noise out) are represented.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// Host literal: data + dims. Functional (staging works without PJRT).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    fn numel(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { data: T::wrap(data.to_vec()), dims }
+    }
+
+    pub fn scalar<T: Element>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: vec![] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.numel() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elems) from {} elems",
+                dims,
+                want,
+                self.numel()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        // The real API unpacks a 1-tuple; the stub never produces tuples,
+        // and nothing reaches here without a successful execute().
+        Ok(self)
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+}
+
+/// Parsed HLO module handle (parsing requires the native runtime).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("parsing HLO text {:?}", path.as_ref())))
+    }
+}
+
+/// Computation handle built from a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("buffer readback"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// Client handle. Construction succeeds so the engine thread can spawn and
+/// serve manifest/metadata requests; compilation is what errors.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_staging_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[4, 4]).is_err());
+        assert!(r.to_vec::<f32>().is_err()); // dtype mismatch
+        let s = Literal::scalar(0.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn runtime_paths_error_descriptively() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap_err();
+        assert!(format!("{err:?}").contains("pjrt"));
+        assert!(HloModuleProto::from_text_file("/tmp/none.hlo.txt").is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute(&[]).is_err());
+    }
+}

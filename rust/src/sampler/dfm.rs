@@ -12,15 +12,27 @@
 //! while t < 1: probs = step(x, t, h, warp=1-t0); x ~ Cat(probs); t += h
 //! ```
 //! The softmax→velocity→Euler-transition math is *inside* the AOT artifact
-//! (the fused Pallas `dfm_update` kernel); this loop owns time stepping,
+//! (the fused Pallas `dfm_update` kernel); the loop owns time stepping,
 //! categorical sampling, RNG, and NFE accounting. The NFE is guaranteed by
 //! construction: the loop runs exactly `Schedule::nfe()` iterations.
+//!
+//! Since the engine-resident refactor, [`sample_warm`] ships the whole
+//! loop through [`Executor::run_loop`] — for [`EngineHandle`] that is one
+//! channel round-trip per run instead of one per step, with scratch
+//! buffers reused across steps (see `runtime::engine`). The RNG contract:
+//! one `next_u64` is drawn from the caller's `rng` as the *run seed*, and
+//! every `(step, row)` categorical draw derives a stateless substream from
+//! it, so tokens are bitwise-identical whether the loop runs in-process,
+//! on the engine thread, or row-parallel ([`sample_warm_stepwise`] pins
+//! this parity in tests).
+//!
+//! [`EngineHandle`]: crate::runtime::EngineHandle
 
 use crate::core::prob;
 use crate::core::rng::Pcg64;
 use crate::core::schedule::{Schedule, WarpMode};
 use crate::core::tensor::TokenBatch;
-use crate::runtime::engine::Executor;
+use crate::runtime::engine::{Executor, LoopScratch, LoopSpec};
 use crate::sampler::trace::Trace;
 use anyhow::{bail, Result};
 use std::time::Instant;
@@ -38,6 +50,20 @@ pub struct SamplerParams {
     pub warp_mode: WarpMode,
 }
 
+impl SamplerParams {
+    /// Resolve into an engine [`LoopSpec`], drawing the run seed.
+    fn loop_spec(&self, rng: &mut Pcg64, want_trace: bool) -> LoopSpec {
+        LoopSpec {
+            artifact: self.artifact.clone(),
+            steps_cold: self.steps_cold,
+            t0: self.t0,
+            warp: self.warp_mode.warp_factor(self.t0) as f32,
+            seed: rng.next_u64(),
+            want_trace,
+        }
+    }
+}
+
 /// Result of one batched sampling run.
 #[derive(Debug, Clone)]
 pub struct SampleOutput {
@@ -48,6 +74,20 @@ pub struct SampleOutput {
     pub elapsed: std::time::Duration,
     /// Optional per-step snapshots (for Fig. 5/7 dumps).
     pub trace: Option<Trace>,
+}
+
+fn check_shape(meta_batch: usize, meta_seq: usize, artifact: &str, init: &TokenBatch) -> Result<()> {
+    if meta_batch != init.batch || meta_seq != init.seq_len {
+        bail!(
+            "init shape [{}, {}] != artifact {} shape [{}, {}]",
+            init.batch,
+            init.seq_len,
+            artifact,
+            meta_batch,
+            meta_seq
+        );
+    }
+    Ok(())
 }
 
 /// Run the warm-start sampling loop from `init` (draft samples at `t0`).
@@ -62,20 +102,61 @@ pub fn sample_warm(
     rng: &mut Pcg64,
     want_trace: bool,
 ) -> Result<SampleOutput> {
+    let mut scratch = LoopScratch::default();
+    sample_warm_with_scratch(exec, params, init, rng, want_trace, &mut scratch)
+}
+
+/// [`sample_warm`] with caller-owned scratch, for callers that run many
+/// bundles (the coordinator scheduler) and want the probs staging buffer
+/// reused across runs on mock/in-process executors. For [`EngineHandle`]
+/// the scratch is unused — the engine thread keeps its own, persistent
+/// per artifact.
+///
+/// [`EngineHandle`]: crate::runtime::EngineHandle
+pub fn sample_warm_with_scratch(
+    exec: &dyn Executor,
+    params: &SamplerParams,
+    init: TokenBatch,
+    rng: &mut Pcg64,
+    want_trace: bool,
+    scratch: &mut LoopScratch,
+) -> Result<SampleOutput> {
     let meta = exec.meta(&params.artifact)?;
-    if meta.batch != init.batch || meta.seq_len != init.seq_len {
-        bail!(
-            "init shape [{}, {}] != artifact {} shape [{}, {}]",
-            init.batch,
-            init.seq_len,
-            params.artifact,
-            meta.batch,
-            meta.seq_len
-        );
-    }
+    check_shape(meta.batch, meta.seq_len, &params.artifact, &init)?;
+    let spec = params.loop_spec(rng, want_trace);
+
+    let mut x = init;
+    let report = exec.run_loop(&spec, &mut x.tokens, scratch)?;
+    let trace = report.snapshots.map(|snaps| {
+        let mut tr = Trace::new();
+        for (t, tokens) in snaps {
+            tr.push(t, &TokenBatch { batch: x.batch, seq_len: x.seq_len, tokens });
+        }
+        tr
+    });
+    Ok(SampleOutput { nfe: report.nfe, elapsed: report.elapsed, tokens: x, trace })
+}
+
+/// The legacy per-step loop: one executor call (and, for [`EngineHandle`],
+/// one channel round-trip) per Euler step. Kept as the reference
+/// implementation the engine-resident path must match bit-for-bit
+/// (seed-parity pinned by tests) and as the baseline for the loop
+/// round-trip benchmarks in `benches/hotpath.rs`.
+///
+/// [`EngineHandle`]: crate::runtime::EngineHandle
+pub fn sample_warm_stepwise(
+    exec: &dyn Executor,
+    params: &SamplerParams,
+    init: TokenBatch,
+    rng: &mut Pcg64,
+    want_trace: bool,
+) -> Result<SampleOutput> {
+    let meta = exec.meta(&params.artifact)?;
+    check_shape(meta.batch, meta.seq_len, &params.artifact, &init)?;
     let schedule = Schedule::new(params.steps_cold, params.t0)?;
     let warp = params.warp_mode.warp_factor(params.t0) as f32;
     let vocab = meta.vocab;
+    let run_seed = rng.next_u64(); // same derivation as sample_warm
 
     let start = Instant::now();
     let mut x = init;
@@ -85,14 +166,20 @@ pub fn sample_warm(
         tr
     });
 
+    let mut probs: Vec<f32> = Vec::new();
     for i in 0..schedule.nfe() {
         let t = schedule.times[i] as f32;
         let h = schedule.step_size(i) as f32;
-        let probs = exec.step(&params.artifact, &x.tokens, t, h, warp)?;
+        exec.step_into(&params.artifact, &x.tokens, t, h, warp, &mut probs)?;
         if probs.len() != x.batch * x.seq_len * vocab {
-            bail!("artifact {} returned {} probs, want {}", params.artifact, probs.len(), x.batch * x.seq_len * vocab);
+            bail!(
+                "artifact {} returned {} probs, want {}",
+                params.artifact,
+                probs.len(),
+                x.batch * x.seq_len * vocab
+            );
         }
-        prob::categorical_batch(&probs, vocab, &mut x.tokens, rng);
+        prob::categorical_batch_seeded(&probs, vocab, &mut x.tokens, run_seed, i as u64);
         if let Some(tr) = trace.as_mut() {
             tr.push(schedule.times[i] + schedule.step_size(i), &x);
         }
@@ -128,7 +215,8 @@ pub(crate) mod testutil {
     //! A mock executor implementing an *analytic* DFM over a tiny vocab:
     //! the "denoiser" always predicts a fixed target distribution `p1`.
     //! This lets sampler tests verify transport behaviour without
-    //! artifacts.
+    //! artifacts. It implements `step_into` (not `step`) so the mock hot
+    //! path is allocation-free in steady state, like the engine's.
     use super::*;
     use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
     use std::sync::atomic::{AtomicUsize, Ordering};
@@ -149,10 +237,19 @@ pub(crate) mod testutil {
     }
 
     impl Executor for MockStep {
-        fn step(&self, _a: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        fn step_into(
+            &self,
+            _a: &str,
+            tokens: &[i32],
+            t: f32,
+            h: f32,
+            warp: f32,
+            out: &mut Vec<f32>,
+        ) -> Result<()> {
             self.calls.fetch_add(1, Ordering::SeqCst);
             let v = self.vocab;
-            let mut out = Vec::with_capacity(tokens.len() * v);
+            out.clear();
+            out.reserve(tokens.len() * v);
             let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
             for &tok in tokens {
                 for j in 0..v {
@@ -160,7 +257,7 @@ pub(crate) mod testutil {
                     out.push((delta + coef * (self.p1[j] - delta)).max(0.0));
                 }
             }
-            Ok(out)
+            Ok(())
         }
 
         fn draft(&self, _a: &str, _noise: &[f32]) -> Result<Vec<i32>> {
@@ -319,6 +416,9 @@ mod tests {
         let init = TokenBatch::zeros(3, 2); // wrong batch
         let mut rng = Pcg64::new(6);
         assert!(sample_warm(&mock, &params, init, &mut rng, false).is_err());
+        let init = TokenBatch::zeros(3, 2);
+        let mut rng = Pcg64::new(6);
+        assert!(sample_warm_stepwise(&mock, &params, init, &mut rng, false).is_err());
     }
 
     #[test]
@@ -330,5 +430,83 @@ mod tests {
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn engine_resident_loop_matches_stepwise_reference() {
+        // The seed-parity contract: the run_loop path (engine-resident /
+        // default drive_loop, row-parallel sampling) and the legacy
+        // per-step loop produce bitwise-identical tokens for the same
+        // seed — warm and cold, with and without trace.
+        for (t0, steps, warp_mode) in
+            [(0.0, 24, WarpMode::Exact), (0.8, 20, WarpMode::Literal), (0.5, 40, WarpMode::Exact)]
+        {
+            let params = SamplerParams {
+                artifact: "m".into(),
+                steps_cold: steps,
+                t0,
+                warp_mode,
+            };
+            let mock_a = MockStep::new(8, 16, vec![0.2, 0.5, 0.3]);
+            let mock_b = MockStep::new(8, 16, vec![0.2, 0.5, 0.3]);
+            let mut rng_a = Pcg64::new(99);
+            let mut rng_b = Pcg64::new(99);
+            let init_a = TokenBatch::zeros(8, 16);
+            let init_b = TokenBatch::zeros(8, 16);
+            let a = sample_warm(&mock_a, &params, init_a, &mut rng_a, true).unwrap();
+            let b = sample_warm_stepwise(&mock_b, &params, init_b, &mut rng_b, true).unwrap();
+            assert_eq!(a.tokens, b.tokens, "t0={t0}");
+            assert_eq!(a.nfe, b.nfe);
+            // Entire trajectories match, not just the endpoint.
+            let (ta, tb) = (a.trace.unwrap(), b.trace.unwrap());
+            assert_eq!(ta.times, tb.times);
+            assert_eq!(ta.states, tb.states);
+            // And the caller RNGs were advanced identically.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_do_not_grow_across_steps_or_runs() {
+        // The zero-allocation steady-state contract: the probs scratch
+        // reaches B*N*V capacity once and never grows, no matter how many
+        // steps run; the token buffer is resampled in place.
+        use crate::runtime::engine::LoopSpec;
+        let mock = MockStep::new(4, 8, vec![0.25, 0.25, 0.5]);
+        let mut scratch = LoopScratch::default();
+        let spec = |steps: usize| LoopSpec {
+            artifact: "m".into(),
+            steps_cold: steps,
+            t0: 0.0,
+            warp: 1.0,
+            seed: 42,
+            want_trace: false,
+        };
+        let mut tokens = vec![0i32; 4 * 8];
+        let tokens_cap = tokens.capacity();
+        mock.run_loop(&spec(2), &mut tokens, &mut scratch).unwrap();
+        let cap_after_short = scratch.probs.capacity();
+        assert!(cap_after_short >= 4 * 8 * 3);
+        mock.run_loop(&spec(200), &mut tokens, &mut scratch).unwrap();
+        mock.run_loop(&spec(64), &mut tokens, &mut scratch).unwrap();
+        assert_eq!(
+            scratch.probs.capacity(),
+            cap_after_short,
+            "probs scratch must not grow in steady state"
+        );
+        assert_eq!(tokens.capacity(), tokens_cap, "token buffer must be resampled in place");
+        assert_eq!(tokens.len(), 4 * 8);
+    }
+
+    #[test]
+    fn step_and_step_into_defaults_agree() {
+        // MockStep implements step_into; the default step wrapper must
+        // return the same probs.
+        let mock = MockStep::new(2, 2, vec![0.5, 0.5]);
+        let tokens = vec![0i32, 1, 1, 0];
+        let direct = mock.step("m", &tokens, 0.25, 0.05, 1.0).unwrap();
+        let mut buf = vec![9.0f32; 128]; // dirty, over-sized buffer
+        mock.step_into("m", &tokens, 0.25, 0.05, 1.0, &mut buf).unwrap();
+        assert_eq!(direct, buf);
     }
 }

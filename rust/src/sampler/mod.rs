@@ -2,11 +2,18 @@
 //!
 //! [`dfm`] implements the Euler CTMC integration loop over the fused
 //! denoise+update artifacts; cold DFM is the `t0 = 0` special case of the
-//! warm sampler, so there is one loop with two entry points. [`trace`]
-//! captures per-step snapshots for the paper's Fig. 5/7/9 progress figures.
+//! warm sampler, so there is one loop with two entry points. The loop body
+//! itself is engine-resident ([`crate::runtime::engine`]): `sample_warm`
+//! resolves a `LoopSpec` and ships it through `Executor::run_loop` in one
+//! round-trip, while [`dfm::sample_warm_stepwise`] keeps the legacy
+//! one-call-per-step path as the bit-exact reference. [`trace`] captures
+//! per-step snapshots for the paper's Fig. 5/7/9 progress figures.
 
 pub mod dfm;
 pub mod trace;
 
-pub use dfm::{sample_cold, sample_warm, SampleOutput, SamplerParams};
+pub use dfm::{
+    sample_cold, sample_warm, sample_warm_stepwise, sample_warm_with_scratch, SampleOutput,
+    SamplerParams,
+};
 pub use trace::Trace;

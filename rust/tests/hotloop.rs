@@ -1,0 +1,196 @@
+//! Engine-resident sampling loop: public-API contract tests.
+//!
+//! These run without artifacts (a pure-Rust drift executor stands in for
+//! the PJRT engine) and pin the three guarantees of the refactor:
+//!
+//! 1. **Seed parity** — `sample_warm` (engine-resident `run_loop` path)
+//!    and `sample_warm_stepwise` (legacy per-step path) produce identical
+//!    tokens for the same seed.
+//! 2. **Zero steady-state allocation** — scratch capacity stops growing
+//!    after the first step and stays fixed across runs.
+//! 3. **Deterministic parallelism** — the row-parallel categorical
+//!    sampler is bitwise-equal to its sequential reference for any worker
+//!    count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use wsfm::core::prob;
+use wsfm::core::rng::Pcg64;
+use wsfm::core::schedule::WarpMode;
+use wsfm::core::tensor::TokenBatch;
+use wsfm::core::workers::WorkerPool;
+use wsfm::runtime::{ArtifactMeta, Executor, LoopScratch, LoopSpec, TensorSpec};
+use wsfm::sampler::{sample_warm, sample_warm_stepwise, SamplerParams};
+
+/// A denoiser that drifts every position toward `target_token` with rate
+/// proportional to h/(1-t), plus a little mass everywhere so sampling
+/// stays stochastic.
+struct DriftExec {
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    target_token: usize,
+    step_calls: AtomicUsize,
+}
+
+impl DriftExec {
+    fn new(batch: usize, seq_len: usize, vocab: usize, target_token: usize) -> Self {
+        DriftExec { batch, seq_len, vocab, target_token, step_calls: AtomicUsize::new(0) }
+    }
+}
+
+impl Executor for DriftExec {
+    fn step_into(
+        &self,
+        _artifact: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.step_calls.fetch_add(1, Ordering::SeqCst);
+        let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
+        out.clear();
+        out.reserve(tokens.len() * self.vocab);
+        for &tok in tokens {
+            for j in 0..self.vocab {
+                let stay = if j as i32 == tok { 1.0 - coef } else { 0.0 };
+                let pull = if j == self.target_token { 0.8 * coef } else { 0.0 };
+                out.push(stay + pull + 0.2 * coef / self.vocab as f32);
+            }
+        }
+        Ok(())
+    }
+
+    fn draft(&self, _artifact: &str, _noise: &[f32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::bail!("no drafts here")
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        Ok(ArtifactMeta {
+            name: artifact.to_string(),
+            hlo_file: String::new(),
+            domain: "mock".into(),
+            kind: "step".into(),
+            tag: "cold".into(),
+            draft: None,
+            batch: self.batch,
+            seq_len: self.seq_len,
+            vocab: self.vocab,
+            t0: Some(0.0),
+            latent_dim: None,
+            inputs: vec![TensorSpec {
+                name: "x_t".into(),
+                shape: vec![self.batch, self.seq_len],
+                dtype: "s32".into(),
+            }],
+            outputs: vec![TensorSpec {
+                name: "probs".into(),
+                shape: vec![self.batch, self.seq_len, self.vocab],
+                dtype: "f32".into(),
+            }],
+        })
+    }
+}
+
+fn params(t0: f64, steps: usize) -> SamplerParams {
+    SamplerParams {
+        artifact: "drift".into(),
+        steps_cold: steps,
+        t0,
+        warp_mode: WarpMode::Exact,
+    }
+}
+
+#[test]
+fn engine_resident_and_stepwise_paths_are_seed_identical() {
+    for (t0, steps) in [(0.0, 16), (0.5, 32), (0.8, 20)] {
+        let exec = DriftExec::new(8, 32, 5, 3);
+        let init = TokenBatch::zeros(8, 32);
+        let mut rng = Pcg64::new(1234);
+        let a = sample_warm(&exec, &params(t0, steps), init, &mut rng, false).unwrap();
+
+        let exec2 = DriftExec::new(8, 32, 5, 3);
+        let init2 = TokenBatch::zeros(8, 32);
+        let mut rng2 = Pcg64::new(1234);
+        let b = sample_warm_stepwise(&exec2, &params(t0, steps), init2, &mut rng2, false).unwrap();
+
+        assert_eq!(a.tokens, b.tokens, "t0={t0} steps={steps}");
+        assert_eq!(a.nfe, b.nfe);
+        assert_eq!(
+            exec.step_calls.load(Ordering::SeqCst),
+            exec2.step_calls.load(Ordering::SeqCst),
+            "both paths must evaluate the denoiser exactly nfe times"
+        );
+    }
+}
+
+#[test]
+fn run_loop_performs_exactly_nfe_denoiser_calls() {
+    let exec = DriftExec::new(4, 8, 4, 1);
+    let init = TokenBatch::zeros(4, 8);
+    let mut rng = Pcg64::new(0);
+    let out = sample_warm(&exec, &params(0.8, 20), init, &mut rng, false).unwrap();
+    assert_eq!(out.nfe, 4); // ceil(20 * 0.2)
+    assert_eq!(exec.step_calls.load(Ordering::SeqCst), 4);
+    // And the drift actually happened: target token dominates.
+    let hits = out.tokens.tokens.iter().filter(|&&t| t == 1).count();
+    assert!(hits > out.tokens.tokens.len() / 2, "{hits}");
+}
+
+#[test]
+fn scratch_capacity_is_flat_in_steady_state() {
+    let exec = DriftExec::new(4, 16, 6, 2);
+    let mut scratch = LoopScratch::default();
+    let spec = |steps: usize, seed: u64| LoopSpec {
+        artifact: "drift".into(),
+        steps_cold: steps,
+        t0: 0.0,
+        warp: 1.0,
+        seed,
+        want_trace: false,
+    };
+    let mut tokens = vec![0i32; 4 * 16];
+    let token_cap = tokens.capacity();
+
+    exec.run_loop(&spec(1, 7), &mut tokens, &mut scratch).unwrap();
+    let cap = scratch.probs.capacity();
+    assert!(cap >= 4 * 16 * 6, "scratch must reach B*N*V once: {cap}");
+
+    for (steps, seed) in [(100usize, 8u64), (3, 9), (250, 10)] {
+        exec.run_loop(&spec(steps, seed), &mut tokens, &mut scratch).unwrap();
+        assert_eq!(scratch.probs.capacity(), cap, "no per-step or per-run growth");
+        assert_eq!(tokens.capacity(), token_cap, "tokens resampled in place");
+    }
+}
+
+#[test]
+fn parallel_categorical_is_bitwise_stable_across_pool_sizes() {
+    let (rows, vocab) = (2048, 16);
+    let mut rng = Pcg64::new(5);
+    let probs: Vec<f32> = (0..rows * vocab).map(|_| rng.uniform_f32() + 1e-3).collect();
+    let mut reference = vec![0i32; rows];
+    prob::categorical_batch_seeded(&probs, vocab, &mut reference, 77, 4);
+    for threads in [1usize, 2, 5, 16] {
+        let pool = WorkerPool::new(threads);
+        let mut out = vec![0i32; rows];
+        prob::categorical_batch_par(&probs, vocab, &mut out, 77, 4, &pool);
+        assert_eq!(out, reference, "threads={threads}");
+    }
+}
+
+#[test]
+fn trace_is_identical_between_paths() {
+    let exec = DriftExec::new(2, 4, 3, 2);
+    let init = TokenBatch::zeros(2, 4);
+    let mut rng = Pcg64::new(21);
+    let a = sample_warm(&exec, &params(0.5, 8), init, &mut rng, true).unwrap();
+    let exec2 = DriftExec::new(2, 4, 3, 2);
+    let init2 = TokenBatch::zeros(2, 4);
+    let mut rng2 = Pcg64::new(21);
+    let b = sample_warm_stepwise(&exec2, &params(0.5, 8), init2, &mut rng2, true).unwrap();
+    let (ta, tb) = (a.trace.unwrap(), b.trace.unwrap());
+    assert_eq!(ta.times, tb.times);
+    assert_eq!(ta.states, tb.states);
+    assert_eq!(ta.len(), a.nfe + 1);
+}
