@@ -19,7 +19,7 @@ fn main() -> Result<()> {
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let engine = EngineHandle::spawn(manifest.clone())?;
     let metrics = ServingMetrics::default();
-    let scheduler = Scheduler::new(&engine, &manifest, &metrics);
+    let scheduler = Scheduler::new(&engine, &manifest, &metrics, 0);
     let mut rng = Pcg64::new(42);
 
     let request = |tag: &str, draft, t0| GenRequest {
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     };
 
     // 2. Cold DFM: 20 Euler steps from uniform noise (paper Fig. 3 left).
-    let cold = scheduler.run_single(request("cold", DraftSpec::Noise, 0.0), &mut rng)?;
+    let cold = scheduler.run_single(request("cold", DraftSpec::Noise, 0.0))?;
     println!(
         "cold DFM   : {} samples, NFE = {:>2}, refine = {:?}",
         cold.samples.len(),
@@ -46,10 +46,8 @@ fn main() -> Result<()> {
 
     // 3. WS-DFM: start at t0 = 0.8 from the "pretty good" draft model —
     //    guaranteed 5x fewer denoiser calls (paper §3).
-    let warm = scheduler.run_single(
-        request("ws_good_t080", DraftSpec::Mixture(DraftKind::Good), 0.8),
-        &mut rng,
-    )?;
+    let warm =
+        scheduler.run_single(request("ws_good_t080", DraftSpec::Mixture(DraftKind::Good), 0.8))?;
     println!(
         "WS-DFM 0.8 : {} samples, NFE = {:>2}, refine = {:?}  (guaranteed {}x speed-up)",
         warm.samples.len(),

@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let engine = EngineHandle::spawn(manifest.clone())?;
     let metrics = ServingMetrics::default();
-    let scheduler = Scheduler::new(&engine, &manifest, &metrics);
+    let scheduler = Scheduler::new(&engine, &manifest, &metrics, 0);
     let mut rng = Pcg64::new(0);
     let n = 1024;
     let target = two_moons::sample_batch(4096, &mut rng);
@@ -33,27 +33,24 @@ fn main() -> Result<()> {
     }
 
     // Cold baseline.
-    let run = |tag: &str, draft, t0, rng: &mut Pcg64| -> Result<(f64, usize)> {
-        let resp = scheduler.run_single(
-            GenRequest {
-                id: 0,
-                domain: "two_moons".into(),
-                tag: tag.into(),
-                draft,
-                n_samples: n,
-                t0,
-                steps_cold: 20,
-                warp_mode: WarpMode::Literal,
-                seed: 1,
-                submitted: std::time::Instant::now(),
-            },
-            rng,
-        )?;
+    let run = |tag: &str, draft, t0| -> Result<(f64, usize)> {
+        let resp = scheduler.run_single(GenRequest {
+            id: 0,
+            domain: "two_moons".into(),
+            tag: tag.into(),
+            draft,
+            n_samples: n,
+            t0,
+            steps_cold: 20,
+            warp_mode: WarpMode::Literal,
+            seed: 1,
+            submitted: std::time::Instant::now(),
+        })?;
         let pts: Vec<[i32; 2]> = resp.samples.iter().map(|s| [s[0], s[1]]).collect();
         Ok((skl_points(&target, &pts), resp.nfe))
     };
 
-    let (cold_skl, cold_nfe) = run("cold", DraftSpec::Noise, 0.0, &mut rng)?;
+    let (cold_skl, cold_nfe) = run("cold", DraftSpec::Noise, 0.0)?;
     println!("\ncold DFM: SKL = {cold_skl:.3} at NFE = {cold_nfe}");
 
     println!("\nwarm-start frontier (paper Table 1 grid):");
@@ -65,7 +62,7 @@ fn main() -> Result<()> {
     ] {
         for t0 in t0s {
             let tag = format!("ws_{}_t{:03}", kind.name(), (t0 * 100.0).round() as u32);
-            let (skl, nfe) = run(&tag, DraftSpec::Mixture(kind), t0, &mut rng)?;
+            let (skl, nfe) = run(&tag, DraftSpec::Mixture(kind), t0)?;
             let verdict = if skl <= cold_skl * 1.05 {
                 format!("no worse than cold at {}x speed-up", cold_nfe / nfe)
             } else {

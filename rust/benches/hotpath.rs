@@ -3,9 +3,10 @@
 //! Measures the L3 components around the PJRT engine call — categorical
 //! sampling (scalar, substream-sequential, and row-parallel), the sampling
 //! loop's channel round-trip cost (per-step vs engine-resident), batcher
-//! offer/flush, queue handoff, JSON protocol encode/decode — and the
-//! engine step itself per domain/batch, so the "coordinator must not be
-//! the bottleneck" target is quantified.
+//! offer/flush, queue handoff, JSON protocol encode/decode, the serving
+//! coordinator's serial-vs-pipelined bundle throughput — and the engine
+//! step itself per domain/batch, so the "coordinator must not be the
+//! bottleneck" target is quantified.
 //!
 //! Results additionally land in `BENCH_hotpath.json` (benchmark name →
 //! mean ns/iter) so the perf trajectory is tracked across PRs.
@@ -14,12 +15,14 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+use wsfm::config::WsfmConfig;
 use wsfm::coordinator::batcher::{Batcher, FlushPolicy};
 use wsfm::coordinator::request::{DraftSpec, GenRequest};
+use wsfm::coordinator::Service;
 use wsfm::core::prob;
 use wsfm::core::rng::Pcg64;
-use wsfm::core::schedule::WarpMode;
+use wsfm::core::schedule::{guaranteed_nfe, WarpMode};
 use wsfm::core::tensor::TokenBatch;
 use wsfm::core::workers::WorkerPool;
 use wsfm::harness::common::Env;
@@ -311,6 +314,151 @@ fn bench_loop_roundtrip(results: &mut Vec<(String, f64)>) {
     chan.stop();
 }
 
+// ---------------------------------------------------------------------------
+// Serial vs pipelined coordinator throughput (mock executor)
+// ---------------------------------------------------------------------------
+
+/// Executor with explicit, flat stage costs: `draft()` sleeps
+/// `draft_cost`, `run_loop()` sleeps `refine_cost`. Isolates the
+/// coordinator's pipelining win — with depth 1 each bundle pays
+/// draft + refine serially; pipelined, drafting bundle N+1 hides behind
+/// refining bundle N, so per-bundle cost approaches max(draft, refine).
+struct StageCostExec {
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    draft_cost: Duration,
+    refine_cost: Duration,
+}
+
+impl Executor for StageCostExec {
+    fn step(&self, _a: &str, _t: &[i32], _time: f32, _h: f32, _w: f32) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("run_loop is overridden; per-step path unused")
+    }
+
+    fn draft(&self, _a: &str, _noise: &[f32]) -> anyhow::Result<Vec<i32>> {
+        std::thread::sleep(self.draft_cost);
+        Ok(vec![0; self.batch * self.seq_len])
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        let is_draft = artifact.contains("draft");
+        Ok(ArtifactMeta {
+            name: artifact.to_string(),
+            hlo_file: String::new(),
+            domain: "mock".into(),
+            kind: if is_draft { "draft".into() } else { "step".into() },
+            tag: "cold".into(),
+            draft: is_draft.then(|| "lstm".to_string()),
+            batch: self.batch,
+            seq_len: self.seq_len,
+            vocab: self.vocab,
+            t0: Some(0.0),
+            latent_dim: None,
+            inputs: vec![TensorSpec {
+                name: if is_draft { "noise".into() } else { "x_t".into() },
+                shape: vec![self.batch, self.seq_len],
+                dtype: if is_draft { "f32".into() } else { "s32".into() },
+            }],
+            outputs: vec![],
+        })
+    }
+
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        _scratch: &mut LoopScratch,
+    ) -> anyhow::Result<LoopReport> {
+        let start = Instant::now();
+        std::thread::sleep(self.refine_cost);
+        tokens.fill(1);
+        Ok(LoopReport {
+            nfe: guaranteed_nfe(spec.steps_cold, spec.t0),
+            elapsed: start.elapsed(),
+            snapshots: None,
+        })
+    }
+}
+
+fn stage_cost_manifest(batch: usize, seq_len: usize, vocab: usize) -> wsfm::runtime::Manifest {
+    let meta = |name: &str, kind: &str, draft: Option<&str>| ArtifactMeta {
+        name: name.to_string(),
+        hlo_file: String::new(),
+        domain: "mock".into(),
+        kind: kind.into(),
+        tag: "cold".into(),
+        draft: draft.map(|d| d.to_string()),
+        batch,
+        seq_len,
+        vocab,
+        t0: Some(0.0),
+        latent_dim: None,
+        inputs: vec![TensorSpec {
+            name: "in".into(),
+            shape: vec![batch, seq_len],
+            dtype: "f32".into(),
+        }],
+        outputs: vec![],
+    };
+    wsfm::runtime::Manifest {
+        dir: std::path::PathBuf::from("/tmp"),
+        artifacts: vec![
+            meta("mock_cold_step_b8", "step", None),
+            meta("mock_draft_lstm_b8", "draft", Some("lstm")),
+        ],
+        domains: wsfm::util::json::Json::Null,
+        batch_sizes: std::collections::BTreeMap::new(),
+    }
+}
+
+fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = (8usize, 32usize, 16usize);
+    let n_requests = 32u64;
+    let request = |seed: u64| GenRequest {
+        id: 0,
+        domain: "mock".into(),
+        tag: "cold".into(),
+        draft: DraftSpec::Lstm,
+        n_samples: batch, // one full bundle per request (size flush)
+        t0: 0.5,
+        steps_cold: 10,
+        warp_mode: WarpMode::Exact,
+        seed,
+        submitted: Instant::now(),
+    };
+    let run = |depth: usize, workers: usize| -> f64 {
+        let exec = StageCostExec {
+            batch,
+            seq_len,
+            vocab,
+            draft_cost: Duration::from_micros(200),
+            refine_cost: Duration::from_micros(200),
+        };
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = batch;
+        cfg.pipeline_depth = depth;
+        cfg.draft_workers = workers;
+        let svc = Service::start(exec, stage_cost_manifest(batch, seq_len, vocab), cfg);
+        svc.generate(request(0)).unwrap(); // warm the stage threads
+        let start = Instant::now();
+        let rxs: Vec<_> = (1..=n_requests).map(|i| svc.submit(request(i)).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let per_bundle = start.elapsed().as_nanos() as f64 / n_requests as f64;
+        svc.shutdown();
+        per_bundle
+    };
+    for (label, depth, workers) in
+        [("serve bundle serial depth=1", 1, 1), ("serve bundle pipelined depth=4 dw=2", 4, 2)]
+    {
+        let ns = run(depth, workers);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
 fn bench_engine_steps(env: &Env, results: &mut Vec<(String, f64)>) {
     let b = Bench { warmup: std::time::Duration::from_millis(300), samples: 8, ..Bench::default() };
     // One engine step per served shape: the denominator for "L3 overhead".
@@ -391,6 +539,9 @@ fn main() {
 
     println!("\n== sampling-loop round-trips (mock executor, {} workers) ==", WorkerPool::shared().threads());
     bench_loop_roundtrip(&mut results);
+
+    println!("\n== coordinator: serial vs DRAFT→REFINE pipeline ==");
+    bench_pipeline_throughput(&mut results);
 
     match Env::load("artifacts") {
         Ok(env) => {

@@ -20,9 +20,13 @@ pub struct WsfmConfig {
     pub sampler: SamplerConfig,
     /// Bounded admission queue size (backpressure beyond this).
     pub queue_capacity: usize,
-    /// Worker threads executing batches.
-    pub workers: usize,
-    /// Global RNG seed (per-request RNGs are split from it).
+    /// Max bundles in flight across the DRAFT→REFINE pipeline. `1` runs
+    /// the legacy serial path (admission thread executes bundles inline);
+    /// `>= 2` lets drafting bundle N+1 overlap refining bundle N.
+    pub pipeline_depth: usize,
+    /// DRAFT-stage worker threads (only used when `pipeline_depth >= 2`).
+    pub draft_workers: usize,
+    /// Global RNG seed (per-bundle substreams are derived from it).
     pub seed: u64,
 }
 
@@ -54,7 +58,8 @@ impl Default for WsfmConfig {
             batcher: BatcherConfig { max_batch: 32, max_wait_us: 2000 },
             sampler: SamplerConfig { steps_cold: 128, t0: 0.8, warp_mode: "literal".into() },
             queue_capacity: 256,
-            workers: 1,
+            pipeline_depth: 2,
+            draft_workers: 1,
             seed: 0,
         }
     }
@@ -80,8 +85,11 @@ impl WsfmConfig {
         if let Some(n) = j.get("queue_capacity").as_usize() {
             c.queue_capacity = n;
         }
-        if let Some(n) = j.get("workers").as_usize() {
-            c.workers = n;
+        if let Some(n) = j.get("pipeline_depth").as_usize() {
+            c.pipeline_depth = n;
+        }
+        if let Some(n) = j.get("draft_workers").as_usize() {
+            c.draft_workers = n;
         }
         if let Some(n) = j.get("seed").as_f64() {
             c.seed = n as u64;
@@ -113,7 +121,8 @@ impl WsfmConfig {
             ("artifacts_dir", Json::str(self.artifacts_dir.to_string_lossy().to_string())),
             ("listen_addr", Json::str(self.listen_addr.clone())),
             ("queue_capacity", Json::num(self.queue_capacity as f64)),
-            ("workers", Json::num(self.workers as f64)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("draft_workers", Json::num(self.draft_workers as f64)),
             ("seed", Json::num(self.seed as f64)),
             (
                 "batcher",
@@ -140,8 +149,11 @@ impl WsfmConfig {
         if self.queue_capacity == 0 {
             bail!("queue_capacity must be positive");
         }
-        if self.workers == 0 {
-            bail!("workers must be positive");
+        if self.pipeline_depth == 0 {
+            bail!("pipeline_depth must be positive (1 = serial)");
+        }
+        if self.draft_workers == 0 {
+            bail!("draft_workers must be positive");
         }
         if self.sampler.steps_cold == 0 {
             bail!("sampler.steps_cold must be positive");
@@ -166,13 +178,15 @@ mod tests {
     #[test]
     fn json_layering() {
         let j = Json::parse(
-            r#"{"listen_addr":"0.0.0.0:9000","batcher":{"max_batch":8},"sampler":{"t0":0.5}}"#,
+            r#"{"listen_addr":"0.0.0.0:9000","batcher":{"max_batch":8},"sampler":{"t0":0.5},"pipeline_depth":6,"draft_workers":3}"#,
         )
         .unwrap();
         let c = WsfmConfig::from_json(&j).unwrap();
         assert_eq!(c.listen_addr, "0.0.0.0:9000");
         assert_eq!(c.batcher.max_batch, 8);
         assert_eq!(c.sampler.t0, 0.5);
+        assert_eq!(c.pipeline_depth, 6);
+        assert_eq!(c.draft_workers, 3);
         // Untouched fields keep defaults.
         assert_eq!(c.queue_capacity, WsfmConfig::default().queue_capacity);
     }
@@ -183,7 +197,8 @@ mod tests {
             r#"{"batcher":{"max_batch":0}}"#,
             r#"{"sampler":{"t0":1.5}}"#,
             r#"{"sampler":{"warp_mode":"sideways"}}"#,
-            r#"{"workers":0}"#,
+            r#"{"pipeline_depth":0}"#,
+            r#"{"draft_workers":0}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

@@ -25,9 +25,19 @@ pub struct FlushPolicy {
 pub struct WorkBundle {
     pub key: BundleKey,
     pub requests: Vec<GenRequest>,
+    /// The deadline that triggered the flush, when it was deadline-driven
+    /// (`due()`); `None` for size-triggered and shutdown flushes. The
+    /// service turns `dispatch_time - deadline` into the `flush_lag`
+    /// metric — the tail-latency slip the pipelined coordinator exists to
+    /// eliminate.
+    pub deadline: Option<Instant>,
 }
 
 impl WorkBundle {
+    pub fn new(key: BundleKey, requests: Vec<GenRequest>) -> WorkBundle {
+        WorkBundle { key, requests, deadline: None }
+    }
+
     pub fn total_samples(&self) -> usize {
         self.requests.iter().map(|r| r.n_samples).sum()
     }
@@ -72,17 +82,25 @@ impl Batcher {
         None
     }
 
-    /// Bundles whose deadline has passed (call periodically).
+    /// Bundles whose deadline has passed (call periodically). Each bundle
+    /// carries the deadline that fired so callers can measure flush lag.
     pub fn due(&mut self, now: Instant) -> Vec<WorkBundle> {
-        let keys: Vec<BundleKey> = self
+        let keys: Vec<(BundleKey, Instant)> = self
             .pending
             .iter()
             .filter(|(_, b)| {
                 !b.requests.is_empty() && now.duration_since(b.oldest) >= self.policy.max_wait
             })
-            .map(|(k, _)| k.clone())
+            .map(|(k, b)| (k.clone(), b.oldest + self.policy.max_wait))
             .collect();
-        keys.iter().filter_map(|k| self.take(k)).collect()
+        keys.into_iter()
+            .filter_map(|(k, deadline)| {
+                self.take(&k).map(|mut bundle| {
+                    bundle.deadline = Some(deadline);
+                    bundle
+                })
+            })
+            .collect()
     }
 
     /// Flush everything (shutdown path).
@@ -113,7 +131,7 @@ impl Batcher {
         if bundle.requests.is_empty() {
             return None;
         }
-        Some(WorkBundle { key: key.clone(), requests: bundle.requests })
+        Some(WorkBundle::new(key.clone(), bundle.requests))
     }
 }
 
@@ -176,7 +194,21 @@ mod tests {
         let due = b.due(Instant::now());
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].total_samples(), 2);
+        // Deadline flushes carry the deadline that fired (for flush_lag).
+        assert!(due[0].deadline.is_some());
+        assert!(due[0].deadline.unwrap() <= Instant::now());
         assert!(b.due(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn size_flush_has_no_deadline() {
+        let mut b = Batcher::new(policy(2, 1000));
+        let bundle = b.offer(req(1, "cold", 2)).expect("size flush");
+        assert!(bundle.deadline.is_none());
+        b.offer(req(2, "cold", 1));
+        for bundle in b.flush_all() {
+            assert!(bundle.deadline.is_none());
+        }
     }
 
     #[test]

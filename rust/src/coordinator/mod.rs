@@ -1,15 +1,27 @@
 //! The serving coordinator — the paper's system contribution realized as a
-//! vLLM-style inference data plane (DESIGN.md §5).
+//! vLLM-style inference data plane (DESIGN.md §5), pipelined so admission
+//! is never blocked behind execution.
 //!
 //! Request lifecycle:
 //!
 //! ```text
 //! client → [request] → admission queue (bounded, backpressure)
-//!        → dynamic batcher (group by bundle key, flush on size/deadline)
-//!        → scheduler: phase DRAFT (lightweight model, negligible)
-//!                     phase REFINE (K = ceil(steps·(1-t0)) fused steps)
+//!        → admission thread: validate, dynamic batcher (group by bundle
+//!          key, flush on size/deadline) — never executes
+//!        → DRAFT stage (draft_workers threads): plan executor chunks,
+//!          generate warm-start init tokens (lightweight model)
+//!        → REFINE stage (one thread, owns the engine-resident Euler
+//!          loop): K = ceil(steps·(1-t0)) fused steps per chunk
 //!        → per-request responses (+ NFE, timings)
 //! ```
+//!
+//! Stages are connected by bounded channels and an inflight gate capped at
+//! `pipeline_depth` bundles, so drafting bundle N+1 overlaps refining
+//! bundle N and deadline flushes proceed while the engine is busy.
+//! `pipeline_depth = 1` collapses to the serial path (the admission thread
+//! runs bundles inline). All bundle RNG derives statelessly from
+//! `(config.seed, bundle key, request seeds)` — outputs are
+//! bitwise-identical across pipeline settings ([`scheduler`]).
 //!
 //! Invariants (property-tested): no request lost or duplicated; batch
 //! shapes ∈ compiled set; padding rows never leak into responses; FIFO
@@ -21,8 +33,199 @@ pub mod request;
 pub mod scheduler;
 pub mod service;
 
-pub use batcher::{Batcher, FlushPolicy};
+pub use batcher::{Batcher, FlushPolicy, WorkBundle};
 pub use queue::BoundedQueue;
 pub use request::{BundleKey, DraftSpec, GenRequest, GenResponse};
-pub use scheduler::Scheduler;
+pub use scheduler::{DraftedBundle, DraftedChunk, Scheduler};
 pub use service::Service;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared mock executor + manifest for coordinator/server tests: a
+    //! drift denoiser over `mock_{tag}_step_b{B}` artifact families, with
+    //! optional stochastic spread, per-step sleep, and a gate that blocks
+    //! refinement of "slow"-tagged artifacts until released (for the
+    //! pipeline-overlap tests).
+
+    use crate::coordinator::request::{DraftSpec, GenRequest};
+    use crate::core::schedule::WarpMode;
+    use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
+    use crate::runtime::engine::Executor;
+    use crate::util::json::Json;
+    use anyhow::{bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Controls for gating a [`TestExec`]'s "slow" artifacts.
+    #[derive(Debug, Default)]
+    pub struct GateCtl {
+        /// Set by the executor when a gated refinement step begins.
+        pub started: AtomicBool,
+        /// Set by the test to let gated steps proceed.
+        pub release: AtomicBool,
+    }
+
+    /// Mock executor emulating the `mock_{tag}_step_b{B}` step-artifact
+    /// family: a denoiser drifting every position toward `target`.
+    pub struct TestExec {
+        pub batches: Vec<usize>,
+        pub seq_len: usize,
+        pub vocab: usize,
+        /// Drift target token.
+        pub target: usize,
+        /// 0.0 = fully deterministic drift; >0 spreads that fraction of
+        /// the moving mass uniformly (makes sampling seed-sensitive).
+        pub spread: f32,
+        /// Artificial per-step cost (throughput/backpressure tests).
+        pub step_sleep: Duration,
+        pub steps: AtomicUsize,
+        /// When set, steps on artifacts whose name contains "slow" block
+        /// until `gate.release` (bounded at 10 s to avoid hangs).
+        pub gate: Option<Arc<GateCtl>>,
+    }
+
+    impl TestExec {
+        pub fn drift(batches: Vec<usize>, seq_len: usize, vocab: usize, target: usize) -> Self {
+            TestExec {
+                batches,
+                seq_len,
+                vocab,
+                target,
+                spread: 0.0,
+                step_sleep: Duration::ZERO,
+                steps: AtomicUsize::new(0),
+                gate: None,
+            }
+        }
+
+        pub fn stochastic(batches: Vec<usize>, seq_len: usize, vocab: usize, target: usize) -> Self {
+            TestExec { spread: 0.5, ..TestExec::drift(batches, seq_len, vocab, target) }
+        }
+    }
+
+    impl Executor for TestExec {
+        fn step_into(
+            &self,
+            artifact: &str,
+            tokens: &[i32],
+            t: f32,
+            h: f32,
+            warp: f32,
+            out: &mut Vec<f32>,
+        ) -> Result<()> {
+            self.steps.fetch_add(1, Ordering::SeqCst);
+            if let Some(gate) = &self.gate {
+                if artifact.contains("slow") {
+                    gate.started.store(true, Ordering::SeqCst);
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    while !gate.release.load(Ordering::SeqCst) {
+                        if Instant::now() > deadline {
+                            bail!("gated step never released");
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            if !self.step_sleep.is_zero() {
+                std::thread::sleep(self.step_sleep);
+            }
+            let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
+            out.clear();
+            out.reserve(tokens.len() * self.vocab);
+            for &tok in tokens {
+                for j in 0..self.vocab {
+                    let stay = if j as i32 == tok { 1.0 - coef } else { 0.0 };
+                    let pull = if j == self.target { coef * (1.0 - self.spread) } else { 0.0 };
+                    out.push(stay + pull + coef * self.spread / self.vocab as f32);
+                }
+            }
+            Ok(())
+        }
+
+        fn draft(&self, _a: &str, _n: &[f32]) -> Result<Vec<i32>> {
+            bail!("no hlo drafts in mock")
+        }
+
+        fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+            // names: mock_{tag}_step_b{B}
+            let b: usize = artifact.rsplit('b').next().context("bad name")?.parse()?;
+            if !self.batches.contains(&b) {
+                bail!("unknown batch {b}");
+            }
+            Ok(ArtifactMeta {
+                name: artifact.to_string(),
+                hlo_file: String::new(),
+                domain: "mock".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: b,
+                seq_len: self.seq_len,
+                vocab: self.vocab,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![],
+                outputs: vec![TensorSpec {
+                    name: "probs".into(),
+                    shape: vec![b, self.seq_len, self.vocab],
+                    dtype: "f32".into(),
+                }],
+            })
+        }
+    }
+
+    /// A manifest with step artifacts for every `(tag, batch)` pair.
+    pub fn mock_manifest(
+        tags: &[&str],
+        batches: &[usize],
+        seq_len: usize,
+        vocab: usize,
+    ) -> crate::runtime::Manifest {
+        let mut artifacts = Vec::new();
+        for &tag in tags {
+            for &b in batches {
+                artifacts.push(ArtifactMeta {
+                    name: format!("mock_{tag}_step_b{b}"),
+                    hlo_file: String::new(),
+                    domain: "mock".into(),
+                    kind: "step".into(),
+                    tag: tag.into(),
+                    draft: None,
+                    batch: b,
+                    seq_len,
+                    vocab,
+                    t0: Some(0.0),
+                    latent_dim: None,
+                    inputs: vec![],
+                    outputs: vec![],
+                });
+            }
+        }
+        crate::runtime::Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts,
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    /// A mock-domain request (tag "cold", noise draft, t0 0.5, 10 cold
+    /// steps, seed = id).
+    pub fn request(id: u64, n: usize) -> GenRequest {
+        GenRequest {
+            id,
+            domain: "mock".into(),
+            tag: "cold".into(),
+            draft: DraftSpec::Noise,
+            n_samples: n,
+            t0: 0.5,
+            steps_cold: 10,
+            warp_mode: WarpMode::Exact,
+            seed: id,
+            submitted: Instant::now(),
+        }
+    }
+}

@@ -51,8 +51,28 @@ impl<T> BoundedQueue<T> {
             return Err(QueueFull);
         }
         g.items.push_back(item);
-        self.cv.notify_one();
+        self.cv.notify_all();
         Ok(())
+    }
+
+    /// Blocking push: waits for space instead of failing fast. Used for
+    /// the inter-stage pipeline channels, where the producer should stall
+    /// (bounding work in flight) rather than drop a flushed bundle. Fails
+    /// only when the queue is closed, returning the item so the caller
+    /// can fail it cleanly instead of silently dropping it.
+    pub fn push_wait(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            g = self.cv.wait(g).unwrap();
+        }
     }
 
     /// Blocking pop with timeout; `None` on timeout or when closed+empty.
@@ -60,6 +80,7 @@ impl<T> BoundedQueue<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
+                self.cv.notify_all(); // wake a push_wait-er: space freed
                 return Some(item);
             }
             if g.closed {
@@ -68,7 +89,11 @@ impl<T> BoundedQueue<T> {
             let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap();
             g = g2;
             if res.timed_out() {
-                return g.items.pop_front();
+                let item = g.items.pop_front();
+                if item.is_some() {
+                    self.cv.notify_all();
+                }
+                return item;
             }
         }
     }
@@ -76,7 +101,11 @@ impl<T> BoundedQueue<T> {
     /// Drain everything currently queued (non-blocking).
     pub fn drain(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
-        g.items.drain(..).collect()
+        let out: Vec<T> = g.items.drain(..).collect();
+        if !out.is_empty() {
+            self.cv.notify_all();
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -159,6 +188,33 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn push_wait_blocks_until_space_then_succeeds() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push_wait(2));
+        // The pusher is blocked on a full queue; free a slot.
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(1));
+        pusher.join().unwrap().unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(2));
+    }
+
+    #[test]
+    fn push_wait_unblocks_on_close() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push_wait(2));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        // The rejected item comes back to the caller.
+        assert_eq!(pusher.join().unwrap(), Err(2));
+        // The original item still drains.
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Some(1));
     }
 
     #[test]

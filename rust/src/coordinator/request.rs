@@ -119,6 +119,26 @@ impl BundleKey {
             WarpMode::Exact
         }
     }
+
+    /// Process-stable hash of the key (FNV-1a over all fields).
+    ///
+    /// This feeds the per-bundle RNG substream derivation
+    /// (`Scheduler::bundle_seed`), so it must be identical across runs,
+    /// threads, and pipeline interleavings — `std::hash` makes no such
+    /// promise. Strings are NUL-terminated so field boundaries can't
+    /// alias ("ab"+"c" vs "a"+"bc").
+    pub fn stable_hash(&self) -> u64 {
+        use crate::core::rng::{fnv1a64, FNV_OFFSET};
+        let mut h = fnv1a64(FNV_OFFSET, self.domain.as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, self.tag.as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, self.draft.name().as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, &self.t0_milli.to_le_bytes());
+        h = fnv1a64(h, &(self.steps_cold as u64).to_le_bytes());
+        fnv1a64(h, &[self.warp_literal as u8])
+    }
 }
 
 /// Completed generation.
@@ -198,6 +218,29 @@ mod tests {
         assert_eq!(DraftSpec::parse("good").unwrap(), DraftSpec::Mixture(DraftKind::Good));
         assert!(DraftSpec::parse("bogus").is_err());
         assert_eq!(DraftSpec::parse("pca").unwrap().name(), "pca");
+    }
+
+    #[test]
+    fn stable_hash_distinguishes_fields() {
+        let base = req().bundle_key();
+        assert_eq!(base.stable_hash(), req().bundle_key().stable_hash());
+        let mut t = req();
+        t.tag = "cold".into();
+        assert_ne!(base.stable_hash(), t.bundle_key().stable_hash());
+        let mut w = req();
+        w.warp_mode = WarpMode::Exact;
+        assert_ne!(base.stable_hash(), w.bundle_key().stable_hash());
+        let mut d = req();
+        d.draft = DraftSpec::Noise;
+        assert_ne!(base.stable_hash(), d.bundle_key().stable_hash());
+        // Domain/tag boundary aliasing is prevented by the separators.
+        let mut a = req();
+        a.domain = "text".into();
+        a.tag = "8ws".into();
+        let mut b = req();
+        b.domain = "text8".into();
+        b.tag = "ws".into();
+        assert_ne!(a.bundle_key().stable_hash(), b.bundle_key().stable_hash());
     }
 
     #[test]

@@ -1,22 +1,91 @@
-//! The two-phase scheduler: DRAFT → REFINE over one flushed bundle.
+//! The staged scheduler: PLAN → DRAFT → REFINE over one flushed bundle.
 //!
 //! For a bundle of `n` total samples it plans executor chunks over the
 //! compiled batch shapes ([`crate::runtime::pool`]), generates draft
 //! samples for each chunk (LSTM/PCA artifact, two-moons mixture, or
 //! uniform noise), runs the warm-start Euler loop, strips batch padding,
 //! and scatters rows back to the originating requests in FIFO order.
+//!
+//! The phases are **separable**: [`Scheduler::draft_bundle`] produces an
+//! explicit [`DraftedBundle`] that [`Scheduler::refine_bundle`] consumes,
+//! so the pipelined service ([`crate::coordinator::service`]) can run the
+//! cheap DRAFT phase for bundle N+1 on a worker thread while the REFINE
+//! phase of bundle N occupies the engine — the serving-side dual of
+//! warm-start flow matching itself (draft cost ≪ refine cost, paper §3).
+//! [`Scheduler::run_bundle`] composes both for the serial path.
+//!
+//! ## RNG substream contract (bundle level)
+//!
+//! All bundle randomness derives statelessly from
+//! `(config.seed, bundle key, request seeds)` via [`Scheduler::bundle_seed`]:
+//! chunk `c` drafts from `Pcg64::substream(bundle_seed, c, DRAFT_LANE)` and
+//! refines with a run seed drawn from
+//! `Pcg64::substream(bundle_seed, c, REFINE_LANE)`. No RNG state threads
+//! across bundles, so output tokens are bitwise-identical regardless of
+//! pipeline depth, draft-worker count, or bundle completion order — the
+//! same contract the row-parallel sampler established per `(step, row)`
+//! (EXPERIMENTS.md §Perf), lifted one level up.
 
 use crate::coordinator::batcher::WorkBundle;
 use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
-use crate::core::rng::Pcg64;
+use crate::core::rng::{splitmix64, Pcg64};
+use crate::core::tensor::TokenBatch;
 use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
 use crate::metrics::ServingMetrics;
+use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::engine::{Executor, LoopScratch};
 use crate::runtime::{plan_chunks, Manifest};
 use crate::sampler::dfm::{sample_warm_with_scratch, SamplerParams};
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+/// Substream lane for draft-phase RNG draws.
+const DRAFT_LANE: u64 = 0;
+/// Substream lane for refine-phase run seeds.
+const REFINE_LANE: u64 = 1;
+
+/// Derive the stateless per-bundle seed from the config seed, the bundle
+/// key, and the request seeds (in FIFO order). Request ids and timestamps
+/// deliberately do not participate: the same logical work always samples
+/// the same tokens.
+pub fn bundle_seed(config_seed: u64, bundle: &WorkBundle) -> u64 {
+    let mut h = splitmix64(config_seed ^ bundle.key.stable_hash());
+    for req in &bundle.requests {
+        h = splitmix64(h ^ splitmix64(req.seed));
+    }
+    h
+}
+
+/// One executor chunk with its warm-start init tokens already drafted.
+#[derive(Debug)]
+pub struct DraftedChunk {
+    /// Useful rows in this chunk (the rest is batch padding).
+    pub chunk_len: usize,
+    /// Step artifact this chunk refines on (owns the compiled shape).
+    pub meta: ArtifactMeta,
+    /// `[exec_batch, seq_len]` draft samples (padding rows included).
+    pub init: TokenBatch,
+    /// Position in the bundle's chunk plan — the substream coordinate.
+    pub chunk_index: usize,
+}
+
+/// The explicit DRAFT→REFINE hand-off: a bundle whose warm-start init
+/// tokens exist but whose Euler refinement has not run yet. `Send`, so it
+/// can cross the pipeline channel between stage threads.
+#[derive(Debug)]
+pub struct DraftedBundle {
+    pub bundle: WorkBundle,
+    /// Stateless seed every chunk substream derives from.
+    pub bundle_seed: u64,
+    pub chunks: Vec<DraftedChunk>,
+    /// Wall-clock of the DRAFT phase.
+    pub draft_time: Duration,
+    /// When the DRAFT phase started — total_time in responses is measured
+    /// from here, so it covers draft + inter-stage wait + refine.
+    pub started: Instant,
+}
 
 /// Executes bundles against an [`Executor`].
 ///
@@ -24,22 +93,58 @@ use std::time::{Duration, Instant};
 /// engine round-trip per executor chunk, not per Euler step. `scratch` is
 /// the loop staging buffer reused across bundles for in-process executors
 /// (the production [`crate::runtime::EngineHandle`] keeps its own per
-/// artifact on the engine thread); a `RefCell` because the scheduler runs
-/// on a single coordinator thread.
+/// artifact on the engine thread). `drafts` caches resolved draft models
+/// keyed by `(domain, spec, batch, vocab)` so repeated chunks stop re-resolving
+/// manifest metadata and re-boxing a fresh [`Draft`]. Both are `RefCell`s
+/// because each scheduler instance is owned by a single stage thread.
 pub struct Scheduler<'a> {
     pub exec: &'a dyn Executor,
     pub manifest: &'a Manifest,
     pub metrics: &'a ServingMetrics,
+    /// Root seed (config.seed) for per-bundle substream derivation.
+    seed: u64,
     scratch: RefCell<LoopScratch>,
+    drafts: RefCell<HashMap<DraftCacheKey, Box<dyn Draft + 'a>>>,
 }
 
+/// Draft-model cache key: `(domain, spec, batch, vocab)`. Vocab rides
+/// along because `NoiseDraft` bakes it in at resolution time, and two
+/// tags of one domain could in principle compile different vocab sizes
+/// at the same batch.
+type DraftCacheKey = (String, DraftSpec, usize, usize);
+
 impl<'a> Scheduler<'a> {
-    pub fn new(exec: &'a dyn Executor, manifest: &'a Manifest, metrics: &'a ServingMetrics) -> Self {
-        Scheduler { exec, manifest, metrics, scratch: RefCell::new(LoopScratch::default()) }
+    pub fn new(
+        exec: &'a dyn Executor,
+        manifest: &'a Manifest,
+        metrics: &'a ServingMetrics,
+        seed: u64,
+    ) -> Self {
+        Scheduler {
+            exec,
+            manifest,
+            metrics,
+            seed,
+            scratch: RefCell::new(LoopScratch::default()),
+            drafts: RefCell::new(HashMap::new()),
+        }
     }
 
-    /// Resolve the draft model for a bundle at a given compiled batch size.
-    fn draft_for(&self, key_domain: &str, spec: DraftSpec, batch: usize, vocab: usize) -> Result<Box<dyn Draft + 'a>> {
+    /// The stateless seed this scheduler derives for a bundle.
+    pub fn bundle_seed(&self, bundle: &WorkBundle) -> u64 {
+        bundle_seed(self.seed, bundle)
+    }
+
+    /// Resolve the draft model for a bundle at a given compiled batch size
+    /// (cache-miss path; counted in `draft_models_resolved`).
+    fn resolve_draft(
+        &self,
+        key_domain: &str,
+        spec: DraftSpec,
+        batch: usize,
+        vocab: usize,
+    ) -> Result<Box<dyn Draft + 'a>> {
+        self.metrics.draft_models_resolved.inc();
         Ok(match spec {
             DraftSpec::Noise => Box::new(NoiseDraft { vocab }),
             DraftSpec::Mixture(kind) => Box::new(MixtureDraft { draft_kind: kind }),
@@ -54,8 +159,32 @@ impl<'a> Scheduler<'a> {
         })
     }
 
-    /// Execute one bundle, producing one response per request (same order).
-    pub fn run_bundle(&self, bundle: &WorkBundle, rng: &mut Pcg64) -> Result<Vec<GenResponse>> {
+    /// Generate draft samples through the [`DraftCacheKey`] cache.
+    fn draft_generate(
+        &self,
+        key_domain: &str,
+        spec: DraftSpec,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+        rng: &mut Pcg64,
+    ) -> Result<TokenBatch> {
+        let cache_key = (key_domain.to_string(), spec, batch, vocab);
+        let mut cache = self.drafts.borrow_mut();
+        if !cache.contains_key(&cache_key) {
+            let draft = self.resolve_draft(key_domain, spec, batch, vocab)?;
+            cache.insert(cache_key.clone(), draft);
+        }
+        let draft = cache.get(&cache_key).expect("just inserted");
+        let init = draft
+            .generate(batch, seq_len, rng)
+            .with_context(|| format!("draft {} for {key_domain}/b{batch}", draft.kind()))?;
+        self.metrics.draft_calls.inc();
+        Ok(init)
+    }
+
+    /// PLAN phase: map the bundle's total samples onto compiled chunks.
+    fn plan_bundle(&self, bundle: &WorkBundle) -> Result<Vec<(usize, usize)>> {
         let key = &bundle.key;
         let n_total = bundle.total_samples();
         if n_total == 0 {
@@ -65,42 +194,67 @@ impl<'a> Scheduler<'a> {
         if compiled.is_empty() {
             bail!("no step artifacts for {}/{}", key.domain, key.tag);
         }
-        let plan = plan_chunks(n_total, &compiled)?;
+        plan_chunks(n_total, &compiled)
+    }
+
+    /// DRAFT phase: plan chunks and generate warm-start init tokens for
+    /// each (padding rows get real draft samples too — simplest
+    /// shape-correct choice; they are stripped in REFINE and never leave
+    /// the scheduler).
+    pub fn draft_bundle(&self, bundle: WorkBundle) -> Result<DraftedBundle> {
         let started = Instant::now();
+        let plan = self.plan_bundle(&bundle)?;
+        let seed = self.bundle_seed(&bundle);
+        let key = &bundle.key;
+
+        let mut chunks = Vec::with_capacity(plan.len());
+        for (chunk_index, &(chunk_len, exec_batch)) in plan.iter().enumerate() {
+            let meta = self.manifest.find_step(&key.domain, &key.tag, exec_batch)?.clone();
+            let mut rng = Pcg64::substream(seed, chunk_index as u64, DRAFT_LANE);
+            let init = self.draft_generate(
+                &key.domain,
+                key.draft,
+                exec_batch,
+                meta.seq_len,
+                meta.vocab,
+                &mut rng,
+            )?;
+            chunks.push(DraftedChunk { chunk_len, meta, init, chunk_index });
+        }
+        Ok(DraftedBundle {
+            bundle,
+            bundle_seed: seed,
+            chunks,
+            draft_time: started.elapsed(),
+            started,
+        })
+    }
+
+    /// REFINE phase: the warm-start Euler loop over each drafted chunk,
+    /// padding strip, and FIFO scatter back to per-request responses.
+    pub fn refine_bundle(&self, drafted: DraftedBundle) -> Result<Vec<GenResponse>> {
+        let DraftedBundle { bundle, bundle_seed: seed, chunks, draft_time, started } = drafted;
+        let key = &bundle.key;
+        let n_total = bundle.total_samples();
 
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
         let mut nfe = 0;
-        let mut draft_time = Duration::ZERO;
         let mut refine_time = Duration::ZERO;
 
-        for &(chunk_len, exec_batch) in &plan {
-            let step_meta = self.manifest.find_step(&key.domain, &key.tag, exec_batch)?;
-            let (seq_len, vocab) = (step_meta.seq_len, step_meta.vocab);
-
-            // Phase DRAFT: generate exec_batch sequences (padding rows get
-            // real draft samples too — simplest shape-correct choice; they
-            // are stripped below and never leave the scheduler).
-            let t_draft = Instant::now();
-            let draft = self.draft_for(&key.domain, key.draft, exec_batch, vocab)?;
-            let init = draft
-                .generate(exec_batch, seq_len, rng)
-                .with_context(|| format!("draft {} for {}", draft.kind(), step_meta.name))?;
-            draft_time += t_draft.elapsed();
-            self.metrics.draft_calls.inc();
-
-            // Phase REFINE: the warm-start Euler loop.
+        for chunk in chunks {
             let params = SamplerParams {
-                artifact: step_meta.name.clone(),
+                artifact: chunk.meta.name.clone(),
                 steps_cold: key.steps_cold,
                 t0: key.t0(),
                 warp_mode: key.warp_mode(),
             };
+            let mut rng = Pcg64::substream(seed, chunk.chunk_index as u64, REFINE_LANE);
             let t_refine = Instant::now();
             let out = sample_warm_with_scratch(
                 self.exec,
                 &params,
-                init,
-                rng,
+                chunk.init,
+                &mut rng,
                 false,
                 &mut self.scratch.borrow_mut(),
             )?;
@@ -108,11 +262,11 @@ impl<'a> Scheduler<'a> {
             nfe = out.nfe; // same schedule for every chunk in the bundle
             self.metrics.denoiser_calls.add(out.nfe as u64);
             self.metrics.batches_executed.inc();
-            self.metrics.padded_rows.add((exec_batch - chunk_len) as u64);
+            self.metrics.padded_rows.add((out.tokens.batch - chunk.chunk_len) as u64);
 
             let mut tokens = out.tokens;
-            tokens.truncate(chunk_len); // strip padding — never leaks out
-            for r in 0..chunk_len {
+            tokens.truncate(chunk.chunk_len); // strip padding — never leaks out
+            for r in 0..chunk.chunk_len {
                 rows.push(tokens.row(r).to_vec());
             }
         }
@@ -142,12 +296,18 @@ impl<'a> Scheduler<'a> {
         Ok(responses)
     }
 
+    /// Execute one bundle serially (DRAFT then REFINE on the calling
+    /// thread), producing one response per request (same order).
+    pub fn run_bundle(&self, bundle: WorkBundle) -> Result<Vec<GenResponse>> {
+        self.refine_bundle(self.draft_bundle(bundle)?)
+    }
+
     /// Convenience for single local requests (CLI `wsfm generate`).
-    pub fn run_single(&self, req: GenRequest, rng: &mut Pcg64) -> Result<GenResponse> {
+    pub fn run_single(&self, req: GenRequest) -> Result<GenResponse> {
         req.validate()?;
         let key = req.bundle_key();
-        let bundle = WorkBundle { key, requests: vec![req] };
-        let mut rs = self.run_bundle(&bundle, rng)?;
+        let bundle = WorkBundle::new(key, vec![req]);
+        let mut rs = self.run_bundle(bundle)?;
         Ok(rs.remove(0))
     }
 }
@@ -155,123 +315,19 @@ impl<'a> Scheduler<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::DraftSpec;
-    use crate::core::schedule::WarpMode;
-    use crate::runtime::artifact::{ArtifactMeta, TensorSpec};
-    use crate::util::json::Json;
-    use std::collections::BTreeMap;
-    use std::path::PathBuf;
-    use std::sync::atomic::{AtomicUsize, Ordering};
-
-    /// Mock executor emulating the step artifact family at several batch
-    /// sizes; always moves tokens toward a fixed p1.
-    struct MockExec {
-        batches: Vec<usize>,
-        seq_len: usize,
-        vocab: usize,
-        steps: AtomicUsize,
-    }
-
-    impl MockExec {
-        fn meta_for(&self, name: &str) -> Option<ArtifactMeta> {
-            // names: mock_cold_step_b{B}
-            let b: usize = name.rsplit('b').next()?.parse().ok()?;
-            if !self.batches.contains(&b) {
-                return None;
-            }
-            Some(ArtifactMeta {
-                name: name.to_string(),
-                hlo_file: String::new(),
-                domain: "mock".into(),
-                kind: "step".into(),
-                tag: "cold".into(),
-                draft: None,
-                batch: b,
-                seq_len: self.seq_len,
-                vocab: self.vocab,
-                t0: Some(0.0),
-                latent_dim: None,
-                inputs: vec![],
-                outputs: vec![TensorSpec {
-                    name: "probs".into(),
-                    shape: vec![b, self.seq_len, self.vocab],
-                    dtype: "f32".into(),
-                }],
-            })
-        }
-    }
-
-    impl Executor for MockExec {
-        fn step(&self, _a: &str, tokens: &[i32], _t: f32, _h: f32, _w: f32) -> Result<Vec<f32>> {
-            self.steps.fetch_add(1, Ordering::SeqCst);
-            // Deterministic drift: everything becomes token 1.
-            let mut out = vec![0.0f32; tokens.len() * self.vocab];
-            for (i, _) in tokens.iter().enumerate() {
-                out[i * self.vocab + 1] = 1.0;
-            }
-            Ok(out)
-        }
-        fn draft(&self, _a: &str, _n: &[f32]) -> Result<Vec<i32>> {
-            bail!("no hlo drafts in mock")
-        }
-        fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
-            self.meta_for(artifact).context("unknown")
-        }
-    }
-
-    fn mock_manifest(batches: &[usize], seq_len: usize, vocab: usize) -> Manifest {
-        let artifacts = batches
-            .iter()
-            .map(|&b| ArtifactMeta {
-                name: format!("mock_cold_step_b{b}"),
-                hlo_file: String::new(),
-                domain: "mock".into(),
-                kind: "step".into(),
-                tag: "cold".into(),
-                draft: None,
-                batch: b,
-                seq_len,
-                vocab,
-                t0: Some(0.0),
-                latent_dim: None,
-                inputs: vec![],
-                outputs: vec![],
-            })
-            .collect();
-        Manifest {
-            dir: PathBuf::from("/tmp"),
-            artifacts,
-            domains: Json::Null,
-            batch_sizes: BTreeMap::new(),
-        }
-    }
-
-    fn request(id: u64, n: usize) -> GenRequest {
-        GenRequest {
-            id,
-            domain: "mock".into(),
-            tag: "cold".into(),
-            draft: DraftSpec::Noise,
-            n_samples: n,
-            t0: 0.5,
-            steps_cold: 10,
-            warp_mode: WarpMode::Exact,
-            seed: id,
-            submitted: Instant::now(),
-        }
-    }
+    use crate::coordinator::testutil::{mock_manifest, request, TestExec};
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn bundle_scatters_rows_in_order() {
-        let exec = MockExec { batches: vec![1, 4, 8], seq_len: 3, vocab: 4, steps: AtomicUsize::new(0) };
-        let manifest = mock_manifest(&[1, 4, 8], 3, 4);
+        let exec = TestExec::drift(vec![1, 4, 8], 3, 4, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 3, 4);
         let metrics = ServingMetrics::default();
-        let sched = Scheduler::new(&exec, &manifest, &metrics);
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
         let reqs = vec![request(1, 2), request(2, 3), request(3, 1)];
         let key = reqs[0].bundle_key();
-        let bundle = WorkBundle { key, requests: reqs };
-        let mut rng = Pcg64::new(0);
-        let responses = sched.run_bundle(&bundle, &mut rng).unwrap();
+        let bundle = WorkBundle::new(key, reqs);
+        let responses = sched.run_bundle(bundle).unwrap();
         assert_eq!(responses.len(), 3);
         assert_eq!(responses[0].samples.len(), 2);
         assert_eq!(responses[1].samples.len(), 3);
@@ -291,12 +347,11 @@ mod tests {
 
     #[test]
     fn single_request_roundtrip() {
-        let exec = MockExec { batches: vec![1, 4], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
-        let manifest = mock_manifest(&[1, 4], 2, 3);
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
         let metrics = ServingMetrics::default();
-        let sched = Scheduler::new(&exec, &manifest, &metrics);
-        let mut rng = Pcg64::new(1);
-        let resp = sched.run_single(request(9, 1), &mut rng).unwrap();
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
+        let resp = sched.run_single(request(9, 1)).unwrap();
         assert_eq!(resp.id, 9);
         assert_eq!(resp.samples.len(), 1);
         assert_eq!(resp.nfe, 5);
@@ -304,12 +359,11 @@ mod tests {
 
     #[test]
     fn large_request_splits_into_chunks() {
-        let exec = MockExec { batches: vec![1, 4], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
-        let manifest = mock_manifest(&[1, 4], 2, 3);
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
         let metrics = ServingMetrics::default();
-        let sched = Scheduler::new(&exec, &manifest, &metrics);
-        let mut rng = Pcg64::new(2);
-        let resp = sched.run_single(request(1, 9), &mut rng).unwrap();
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
+        let resp = sched.run_single(request(1, 9)).unwrap();
         assert_eq!(resp.samples.len(), 9);
         // 9 = 4 + 4 + 1 -> 3 chunks x 5 NFE each.
         assert_eq!(exec.steps.load(Ordering::SeqCst), 15);
@@ -318,13 +372,93 @@ mod tests {
 
     #[test]
     fn missing_artifacts_error() {
-        let exec = MockExec { batches: vec![1], seq_len: 2, vocab: 3, steps: AtomicUsize::new(0) };
-        let manifest = mock_manifest(&[1], 2, 3);
+        let exec = TestExec::drift(vec![1], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1], 2, 3);
         let metrics = ServingMetrics::default();
-        let sched = Scheduler::new(&exec, &manifest, &metrics);
-        let mut rng = Pcg64::new(3);
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
         let mut r = request(1, 1);
         r.tag = "ws_t099".into();
-        assert!(sched.run_single(r, &mut rng).is_err());
+        assert!(sched.run_single(r).is_err());
+    }
+
+    #[test]
+    fn draft_models_are_cached_per_domain_spec_batch() {
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
+        // 9 samples plan as 4+4+1: two distinct batch sizes -> two cache
+        // entries, but the second b4 chunk reuses the first resolution.
+        sched.run_single(request(1, 9)).unwrap();
+        assert_eq!(metrics.draft_calls.get(), 3);
+        assert_eq!(metrics.draft_models_resolved.get(), 2);
+        // A whole second bundle re-resolves nothing.
+        sched.run_single(request(2, 9)).unwrap();
+        assert_eq!(metrics.draft_calls.get(), 6);
+        assert_eq!(metrics.draft_models_resolved.get(), 2);
+    }
+
+    #[test]
+    fn drafted_bundle_exposes_phase_boundary() {
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
+        let bundle = WorkBundle::new(request(1, 5).bundle_key(), vec![request(1, 5)]);
+        let drafted = sched.draft_bundle(bundle).unwrap();
+        // 5 = 4 + 1 chunks; init tokens exist but no denoiser ran yet.
+        assert_eq!(drafted.chunks.len(), 2);
+        assert_eq!(drafted.chunks[0].init.batch, 4);
+        assert_eq!(drafted.chunks[1].init.batch, 1);
+        assert_eq!(exec.steps.load(Ordering::SeqCst), 0);
+        let responses = sched.refine_bundle(drafted).unwrap();
+        assert_eq!(responses[0].samples.len(), 5);
+        assert!(exec.steps.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn bundle_seed_is_stateless_and_seed_sensitive() {
+        let mk = |config_seed: u64, req_seed: u64| {
+            let mut r = request(1, 2);
+            r.seed = req_seed;
+            bundle_seed(config_seed, &WorkBundle::new(r.bundle_key(), vec![r]))
+        };
+        assert_eq!(mk(0, 7), mk(0, 7));
+        assert_ne!(mk(0, 7), mk(0, 8));
+        assert_ne!(mk(0, 7), mk(1, 7));
+        // Request id/timestamps don't participate: two requests differing
+        // only by id hash identically.
+        let mut a = request(1, 2);
+        a.seed = 3;
+        let mut b = request(99, 2);
+        b.seed = 3;
+        assert_eq!(
+            bundle_seed(5, &WorkBundle::new(a.bundle_key(), vec![a])),
+            bundle_seed(5, &WorkBundle::new(b.bundle_key(), vec![b])),
+        );
+    }
+
+    #[test]
+    fn identical_bundles_sample_identically_across_scheduler_instances() {
+        // The determinism contract at scheduler level: a fresh scheduler
+        // (fresh caches, fresh scratch) produces bitwise-identical tokens
+        // for the same (config seed, bundle) — the property pipelining
+        // relies on, since any stage thread may run any bundle.
+        let run = |config_seed: u64| {
+            let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+            let metrics = ServingMetrics::default();
+            let sched = Scheduler::new(&exec, &manifest, &metrics, config_seed);
+            let reqs = vec![request(1, 3), request(2, 2)];
+            let bundle = WorkBundle::new(reqs[0].bundle_key(), reqs);
+            sched
+                .run_bundle(bundle)
+                .unwrap()
+                .into_iter()
+                .map(|r| r.samples)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
     }
 }

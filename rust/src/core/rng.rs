@@ -138,6 +138,25 @@ pub fn splitmix64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
+/// FNV-1a offset basis (64-bit).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Chained FNV-1a over a byte slice. Unlike `std`'s `Hash`/`RandomState`
+/// this is **stable across processes and runs** — it seeds the stateless
+/// per-bundle RNG substreams of the pipelined coordinator, where the same
+/// bundle must hash identically no matter which worker thread (or which
+/// process restart) computes it. Start from [`FNV_OFFSET`] and chain
+/// calls to fold multiple fields.
+#[inline]
+pub fn fnv1a64(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a 64-bit prime
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +251,18 @@ mod tests {
             Pcg64::substream(1, 2, 4).next_u64(),
             Pcg64::substream(1, 3, 3).next_u64()
         );
+    }
+
+    #[test]
+    fn fnv1a64_is_stable_and_field_sensitive() {
+        // Known-stable: hashing must never depend on process state.
+        let h = fnv1a64(FNV_OFFSET, b"wsfm");
+        assert_eq!(h, fnv1a64(FNV_OFFSET, b"wsfm"));
+        assert_ne!(h, fnv1a64(FNV_OFFSET, b"wsfM"));
+        // Chaining distinguishes field boundaries when a separator is fed.
+        let ab_c = fnv1a64(fnv1a64(FNV_OFFSET, b"ab\0"), b"c\0");
+        let a_bc = fnv1a64(fnv1a64(FNV_OFFSET, b"a\0"), b"bc\0");
+        assert_ne!(ab_c, a_bc);
     }
 
     #[test]

@@ -29,7 +29,9 @@ impl Env {
     }
 
     pub fn scheduler(&self) -> Scheduler<'_> {
-        Scheduler::new(&self.engine, &self.manifest, &self.metrics)
+        // Harness runs use config-seed 0; per-system determinism comes
+        // from the request seed via the bundle-substream derivation.
+        Scheduler::new(&self.engine, &self.manifest, &self.metrics, 0)
     }
 
     /// Run one "system" (a tag + draft + t0 triple) for `n` samples.
@@ -58,8 +60,7 @@ impl Env {
             seed,
             submitted: Instant::now(),
         };
-        let mut rng = Pcg64::new(seed);
-        let resp = self.scheduler().run_single(req, &mut rng)?;
+        let resp = self.scheduler().run_single(req)?;
         Ok((resp.samples, resp.nfe, resp.refine_time))
     }
 

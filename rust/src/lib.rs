@@ -28,6 +28,20 @@
 //! bitwise-reproducible for a given seed regardless of worker count or of
 //! where the loop runs. See EXPERIMENTS.md §Perf.
 //!
+//! ## The serving pipeline
+//!
+//! Above the hot loop, the [`coordinator`] is a staged pipeline: the
+//! admission thread only validates, batches, and flushes; flushed bundles
+//! cross bounded channels to a DRAFT stage (warm-start init tokens,
+//! `draft_workers` threads with per-thread draft-model caches) and a
+//! REFINE stage (one thread owning the engine-resident loop), capped at
+//! `pipeline_depth` bundles in flight. Drafting bundle N+1 overlaps
+//! refining bundle N, and deadline flushes never wait on execution. All
+//! bundle randomness is a stateless substream of
+//! `(config.seed, bundle key, request seeds)`, so tokens are
+//! bitwise-identical across pipeline settings, including the serial
+//! `pipeline_depth = 1` path. See EXPERIMENTS.md §Serving.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 

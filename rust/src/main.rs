@@ -114,6 +114,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let service = Service::start(engine.clone(), manifest.clone(), cfg.clone());
     let server = TcpServer::bind(&cfg.listen_addr, service.clone(), manifest)?;
     println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
+    if cfg.pipeline_depth > 1 {
+        println!(
+            "pipeline: depth={} draft_workers={} (DRAFT overlaps REFINE)",
+            cfg.pipeline_depth, cfg.draft_workers
+        );
+    } else {
+        println!("pipeline: depth=1 (serial admission+execution)");
+    }
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
     if let Ok(s) = engine.stats() {
@@ -141,7 +149,9 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
     let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
     let engine = EngineHandle::spawn(manifest.clone())?;
     let metrics = wsfm::metrics::ServingMetrics::default();
-    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics);
+    // Local one-shots use config-seed 0; determinism comes from the
+    // request seed via the bundle-substream derivation.
+    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics, 0);
 
     let req = GenRequest {
         id: 0,
@@ -155,8 +165,7 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
         seed: args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
         submitted: std::time::Instant::now(),
     };
-    let mut rng = wsfm::core::rng::Pcg64::new(req.seed);
-    let resp = scheduler.run_single(req.clone(), &mut rng)?;
+    let resp = scheduler.run_single(req.clone())?;
     println!(
         "generated {} samples  nfe={}  draft={:?} refine={:?} total={:?}",
         resp.samples.len(),
@@ -217,8 +226,7 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     let b = *batches.first().context("no cold artifacts for domain")?;
     let engine = EngineHandle::spawn(manifest.clone())?;
     let metrics = wsfm::metrics::ServingMetrics::default();
-    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics);
-    let mut rng = wsfm::core::rng::Pcg64::new(0);
+    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics, 0);
     let req = GenRequest {
         id: 0,
         domain: domain.to_string(),
@@ -231,7 +239,7 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
         seed: 0,
         submitted: std::time::Instant::now(),
     };
-    let resp = scheduler.run_single(req, &mut rng)?;
+    let resp = scheduler.run_single(req)?;
     println!(
         "smoke run ok: {} samples of len {} in {:?} ({} NFE)",
         resp.samples.len(),
@@ -239,6 +247,9 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
         resp.total_time,
         resp.nfe
     );
+    // Serving metrics incl. the pipeline gauges/histograms
+    // (inflight_bundles, draft_queue_wait, flush_lag).
+    println!("serving metrics:\n{}", metrics.report());
     // Microsecond-resolution engine counters (sub-ms steps used to
     // truncate to 0 under the old as_millis() accounting).
     let stats = engine.stats()?;

@@ -2,7 +2,7 @@
 //! and throughput meters. Lock-cheap (atomics + a mutex-guarded histogram)
 //! and shared across coordinator workers.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -20,6 +20,24 @@ impl Counter {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
     pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (e.g. bundles currently in the pipeline).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -154,7 +172,16 @@ pub struct ServingMetrics {
     pub batches_executed: Counter,
     pub denoiser_calls: Counter,
     pub draft_calls: Counter,
+    /// Draft models actually resolved (cache misses); compare against
+    /// `draft_calls` to see the scheduler's draft-model cache working.
+    pub draft_models_resolved: Counter,
     pub padded_rows: Counter,
+    /// Bundles dispatched into the pipeline and not yet completed.
+    pub inflight_bundles: Gauge,
+    /// Flushed bundle → DRAFT-stage pickup wait (pipeline only).
+    pub draft_queue_wait: LatencyHistogram,
+    /// How far past its deadline a deadline-flushed bundle was dispatched.
+    pub flush_lag: LatencyHistogram,
     pub queue_wait: LatencyHistogram,
     pub batch_exec: LatencyHistogram,
     pub request_latency: LatencyHistogram,
@@ -170,7 +197,11 @@ impl Default for ServingMetrics {
             batches_executed: Counter::default(),
             denoiser_calls: Counter::default(),
             draft_calls: Counter::default(),
+            draft_models_resolved: Counter::default(),
             padded_rows: Counter::default(),
+            inflight_bundles: Gauge::default(),
+            draft_queue_wait: LatencyHistogram::new(4096),
+            flush_lag: LatencyHistogram::new(4096),
             queue_wait: LatencyHistogram::new(4096),
             batch_exec: LatencyHistogram::new(4096),
             request_latency: LatencyHistogram::new(4096),
@@ -182,16 +213,20 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} padded_rows={} samples/s={:.2}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
             self.batches_executed.get(),
             self.denoiser_calls.get(),
             self.draft_calls.get(),
+            self.draft_models_resolved.get(),
             self.padded_rows.get(),
+            self.inflight_bundles.get(),
             self.samples.per_second(),
             self.queue_wait.snapshot().report("queue_wait"),
+            self.draft_queue_wait.snapshot().report("draft_queue_wait"),
+            self.flush_lag.snapshot().report("flush_lag"),
             self.batch_exec.snapshot().report("batch_exec"),
             self.request_latency.snapshot().report("request_latency"),
         )
@@ -252,11 +287,26 @@ mod tests {
     }
 
     #[test]
+    fn gauge_goes_up_and_down() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
     fn serving_metrics_report_contains_fields() {
         let m = ServingMetrics::default();
         m.requests_admitted.inc();
+        m.inflight_bundles.inc();
         let r = m.report();
         assert!(r.contains("admitted=1"));
+        assert!(r.contains("inflight_bundles=1"));
+        assert!(r.contains("draft_queue_wait"));
+        assert!(r.contains("flush_lag"));
         assert!(r.contains("request_latency"));
     }
 }

@@ -222,6 +222,46 @@ pub trait Executor: Send + Sync {
     }
 }
 
+/// Shared executors are executors: the pipelined coordinator hands one
+/// `Arc<E>` to each stage thread, and anything expecting an [`Executor`]
+/// (scheduler, sampler, benches) can take the `Arc` directly. Every
+/// method delegates — including `run_loop`, so an `Arc<EngineHandle>`
+/// keeps the single-round-trip engine-resident path.
+impl<T: Executor + ?Sized> Executor for std::sync::Arc<T> {
+    fn step(&self, artifact: &str, tokens: &[i32], t: f32, h: f32, warp: f32) -> Result<Vec<f32>> {
+        (**self).step(artifact, tokens, t, h, warp)
+    }
+
+    fn step_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        (**self).step_into(artifact, tokens, t, h, warp, out)
+    }
+
+    fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
+        (**self).draft(artifact, noise)
+    }
+
+    fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+        (**self).meta(artifact)
+    }
+
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        scratch: &mut LoopScratch,
+    ) -> Result<LoopReport> {
+        (**self).run_loop(spec, tokens, scratch)
+    }
+}
+
 /// Marker alias used in public re-exports.
 pub type StepFn = dyn Executor;
 
@@ -609,6 +649,18 @@ mod tests {
         let mut tokens = vec![0i32; 4];
         let mut scratch = LoopScratch::default();
         assert!(h.run_loop(&spec, &mut tokens, &mut scratch).is_err());
+        h.shutdown();
+    }
+
+    #[test]
+    fn arc_executor_delegates() {
+        let h = std::sync::Arc::new(EngineHandle::spawn(empty_manifest()).unwrap());
+        // The Arc passes anywhere a `&dyn Executor` is expected and
+        // delegates every method (here: the error paths of an empty
+        // manifest).
+        let as_dyn: &dyn Executor = &h;
+        assert!(as_dyn.meta("nope").is_err());
+        assert!(as_dyn.draft("nope", &[0.0]).is_err());
         h.shutdown();
     }
 

@@ -144,6 +144,65 @@ mod tests {
     }
 
     #[test]
+    fn plan_chunks_properties_hold_for_random_inputs() {
+        // Property-based pin of the planner invariants, over random
+        // (n_total, compiled-set) pairs:
+        //   1. exact cover: chunk lengths sum to n, every chunk fits its
+        //      compiled size, every size is from the compiled set;
+        //   2. at most one padded chunk (only the tail can pad);
+        //   3. padding is bounded: either total padding <= smallest
+        //      compiled size - 1 (the zero-pad tail decomposition), or
+        //      the tail was merged and its padded call computes < 4x the
+        //      useful rows (the documented dispatch-vs-padding trade).
+        use crate::util::prop::{check, Pair, UsizeRange, VecOf};
+        check(
+            "plan_chunks exact cover + bounded padding",
+            Pair(UsizeRange(0, 300), VecOf(UsizeRange(0, 4), 4)),
+            |(n, size_idx)| {
+                let universe = [1usize, 4, 8, 32, 64];
+                let mut compiled: Vec<usize> = size_idx.iter().map(|&i| universe[i]).collect();
+                compiled.sort_unstable();
+                compiled.dedup();
+                if compiled.is_empty() {
+                    // Degenerate input: the planner must reject it (for
+                    // n > 0) rather than emit an empty cover.
+                    if *n > 0 && plan_chunks(*n, &compiled).is_ok() {
+                        return Err("empty compiled set accepted".into());
+                    }
+                    return Ok(());
+                }
+                let plan =
+                    plan_chunks(*n, &compiled).map_err(|e| format!("planner failed: {e:#}"))?;
+                let total: usize = plan.iter().map(|p| p.0).sum();
+                if total != *n {
+                    return Err(format!("covers {total} != n={n}: {plan:?}"));
+                }
+                for &(len, size) in &plan {
+                    if len > size || !compiled.contains(&size) {
+                        return Err(format!("bad chunk ({len}, {size}) over {compiled:?}"));
+                    }
+                }
+                let padded: Vec<(usize, usize)> =
+                    plan.iter().copied().filter(|&(len, size)| len < size).collect();
+                if padded.len() > 1 {
+                    return Err(format!("{} padded chunks: {plan:?}", padded.len()));
+                }
+                if let Some(&(len, size)) = padded.first() {
+                    let min = *compiled.iter().min().unwrap();
+                    let zero_pad_tail = padding_cost(&plan) <= min.saturating_sub(1);
+                    let bounded_merge = size < 4 * len;
+                    if !zero_pad_tail && !bounded_merge {
+                        return Err(format!(
+                            "padding unbounded: chunk ({len}, {size}), min={min}: {plan:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn single_size_always_works() {
         let plan = plan_chunks(10, &[4]).unwrap();
         let total: usize = plan.iter().map(|p| p.0).sum();

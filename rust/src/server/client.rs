@@ -85,9 +85,14 @@ impl Client {
         let j = self.roundtrip(&req.to_string())?;
         if j.get("ok").as_bool() != Some(true) {
             let busy = j.get("busy").as_bool().unwrap_or(false);
+            let hint = j
+                .get("retry_after_ms")
+                .as_usize()
+                .map(|ms| format!(", retry after {ms} ms"))
+                .unwrap_or_default();
             bail!(
                 "generate failed{}: {}",
-                if busy { " (busy)" } else { "" },
+                if busy { format!(" (busy{hint})") } else { String::new() },
                 j.get("error").as_str().unwrap_or("?")
             );
         }

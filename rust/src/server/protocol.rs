@@ -105,6 +105,20 @@ pub fn render_error(msg: &str, busy: bool) -> String {
     Json::obj(fields).to_string()
 }
 
+/// Render the typed BUSY backpressure response: `QueueFull` at admission
+/// is not a failure but a flow-control signal, so it carries a
+/// machine-readable `retry_after_ms` hint (derived from the batcher's
+/// flush interval) alongside `busy: true`.
+pub fn render_busy(retry_after: std::time::Duration) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str("server busy: admission queue full")),
+        ("busy", Json::Bool(true)),
+        ("retry_after_ms", Json::num((retry_after.as_millis().max(1)) as f64)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +192,18 @@ mod tests {
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").as_bool(), Some(false));
         assert_eq!(j.get("busy").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn render_busy_carries_retry_hint() {
+        let line = render_busy(Duration::from_millis(7));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("busy").as_bool(), Some(true));
+        assert_eq!(j.get("retry_after_ms").as_usize(), Some(7));
+        assert!(j.get("error").as_str().unwrap().contains("busy"));
+        // Sub-millisecond hints round up to 1 ms, never 0.
+        let j = Json::parse(&render_busy(Duration::from_micros(10))).unwrap();
+        assert_eq!(j.get("retry_after_ms").as_usize(), Some(1));
     }
 }

@@ -5,7 +5,7 @@ use crate::coordinator::request::GenResponse;
 use crate::coordinator::Service;
 use crate::data::tokenizer::{CharTokenizer, WordTokenizer};
 use crate::runtime::Manifest;
-use crate::server::protocol::{parse_request, render_error, render_response, WireRequest};
+use crate::server::protocol::{parse_request, render_busy, render_error, render_response, WireRequest};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -134,7 +134,9 @@ fn handle_conn(
             Ok(WireRequest::Generate { request, decode }) => {
                 let domain = request.domain.clone();
                 match service.submit(request) {
-                    Err(_) => render_error("queue full", true),
+                    // Typed BUSY: backpressure with a retry-after hint,
+                    // not a generic error string.
+                    Err(_) => render_busy(service.retry_after()),
                     Ok(rx) => match rx.recv() {
                         Ok(Ok(resp)) => {
                             let texts =
@@ -155,4 +157,72 @@ fn handle_conn(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WsfmConfig;
+    use crate::coordinator::testutil::{mock_manifest, TestExec};
+    use std::time::Duration;
+
+    /// End-to-end BUSY: saturate a tiny admission queue behind a slow
+    /// refine and assert the wire response is the typed backpressure
+    /// object (`busy: true` + `retry_after_ms`), while every admitted
+    /// request still completes.
+    #[test]
+    fn queue_full_surfaces_typed_busy_response() {
+        let mut exec = TestExec::drift(vec![1, 4], 2, 4, 1);
+        exec.step_sleep = Duration::from_millis(20); // 5 steps -> ~100ms/bundle
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 4);
+        let mut cfg = WsfmConfig::default();
+        cfg.queue_capacity = 2;
+        cfg.batcher.max_batch = 1; // dispatch every request immediately
+        cfg.batcher.max_wait_us = 5_000;
+        cfg.pipeline_depth = 2;
+        cfg.draft_workers = 1;
+        let service = Service::start(exec, manifest, cfg);
+
+        let server =
+            TcpServer::bind("127.0.0.1:0", service.clone(), mock_manifest(&["cold"], &[1, 4], 2, 4))
+                .unwrap();
+        let addr = server.local_addr.to_string();
+        let stop = server.stop_handle();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        // 16 concurrent one-shot clients against capacity:
+        // 2 inflight (gate) + 1 parked in dispatch + 2 queued = 5 slots.
+        let clients: Vec<_> = (0..16)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = crate::server::Client::connect(&addr).unwrap();
+                    let line = format!(
+                        r#"{{"cmd":"generate","domain":"mock","tag":"cold","draft":"noise","n_samples":1,"t0":0.5,"steps":10,"seed":{i}}}"#
+                    );
+                    c.roundtrip(&line).unwrap()
+                })
+            })
+            .collect();
+
+        let mut busy = 0;
+        let mut ok = 0;
+        for c in clients {
+            let j = c.join().unwrap();
+            if j.get("ok").as_bool() == Some(true) {
+                ok += 1;
+            } else {
+                assert_eq!(j.get("busy").as_bool(), Some(true), "non-busy error: {j}");
+                assert!(j.get("retry_after_ms").as_usize().unwrap_or(0) >= 1);
+                busy += 1;
+            }
+        }
+        assert!(busy >= 1, "expected at least one BUSY rejection (ok={ok})");
+        assert!(ok >= 1, "expected at least one completion");
+        assert_eq!(ok + busy, 16);
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = server_thread.join().unwrap();
+        service.shutdown();
+    }
 }

@@ -89,15 +89,14 @@ fn nfe_guarantee_holds_on_real_artifacts() {
     let manifest = Manifest::load(&dir).unwrap();
     let engine = EngineHandle::spawn(manifest.clone()).unwrap();
     let metrics = ServingMetrics::default();
-    let sched = Scheduler::new(&engine, &manifest, &metrics);
-    let mut rng = Pcg64::new(0);
+    let sched = Scheduler::new(&engine, &manifest, &metrics, 0);
     for (t0, tag) in [(0.8, "ws_good_t080"), (0.5, "ws_fair_t050")] {
         let draft = if tag.contains("good") {
             DraftSpec::Mixture(wsfm::data::two_moons::DraftKind::Good)
         } else {
             DraftSpec::Mixture(wsfm::data::two_moons::DraftKind::Fair)
         };
-        let resp = sched.run_single(request("two_moons", tag, draft, 1, t0, 20), &mut rng).unwrap();
+        let resp = sched.run_single(request("two_moons", tag, draft, 1, t0, 20)).unwrap();
         assert_eq!(resp.nfe, guaranteed_nfe(20, t0), "t0={t0}");
         assert_eq!(resp.samples.len(), 1);
     }
@@ -111,13 +110,11 @@ fn deterministic_generation_per_seed() {
     let manifest = Manifest::load(&dir).unwrap();
     let engine = EngineHandle::spawn(manifest.clone()).unwrap();
     let metrics = ServingMetrics::default();
-    let sched = Scheduler::new(&engine, &manifest, &metrics);
+    let sched = Scheduler::new(&engine, &manifest, &metrics, 0);
     let run = |seed: u64| {
-        let mut rng = Pcg64::new(seed);
-        sched
-            .run_single(request("two_moons", "cold", DraftSpec::Noise, 4, 0.0, 10), &mut rng)
-            .unwrap()
-            .samples
+        let mut req = request("two_moons", "cold", DraftSpec::Noise, 4, 0.0, 10);
+        req.seed = seed;
+        sched.run_single(req).unwrap().samples
     };
     assert_eq!(run(1), run(1));
     assert_ne!(run(1), run(2));
@@ -132,20 +129,17 @@ fn warm_samples_stay_closer_to_target_than_noise() {
     let manifest = Manifest::load(&dir).unwrap();
     let engine = EngineHandle::spawn(manifest.clone()).unwrap();
     let metrics = ServingMetrics::default();
-    let sched = Scheduler::new(&engine, &manifest, &metrics);
+    let sched = Scheduler::new(&engine, &manifest, &metrics, 0);
     let mut rng = Pcg64::new(3);
     let resp = sched
-        .run_single(
-            request(
-                "two_moons",
-                "ws_good_t080",
-                DraftSpec::Mixture(wsfm::data::two_moons::DraftKind::Good),
-                512,
-                0.8,
-                20,
-            ),
-            &mut rng,
-        )
+        .run_single(request(
+            "two_moons",
+            "ws_good_t080",
+            DraftSpec::Mixture(wsfm::data::two_moons::DraftKind::Good),
+            512,
+            0.8,
+            20,
+        ))
         .unwrap();
     let pts: Vec<[i32; 2]> = resp.samples.iter().map(|s| [s[0], s[1]]).collect();
     let target = wsfm::data::two_moons::sample_batch(2048, &mut rng);
@@ -167,10 +161,9 @@ fn lstm_draft_artifact_generates_plausible_text() {
     }
     let engine = EngineHandle::spawn(manifest.clone()).unwrap();
     let metrics = ServingMetrics::default();
-    let sched = Scheduler::new(&engine, &manifest, &metrics);
-    let mut rng = Pcg64::new(5);
+    let sched = Scheduler::new(&engine, &manifest, &metrics, 0);
     let resp = sched
-        .run_single(request("text8", "ws_t080", DraftSpec::Lstm, 4, 0.8, 64), &mut rng)
+        .run_single(request("text8", "ws_t080", DraftSpec::Lstm, 4, 0.8, 64))
         .unwrap();
     let tok = wsfm::data::tokenizer::CharTokenizer;
     for s in &resp.samples {
