@@ -75,9 +75,19 @@ def nfe(steps_cold: int, t0: float) -> int:
     many denoiser evaluations, a ``1/(1-t0)`` speed-up over ``steps_cold``.
     Mirrored by ``rust/src/core/schedule.rs`` and pinned by tests on both
     sides.
+
+    Epsilon-robust: ``1 - t0`` carries one f64 rounding (~1e-16 relative),
+    so the product's absolute error grows with ``steps_cold``. The combined
+    absolute + relative epsilon snaps grid-boundary values (e.g.
+    ``t0 = 1 - k/steps_cold`` computed in float) back to the integer the
+    exact arithmetic would give; it must stay identical to ``nfe_eps`` in
+    ``rust/src/core/schedule.rs`` (boundary cases pinned in
+    ``rust/tests/cross_lang.rs`` and ``python/tests/test_paths.py``).
+    Clamped to ``[1, steps_cold]``: warm never pays more than cold.
     """
     if not 0.0 <= t0 < 1.0:
         raise ValueError(f"t0 must be in [0, 1), got {t0}")
     import math
 
-    return max(1, math.ceil(steps_cold * (1.0 - t0) - 1e-9))
+    eps = 1e-9 + steps_cold * 1e-12
+    return min(max(steps_cold, 1), max(1, math.ceil(steps_cold * (1.0 - t0) - eps)))

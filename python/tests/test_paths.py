@@ -91,6 +91,22 @@ def test_nfe_guarantee_table(steps, t0, expected):
     assert paths.nfe(steps, t0) == expected
 
 
+@pytest.mark.parametrize("steps", [1, 2, 3, 5, 7, 13, 20, 49, 128, 1024, 65536])
+def test_nfe_float_boundary_cases(steps):
+    # t0 = 1 - k/steps computed in float must give exactly k evaluations —
+    # the integer result, despite the product drifting a few ulps off k.
+    # Mirrors `boundary_t0_matches_integer_arithmetic` in
+    # rust/src/core/schedule.rs (same epsilon).
+    h = 1.0 / steps
+    assert paths.nfe(steps, 0.0) == steps
+    assert paths.nfe(steps, 1.0 - h) == 1
+    if steps >= 2:
+        assert paths.nfe(steps, h) == steps - 1
+    assert paths.nfe(steps, 1.0 - 1e-9) == 1
+    for k in range(1, min(steps, 64) + 1):
+        assert paths.nfe(steps, 1.0 - k / steps) == k, (steps, k)
+
+
 def test_nfe_rejects_bad_t0():
     with pytest.raises(ValueError):
         paths.nfe(10, 1.0)

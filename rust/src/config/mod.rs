@@ -28,6 +28,47 @@ pub struct WsfmConfig {
     pub draft_workers: usize,
     /// Global RNG seed (per-bundle substreams are derived from it).
     pub seed: u64,
+    /// Adaptive warm-start controller ([`crate::control`]).
+    pub control: ControlConfig,
+}
+
+/// Adaptive warm-start controller tuning (`control` subsystem).
+///
+/// The controller picks a per-bundle `t0` from draft quality, clamped to
+/// `[t0_min, t0_max]` so the paper's NFE guarantee keeps a hard floor:
+/// no bundle ever pays more than `guaranteed_nfe(steps_cold, t0_min)`
+/// evaluations in an adaptive mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlConfig {
+    /// `static` (use the request's t0 verbatim — legacy behaviour),
+    /// `prior` (t0 from the draft-model kind alone), or `scored`
+    /// (t0 from proxy scores computed on the drafted batch).
+    pub mode: String,
+    /// Adaptive t0 floor: the guarantee budget is
+    /// `guaranteed_nfe(steps_cold, t0_min)`.
+    pub t0_min: f64,
+    /// Adaptive t0 ceiling (best draft still gets ≥ 1 refinement step
+    /// for any steps_cold since t0_max < 1).
+    pub t0_max: f64,
+    /// Discrete t0 choices; entries outside `[t0_min, t0_max]` are
+    /// clamped at controller construction.
+    pub grid: Vec<f64>,
+    /// Optional calibration table `(min_score, t0)` learned by
+    /// `wsfm selfcheck --calibrate`; highest matching `min_score` wins.
+    /// Empty = map scores linearly onto the grid.
+    pub calibration: Vec<(f64, f64)>,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            mode: "static".into(),
+            t0_min: 0.35,
+            t0_max: 0.95,
+            grid: vec![0.35, 0.5, 0.65, 0.8, 0.9, 0.95],
+            calibration: Vec::new(),
+        }
+    }
 }
 
 /// Dynamic batcher tuning.
@@ -61,6 +102,7 @@ impl Default for WsfmConfig {
             pipeline_depth: 2,
             draft_workers: 1,
             seed: 0,
+            control: ControlConfig::default(),
         }
     }
 }
@@ -111,6 +153,28 @@ impl WsfmConfig {
         if let Some(m) = s.get("warp_mode").as_str() {
             c.sampler.warp_mode = m.to_string();
         }
+        let ctl = j.get("control");
+        if let Some(m) = ctl.get("mode").as_str() {
+            c.control.mode = m.to_string();
+        }
+        if let Some(n) = ctl.get("t0_min").as_f64() {
+            c.control.t0_min = n;
+        }
+        if let Some(n) = ctl.get("t0_max").as_f64() {
+            c.control.t0_max = n;
+        }
+        if let Some(arr) = ctl.get("grid").as_arr() {
+            c.control.grid =
+                arr.iter().filter_map(|v| v.as_f64()).collect();
+        }
+        if let Some(arr) = ctl.get("calibration").as_arr() {
+            c.control.calibration = arr
+                .iter()
+                .filter_map(|e| {
+                    Some((e.get("min_score").as_f64()?, e.get("t0").as_f64()?))
+                })
+                .collect();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -139,6 +203,24 @@ impl WsfmConfig {
                     ("warp_mode", Json::str(self.sampler.warp_mode.clone())),
                 ]),
             ),
+            (
+                "control",
+                Json::obj(vec![
+                    ("mode", Json::str(self.control.mode.clone())),
+                    ("t0_min", Json::num(self.control.t0_min)),
+                    ("t0_max", Json::num(self.control.t0_max)),
+                    ("grid", Json::arr(self.control.grid.iter().map(|&g| Json::num(g)))),
+                    (
+                        "calibration",
+                        Json::arr(self.control.calibration.iter().map(|&(s, t)| {
+                            Json::obj(vec![
+                                ("min_score", Json::num(s)),
+                                ("t0", Json::num(t)),
+                            ])
+                        })),
+                    ),
+                ]),
+            ),
         ])
     }
 
@@ -162,6 +244,30 @@ impl WsfmConfig {
             bail!("sampler.t0 must be in [0, 1), got {}", self.sampler.t0);
         }
         crate::core::schedule::WarpMode::parse(&self.sampler.warp_mode)?;
+        crate::control::ControllerMode::parse(&self.control.mode)?;
+        if !(0.0..1.0).contains(&self.control.t0_min)
+            || !(0.0..1.0).contains(&self.control.t0_max)
+            || self.control.t0_min > self.control.t0_max
+        {
+            bail!(
+                "control: need 0 <= t0_min <= t0_max < 1, got [{}, {}]",
+                self.control.t0_min,
+                self.control.t0_max
+            );
+        }
+        if self.control.grid.is_empty() {
+            bail!("control.grid must be non-empty");
+        }
+        for &g in &self.control.grid {
+            if !(0.0..1.0).contains(&g) {
+                bail!("control.grid entry {g} outside [0, 1)");
+            }
+        }
+        for &(s, t) in &self.control.calibration {
+            if !s.is_finite() || !(0.0..1.0).contains(&t) {
+                bail!("control.calibration entry (min_score={s}, t0={t}) invalid");
+            }
+        }
         Ok(())
     }
 }
@@ -192,6 +298,24 @@ mod tests {
     }
 
     #[test]
+    fn control_section_layering() {
+        let j = Json::parse(
+            r#"{"control":{"mode":"scored","t0_min":0.2,"t0_max":0.9,"grid":[0.2,0.5,0.9],"calibration":[{"min_score":0.7,"t0":0.9},{"min_score":0.0,"t0":0.2}]}}"#,
+        )
+        .unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.control.mode, "scored");
+        assert_eq!(c.control.t0_min, 0.2);
+        assert_eq!(c.control.t0_max, 0.9);
+        assert_eq!(c.control.grid, vec![0.2, 0.5, 0.9]);
+        assert_eq!(c.control.calibration, vec![(0.7, 0.9), (0.0, 0.2)]);
+        // Untouched -> defaults (static mode, paper grid).
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.control, ControlConfig::default());
+        assert_eq!(d.control.mode, "static");
+    }
+
+    #[test]
     fn invalid_rejected() {
         for bad in [
             r#"{"batcher":{"max_batch":0}}"#,
@@ -199,6 +323,12 @@ mod tests {
             r#"{"sampler":{"warp_mode":"sideways"}}"#,
             r#"{"pipeline_depth":0}"#,
             r#"{"draft_workers":0}"#,
+            r#"{"control":{"mode":"psychic"}}"#,
+            r#"{"control":{"t0_min":0.9,"t0_max":0.5}}"#,
+            r#"{"control":{"t0_max":1.0}}"#,
+            r#"{"control":{"grid":[]}}"#,
+            r#"{"control":{"grid":[0.5,1.2]}}"#,
+            r#"{"control":{"calibration":[{"min_score":0.5,"t0":1.5}]}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

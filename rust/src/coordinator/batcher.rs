@@ -25,11 +25,13 @@ pub struct FlushPolicy {
 pub struct WorkBundle {
     pub key: BundleKey,
     pub requests: Vec<GenRequest>,
-    /// The deadline that triggered the flush, when it was deadline-driven
-    /// (`due()`); `None` for size-triggered and shutdown flushes. The
-    /// service turns `dispatch_time - deadline` into the `flush_lag`
-    /// metric — the tail-latency slip the pipelined coordinator exists to
-    /// eliminate.
+    /// The flush deadline of the bundle's oldest request
+    /// (`oldest + max_wait`); `None` only for shutdown (`flush_all`)
+    /// flushes, which have no deadline semantics. Deadline-driven flushes
+    /// (`due()`) dispatch at or after it and the service records the slip
+    /// as `flush_lag`; size-triggered flushes dispatch *before* it and
+    /// count as `early_flushes` instead — a negative lag must never be
+    /// clamped into the lag histogram.
     pub deadline: Option<Instant>,
 }
 
@@ -63,7 +65,9 @@ impl Batcher {
     }
 
     /// Add a request. Returns a bundle if the addition makes one flushable
-    /// by size.
+    /// by size; such bundles carry the would-be deadline they beat, so
+    /// the service can tell an early (size-triggered) dispatch from a
+    /// late (deadline-slipped) one.
     pub fn offer(&mut self, req: GenRequest) -> Option<WorkBundle> {
         let key = req.bundle_key();
         let entry = self.pending.entry(key.clone()).or_insert_with(|| PendingBundle {
@@ -77,7 +81,11 @@ impl Batcher {
         entry.samples += req.n_samples;
         entry.requests.push(req);
         if entry.samples >= self.policy.max_batch {
-            return self.take(&key);
+            let deadline = entry.oldest + self.policy.max_wait;
+            return self.take(&key).map(|mut bundle| {
+                bundle.deadline = Some(deadline);
+                bundle
+            });
         }
         None
     }
@@ -201,13 +209,16 @@ mod tests {
     }
 
     #[test]
-    fn size_flush_has_no_deadline() {
+    fn size_flush_carries_future_deadline_but_shutdown_has_none() {
         let mut b = Batcher::new(policy(2, 1000));
         let bundle = b.offer(req(1, "cold", 2)).expect("size flush");
-        assert!(bundle.deadline.is_none());
+        // Size flush beats its deadline: the would-be deadline rides along
+        // (still in the future) so the service can count it as early.
+        let deadline = bundle.deadline.expect("size flush carries its deadline");
+        assert!(deadline > Instant::now());
         b.offer(req(2, "cold", 1));
         for bundle in b.flush_all() {
-            assert!(bundle.deadline.is_none());
+            assert!(bundle.deadline.is_none(), "shutdown flushes have no deadline semantics");
         }
     }
 

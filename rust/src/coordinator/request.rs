@@ -149,6 +149,10 @@ pub struct GenResponse {
     pub samples: Vec<Vec<i32>>,
     /// Denoiser evaluations performed for the batch this request rode.
     pub nfe: usize,
+    /// The warm-start time the refinement actually ran with — equals the
+    /// requested t0 under the `static` controller, the controller's
+    /// per-bundle choice under `prior`/`scored` ([`crate::control`]).
+    pub t0_used: f64,
     pub queue_wait: Duration,
     pub draft_time: Duration,
     pub refine_time: Duration,

@@ -26,6 +26,7 @@
 //! same contract the row-parallel sampler established per `(step, row)`
 //! (EXPERIMENTS.md §Perf), lifted one level up.
 
+use crate::control::{ControlDecision, Controller, ControllerMode};
 use crate::coordinator::batcher::WorkBundle;
 use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
 use crate::core::rng::{splitmix64, Pcg64};
@@ -80,6 +81,11 @@ pub struct DraftedBundle {
     /// Stateless seed every chunk substream derives from.
     pub bundle_seed: u64,
     pub chunks: Vec<DraftedChunk>,
+    /// The warm-start controller's per-bundle t0 choice, made at the end
+    /// of the DRAFT phase (scored modes need the drafted tokens). A pure
+    /// function of (bundle contents, config), so it crosses the pipeline
+    /// hand-off without breaking the determinism contract.
+    pub decision: ControlDecision,
     /// Wall-clock of the DRAFT phase.
     pub draft_time: Duration,
     /// When the DRAFT phase started — total_time in responses is measured
@@ -103,6 +109,9 @@ pub struct Scheduler<'a> {
     pub metrics: &'a ServingMetrics,
     /// Root seed (config.seed) for per-bundle substream derivation.
     seed: u64,
+    /// Per-bundle t0 controller ([`crate::control`]); the default
+    /// [`Scheduler::new`] uses the static pass-through controller.
+    controller: Controller,
     scratch: RefCell<LoopScratch>,
     drafts: RefCell<HashMap<DraftCacheKey, Box<dyn Draft + 'a>>>,
 }
@@ -120,11 +129,26 @@ impl<'a> Scheduler<'a> {
         metrics: &'a ServingMetrics,
         seed: u64,
     ) -> Self {
+        Self::with_controller(exec, manifest, metrics, seed, Controller::static_default())
+    }
+
+    /// [`Scheduler::new`] with an explicit warm-start controller (the
+    /// pipelined service builds one per stage thread from
+    /// `config.control`; they are pure data, so sharing a config yields
+    /// identical decisions on every thread).
+    pub fn with_controller(
+        exec: &'a dyn Executor,
+        manifest: &'a Manifest,
+        metrics: &'a ServingMetrics,
+        seed: u64,
+        controller: Controller,
+    ) -> Self {
         Scheduler {
             exec,
             manifest,
             metrics,
             seed,
+            controller,
             scratch: RefCell::new(LoopScratch::default()),
             drafts: RefCell::new(HashMap::new()),
         }
@@ -221,10 +245,43 @@ impl<'a> Scheduler<'a> {
             )?;
             chunks.push(DraftedChunk { chunk_len, meta, init, chunk_index });
         }
+
+        // Controller decision: a pure function of (bundle contents,
+        // config). Scored modes see only the useful (non-padding) rows,
+        // so the score is the quality of the drafts requests will
+        // actually receive.
+        let score = if self.controller.needs_score() {
+            let rows: Vec<&[i32]> = chunks
+                .iter()
+                .flat_map(|c| (0..c.chunk_len).map(move |r| c.init.row(r)))
+                .collect();
+            let vocab = chunks.first().map(|c| c.meta.vocab).unwrap_or(0);
+            Some(crate::control::proxy_score(&rows, vocab))
+        } else {
+            None
+        };
+        let mut decision = self.controller.decide(key.draft, key.t0(), score);
+        // An adaptive choice below the artifact's trained warm-start time
+        // would evaluate the denoiser outside its trained range
+        // [trained_t0, 1]; clamp up to it. Raising t0 only lowers NFE, so
+        // the guarantee floor is unaffected. Static mode stays verbatim
+        // (the legacy contract: the client picked tag and t0 together).
+        if self.controller.mode() != ControllerMode::Static {
+            let trained = chunks
+                .iter()
+                .filter_map(|c| c.meta.t0)
+                .fold(0.0f64, f64::max)
+                .min(1.0 - 1e-9);
+            if decision.t0 < trained {
+                decision.t0 = trained;
+            }
+        }
+
         Ok(DraftedBundle {
             bundle,
             bundle_seed: seed,
             chunks,
+            decision,
             draft_time: started.elapsed(),
             started,
         })
@@ -233,9 +290,17 @@ impl<'a> Scheduler<'a> {
     /// REFINE phase: the warm-start Euler loop over each drafted chunk,
     /// padding strip, and FIFO scatter back to per-request responses.
     pub fn refine_bundle(&self, drafted: DraftedBundle) -> Result<Vec<GenResponse>> {
-        let DraftedBundle { bundle, bundle_seed: seed, chunks, draft_time, started } = drafted;
+        let DraftedBundle { bundle, bundle_seed: seed, chunks, decision, draft_time, started } =
+            drafted;
         let key = &bundle.key;
         let n_total = bundle.total_samples();
+
+        // The controller's per-bundle t0 (== the requested t0 under the
+        // static controller). The guarantee floor: adaptive schedules can
+        // never exceed the static-t0_min NFE budget.
+        let t0 = decision.t0;
+        let nfe_budget = self.controller.nfe_budget(key.steps_cold, key.t0());
+        self.metrics.chosen_t0.record(t0);
 
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
         let mut nfe = 0;
@@ -245,7 +310,7 @@ impl<'a> Scheduler<'a> {
             let params = SamplerParams {
                 artifact: chunk.meta.name.clone(),
                 steps_cold: key.steps_cold,
-                t0: key.t0(),
+                t0,
                 warp_mode: key.warp_mode(),
             };
             let mut rng = Pcg64::substream(seed, chunk.chunk_index as u64, REFINE_LANE);
@@ -260,6 +325,8 @@ impl<'a> Scheduler<'a> {
             )?;
             refine_time += t_refine.elapsed();
             nfe = out.nfe; // same schedule for every chunk in the bundle
+            debug_assert!(out.nfe <= nfe_budget, "NFE guarantee floor violated");
+            self.metrics.nfe_saved.add(nfe_budget.saturating_sub(out.nfe) as u64);
             self.metrics.denoiser_calls.add(out.nfe as u64);
             self.metrics.batches_executed.inc();
             self.metrics.padded_rows.add((out.tokens.batch - chunk.chunk_len) as u64);
@@ -284,6 +351,7 @@ impl<'a> Scheduler<'a> {
                 id: req.id,
                 samples,
                 nfe,
+                t0_used: t0,
                 queue_wait: now.saturating_duration_since(req.submitted).saturating_sub(total_time),
                 draft_time,
                 refine_time,
@@ -436,6 +504,105 @@ mod tests {
             bundle_seed(5, &WorkBundle::new(a.bundle_key(), vec![a])),
             bundle_seed(5, &WorkBundle::new(b.bundle_key(), vec![b])),
         );
+    }
+
+    #[test]
+    fn adaptive_controller_respects_nfe_floor_and_records_metrics() {
+        use crate::config::ControlConfig;
+        use crate::control::Controller;
+        for mode in ["prior", "scored"] {
+            let exec = TestExec::drift(vec![1, 4, 8], 3, 8, 1);
+            let manifest = mock_manifest(&["cold"], &[1, 4, 8], 3, 8);
+            let metrics = ServingMetrics::default();
+            let cfg = ControlConfig { mode: mode.into(), ..ControlConfig::default() };
+            let controller = Controller::from_config(&cfg).unwrap();
+            let sched = Scheduler::with_controller(&exec, &manifest, &metrics, 0, controller);
+            let resp = sched.run_single(request(1, 4)).unwrap();
+            // request() asks t0=0.5, steps_cold=10. The guarantee floor:
+            // adaptive never exceeds the static-t0_min budget
+            // guaranteed_nfe(10, 0.35) = 7 — regardless of what the
+            // proxies scored.
+            assert!(resp.nfe <= 7, "{mode}: nfe {} > floor budget 7", resp.nfe);
+            assert!(resp.nfe >= 1);
+            assert!(
+                (0.35..=0.95).contains(&resp.t0_used),
+                "{mode}: t0_used {} outside [t0_min, t0_max]",
+                resp.t0_used
+            );
+            assert_eq!(metrics.chosen_t0.snapshot().count, 1);
+            let saved_per_chunk = 7 - resp.nfe;
+            assert_eq!(metrics.nfe_saved.get(), saved_per_chunk as u64);
+        }
+    }
+
+    #[test]
+    fn adaptive_t0_clamps_up_to_artifact_trained_range() {
+        use crate::config::ControlConfig;
+        use crate::control::Controller;
+        // A WS artifact trained at t0 = 0.8 must never be evaluated below
+        // t = 0.8 by an adaptive choice (out-of-distribution times); the
+        // decision clamps up to the trained floor. Static mode is exempt
+        // (client picked tag and t0 together).
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let mut manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
+        for a in &mut manifest.artifacts {
+            a.t0 = Some(0.8);
+        }
+        let metrics = ServingMetrics::default();
+        // Prior mode + noise draft scores 0 -> would pick the 0.35 floor
+        // without the clamp.
+        let cfg = ControlConfig { mode: "prior".into(), ..ControlConfig::default() };
+        let controller = Controller::from_config(&cfg).unwrap();
+        let sched = Scheduler::with_controller(&exec, &manifest, &metrics, 0, controller);
+        let resp = sched.run_single(request(1, 2)).unwrap();
+        assert_eq!(resp.t0_used, 0.8);
+        assert_eq!(resp.nfe, 2); // guaranteed_nfe(10, 0.8)
+
+        // Static mode on the same artifacts keeps the requested t0.
+        let metrics2 = ServingMetrics::default();
+        let sched2 = Scheduler::new(&exec, &manifest, &metrics2, 0);
+        assert_eq!(sched2.run_single(request(1, 2)).unwrap().t0_used, 0.5);
+    }
+
+    #[test]
+    fn static_controller_reports_requested_t0_and_saves_nothing() {
+        let exec = TestExec::drift(vec![1, 4], 2, 3, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 3);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::new(&exec, &manifest, &metrics, 0);
+        let resp = sched.run_single(request(1, 2)).unwrap();
+        assert_eq!(resp.t0_used, 0.5); // the request's own t0
+        assert_eq!(resp.nfe, 5);
+        assert_eq!(metrics.nfe_saved.get(), 0, "static mode saves nothing by definition");
+        assert_eq!(metrics.chosen_t0.snapshot().count, 1);
+        assert_eq!(metrics.chosen_t0.snapshot().max, 0.5);
+    }
+
+    #[test]
+    fn scored_controller_is_deterministic_across_scheduler_instances() {
+        use crate::config::ControlConfig;
+        use crate::control::Controller;
+        // The controller extends the determinism contract: (t0 choice,
+        // tokens) depend only on (config seed, bundle) — fresh scheduler,
+        // fresh caches, same decision.
+        let run = |config_seed: u64| {
+            let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+            let metrics = ServingMetrics::default();
+            let cfg = ControlConfig { mode: "scored".into(), ..ControlConfig::default() };
+            let controller = Controller::from_config(&cfg).unwrap();
+            let sched =
+                Scheduler::with_controller(&exec, &manifest, &metrics, config_seed, controller);
+            let reqs = vec![request(1, 3), request(2, 2)];
+            let bundle = WorkBundle::new(reqs[0].bundle_key(), reqs);
+            sched
+                .run_bundle(bundle)
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.t0_used, r.samples))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(42), run(42));
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! no hung receivers (pinned by the shutdown-under-load test).
 
 use crate::config::WsfmConfig;
+use crate::control::Controller;
 use crate::coordinator::batcher::{Batcher, FlushPolicy, WorkBundle};
 use crate::coordinator::queue::{BoundedQueue, QueueFull};
 use crate::coordinator::request::{BundleKey, GenRequest, GenResponse};
@@ -107,7 +108,9 @@ pub struct Service {
     pub metrics: Arc<ServingMetrics>,
     next_id: Arc<AtomicU64>,
     running: Arc<AtomicBool>,
-    retry_after: Duration,
+    /// Per-busy-slot unit for the BUSY retry hint (one flush interval);
+    /// [`Service::retry_after`] scales it by current occupancy.
+    retry_base: Duration,
 }
 
 impl Service {
@@ -116,9 +119,9 @@ impl Service {
         let queue = Arc::new(BoundedQueue::<Envelope>::new(config.queue_capacity));
         let metrics = Arc::new(ServingMetrics::default());
         let running = Arc::new(AtomicBool::new(true));
-        // Backpressure hint surfaced in BUSY responses: roughly one flush
-        // interval, floored at 1 ms.
-        let retry_after = Duration::from_micros(config.batcher.max_wait_us.max(1_000));
+        // Backpressure hint unit: roughly one flush interval, floored at
+        // 1 ms; `retry_after()` scales it by live occupancy.
+        let retry_base = Duration::from_micros(config.batcher.max_wait_us.max(1_000));
         let policy = FlushPolicy {
             max_batch: config.batcher.max_batch,
             max_wait: Duration::from_micros(config.batcher.max_wait_us),
@@ -126,14 +129,25 @@ impl Service {
         let exec = Arc::new(exec);
         let manifest = Arc::new(manifest);
         let seed = config.seed;
+        // One controller per stage thread: pure data, so clones decide
+        // identically everywhere (the determinism contract). An invalid
+        // control section falls back to the legacy static behaviour —
+        // config::validate rejects it at load time; this guards callers
+        // that skip validation.
+        let controller = Controller::from_config(&config.control).unwrap_or_else(|e| {
+            crate::error!("invalid control config ({e:#}); using static t0");
+            Controller::static_default()
+        });
 
         if config.pipeline_depth <= 1 {
             // Serial path: the admission thread executes bundles inline.
             let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
+            let controller = controller.clone();
             std::thread::Builder::new()
                 .name("wsfm-coordinator".into())
                 .spawn(move || {
-                    let scheduler = Scheduler::new(&*exec, &*manifest, &*m, seed);
+                    let scheduler =
+                        Scheduler::with_controller(&*exec, &*manifest, &*m, seed, controller);
                     admission_loop(&q, &r, policy, |bundle, envelopes| {
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
@@ -154,10 +168,13 @@ impl Service {
                 let (exec, manifest, metrics) = (exec.clone(), manifest.clone(), metrics.clone());
                 let (dq, rq, gate) = (draft_q.clone(), refine_q.clone(), gate.clone());
                 let active = active_drafters.clone();
+                let controller = controller.clone();
                 std::thread::Builder::new()
                     .name(format!("wsfm-draft-{w}"))
                     .spawn(move || {
-                        draft_stage(&*exec, &*manifest, &metrics, seed, &dq, &rq, &gate);
+                        draft_stage(
+                            &*exec, &*manifest, &metrics, seed, controller, &dq, &rq, &gate,
+                        );
                         // Last drafter out closes the refine channel so
                         // the refine thread can drain and exit.
                         if active.fetch_sub(1, Ordering::SeqCst) == 1 {
@@ -170,9 +187,12 @@ impl Service {
             {
                 let (exec, manifest, metrics) = (exec.clone(), manifest.clone(), metrics.clone());
                 let (rq, gate) = (refine_q.clone(), gate.clone());
+                let controller = controller.clone();
                 std::thread::Builder::new()
                     .name("wsfm-refine".into())
-                    .spawn(move || refine_stage(&*exec, &*manifest, &metrics, seed, &rq, &gate))
+                    .spawn(move || {
+                        refine_stage(&*exec, &*manifest, &metrics, seed, controller, &rq, &gate)
+                    })
                     .expect("spawning refine thread");
             }
 
@@ -206,7 +226,7 @@ impl Service {
                 .expect("spawning coordinator thread");
         }
 
-        Service { queue, metrics, next_id: Arc::new(AtomicU64::new(1)), running, retry_after }
+        Service { queue, metrics, next_id: Arc::new(AtomicU64::new(1)), running, retry_base }
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -238,9 +258,24 @@ impl Service {
         }
     }
 
-    /// Suggested client retry delay after a BUSY rejection.
+    /// Suggested client retry delay after a BUSY rejection, derived from
+    /// the *current* occupancy rather than static config: a fully drained
+    /// pipeline (the gate released a moment after the rejection) hints
+    /// "retry basically now" (1 ms), while each in-flight bundle and each
+    /// admission-queue backlog's worth of requests adds one flush
+    /// interval. Capped so a deep backlog never tells clients to go away
+    /// for seconds.
     pub fn retry_after(&self) -> Duration {
-        self.retry_after
+        let inflight = self.metrics.inflight_bundles.get().max(0) as u64;
+        let queued = self.queue.len() as u64;
+        if inflight == 0 && queued == 0 {
+            return Duration::from_millis(1);
+        }
+        // Queue backlog counts fractionally: many queued requests fold
+        // into few bundles. One slot per 8 queued requests is a coarse
+        // but monotone proxy.
+        let busy_slots = (inflight + queued.div_ceil(8)).clamp(1, 32);
+        Duration::from_millis(1) + self.retry_base * busy_slots as u32
     }
 
     /// Graceful shutdown: stop accepting, drain the pipeline, stop the
@@ -264,9 +299,21 @@ fn take_responders(bundle: &WorkBundle, envelopes: &mut HashMap<u64, Responder>)
     responders
 }
 
+/// Record how a bundle's dispatch relates to its flush deadline. A bundle
+/// can flush *before* its deadline (size-triggered); its negative lag
+/// used to clamp to a garbage 0 µs sample in `flush_lag`, dragging the
+/// percentiles down. Early flushes now count separately (`early_flushes`
+/// + the `flush_early` headroom histogram) and `flush_lag` only ever sees
+/// true ≥ 0 lags.
 fn record_flush_lag(metrics: &ServingMetrics, bundle: &WorkBundle) {
     if let Some(deadline) = bundle.deadline {
-        metrics.flush_lag.record(Instant::now().saturating_duration_since(deadline));
+        let now = Instant::now();
+        if now >= deadline {
+            metrics.flush_lag.record(now.saturating_duration_since(deadline));
+        } else {
+            metrics.early_flushes.inc();
+            metrics.flush_early.record(deadline.saturating_duration_since(now));
+        }
     }
 }
 
@@ -344,16 +391,18 @@ fn admission_loop(
 
 /// DRAFT-stage worker body: pop flushed bundles, generate warm-start init
 /// tokens, hand the [`DraftedBundle`] to the REFINE stage.
+#[allow(clippy::too_many_arguments)]
 fn draft_stage(
     exec: &dyn Executor,
     manifest: &Manifest,
     metrics: &ServingMetrics,
     seed: u64,
+    controller: Controller,
     draft_q: &BoundedQueue<PipelineJob>,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
 ) {
-    let scheduler = Scheduler::new(exec, manifest, metrics, seed);
+    let scheduler = Scheduler::with_controller(exec, manifest, metrics, seed, controller);
     loop {
         match draft_q.pop_timeout(Duration::from_millis(50)) {
             Some(job) => {
@@ -396,10 +445,11 @@ fn refine_stage(
     manifest: &Manifest,
     metrics: &ServingMetrics,
     seed: u64,
+    controller: Controller,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
 ) {
-    let scheduler = Scheduler::new(exec, manifest, metrics, seed);
+    let scheduler = Scheduler::with_controller(exec, manifest, metrics, seed, controller);
     loop {
         match refine_q.pop_timeout(Duration::from_millis(50)) {
             Some(job) => {
@@ -576,7 +626,7 @@ mod tests {
         svc.shutdown();
     }
 
-    fn pipeline_outputs(depth: usize, workers: usize) -> Vec<Vec<Vec<i32>>> {
+    fn pipeline_outputs(depth: usize, workers: usize, mode: &str) -> Vec<(f64, Vec<Vec<i32>>)> {
         // seq_len 16 keeps the different-seed inequality check below safe
         // from chance collisions (the drift keeps ~40% per-token overlap).
         let exec = TestExec::stochastic(vec![1, 4, 8], 16, 5, 2);
@@ -588,6 +638,7 @@ mod tests {
         cfg.pipeline_depth = depth;
         cfg.draft_workers = workers;
         cfg.seed = 99;
+        cfg.control.mode = mode.into();
         let svc = Service::start(exec, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -597,7 +648,10 @@ mod tests {
         }
         let out = rxs
             .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap().samples)
+            .map(|rx| {
+                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+                (resp.t0_used, resp.samples)
+            })
             .collect();
         svc.shutdown();
         out
@@ -608,12 +662,105 @@ mod tests {
         // The RNG substream contract, end to end: tokens depend only on
         // (config.seed, bundle key, request seeds) — not on pipeline
         // depth, draft-worker count, or the serial (depth=1) path.
-        let reference = pipeline_outputs(1, 1);
-        assert_eq!(reference, pipeline_outputs(2, 1));
-        assert_eq!(reference, pipeline_outputs(4, 3));
+        let reference = pipeline_outputs(1, 1, "static");
+        assert_eq!(reference, pipeline_outputs(2, 1, "static"));
+        assert_eq!(reference, pipeline_outputs(4, 3, "static"));
         // And the executor is genuinely stochastic: same-shape requests
         // with different seeds produce different tokens.
-        assert_ne!(reference[0], reference[3]);
+        assert_ne!(reference[0].1, reference[3].1);
+    }
+
+    #[test]
+    fn scored_controller_outputs_bitwise_identical_across_pipeline_settings() {
+        // The controller extends the contract: the chosen t0 is a pure
+        // function of (bundle contents, config), so scored-mode tokens
+        // AND t0 choices are identical across pipeline_depth ∈ {1, 4}
+        // and draft_workers ∈ {1, 2}.
+        let reference = pipeline_outputs(1, 1, "scored");
+        assert_eq!(reference, pipeline_outputs(4, 1, "scored"));
+        assert_eq!(reference, pipeline_outputs(4, 2, "scored"));
+        // Every adaptive choice respects the configured clamp range.
+        let d = WsfmConfig::default().control;
+        for (t0, _) in &reference {
+            assert!((d.t0_min..=d.t0_max).contains(t0), "t0_used {t0} outside clamp");
+        }
+    }
+
+    #[test]
+    fn early_size_flush_counts_separately_from_lag() {
+        // Regression (ISSUE 3): a bundle that flushes *before* its
+        // deadline (size-triggered) used to clamp its negative lag into a
+        // garbage 0 µs flush_lag sample. A gated executor parks the
+        // bundle in REFINE so the metrics can be asserted race-free.
+        let gate = Arc::new(GateCtl::default());
+        let mut exec = TestExec::drift(vec![1, 4], 2, 4, 1);
+        exec.gate = Some(gate.clone());
+        let manifest = mock_manifest(&["slow"], &[1, 4], 2, 4);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1; // size-flush every request immediately
+        cfg.batcher.max_wait_us = 10_000_000; // deadline far in the future
+        cfg.pipeline_depth = 2;
+        let svc = Service::start(exec, manifest, cfg);
+
+        let mut r = request(0, 1);
+        r.tag = "slow".into();
+        let rx = svc.submit(r).unwrap();
+        let t0 = Instant::now();
+        while !gate.started.load(Ordering::SeqCst) {
+            assert!(t0.elapsed() < Duration::from_secs(5), "bundle never reached REFINE");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Dispatched well before its 10 s deadline: counted as early, the
+        // lag histogram stays clean.
+        assert_eq!(svc.metrics.early_flushes.get(), 1);
+        assert_eq!(svc.metrics.flush_lag.snapshot().count, 0);
+        let early = svc.metrics.flush_early.snapshot();
+        assert_eq!(early.count, 1);
+        assert!(early.max > Duration::from_secs(1), "headroom ~10 s, got {:?}", early.max);
+
+        gate.release.store(true, Ordering::SeqCst);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn retry_after_tracks_occupancy() {
+        // BUSY hints derive from live occupancy, not static config: while
+        // a bundle is parked in REFINE the hint scales up; once the
+        // pipeline drains it drops to the 1 ms floor.
+        let gate = Arc::new(GateCtl::default());
+        let mut exec = TestExec::drift(vec![1, 4], 2, 4, 1);
+        exec.gate = Some(gate.clone());
+        let manifest = mock_manifest(&["slow"], &[1, 4], 2, 4);
+        let mut cfg = test_config();
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.max_wait_us = 2_000;
+        cfg.pipeline_depth = 2;
+        let svc = Service::start(exec, manifest, cfg);
+        // Nothing in flight yet: drained hint.
+        assert_eq!(svc.retry_after(), Duration::from_millis(1));
+
+        let mut r = request(0, 1);
+        r.tag = "slow".into();
+        let rx = svc.submit(r).unwrap();
+        let t0 = Instant::now();
+        while !gate.started.load(Ordering::SeqCst) {
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // One bundle occupied: at least one flush interval on top of the
+        // floor.
+        assert!(svc.retry_after() >= Duration::from_millis(3), "{:?}", svc.retry_after());
+
+        gate.release.store(true, Ordering::SeqCst);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        // Drained again (the gauge decrements on delivery).
+        let t1 = Instant::now();
+        while svc.retry_after() != Duration::from_millis(1) {
+            assert!(t1.elapsed() < Duration::from_secs(5), "hint never drained");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        svc.shutdown();
     }
 
     #[test]

@@ -59,7 +59,18 @@ impl Schedule {
         let n = guaranteed_nfe(steps_cold, t0);
         // Evaluation times t0, t0+h, ... ; the final step uses a shortened
         // h' = 1 - t_last so the trajectory lands exactly on t = 1.
-        let times: Vec<f64> = (0..n).map(|i| t0 + i as f64 * h).collect();
+        let mut times: Vec<f64> = (0..n).map(|i| t0 + i as f64 * h).collect();
+        // Float drift in `t0 + i·h` can push the final evaluation time to
+        // within (or past) rounding distance of 1.0, which would make the
+        // clipped final step ~0 or negative. Snap such an entry one grid
+        // step back so `step_size` stays strictly positive. (With the
+        // epsilon-robust `guaranteed_nfe` this is unreachable for t0 on or
+        // near the cold grid; it guards adversarial off-grid values.)
+        if let Some(last) = times.last_mut() {
+            if *last > 1.0 - 1e-12 && *last > t0 {
+                *last = (1.0 - h).max(t0);
+            }
+        }
         Ok(Schedule { t0, h, times })
     }
 
@@ -80,9 +91,29 @@ impl Schedule {
     }
 }
 
+/// Snapping tolerance for `steps_cold * (1 - t0)` against the integer
+/// grid. `1 - t0` carries one f64 rounding (~1e-16 relative), so the
+/// product's absolute error grows with `steps_cold`: a fixed 1e-9 epsilon
+/// stops absorbing it for fine grids, while a purely relative one
+/// vanishes for coarse ones — so use both. Must stay identical to the
+/// epsilon in `python/compile/paths.py::nfe` (pinned by the boundary
+/// cases in `rust/tests/cross_lang.rs`).
+fn nfe_eps(steps_cold: usize) -> f64 {
+    1e-9 + steps_cold as f64 * 1e-12
+}
+
 /// `ceil(steps_cold * (1 - t0))` — the paper's guaranteed NFE.
+///
+/// Epsilon-robust: for `t0` within float-rounding distance of the cold
+/// grid (e.g. `t0 = 1 - k/steps_cold` computed in f64), the product is
+/// snapped to the integer the exact arithmetic would give, so this agrees
+/// bit-for-bit with the integer result of `python/compile/paths.py::nfe`
+/// at every grid boundary. Clamped to `[1, steps_cold]`: warm never pays
+/// more than cold, and every schedule performs at least one evaluation.
 pub fn guaranteed_nfe(steps_cold: usize, t0: f64) -> usize {
-    ((steps_cold as f64) * (1.0 - t0) - 1e-9).ceil().max(1.0) as usize
+    let x = steps_cold as f64 * (1.0 - t0);
+    let n = (x - nfe_eps(steps_cold)).ceil().max(1.0) as usize;
+    n.min(steps_cold.max(1))
 }
 
 /// The paper's guaranteed speed-up factor `1/(1-t0)`.
@@ -141,6 +172,66 @@ mod tests {
                 let warm = guaranteed_nfe(steps, t0);
                 assert!(warm <= steps);
                 assert!(warm >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_t0_matches_integer_arithmetic() {
+        // The float-boundary regression (ISSUE 3): for t0 = 1 - k/steps
+        // computed in f64, `steps * (1 - t0)` drifts a few ulps off the
+        // integer k, and a naive ceil comes out one high or low. The
+        // epsilon-robust formulation must recover exactly k — the value
+        // python/compile/paths.py::nfe computes — at every boundary.
+        for steps in [1usize, 2, 3, 5, 7, 13, 20, 49, 128, 1024, 65536] {
+            let h = 1.0 / steps as f64;
+            let mut cases = vec![(0.0, steps), (1.0 - h, 1)];
+            if steps >= 2 {
+                cases.push((h, steps - 1));
+            }
+            for &(t0, want) in &cases {
+                assert_eq!(guaranteed_nfe(steps, t0), want, "steps={steps} t0={t0}");
+                let s = Schedule::new(steps, t0).unwrap();
+                assert_eq!(s.nfe(), want, "steps={steps} t0={t0}");
+                // Every step size strictly positive; trajectory lands on 1.
+                let mut t = s.times[0];
+                for i in 0..s.nfe() {
+                    assert!(s.step_size(i) > 0.0, "steps={steps} t0={t0} i={i}");
+                    t += s.step_size(i);
+                }
+                assert!((t - 1.0).abs() < 1e-9, "steps={steps} t0={t0} ended at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn t0_hard_against_one_is_single_positive_step() {
+        for steps in [1usize, 20, 1024] {
+            let t0 = 1.0 - 1e-9;
+            assert_eq!(guaranteed_nfe(steps, t0), 1);
+            let s = Schedule::new(steps, t0).unwrap();
+            assert_eq!(s.nfe(), 1);
+            assert!(s.step_size(0) > 0.0);
+            assert!(s.times[0] < 1.0);
+        }
+    }
+
+    #[test]
+    fn off_grid_t0_never_produces_degenerate_final_step() {
+        // Sweep off-grid t0 values (incl. milli-quantized ones, the
+        // BundleKey round-trip) and require a strictly positive final
+        // step everywhere.
+        for steps in [7usize, 20, 100, 1024] {
+            for milli in (0..1000).step_by(7) {
+                let t0 = milli as f64 / 1000.0;
+                let s = Schedule::new(steps, t0).unwrap();
+                let last = s.nfe() - 1;
+                assert!(
+                    s.step_size(last) > 0.0,
+                    "steps={steps} t0={t0} final step {}",
+                    s.step_size(last)
+                );
+                assert!(s.nfe() <= steps);
             }
         }
     }

@@ -2,6 +2,7 @@
 //! refinement (the Rust-side mirror of the build-time refiner), and row
 //! formatting.
 
+use crate::control::Controller;
 use crate::coordinator::request::{DraftSpec, GenRequest};
 use crate::coordinator::Scheduler;
 use crate::core::rng::Pcg64;
@@ -62,6 +63,40 @@ impl Env {
         };
         let resp = self.scheduler().run_single(req)?;
         Ok((resp.samples, resp.nfe, resp.refine_time))
+    }
+
+    /// [`Env::run_system`] under an explicit warm-start controller
+    /// (the Table 1 adaptive-vs-static rows). Also returns the t0 the
+    /// controller actually chose.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_system_with_controller(
+        &self,
+        domain: &str,
+        tag: &str,
+        draft: DraftSpec,
+        t0: f64,
+        steps_cold: usize,
+        warp: WarpMode,
+        n: usize,
+        seed: u64,
+        controller: Controller,
+    ) -> Result<(Vec<Vec<i32>>, usize, f64, Duration)> {
+        let req = GenRequest {
+            id: 0,
+            domain: domain.to_string(),
+            tag: tag.to_string(),
+            draft,
+            n_samples: n,
+            t0,
+            steps_cold,
+            warp_mode: warp,
+            seed,
+            submitted: Instant::now(),
+        };
+        let scheduler =
+            Scheduler::with_controller(&self.engine, &self.manifest, &self.metrics, 0, controller);
+        let resp = scheduler.run_single(req)?;
+        Ok((resp.samples, resp.nfe, resp.t0_used, resp.refine_time))
     }
 
     /// Generate `n` draft-only samples (the "LSTM"/"DC-GAN" table rows),

@@ -132,6 +132,107 @@ pub fn print(rows: &[Row]) {
     }
 }
 
+/// One adaptive-vs-static comparison row (§Control): same draft model,
+/// same artifact, NFE and SKL under the static floor t0 vs the scored
+/// controller's per-bundle choice.
+#[derive(Debug, Clone)]
+pub struct ControlRow {
+    pub label: String,
+    pub mode: &'static str,
+    pub t0: f64,
+    pub skl: f64,
+    pub nfe: usize,
+}
+
+/// The guarantee-floor demonstration (acceptance criterion): for each
+/// two-moons draft quality, run the *same* WS artifact once with the
+/// static floor `t0` and once under the `scored` controller. The
+/// adaptive NFE must never exceed the static-`t0_min` budget
+/// `guaranteed_nfe(STEPS_COLD, t0_min)` — asserted here, not just
+/// printed. Artifacts per kind are the lowest-t0 (floor) tags so every
+/// evaluation time stays inside the model's trained range.
+pub fn run_control(env: &Env, n_eval: usize, seed: u64) -> Result<Vec<ControlRow>> {
+    use crate::config::ControlConfig;
+    use crate::control::Controller;
+
+    let mut rng = Pcg64::new(seed ^ 0x7a1);
+    let target = two_moons::sample_batch(n_eval, &mut rng);
+    let cfg = ControlConfig { mode: "scored".into(), ..ControlConfig::default() };
+    let budget = guaranteed_nfe(STEPS_COLD, cfg.t0_min);
+
+    // (kind, floor t0 with a trained artifact).
+    let floors: [(&str, f64); 3] = [("good", 0.8), ("fair", 0.5), ("poor", 0.35)];
+    let mut rows = Vec::new();
+    for (kind, floor_t0) in floors {
+        let tag = common::ws_tag_draft(kind, floor_t0);
+        let draft = DraftSpec::Mixture(DraftKind::parse(kind).unwrap());
+        let skl_of = |samples: &[Vec<i32>]| {
+            let pts: Vec<[i32; 2]> = samples.iter().map(|s| [s[0], s[1]]).collect();
+            skl_points(&target, &pts)
+        };
+
+        let (samples, nfe, _) = env.run_system(
+            "two_moons",
+            &tag,
+            draft,
+            floor_t0,
+            STEPS_COLD,
+            WarpMode::Literal,
+            n_eval,
+            seed + 1,
+        )?;
+        assert!(nfe <= budget, "static {kind}: NFE {nfe} exceeds floor budget {budget}");
+        rows.push(ControlRow {
+            label: format!("{kind} (tag {tag})"),
+            mode: "static",
+            t0: floor_t0,
+            skl: skl_of(&samples),
+            nfe,
+        });
+
+        let controller = Controller::from_config(&cfg)?;
+        let (samples, nfe, t0_used, _) = env.run_system_with_controller(
+            "two_moons",
+            &tag,
+            draft,
+            floor_t0,
+            STEPS_COLD,
+            WarpMode::Literal,
+            n_eval,
+            seed + 1,
+            controller,
+        )?;
+        assert!(nfe <= budget, "scored {kind}: NFE {nfe} exceeds floor budget {budget}");
+        rows.push(ControlRow {
+            label: format!("{kind} (tag {tag})"),
+            mode: "scored",
+            t0: t0_used,
+            skl: skl_of(&samples),
+            nfe,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_control(rows: &[ControlRow]) {
+    let budget = guaranteed_nfe(STEPS_COLD, crate::config::ControlConfig::default().t0_min);
+    common::print_table_header(
+        &format!("Table 1b (control): static vs scored t0 — NFE budget {budget}"),
+        &["mode", "t0", "SKL", "NFE"],
+    );
+    for r in rows {
+        common::print_row(
+            &r.label,
+            &[
+                r.mode.to_string(),
+                format!("{:.2}", r.t0),
+                format!("{:.3}", r.skl),
+                format!("{}", r.nfe),
+            ],
+        );
+    }
+}
+
 /// Fig 4 + Fig 5 data dumps (CSV histograms and generation traces).
 pub fn dump_figures(env: &Env, out_dir: &std::path::Path, seed: u64) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
@@ -202,13 +303,13 @@ pub fn main(rest: &[String]) -> Result<()> {
         .flag("dump-figures", "also dump Fig 4/5 CSVs");
     let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
     let env = Env::load(args.get("artifacts"))?;
-    let rows = run_with_warp(
-        &env,
-        args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?,
-        args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
-        WarpMode::parse(args.get("warp"))?,
-    )?;
+    let n = args.get_usize("n").map_err(|m| anyhow::anyhow!(m))?;
+    let seed = args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?;
+    let rows = run_with_warp(&env, n, seed, WarpMode::parse(args.get("warp"))?)?;
     print(&rows);
+    // Adaptive-vs-static guarantee-floor demonstration (§Control).
+    let control = run_control(&env, n, seed)?;
+    print_control(&control);
     if args.flag("dump-figures") {
         dump_figures(&env, std::path::Path::new(args.get("out")), 1)?;
     }

@@ -99,6 +99,38 @@ pub fn run_text(env: &Env, cfg: &TextBenchCfg, eval_stream: &[i32], train_stream
         drafts.iter().map(|d| common::oracle_refine(d, &refine_lm, &mut rng, 0.35)).collect();
     eval_rows("Refined (oracle)", &refined, 0, Duration::ZERO);
 
+    // WS-DFM under the scored controller (§Control), appended after the
+    // paper rows so the paper-reference columns stay aligned: same
+    // ws_t050 artifact, but the per-bundle t0 comes from the LSTM draft
+    // batch's proxy score. t0_min = 0.5 keeps every evaluation time
+    // inside the artifact's trained range and caps the NFE at the
+    // static-t0=0.5 budget (the guarantee floor, asserted here).
+    {
+        use crate::config::ControlConfig;
+        use crate::control::Controller;
+        use crate::core::schedule::guaranteed_nfe;
+        let ctl_cfg = ControlConfig {
+            mode: "scored".into(),
+            t0_min: 0.5,
+            ..ControlConfig::default()
+        };
+        let controller = Controller::from_config(&ctl_cfg)?;
+        let (samples, nfe, t0_used, t) = env.run_system_with_controller(
+            cfg.domain,
+            &common::ws_tag(0.5),
+            DraftSpec::Lstm,
+            0.5,
+            cfg.steps_cold,
+            WarpMode::Literal,
+            cfg.n_eval,
+            cfg.seed + 2,
+            controller,
+        )?;
+        let budget = guaranteed_nfe(cfg.steps_cold, 0.5);
+        assert!(nfe <= budget, "scored: NFE {nfe} exceeds floor budget {budget}");
+        eval_rows(&format!("WS-DFM scored (t0={t0_used:.2})"), &samples, nfe, t);
+    }
+
     Ok(rows)
 }
 

@@ -42,10 +42,25 @@
 //! bitwise-identical across pipeline settings, including the serial
 //! `pipeline_depth = 1` path. See EXPERIMENTS.md §Serving.
 //!
+//! ## The adaptive warm-start controller
+//!
+//! The paper's `1/(1-t0)` speed-up is per-draft-quality, so [`control`]
+//! chooses each bundle's `t0` from the draft it actually produced:
+//! `static` mode runs the request's `t0` verbatim, `prior` maps the
+//! draft-model kind's prior onto a discrete grid, `scored` takes the
+//! better of an n-gram self-consistency score and an adjacent-position
+//! correlation energy score over the drafted batch. Every adaptive
+//! choice clamps to `[t0_min, t0_max]` (and up to the artifact's
+//! trained t0), so no bundle ever exceeds the static-`t0_min` NFE
+//! budget — the guarantee keeps a hard floor. Decisions are pure
+//! functions of (bundle contents, config), preserving the bitwise
+//! determinism contract. See EXPERIMENTS.md §Control.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod core;
 pub mod data;

@@ -122,6 +122,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     } else {
         println!("pipeline: depth=1 (serial admission+execution)");
     }
+    println!(
+        "control: mode={} t0 in [{}, {}] grid {:?}{}",
+        cfg.control.mode,
+        cfg.control.t0_min,
+        cfg.control.t0_max,
+        cfg.control.grid,
+        if cfg.control.calibration.is_empty() { "" } else { " (calibrated)" }
+    );
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
     if let Ok(s) = engine.stats() {
@@ -167,9 +175,10 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
     };
     let resp = scheduler.run_single(req.clone())?;
     println!(
-        "generated {} samples  nfe={}  draft={:?} refine={:?} total={:?}",
+        "generated {} samples  nfe={}  t0_used={}  draft={:?} refine={:?} total={:?}",
         resp.samples.len(),
         resp.nfe,
+        resp.t0_used,
         resp.draft_time,
         resp.refine_time,
         resp.total_time
@@ -215,11 +224,39 @@ fn cmd_info(rest: &[String]) -> Result<()> {
 fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     let cli = Cli::new("wsfm selfcheck", "validate artifacts, smoke-run one step")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("domain", "two_moons", "domain to smoke-run");
+        .opt("domain", "two_moons", "domain to smoke-run")
+        .opt("config", "", "JSON config file (controller grid for --calibrate)")
+        .flag("calibrate", "run the control calibration pass and write control_calibration.json");
     let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
     let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
     manifest.selfcheck()?;
     println!("manifest ok: {} artifacts", manifest.artifacts.len());
+
+    if args.flag("calibrate") {
+        let cfg = if args.get("config").is_empty() {
+            WsfmConfig::default()
+        } else {
+            WsfmConfig::from_file(std::path::Path::new(args.get("config")))?
+        };
+        let table = wsfm::control::calibrate_two_moons(&cfg.control)?;
+        println!("control calibration (fixed-seed two-moons reference drafts):");
+        println!("  {:>10}  {:>6}", "min_score", "t0");
+        for &(min_score, t0) in &table {
+            println!("  {min_score:>10.4}  {t0:>6.2}");
+        }
+        let json = wsfm::util::json::Json::obj(vec![(
+            "calibration",
+            wsfm::util::json::Json::arr(table.iter().map(|&(s, t)| {
+                wsfm::util::json::Json::obj(vec![
+                    ("min_score", wsfm::util::json::Json::num(s)),
+                    ("t0", wsfm::util::json::Json::num(t)),
+                ])
+            })),
+        )]);
+        let path = manifest.dir.join("control_calibration.json");
+        std::fs::write(&path, format!("{json}\n"))?;
+        println!("wrote {path:?} — merge its calibration array into config under \"control\"");
+    }
 
     let domain = args.get("domain");
     let batches = manifest.step_batches(domain, "cold");

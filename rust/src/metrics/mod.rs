@@ -131,6 +131,88 @@ impl LatencySnapshot {
     }
 }
 
+/// Unitless value histogram (e.g. the controller's chosen t0 per bundle):
+/// bounded most-recent reservoir like [`LatencyHistogram`], but over f64
+/// samples instead of durations.
+#[derive(Debug)]
+pub struct ValueHistogram {
+    cap: usize,
+    inner: Mutex<ValueInner>,
+}
+
+#[derive(Debug)]
+struct ValueInner {
+    samples: Vec<f64>, // ring buffer
+    next: usize,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl ValueHistogram {
+    pub fn new(cap: usize) -> Self {
+        ValueHistogram {
+            cap: cap.max(16),
+            inner: Mutex::new(ValueInner {
+                samples: Vec::new(),
+                next: 0,
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            }),
+        }
+    }
+
+    pub fn record(&self, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if g.samples.len() < self.cap {
+            g.samples.push(v);
+        } else {
+            let idx = g.next;
+            g.samples[idx] = v;
+            g.next = (g.next + 1) % self.cap;
+        }
+        g.count += 1;
+        g.sum += v;
+        g.min = g.min.min(v);
+        g.max = g.max.max(v);
+    }
+
+    pub fn snapshot(&self) -> ValueSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut v = g.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        ValueSnapshot {
+            count: g.count,
+            mean: if g.count > 0 { g.sum / g.count as f64 } else { 0.0 },
+            p50: if v.is_empty() { 0.0 } else { v[(v.len() - 1) / 2] },
+            min: if g.count > 0 { g.min } else { 0.0 },
+            max: if g.count > 0 { g.max } else { 0.0 },
+        }
+    }
+}
+
+/// Point-in-time view of a [`ValueHistogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ValueSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl ValueSnapshot {
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3} p50={:.3} min={:.3} max={:.3}",
+            self.count, self.mean, self.p50, self.min, self.max
+        )
+    }
+}
+
 /// Throughput meter: events per second over the meter's lifetime.
 #[derive(Debug)]
 pub struct Throughput {
@@ -178,10 +260,28 @@ pub struct ServingMetrics {
     pub padded_rows: Counter,
     /// Bundles dispatched into the pipeline and not yet completed.
     pub inflight_bundles: Gauge,
+    /// Per-bundle t0 the warm-start controller actually ran with
+    /// (`control`): equals the requested t0 in `static` mode, the
+    /// draft-quality-derived grid value in `prior`/`scored` modes.
+    pub chosen_t0: ValueHistogram,
+    /// Denoiser evaluations saved vs. the guarantee-floor budget
+    /// (`guaranteed_nfe(steps_cold, t0_min)`), summed per executed chunk.
+    /// Always 0 in `static` controller mode.
+    pub nfe_saved: Counter,
     /// Flushed bundle → DRAFT-stage pickup wait (pipeline only).
     pub draft_queue_wait: LatencyHistogram,
     /// How far past its deadline a deadline-flushed bundle was dispatched.
+    /// Only deadline-or-later dispatches are recorded here; a bundle that
+    /// flushes *before* its deadline (size-triggered) lands in
+    /// `early_flushes`/`flush_early` instead — a negative lag would
+    /// otherwise clamp to a garbage 0 sample through the unsigned
+    /// conversion.
     pub flush_lag: LatencyHistogram,
+    /// Bundles dispatched before their flush deadline (size-triggered).
+    pub early_flushes: Counter,
+    /// How far *ahead* of its deadline an early-flushed bundle was
+    /// dispatched (the headroom the size trigger bought).
+    pub flush_early: LatencyHistogram,
     pub queue_wait: LatencyHistogram,
     pub batch_exec: LatencyHistogram,
     pub request_latency: LatencyHistogram,
@@ -200,8 +300,12 @@ impl Default for ServingMetrics {
             draft_models_resolved: Counter::default(),
             padded_rows: Counter::default(),
             inflight_bundles: Gauge::default(),
+            chosen_t0: ValueHistogram::new(4096),
+            nfe_saved: Counter::default(),
             draft_queue_wait: LatencyHistogram::new(4096),
             flush_lag: LatencyHistogram::new(4096),
+            early_flushes: Counter::default(),
+            flush_early: LatencyHistogram::new(4096),
             queue_wait: LatencyHistogram::new(4096),
             batch_exec: LatencyHistogram::new(4096),
             request_latency: LatencyHistogram::new(4096),
@@ -213,7 +317,7 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} early_flushes={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
@@ -223,10 +327,14 @@ impl ServingMetrics {
             self.draft_models_resolved.get(),
             self.padded_rows.get(),
             self.inflight_bundles.get(),
+            self.nfe_saved.get(),
+            self.early_flushes.get(),
             self.samples.per_second(),
+            self.chosen_t0.snapshot().report("chosen_t0"),
             self.queue_wait.snapshot().report("queue_wait"),
             self.draft_queue_wait.snapshot().report("draft_queue_wait"),
             self.flush_lag.snapshot().report("flush_lag"),
+            self.flush_early.snapshot().report("flush_early"),
             self.batch_exec.snapshot().report("batch_exec"),
             self.request_latency.snapshot().report("request_latency"),
         )
@@ -307,6 +415,41 @@ mod tests {
         assert!(r.contains("inflight_bundles=1"));
         assert!(r.contains("draft_queue_wait"));
         assert!(r.contains("flush_lag"));
+        assert!(r.contains("flush_early"));
+        assert!(r.contains("nfe_saved=0"));
+        assert!(r.contains("early_flushes=0"));
+        assert!(r.contains("chosen_t0"));
         assert!(r.contains("request_latency"));
+    }
+
+    #[test]
+    fn value_histogram_tracks_stats() {
+        let h = ValueHistogram::new(64);
+        for v in [0.5, 0.8, 0.8, 0.95, 0.35] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert!((s.min - 0.35).abs() < 1e-12);
+        assert!((s.max - 0.95).abs() < 1e-12);
+        assert!((s.mean - 0.68).abs() < 1e-9);
+        assert!(s.p50 >= s.min && s.p50 <= s.max);
+        assert!(s.report("chosen_t0").contains("n=5"));
+    }
+
+    #[test]
+    fn value_histogram_empty_and_wrapping() {
+        let h = ValueHistogram::new(16);
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+        for i in 0..100 {
+            h.record(i as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max, 99.0);
+        // Ring retains the most recent 16; p50 among the high values.
+        assert!(s.p50 >= 84.0);
     }
 }

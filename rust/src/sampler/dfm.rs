@@ -474,27 +474,31 @@ mod tests {
         use crate::runtime::engine::LoopSpec;
         let mock = MockStep::new(4, 8, vec![0.25, 0.25, 0.5]);
         let mut scratch = LoopScratch::default();
-        let spec = |steps: usize| LoopSpec {
+        let spec = |steps: usize, t0: f64| LoopSpec {
             artifact: "m".into(),
             steps_cold: steps,
-            t0: 0.0,
+            t0,
             warp: 1.0,
             seed: 42,
             want_trace: false,
         };
         let mut tokens = vec![0i32; 4 * 8];
         let tokens_cap = tokens.capacity();
-        mock.run_loop(&spec(2), &mut tokens, &mut scratch).unwrap();
+        mock.run_loop(&spec(2, 0.0), &mut tokens, &mut scratch).unwrap();
         let cap_after_short = scratch.probs.capacity();
         assert!(cap_after_short >= 4 * 8 * 3);
-        mock.run_loop(&spec(200), &mut tokens, &mut scratch).unwrap();
-        mock.run_loop(&spec(64), &mut tokens, &mut scratch).unwrap();
-        assert_eq!(
-            scratch.probs.capacity(),
-            cap_after_short,
-            "probs scratch must not grow in steady state"
-        );
-        assert_eq!(tokens.capacity(), tokens_cap, "token buffer must be resampled in place");
+        // Varying step counts AND varying t0 (the adaptive controller's
+        // per-bundle choices change Schedule::nfe() bundle to bundle):
+        // the scratch must tolerate every mix without reallocating.
+        for (steps, t0) in [(200usize, 0.0), (64, 0.0), (64, 0.9), (20, 0.35), (200, 0.95)] {
+            mock.run_loop(&spec(steps, t0), &mut tokens, &mut scratch).unwrap();
+            assert_eq!(
+                scratch.probs.capacity(),
+                cap_after_short,
+                "probs scratch must not grow in steady state (steps={steps} t0={t0})"
+            );
+            assert_eq!(tokens.capacity(), tokens_cap, "token buffer must be resampled in place");
+        }
         assert_eq!(tokens.len(), 4 * 8);
     }
 

@@ -77,6 +77,7 @@ pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String
         ("ok", Json::Bool(true)),
         ("id", Json::num(resp.id as f64)),
         ("nfe", Json::num(resp.nfe as f64)),
+        ("t0_used", Json::num(resp.t0_used)),
         ("queue_us", Json::num(resp.queue_wait.as_micros() as f64)),
         ("draft_us", Json::num(resp.draft_time.as_micros() as f64)),
         ("refine_us", Json::num(resp.refine_time.as_micros() as f64)),
@@ -173,6 +174,7 @@ mod tests {
             id: 3,
             samples: vec![vec![1, 2], vec![3, 4]],
             nfe: 205,
+            t0_used: 0.8,
             queue_wait: Duration::from_micros(120),
             draft_time: Duration::from_micros(900),
             refine_time: Duration::from_micros(52_000),
@@ -182,6 +184,7 @@ mod tests {
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").as_bool(), Some(true));
         assert_eq!(j.get("nfe").as_usize(), Some(205));
+        assert_eq!(j.get("t0_used").as_f64(), Some(0.8));
         assert_eq!(j.get("samples").as_arr().unwrap().len(), 2);
         assert_eq!(j.get("texts").as_arr().unwrap()[0].as_str(), Some("ab"));
     }

@@ -76,8 +76,23 @@ pub struct Bench {
     pub min_sample_time: Duration,
 }
 
+/// `WSFM_BENCH_FAST=1` shrinks every harness to a smoke-test footprint
+/// (the CI bench-smoke job): numbers are noisier but the full bench
+/// binary finishes in seconds while still exercising every code path and
+/// writing `BENCH_hotpath.json`.
+fn fast_mode() -> bool {
+    std::env::var_os("WSFM_BENCH_FAST").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
 impl Default for Bench {
     fn default() -> Self {
+        if fast_mode() {
+            return Bench {
+                warmup: Duration::from_millis(5),
+                samples: 3,
+                min_sample_time: Duration::from_millis(2),
+            };
+        }
         Bench {
             warmup: Duration::from_millis(200),
             samples: 12,
@@ -88,6 +103,9 @@ impl Default for Bench {
 
 impl Bench {
     pub fn quick() -> Self {
+        if fast_mode() {
+            return Bench::default();
+        }
         Bench {
             warmup: Duration::from_millis(20),
             samples: 5,

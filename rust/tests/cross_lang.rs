@@ -6,11 +6,59 @@
 //! the *materialized* Python corpora in `artifacts/` (skipped when absent).
 
 use wsfm::core::rng::Pcg64;
+use wsfm::core::schedule::{guaranteed_nfe, Schedule};
 use wsfm::data::{corpus, textgen, two_moons};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn nfe_boundary_cases_agree_with_python() {
+    // `core::schedule::guaranteed_nfe` and `python/compile/paths.py::nfe`
+    // share one epsilon-robust formula; these golden values are what the
+    // Python side computes (regenerate with:
+    //   python3 -c "import math
+    //   def nfe(s,t0):
+    //       eps=1e-9+s*1e-12
+    //       return min(max(s,1),max(1,math.ceil(s*(1.0-t0)-eps)))" ...
+    // ) and, at the grid boundaries t0 = 1 - k/steps, equal the exact
+    // integer k. Before the epsilon-robust formulation, float drift in
+    // `steps * (1 - t0)` could come out one high/low vs the integer
+    // arithmetic for t0 near 1.
+    let cases: &[(usize, f64, usize)] = &[
+        // (steps_cold, t0, expected nfe)
+        (20, 0.0, 20),
+        (20, 0.05, 19),             // t0 = h
+        (20, 0.95, 1),              // t0 = 1 - h
+        (20, 0.35, 13),             // paper Table 1 boundary (13.000...02 in f64)
+        (3, 1.0 - 1.0 / 3.0, 1),    // off-binary grid
+        (7, 1.0 - 1.0 / 7.0, 1),
+        (49, 1.0 - 1.0 / 49.0, 1),  // 49*(1/49) = 1.0000000000000009 in f64
+        (1024, 0.8, 205),           // paper Table 2
+        (1024, 0.5, 512),
+        (1024, 0.999, 2),
+        (65536, 1.0 - 13.0 / 65536.0, 13),
+        (65536, 1.0 - 1e-9, 1),     // t0 hard against the upper boundary
+    ];
+    for &(steps, t0, want) in cases {
+        assert_eq!(guaranteed_nfe(steps, t0), want, "steps={steps} t0={t0}");
+        // And the schedule built from it is well-formed: positive steps,
+        // lands on 1.
+        let s = Schedule::new(steps, t0).unwrap();
+        assert_eq!(s.nfe(), want);
+        let last = s.nfe() - 1;
+        assert!(s.step_size(last) > 0.0, "steps={steps} t0={t0}");
+        assert!((s.times[last] + s.step_size(last) - 1.0).abs() < 1e-9);
+    }
+    // Dense boundary sweep: every (steps, k) grid point recovers k.
+    for steps in [2usize, 5, 20, 100, 1024] {
+        for k in 1..=steps.min(64) {
+            let t0 = 1.0 - k as f64 / steps as f64;
+            assert_eq!(guaranteed_nfe(steps, t0), k, "steps={steps} k={k}");
+        }
+    }
 }
 
 #[test]
