@@ -4,9 +4,10 @@
 //! sampling (scalar, substream-sequential, and row-parallel), the sampling
 //! loop's channel round-trip cost (per-step vs engine-resident), batcher
 //! offer/flush, queue handoff, JSON protocol encode/decode, the serving
-//! coordinator's serial-vs-pipelined bundle throughput — and the engine
-//! step itself per domain/batch, so the "coordinator must not be the
-//! bottleneck" target is quantified.
+//! coordinator's serial-vs-pipelined bundle throughput, the executor
+//! fleet's replica scaling (replicas=1 vs 4 on a flat-cost stage mock) —
+//! and the engine step itself per domain/batch, so the "coordinator must
+//! not be the bottleneck" target is quantified.
 //!
 //! Results additionally land in `BENCH_hotpath.json` (benchmark name →
 //! mean ns/iter) so the perf trajectory is tracked across PRs.
@@ -15,6 +16,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wsfm::config::WsfmConfig;
 use wsfm::coordinator::batcher::{Batcher, FlushPolicy};
@@ -25,6 +27,7 @@ use wsfm::core::rng::Pcg64;
 use wsfm::core::schedule::{guaranteed_nfe, WarpMode};
 use wsfm::core::tensor::TokenBatch;
 use wsfm::core::workers::WorkerPool;
+use wsfm::fleet::FleetHandle;
 use wsfm::harness::common::Env;
 use wsfm::runtime::{ArtifactMeta, Executor, LoopReport, LoopScratch, LoopSpec, TensorSpec};
 use wsfm::sampler::{sample_warm, sample_warm_stepwise, SamplerParams};
@@ -412,9 +415,17 @@ fn stage_cost_manifest(batch: usize, seq_len: usize, vocab: usize) -> wsfm::runt
     }
 }
 
-fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
-    let (batch, seq_len, vocab) = (8usize, 32usize, 16usize);
-    let n_requests = 32u64;
+/// Shared serve-bench shape for the coordinator/fleet throughput rows.
+const SERVE_BENCH_SHAPE: (usize, usize, usize) = (8, 32, 16);
+
+/// Shared harness for the serve-throughput benches: start a [`Service`]
+/// over `exec` + the stage-cost manifest, warm the stage threads with one
+/// request, then time `n_requests` full-bundle (size-flushed) requests
+/// end-to-end. Returns mean ns/bundle. Keeping one harness guarantees the
+/// serial-vs-pipelined and replicas=1-vs-4 rows stay methodologically
+/// comparable.
+fn run_serve_bench<E: Executor + 'static>(exec: E, mut cfg: WsfmConfig, n_requests: u64) -> f64 {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
     let request = |seed: u64| GenRequest {
         id: 0,
         domain: "mock".into(),
@@ -427,7 +438,24 @@ fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
         seed,
         submitted: Instant::now(),
     };
-    let run = |depth: usize, workers: usize| -> f64 {
+    cfg.batcher.max_batch = batch;
+    let svc = Service::start(exec, stage_cost_manifest(batch, seq_len, vocab), cfg);
+    svc.generate(request(0)).unwrap(); // warm the stage threads
+    let start = Instant::now();
+    let rxs: Vec<_> = (1..=n_requests).map(|i| svc.submit(request(i)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let per_bundle = start.elapsed().as_nanos() as f64 / n_requests as f64;
+    svc.shutdown();
+    per_bundle
+}
+
+fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, depth, workers) in
+        [("serve bundle serial depth=1", 1, 1), ("serve bundle pipelined depth=4 dw=2", 4, 2)]
+    {
         let exec = StageCostExec {
             batch,
             seq_len,
@@ -436,24 +464,45 @@ fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
             refine_cost: Duration::from_micros(200),
         };
         let mut cfg = WsfmConfig::default();
-        cfg.batcher.max_batch = batch;
         cfg.pipeline_depth = depth;
         cfg.draft_workers = workers;
-        let svc = Service::start(exec, stage_cost_manifest(batch, seq_len, vocab), cfg);
-        svc.generate(request(0)).unwrap(); // warm the stage threads
-        let start = Instant::now();
-        let rxs: Vec<_> = (1..=n_requests).map(|i| svc.submit(request(i)).unwrap()).collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
-        }
-        let per_bundle = start.elapsed().as_nanos() as f64 / n_requests as f64;
-        svc.shutdown();
-        per_bundle
-    };
-    for (label, depth, workers) in
-        [("serve bundle serial depth=1", 1, 1), ("serve bundle pipelined depth=4 dw=2", 4, 2)]
+        let ns = run_serve_bench(exec, cfg, 32);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet scaling: replicated executors vs a single stream (mock executor)
+// ---------------------------------------------------------------------------
+
+/// Serve the same bundle load through a fleet of `replicas` flat-cost
+/// replicas with `refine_workers = replicas`. With one replica the REFINE
+/// stage is one 200 µs stream (per-bundle cost bottoms out there); with
+/// four, concurrently popped bundles land on distinct replicas via the
+/// least-loaded router, so per-bundle wall-clock approaches refine/4.
+fn bench_fleet_throughput(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, replicas) in
+        [("serve bundle fleet replicas=1", 1), ("serve bundle fleet replicas=4", 4)]
     {
-        let ns = run(depth, workers);
+        let execs: Vec<Arc<dyn Executor>> = (0..replicas)
+            .map(|_| {
+                Arc::new(StageCostExec {
+                    batch,
+                    seq_len,
+                    vocab,
+                    draft_cost: Duration::from_micros(50),
+                    refine_cost: Duration::from_micros(200),
+                }) as Arc<dyn Executor>
+            })
+            .collect();
+        let fleet = FleetHandle::from_executors(execs);
+        let mut cfg = WsfmConfig::default();
+        cfg.pipeline_depth = 2 * replicas;
+        cfg.draft_workers = 2;
+        cfg.fleet.refine_workers = replicas;
+        let ns = run_serve_bench(fleet, cfg, 32);
         println!("{label:<38} {:>10.0} ns/bundle", ns);
         results.push((label.to_string(), ns));
     }
@@ -542,6 +591,9 @@ fn main() {
 
     println!("\n== coordinator: serial vs DRAFT→REFINE pipeline ==");
     bench_pipeline_throughput(&mut results);
+
+    println!("\n== fleet: replicated executors vs a single stream ==");
+    bench_fleet_throughput(&mut results);
 
     match Env::load("artifacts") {
         Ok(env) => {

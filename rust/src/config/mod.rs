@@ -30,6 +30,28 @@ pub struct WsfmConfig {
     pub seed: u64,
     /// Adaptive warm-start controller ([`crate::control`]).
     pub control: ControlConfig,
+    /// Replicated executor fleet ([`crate::fleet`]).
+    pub fleet: FleetConfig,
+}
+
+/// Engine-fleet tuning (`fleet` subsystem).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Engine replicas to spawn — each its own engine thread + artifact
+    /// cache, behind the deterministic least-loaded router. `1` (the
+    /// default) is the single-engine behaviour verbatim.
+    pub replicas: usize,
+    /// REFINE-stage worker threads pulling from the staged channel (only
+    /// used when `pipeline_depth >= 2`). More workers than healthy
+    /// replicas just contend on the same execution streams, so size this
+    /// to `replicas` in practice.
+    pub refine_workers: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { replicas: 1, refine_workers: 1 }
+    }
 }
 
 /// Adaptive warm-start controller tuning (`control` subsystem).
@@ -103,6 +125,7 @@ impl Default for WsfmConfig {
             draft_workers: 1,
             seed: 0,
             control: ControlConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -152,6 +175,13 @@ impl WsfmConfig {
         }
         if let Some(m) = s.get("warp_mode").as_str() {
             c.sampler.warp_mode = m.to_string();
+        }
+        let f = j.get("fleet");
+        if let Some(n) = f.get("replicas").as_usize() {
+            c.fleet.replicas = n;
+        }
+        if let Some(n) = f.get("refine_workers").as_usize() {
+            c.fleet.refine_workers = n;
         }
         let ctl = j.get("control");
         if let Some(m) = ctl.get("mode").as_str() {
@@ -204,6 +234,13 @@ impl WsfmConfig {
                 ]),
             ),
             (
+                "fleet",
+                Json::obj(vec![
+                    ("replicas", Json::num(self.fleet.replicas as f64)),
+                    ("refine_workers", Json::num(self.fleet.refine_workers as f64)),
+                ]),
+            ),
+            (
                 "control",
                 Json::obj(vec![
                     ("mode", Json::str(self.control.mode.clone())),
@@ -236,6 +273,12 @@ impl WsfmConfig {
         }
         if self.draft_workers == 0 {
             bail!("draft_workers must be positive");
+        }
+        if self.fleet.replicas == 0 {
+            bail!("fleet.replicas must be positive (1 = single engine)");
+        }
+        if self.fleet.refine_workers == 0 {
+            bail!("fleet.refine_workers must be positive");
         }
         if self.sampler.steps_cold == 0 {
             bail!("sampler.steps_cold must be positive");
@@ -316,6 +359,19 @@ mod tests {
     }
 
     #[test]
+    fn fleet_section_layering() {
+        let j = Json::parse(r#"{"fleet":{"replicas":4,"refine_workers":2}}"#).unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.fleet.replicas, 4);
+        assert_eq!(c.fleet.refine_workers, 2);
+        // Untouched -> defaults: 1 replica = single-engine behaviour.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.fleet, FleetConfig::default());
+        assert_eq!(d.fleet.replicas, 1);
+        assert_eq!(d.fleet.refine_workers, 1);
+    }
+
+    #[test]
     fn invalid_rejected() {
         for bad in [
             r#"{"batcher":{"max_batch":0}}"#,
@@ -323,6 +379,8 @@ mod tests {
             r#"{"sampler":{"warp_mode":"sideways"}}"#,
             r#"{"pipeline_depth":0}"#,
             r#"{"draft_workers":0}"#,
+            r#"{"fleet":{"replicas":0}}"#,
+            r#"{"fleet":{"refine_workers":0}}"#,
             r#"{"control":{"mode":"psychic"}}"#,
             r#"{"control":{"t0_min":0.9,"t0_max":0.5}}"#,
             r#"{"control":{"t0_max":1.0}}"#,

@@ -10,18 +10,22 @@
 //!          key, flush on size/deadline) — never executes
 //!        → DRAFT stage (draft_workers threads): plan executor chunks,
 //!          generate warm-start init tokens (lightweight model)
-//!        → REFINE stage (one thread, owns the engine-resident Euler
-//!          loop): K = ceil(steps·(1-t0)) fused steps per chunk
+//!        → REFINE stage (fleet.refine_workers threads, each driving the
+//!          engine-resident Euler loop against the replicated executor
+//!          fleet): K = ceil(steps·(1-t0)) fused steps per chunk
 //!        → per-request responses (+ NFE, timings)
 //! ```
 //!
 //! Stages are connected by bounded channels and an inflight gate capped at
 //! `pipeline_depth` bundles, so drafting bundle N+1 overlaps refining
-//! bundle N and deadline flushes proceed while the engine is busy.
-//! `pipeline_depth = 1` collapses to the serial path (the admission thread
-//! runs bundles inline). All bundle RNG derives statelessly from
-//! `(config.seed, bundle key, request seeds)` — outputs are
-//! bitwise-identical across pipeline settings ([`scheduler`]).
+//! bundle N and deadline flushes proceed while the engine is busy. With
+//! `fleet.refine_workers >= 2` over a multi-replica [`crate::fleet`],
+//! independent bundles also refine concurrently on distinct engine
+//! replicas. `pipeline_depth = 1` collapses to the serial path (the
+//! admission thread runs bundles inline). All bundle RNG derives
+//! statelessly from `(config.seed, bundle key, request seeds)` — outputs
+//! are bitwise-identical across pipeline *and fleet* settings
+//! ([`scheduler`]).
 //!
 //! Invariants (property-tested): no request lost or duplicated; batch
 //! shapes ∈ compiled set; padding rows never leak into responses; FIFO

@@ -11,10 +11,12 @@
 //! **admission thread only validates, batches, and flushes**; flushed
 //! bundles flow over bounded channels to a DRAFT stage
 //! (`config.draft_workers` threads generating warm-start init tokens) and
-//! then to a REFINE stage (one thread owning the engine-resident Euler
-//! loop — the engine serializes on the single CPU PJRT stream, so extra
-//! refine threads would only contend). Drafting bundle N+1 overlaps
-//! refining bundle N, and deadline flushes never wait on execution.
+//! then to a REFINE stage (`config.fleet.refine_workers` threads driving
+//! the engine-resident Euler loop — sized to the executor fleet's replica
+//! count, since each engine replica is one execution stream and extra
+//! workers beyond that only contend). Drafting bundle N+1 overlaps
+//! refining bundle N, independent bundles refine concurrently on distinct
+//! fleet replicas, and deadline flushes never wait on execution.
 //!
 //! An [`InflightGate`] caps dispatched-but-incomplete bundles at
 //! `config.pipeline_depth`, bounding memory and keeping backpressure at
@@ -28,9 +30,9 @@
 //!
 //! `shutdown()` stops admissions; the admission thread drains the queue
 //! and the batcher into the pipeline, then closes the draft channel; the
-//! last draft worker closes the refine channel; the refine thread drains
-//! and exits. Every admitted envelope gets a response or a clean error —
-//! no hung receivers (pinned by the shutdown-under-load test).
+//! last draft worker closes the refine channel; every refine worker
+//! drains and exits. Every admitted envelope gets a response or a clean
+//! error — no hung receivers (pinned by the shutdown-under-load test).
 
 use crate::config::WsfmConfig;
 use crate::control::Controller;
@@ -184,16 +186,22 @@ impl Service {
                     .expect("spawning draft worker thread");
             }
 
-            {
+            // `fleet.refine_workers` REFINE threads pull from the staged
+            // channel, so independent bundles refine concurrently on
+            // distinct fleet replicas (with one engine replica, extra
+            // workers just queue on its stream — size to `fleet.replicas`).
+            // Workers need no close duties: each drains the refine channel
+            // (closed by the last draft worker) and exits.
+            for w in 0..config.fleet.refine_workers {
                 let (exec, manifest, metrics) = (exec.clone(), manifest.clone(), metrics.clone());
                 let (rq, gate) = (refine_q.clone(), gate.clone());
                 let controller = controller.clone();
                 std::thread::Builder::new()
-                    .name("wsfm-refine".into())
+                    .name(format!("wsfm-refine-{w}"))
                     .spawn(move || {
                         refine_stage(&*exec, &*manifest, &metrics, seed, controller, &rq, &gate)
                     })
-                    .expect("spawning refine thread");
+                    .expect("spawning refine worker thread");
             }
 
             let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
@@ -438,8 +446,11 @@ fn draft_stage(
     }
 }
 
-/// REFINE-stage body: owns the engine-facing Euler loop; one thread,
-/// because the engine serializes on a single PJRT stream anyway.
+/// REFINE-stage worker body: drives the engine-facing Euler loop. The
+/// service spawns `fleet.refine_workers` of these over one shared MPMC
+/// refine channel; with a replicated executor fleet each concurrently
+/// popped bundle lands on a distinct engine replica (least-loaded
+/// routing), so refinement itself scales past one execution stream.
 fn refine_stage(
     exec: &dyn Executor,
     manifest: &Manifest,
@@ -684,6 +695,117 @@ mod tests {
         for (t0, _) in &reference {
             assert!((d.t0_min..=d.t0_max).contains(t0), "t0_used {t0} outside clamp");
         }
+    }
+
+    /// [`pipeline_outputs`] served through a mock-replica fleet: same
+    /// requests, same seed, executor pool of `replicas` identical
+    /// stochastic mocks behind the least-loaded router, REFINE stage
+    /// running `refine_workers` threads.
+    fn fleet_outputs(replicas: usize, refine_workers: usize) -> Vec<(f64, Vec<Vec<i32>>)> {
+        use crate::fleet::FleetHandle;
+        let execs: Vec<Arc<dyn Executor>> = (0..replicas)
+            .map(|_| Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2)) as Arc<dyn Executor>)
+            .collect();
+        let fleet = FleetHandle::from_executors(execs);
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 2;
+        // (The replica count lives in the pre-built FleetHandle; the
+        // service only reads fleet.refine_workers.)
+        cfg.fleet.refine_workers = refine_workers;
+        cfg.seed = 99;
+        let svc = Service::start(fleet, manifest, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut r = request(0, (i as usize % 3) + 1);
+            r.seed = 1000 + i;
+            rxs.push(svc.submit(r).unwrap());
+        }
+        let out = rxs
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+                (resp.t0_used, resp.samples)
+            })
+            .collect();
+        svc.shutdown();
+        out
+    }
+
+    #[test]
+    fn outputs_bitwise_identical_across_fleet_settings() {
+        // The fleet extends the determinism contract one more level:
+        // which replica refines a bundle, and how many REFINE workers
+        // race over the staged channel, can never change its tokens.
+        // Reference is the serial (depth=1), fleet-less path.
+        let reference = pipeline_outputs(1, 1, "static");
+        for (replicas, refine_workers) in [(1, 1), (1, 2), (2, 1), (2, 2), (4, 1), (4, 2)] {
+            assert_eq!(
+                reference,
+                fleet_outputs(replicas, refine_workers),
+                "outputs diverged at replicas={replicas} refine_workers={refine_workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn bundles_refine_concurrently_on_distinct_replicas() {
+        // The fleet's headline property: with replicas=2 and
+        // refine_workers=2, two bundles occupy REFINE *simultaneously* on
+        // *different* replicas. Each mock replica gets its own gate; both
+        // gates held open at once is the proof.
+        use crate::fleet::FleetHandle;
+        let g0 = Arc::new(GateCtl::default());
+        let g1 = Arc::new(GateCtl::default());
+        let mut e0 = TestExec::drift(vec![1, 4, 8], 2, 4, 1);
+        e0.gate = Some(g0.clone());
+        let mut e1 = TestExec::drift(vec![1, 4, 8], 2, 4, 1);
+        e1.gate = Some(g1.clone());
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(e0) as Arc<dyn Executor>,
+            Arc::new(e1) as Arc<dyn Executor>,
+        ]);
+        let probe = fleet.clone();
+        let manifest = mock_manifest(&["cold", "slow"], &[1, 4, 8], 2, 4);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1; // size-flush each request into its own bundle
+        cfg.batcher.max_wait_us = 1_000;
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 1;
+        cfg.fleet.refine_workers = 2;
+        let svc = Service::start(fleet, manifest, cfg);
+
+        let mk = |seed: u64| {
+            let mut r = request(seed, 1);
+            r.tag = "slow".into();
+            r
+        };
+        let rx_a = svc.submit(mk(1)).unwrap();
+        let rx_b = svc.submit(mk(2)).unwrap();
+        let t0 = Instant::now();
+        while !(g0.started.load(Ordering::SeqCst) && g1.started.load(Ordering::SeqCst)) {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "two bundles never refined concurrently on distinct replicas"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Right now both replicas hold one in-flight run each, and both
+        // bundles are still unfinished.
+        assert_eq!(probe.metrics().replica_inflight[0].get(), 1);
+        assert_eq!(probe.metrics().replica_inflight[1].get(), 1);
+        assert!(svc.metrics.inflight_bundles.get() >= 2);
+        assert!(rx_a.try_recv().is_err());
+        assert!(rx_b.try_recv().is_err());
+
+        g0.release.store(true, Ordering::SeqCst);
+        g1.release.store(true, Ordering::SeqCst);
+        rx_a.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        rx_b.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(probe.metrics().fleet_reroutes.get(), 0);
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! The engine fleet: a replicated executor pool behind one routing handle.
+//!
+//! The paper's speed-up is per-sample NFE, but a single engine thread is
+//! still one execution stream: concurrent bundles serialize on it no
+//! matter how many pipeline stages feed it. [`FleetHandle`] spawns `N`
+//! full engine replicas — each its own engine thread **and** artifact
+//! cache ([`crate::runtime::EngineHandle`]) — and implements [`Executor`]
+//! itself, so everything that talks to "the engine" (scheduler, sampler,
+//! REFINE workers, benches) transparently talks to the fleet instead.
+//! `fleet.replicas = 1` (the default) is today's single-engine behaviour
+//! verbatim: one engine thread, one cache, every call routed to it.
+//!
+//! ## Routing
+//!
+//! Dispatch is deterministic least-loaded with artifact affinity
+//! ([`router`]): healthy replicas only, fewest in-flight calls first,
+//! affinity (the replica already holds the artifact's compiled
+//! executable) breaking load ties, lowest index breaking the rest. The
+//! route+claim step runs under a lock so concurrent dispatchers observe
+//! each other's in-flight increments — two idle-fleet dispatches land on
+//! two different replicas, never stampede one.
+//!
+//! ## Failure isolation
+//!
+//! A replica whose engine thread dies surfaces the typed
+//! [`EngineDead`] error (never a hang). The fleet quarantines it
+//! (`replica_unhealthy`), re-routes the failed call to another healthy
+//! replica (`fleet_reroutes`, with the run's init tokens restored from a
+//! backup for `run_loop`, whose engine protocol moves token storage), and
+//! surfaces the typed [`FleetDown`] error once no healthy replica
+//! remains. Replica deaths are independent: one panicked engine thread
+//! never takes the fleet down.
+//!
+//! ## Determinism
+//!
+//! Outputs are a pure function of `(config seed, bundle)` — the stateless
+//! RNG substream contract established by the engine-resident loop and the
+//! pipelined coordinator — so *which* replica refines a bundle can never
+//! change its tokens. Bitwise-identical outputs across
+//! `fleet.replicas × fleet.refine_workers` sweeps are pinned by the
+//! coordinator's determinism tests.
+
+pub mod router;
+
+use crate::fleet::router::{route, Candidate};
+use crate::metrics::FleetMetrics;
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::runtime::engine::{
+    EngineDead, EngineHandle, EngineStats, Executor, LoopReport, LoopScratch, LoopSpec,
+};
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Typed error surfaced when every replica in the fleet is unhealthy:
+/// callers get a fast, downcastable failure instead of a hang or a
+/// generic channel error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetDown;
+
+impl std::fmt::Display for FleetDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "all fleet replicas are down")
+    }
+}
+
+impl std::error::Error for FleetDown {}
+
+/// One replica slot: the executor, its health flag, and the set of
+/// artifacts it has been sent (its compile-cache shadow, for affinity).
+struct Replica {
+    exec: Arc<dyn Executor>,
+    /// Engine-backed replicas keep the handle for preload/stats/shutdown.
+    engine: Option<EngineHandle>,
+    healthy: AtomicBool,
+    artifacts: Mutex<HashSet<String>>,
+}
+
+struct FleetInner {
+    replicas: Vec<Replica>,
+    metrics: FleetMetrics,
+    /// Serializes route+claim so concurrent dispatchers see each other's
+    /// in-flight increments (without it, two simultaneous dispatches on an
+    /// idle fleet would both pick replica 0).
+    router_lock: Mutex<()>,
+}
+
+/// Cloneable, thread-safe front-end to the replica pool; implements
+/// [`Executor`] so it drops in anywhere an engine handle does.
+#[derive(Clone)]
+pub struct FleetHandle {
+    inner: Arc<FleetInner>,
+}
+
+impl FleetHandle {
+    /// Spawn `replicas` engine replicas over a manifest (each its own
+    /// engine thread + artifact cache). `replicas` is floored at 1.
+    pub fn spawn(manifest: Manifest, replicas: usize) -> Result<FleetHandle> {
+        let n = replicas.max(1);
+        let mut slots = Vec::with_capacity(n);
+        for i in 0..n {
+            let engine = EngineHandle::spawn(manifest.clone())
+                .with_context(|| format!("spawning fleet replica {i}"))?;
+            slots.push(Replica {
+                exec: Arc::new(engine.clone()),
+                engine: Some(engine),
+                healthy: AtomicBool::new(true),
+                artifacts: Mutex::new(HashSet::new()),
+            });
+        }
+        Ok(FleetHandle::from_slots(slots))
+    }
+
+    /// Build a fleet over arbitrary executors (tests, benches: mock
+    /// replicas with controlled behaviour). Panics on an empty pool.
+    pub fn from_executors(execs: Vec<Arc<dyn Executor>>) -> FleetHandle {
+        let slots = execs
+            .into_iter()
+            .map(|exec| Replica {
+                exec,
+                engine: None,
+                healthy: AtomicBool::new(true),
+                artifacts: Mutex::new(HashSet::new()),
+            })
+            .collect();
+        FleetHandle::from_slots(slots)
+    }
+
+    fn from_slots(slots: Vec<Replica>) -> FleetHandle {
+        assert!(!slots.is_empty(), "fleet needs at least one replica");
+        let metrics = FleetMetrics::new(slots.len());
+        FleetHandle {
+            inner: Arc::new(FleetInner { replicas: slots, metrics, router_lock: Mutex::new(()) }),
+        }
+    }
+
+    /// Total replicas (healthy or not).
+    pub fn replicas(&self) -> usize {
+        self.inner.replicas.len()
+    }
+
+    /// Replicas still accepting work.
+    pub fn healthy_replicas(&self) -> usize {
+        self.inner.replicas.iter().filter(|r| r.healthy.load(Ordering::SeqCst)).count()
+    }
+
+    /// The fleet's routing/health metrics (per-replica inflight gauges,
+    /// unhealthy + reroute counters).
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.inner.metrics
+    }
+
+    /// Route + claim a replica for `artifact` under the router lock:
+    /// increments its inflight gauge and records the artifact in its
+    /// affinity set before releasing the lock.
+    fn claim(&self, artifact: &str) -> Result<usize> {
+        let m = &self.inner.metrics;
+        let _g = self.inner.router_lock.lock().unwrap();
+        let candidates: Vec<Candidate> = self
+            .inner
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(index, r)| Candidate {
+                index,
+                healthy: r.healthy.load(Ordering::SeqCst),
+                inflight: m.replica_inflight[index].get(),
+                has_artifact: r.artifacts.lock().unwrap().contains(artifact),
+            })
+            .collect();
+        let idx = route(&candidates).ok_or_else(|| anyhow::Error::new(FleetDown))?;
+        m.replica_inflight[idx].inc();
+        m.replica_dispatched[idx].inc();
+        // candidates[idx].index == idx (built in order); skip the String
+        // allocation + re-lock once the artifact is known resident.
+        if !candidates[idx].has_artifact {
+            self.inner.replicas[idx].artifacts.lock().unwrap().insert(artifact.to_string());
+        }
+        Ok(idx)
+    }
+
+    /// Run `call` on the routed replica. On the typed [`EngineDead`]
+    /// error the replica is quarantined and the call re-routed; every
+    /// other error (bad artifact, shape mismatch) returns unchanged —
+    /// it would fail identically anywhere. Each death permanently removes
+    /// one candidate, so the loop is bounded by the replica count before
+    /// [`claim`](Self::claim) surfaces [`FleetDown`].
+    fn dispatch<T>(
+        &self,
+        artifact: &str,
+        mut call: impl FnMut(&dyn Executor) -> Result<T>,
+    ) -> Result<T> {
+        let m = &self.inner.metrics;
+        let mut attempt = 0usize;
+        loop {
+            let idx = self.claim(artifact)?;
+            if attempt > 0 {
+                m.fleet_reroutes.inc();
+            }
+            attempt += 1;
+            let replica = &self.inner.replicas[idx];
+            let result = call(&*replica.exec);
+            m.replica_inflight[idx].dec();
+            match result {
+                Err(e) if e.downcast_ref::<EngineDead>().is_some() => {
+                    // swap() keeps the unhealthy counter exact when two
+                    // in-flight calls observe the same death.
+                    if replica.healthy.swap(false, Ordering::SeqCst) {
+                        m.replica_unhealthy.inc();
+                        crate::error!("fleet: replica {idx} engine died; re-routing its work");
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Eagerly compile `names` on **every** engine-backed replica.
+    /// Duplicate compilation is deliberate here — preload is the operator
+    /// buying compile time up front so no replica pays it on the request
+    /// path — and the affinity sets are updated to match. A replica that
+    /// answers with [`EngineDead`] is quarantined, not fatal (the same
+    /// failure-isolation contract as dispatch: one dead engine never
+    /// takes the fleet down); ordinary compile errors still propagate,
+    /// and an entirely dead pool surfaces [`FleetDown`].
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        for (i, r) in self.inner.replicas.iter().enumerate() {
+            let Some(engine) = &r.engine else { continue };
+            if !r.healthy.load(Ordering::SeqCst) {
+                continue;
+            }
+            match engine.preload(names) {
+                Ok(()) => r.artifacts.lock().unwrap().extend(names.iter().cloned()),
+                Err(e) if e.downcast_ref::<EngineDead>().is_some() => {
+                    if r.healthy.swap(false, Ordering::SeqCst) {
+                        self.inner.metrics.replica_unhealthy.inc();
+                        crate::error!("fleet: replica {i} engine died during preload; quarantined");
+                    }
+                }
+                Err(e) => return Err(e.context(format!("preloading fleet replica {i}"))),
+            }
+        }
+        if self.healthy_replicas() == 0 {
+            return Err(anyhow::Error::new(FleetDown));
+        }
+        Ok(())
+    }
+
+    /// Per-replica engine statistics (`None` for non-engine replicas and
+    /// for dead engines).
+    pub fn engine_stats(&self) -> Vec<Option<EngineStats>> {
+        self.inner
+            .replicas
+            .iter()
+            .map(|r| r.engine.as_ref().and_then(|e| e.stats().ok()))
+            .collect()
+    }
+
+    /// Multi-line human summary for the serve/selfcheck CLI: the fleet
+    /// counters plus one line per replica.
+    pub fn summary(&self) -> String {
+        let mut s = self.inner.metrics.summary();
+        for (i, r) in self.inner.replicas.iter().enumerate() {
+            let health = if r.healthy.load(Ordering::SeqCst) { "" } else { " (unhealthy)" };
+            match &r.engine {
+                Some(engine) => match engine.stats() {
+                    Ok(es) => s.push_str(&format!("\n  replica {i}{health}: {}", es.summary())),
+                    Err(_) => s.push_str(&format!("\n  replica {i}{health}: engine dead")),
+                },
+                None => s.push_str(&format!("\n  replica {i}{health}: (non-engine executor)")),
+            }
+        }
+        s
+    }
+
+    /// Shut down every engine-backed replica.
+    pub fn shutdown(&self) {
+        for r in &self.inner.replicas {
+            if let Some(engine) = &r.engine {
+                engine.shutdown();
+            }
+        }
+    }
+}
+
+impl Executor for FleetHandle {
+    fn step_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.dispatch(artifact, |exec| exec.step_into(artifact, tokens, t, h, warp, out))
+    }
+
+    fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
+        self.dispatch(artifact, |exec| exec.draft(artifact, noise))
+    }
+
+    fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+        // Metadata is replica-independent (every replica shares the
+        // manifest) and, for engine replicas, served without touching the
+        // engine thread — so no routing and no health check.
+        self.inner.replicas[0].exec.meta(artifact)
+    }
+
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        scratch: &mut LoopScratch,
+    ) -> Result<LoopReport> {
+        // EngineHandle::run_loop *moves* the token storage into the engine
+        // channel; if that replica dies mid-flight the tokens are gone
+        // with it. A single replica has nowhere to re-route, so skip the
+        // backup entirely (on error, tokens content is unspecified per
+        // the trait contract).
+        if self.replicas() == 1 {
+            return self.dispatch(&spec.artifact, |exec| exec.run_loop(spec, tokens, scratch));
+        }
+        // Multi-replica: snapshot the init tokens into a persistent
+        // per-thread buffer. `clone_from` reuses its capacity, so
+        // steady-state runs on long-lived REFINE workers copy without
+        // allocating (the PR 1 scratch contract, kept).
+        RUN_LOOP_BACKUP.with(|cell| {
+            let mut backup = cell.borrow_mut();
+            backup.clone_from(tokens);
+            let mut first = true;
+            self.dispatch(&spec.artifact, |exec| {
+                if !first {
+                    tokens.clone_from(&backup);
+                }
+                first = false;
+                exec.run_loop(spec, tokens, scratch)
+            })
+        })
+    }
+}
+
+thread_local! {
+    /// Init-token backup for [`FleetHandle::run_loop`]'s re-route path.
+    /// Thread-local (not per-fleet) because a dispatch thread runs one
+    /// loop at a time; capacity persists across runs.
+    static RUN_LOOP_BACKUP: std::cell::RefCell<Vec<i32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::TestExec;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts: vec![],
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    /// An engine handle whose thread has been deliberately killed: every
+    /// call observes the disconnected channel as the typed EngineDead
+    /// (requests are FIFO, so anything sent after Shutdown fails).
+    fn dead_engine() -> EngineHandle {
+        let h = EngineHandle::spawn(empty_manifest()).unwrap();
+        h.shutdown();
+        h
+    }
+
+    fn mock() -> TestExec {
+        TestExec::drift(vec![1, 4], 2, 4, 1)
+    }
+
+    #[test]
+    fn single_replica_delegates_and_tracks_metrics() {
+        let fleet = FleetHandle::from_executors(vec![Arc::new(mock()) as Arc<dyn Executor>]);
+        assert_eq!(fleet.replicas(), 1);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        let mut out = Vec::new();
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(out.len(), 8 * 4);
+        assert_eq!(fleet.meta("mock_cold_step_b4").unwrap().batch, 4);
+        let m = fleet.metrics();
+        assert_eq!(m.replica_dispatched[0].get(), 1);
+        assert_eq!(m.replica_inflight[0].get(), 0, "inflight released after the call");
+        assert_eq!(m.fleet_reroutes.get(), 0);
+    }
+
+    #[test]
+    fn affinity_prefers_replica_that_already_has_the_artifact() {
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(mock()) as Arc<dyn Executor>,
+            Arc::new(mock()) as Arc<dyn Executor>,
+        ]);
+        let a = "mock_cold_step_b1";
+        let b = "mock_warm_step_b1";
+        let toks = [0i32; 2];
+        let mut out = Vec::new();
+        // Idle fleet, nothing compiled: lowest index wins -> replica 0.
+        fleet.step_into(a, &toks, 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(fleet.metrics().replica_dispatched[0].get(), 1);
+        // Replica 0 busy: artifact b lands on replica 1 (least-loaded).
+        fleet.metrics().replica_inflight[0].inc();
+        fleet.step_into(b, &toks, 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(fleet.metrics().replica_dispatched[1].get(), 1);
+        fleet.metrics().replica_inflight[0].dec();
+        // Idle again: b sticks to replica 1 by affinity despite the
+        // higher index; a sticks to replica 0.
+        fleet.step_into(b, &toks, 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(fleet.metrics().replica_dispatched[1].get(), 2);
+        fleet.step_into(a, &toks, 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(fleet.metrics().replica_dispatched[0].get(), 2);
+        assert_eq!(fleet.metrics().fleet_reroutes.get(), 0);
+    }
+
+    #[test]
+    fn dead_replica_quarantined_and_call_rerouted() {
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(dead_engine()) as Arc<dyn Executor>,
+            Arc::new(mock()) as Arc<dyn Executor>,
+        ]);
+        let mut out = Vec::new();
+        // Routed to replica 0 (idle, lowest index), which is dead: the
+        // call must still succeed via replica 1.
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(out.len(), 8 * 4);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        let m = fleet.metrics();
+        assert_eq!(m.replica_unhealthy.get(), 1);
+        assert_eq!(m.fleet_reroutes.get(), 1);
+        assert_eq!(m.replica_dispatched[0].get(), 1);
+        assert_eq!(m.replica_dispatched[1].get(), 1);
+        // The quarantined replica is never picked again; routing around a
+        // known-dead replica is not a re-route.
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(m.replica_dispatched[0].get(), 1);
+        assert_eq!(m.replica_dispatched[1].get(), 2);
+        assert_eq!(m.fleet_reroutes.get(), 1);
+        assert!(fleet.summary().contains("(unhealthy)"), "{}", fleet.summary());
+    }
+
+    #[test]
+    fn all_replicas_down_is_typed_fleet_down_not_a_hang() {
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(dead_engine()) as Arc<dyn Executor>,
+            Arc::new(dead_engine()) as Arc<dyn Executor>,
+        ]);
+        let mut out = Vec::new();
+        let err =
+            fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap_err();
+        assert!(err.downcast_ref::<FleetDown>().is_some(), "{err:#}");
+        assert_eq!(fleet.healthy_replicas(), 0);
+        assert_eq!(fleet.metrics().replica_unhealthy.get(), 2);
+        // Subsequent calls fail fast with the same typed error.
+        let err2 = fleet.draft("a", &[0.0]).unwrap_err();
+        assert!(err2.downcast_ref::<FleetDown>().is_some(), "{err2:#}");
+    }
+
+    #[test]
+    fn run_loop_reroute_restores_init_tokens() {
+        // The engine protocol moves token storage into the channel; a
+        // death mid-dispatch must not corrupt the retried run. A
+        // stochastic mock makes the output depend on the init tokens, so
+        // equality with a direct solo run proves the backup restored them.
+        let spec = LoopSpec {
+            artifact: "mock_cold_step_b4".into(),
+            steps_cold: 10,
+            t0: 0.5,
+            warp: 1.0,
+            seed: 7,
+            want_trace: false,
+        };
+        let solo = TestExec::stochastic(vec![1, 4], 2, 4, 1);
+        let mut expected = vec![3i32; 8];
+        solo.run_loop(&spec, &mut expected, &mut LoopScratch::default()).unwrap();
+
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(dead_engine()) as Arc<dyn Executor>,
+            Arc::new(TestExec::stochastic(vec![1, 4], 2, 4, 1)) as Arc<dyn Executor>,
+        ]);
+        let mut tokens = vec![3i32; 8];
+        let mut scratch = LoopScratch::default();
+        let report = fleet.run_loop(&spec, &mut tokens, &mut scratch).unwrap();
+        assert_eq!(report.nfe, 5);
+        assert_eq!(tokens, expected, "rerouted run must see the original init tokens");
+        assert_eq!(fleet.metrics().fleet_reroutes.get(), 1);
+    }
+
+    #[test]
+    fn preload_quarantines_dead_replicas_instead_of_aborting() {
+        let fleet = FleetHandle::spawn(empty_manifest(), 2).unwrap();
+        fleet.preload(&[]).unwrap(); // live engines, nothing to compile
+        assert_eq!(fleet.healthy_replicas(), 2);
+        fleet.shutdown();
+        // Every engine dead: preload quarantines them (failure isolation,
+        // same contract as dispatch) and reports the typed FleetDown
+        // rather than a hard per-replica error.
+        let err = fleet.preload(&[]).unwrap_err();
+        assert!(err.downcast_ref::<FleetDown>().is_some(), "{err:#}");
+        assert_eq!(fleet.healthy_replicas(), 0);
+        assert_eq!(fleet.metrics().replica_unhealthy.get(), 2);
+    }
+
+    #[test]
+    fn engine_backed_fleet_summary_and_shutdown() {
+        let fleet = FleetHandle::spawn(empty_manifest(), 2).unwrap();
+        assert_eq!(fleet.replicas(), 2);
+        let s = fleet.summary();
+        assert!(s.contains("replicas=2"), "{s}");
+        assert!(s.contains("replica 0:") && s.contains("replica 1:"), "{s}");
+        assert!(s.contains("compiled"), "{s}");
+        assert_eq!(fleet.engine_stats().iter().filter(|e| e.is_some()).count(), 2);
+        fleet.shutdown();
+        // Replicas floored at 1: a zero-replica config still serves.
+        let one = FleetHandle::spawn(empty_manifest(), 0).unwrap();
+        assert_eq!(one.replicas(), 1);
+        one.shutdown();
+    }
+}

@@ -1,0 +1,91 @@
+//! Deterministic least-loaded routing with artifact affinity.
+//!
+//! Routing is a **pure function** of the replica state snapshot — no RNG,
+//! no clock, no round-robin cursor — so the same fleet state always routes
+//! the same way (debuggable, and trivially reproducible in tests). The
+//! preference order is:
+//!
+//! 1. healthy replicas only (dead engines are never picked);
+//! 2. least in-flight calls (throughput: spread load across streams);
+//! 3. among equally-loaded replicas, one that has already been sent the
+//!    artifact (affinity: its engine has the compiled executable cached,
+//!    so no duplicate compilation);
+//! 4. lowest replica index (the deterministic tie-break).
+//!
+//! Least-loaded deliberately outranks affinity: under load a second
+//! replica compiling a duplicate artifact costs one compile, while
+//! serializing every bundle of one artifact onto a single replica would
+//! forfeit the fleet's whole point. On an idle fleet the affinity bit
+//! decides, which is the case that matters for avoiding re-compiles.
+
+/// A replica's routing-relevant state, snapshotted under the fleet's
+/// router lock so concurrent dispatches observe each other's in-flight
+/// increments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Replica id (position in the fleet).
+    pub index: usize,
+    /// False once the replica's engine thread died.
+    pub healthy: bool,
+    /// Executor calls currently running on the replica.
+    pub inflight: i64,
+    /// Whether this replica has already been sent the artifact.
+    pub has_artifact: bool,
+}
+
+/// Pick the replica for a dispatch; `None` when no healthy replica is
+/// left (the caller surfaces a typed fleet-down error).
+pub fn route(candidates: &[Candidate]) -> Option<usize> {
+    candidates
+        .iter()
+        .filter(|c| c.healthy)
+        .min_by_key(|c| (c.inflight, !c.has_artifact, c.index))
+        .map(|c| c.index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(index: usize, healthy: bool, inflight: i64, has_artifact: bool) -> Candidate {
+        Candidate { index, healthy, inflight, has_artifact }
+    }
+
+    #[test]
+    fn empty_or_all_dead_routes_nowhere() {
+        assert_eq!(route(&[]), None);
+        assert_eq!(route(&[cand(0, false, 0, true), cand(1, false, 0, true)]), None);
+    }
+
+    #[test]
+    fn least_loaded_wins_over_affinity() {
+        // Replica 0 has the artifact but is busy; the idle replica 1 gets
+        // the dispatch (throughput beats compile dedup under load).
+        let cs = [cand(0, true, 2, true), cand(1, true, 0, false)];
+        assert_eq!(route(&cs), Some(1));
+    }
+
+    #[test]
+    fn affinity_breaks_load_ties() {
+        // Equal load: the replica that already compiled the artifact wins
+        // even with a higher index.
+        let cs = [cand(0, true, 1, false), cand(1, true, 1, true)];
+        assert_eq!(route(&cs), Some(1));
+    }
+
+    #[test]
+    fn index_is_the_final_tie_break() {
+        let cs = [cand(0, true, 0, false), cand(1, true, 0, false), cand(2, true, 0, false)];
+        assert_eq!(route(&cs), Some(0));
+        // ... and it is deterministic: same snapshot, same pick, always.
+        for _ in 0..100 {
+            assert_eq!(route(&cs), Some(0));
+        }
+    }
+
+    #[test]
+    fn unhealthy_replicas_are_skipped_even_when_idle() {
+        let cs = [cand(0, false, 0, true), cand(1, true, 3, false)];
+        assert_eq!(route(&cs), Some(1));
+    }
+}

@@ -34,13 +34,31 @@
 //! admission thread only validates, batches, and flushes; flushed bundles
 //! cross bounded channels to a DRAFT stage (warm-start init tokens,
 //! `draft_workers` threads with per-thread draft-model caches) and a
-//! REFINE stage (one thread owning the engine-resident loop), capped at
+//! REFINE stage (`fleet.refine_workers` threads driving the
+//! engine-resident loop against the executor fleet), capped at
 //! `pipeline_depth` bundles in flight. Drafting bundle N+1 overlaps
 //! refining bundle N, and deadline flushes never wait on execution. All
 //! bundle randomness is a stateless substream of
 //! `(config.seed, bundle key, request seeds)`, so tokens are
 //! bitwise-identical across pipeline settings, including the serial
 //! `pipeline_depth = 1` path. See EXPERIMENTS.md §Serving.
+//!
+//! ## The engine fleet
+//!
+//! One engine thread is one execution stream; concurrent bundles
+//! serialize on it regardless of pipeline depth. [`fleet`] replicates the
+//! execution layer: `fleet.replicas` full engine replicas (each its own
+//! engine thread + artifact cache) behind a [`fleet::FleetHandle`] that
+//! implements `Executor`, routing every dispatch deterministically —
+//! least-loaded first, artifact affinity breaking ties (avoid duplicate
+//! compiles), lowest index last. The REFINE stage runs
+//! `fleet.refine_workers` threads so independent bundles refine
+//! concurrently on distinct replicas. Replicas are panic-isolated: a dead
+//! engine thread surfaces the typed `EngineDead`, its work re-routes to a
+//! healthy replica, and only an entirely dead pool surfaces the typed
+//! `FleetDown`. Because all bundle RNG is stateless, outputs are
+//! bitwise-identical for any `(replicas, refine_workers, pipeline_depth,
+//! draft_workers)`. See EXPERIMENTS.md §Fleet.
 //!
 //! ## The adaptive warm-start controller
 //!
@@ -66,6 +84,7 @@ pub mod core;
 pub mod data;
 pub mod draft;
 pub mod eval;
+pub mod fleet;
 pub mod harness;
 pub mod metrics;
 pub mod runtime;

@@ -13,6 +13,7 @@ use wsfm::config::WsfmConfig;
 use wsfm::coordinator::request::{DraftSpec, GenRequest};
 use wsfm::coordinator::Service;
 use wsfm::core::schedule::WarpMode;
+use wsfm::fleet::FleetHandle;
 use wsfm::harness;
 use wsfm::runtime::{EngineHandle, Manifest};
 use wsfm::server::TcpServer;
@@ -97,7 +98,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let cfg = load_config(&args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     manifest.selfcheck()?;
-    let engine = EngineHandle::spawn(manifest.clone())?;
+    // The executor fleet: `fleet.replicas` engine threads (each with its
+    // own artifact cache) behind one least-loaded routing handle.
+    let fleet = FleetHandle::spawn(manifest.clone(), cfg.fleet.replicas)?;
 
     if !args.get("preload").is_empty() {
         for domain in args.get("preload").split(',') {
@@ -106,22 +109,27 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             if names.is_empty() {
                 bail!("no artifacts for preload domain {domain:?}");
             }
-            println!("preloading {} artifacts for {domain}...", names.len());
-            engine.preload(&names)?;
+            println!(
+                "preloading {} artifacts for {domain} on {} replica(s)...",
+                names.len(),
+                fleet.replicas()
+            );
+            fleet.preload(&names)?;
         }
     }
 
-    let service = Service::start(engine.clone(), manifest.clone(), cfg.clone());
+    let service = Service::start(fleet.clone(), manifest.clone(), cfg.clone());
     let server = TcpServer::bind(&cfg.listen_addr, service.clone(), manifest)?;
     println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
     if cfg.pipeline_depth > 1 {
         println!(
-            "pipeline: depth={} draft_workers={} (DRAFT overlaps REFINE)",
-            cfg.pipeline_depth, cfg.draft_workers
+            "pipeline: depth={} draft_workers={} refine_workers={} (DRAFT overlaps REFINE)",
+            cfg.pipeline_depth, cfg.draft_workers, cfg.fleet.refine_workers
         );
     } else {
         println!("pipeline: depth=1 (serial admission+execution)");
     }
+    println!("fleet: {} engine replica(s), least-loaded routing", fleet.replicas());
     println!(
         "control: mode={} t0 in [{}, {}] grid {:?}{}",
         cfg.control.mode,
@@ -132,11 +140,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     );
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
-    if let Ok(s) = engine.stats() {
-        println!("engine: {}", s.summary());
-    }
+    println!("fleet: {}", fleet.summary());
     service.shutdown();
-    engine.shutdown();
+    fleet.shutdown();
     Ok(())
 }
 
@@ -225,19 +231,19 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     let cli = Cli::new("wsfm selfcheck", "validate artifacts, smoke-run one step")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("domain", "two_moons", "domain to smoke-run")
-        .opt("config", "", "JSON config file (controller grid for --calibrate)")
+        .opt("config", "", "JSON config file (fleet.replicas; controller grid for --calibrate)")
         .flag("calibrate", "run the control calibration pass and write control_calibration.json");
     let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
     let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
     manifest.selfcheck()?;
     println!("manifest ok: {} artifacts", manifest.artifacts.len());
+    let cfg = if args.get("config").is_empty() {
+        WsfmConfig::default()
+    } else {
+        WsfmConfig::from_file(std::path::Path::new(args.get("config")))?
+    };
 
     if args.flag("calibrate") {
-        let cfg = if args.get("config").is_empty() {
-            WsfmConfig::default()
-        } else {
-            WsfmConfig::from_file(std::path::Path::new(args.get("config")))?
-        };
         let table = wsfm::control::calibrate_two_moons(&cfg.control)?;
         println!("control calibration (fixed-seed two-moons reference drafts):");
         println!("  {:>10}  {:>6}", "min_score", "t0");
@@ -261,9 +267,10 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     let domain = args.get("domain");
     let batches = manifest.step_batches(domain, "cold");
     let b = *batches.first().context("no cold artifacts for domain")?;
-    let engine = EngineHandle::spawn(manifest.clone())?;
+    // Smoke the executor fleet exactly as `serve` would run it.
+    let fleet = FleetHandle::spawn(manifest.clone(), cfg.fleet.replicas)?;
     let metrics = wsfm::metrics::ServingMetrics::default();
-    let scheduler = wsfm::coordinator::Scheduler::new(&engine, &manifest, &metrics, 0);
+    let scheduler = wsfm::coordinator::Scheduler::new(&fleet, &manifest, &metrics, 0);
     let req = GenRequest {
         id: 0,
         domain: domain.to_string(),
@@ -287,10 +294,9 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     // Serving metrics incl. the pipeline gauges/histograms
     // (inflight_bundles, draft_queue_wait, flush_lag).
     println!("serving metrics:\n{}", metrics.report());
-    // Microsecond-resolution engine counters (sub-ms steps used to
-    // truncate to 0 under the old as_millis() accounting).
-    let stats = engine.stats()?;
-    println!("engine: {}", stats.summary());
-    engine.shutdown();
+    // Fleet routing/health counters plus per-replica engine stats
+    // (microsecond-resolution compile/exec counters per replica).
+    println!("fleet: {}", fleet.summary());
+    fleet.shutdown();
     Ok(())
 }

@@ -213,6 +213,48 @@ impl ValueSnapshot {
     }
 }
 
+/// Metrics for the replicated executor fleet ([`crate::fleet`]). Owned by
+/// the `FleetHandle` rather than [`ServingMetrics`] because the fleet is
+/// constructed before the serving service exists (and is useful without
+/// one, e.g. under `wsfm selfcheck`); the CLI prints
+/// [`FleetMetrics::summary`] alongside the serving report.
+#[derive(Debug)]
+pub struct FleetMetrics {
+    /// Executor calls currently running on each replica (index = replica
+    /// id). The router picks the healthy replica with the lowest value.
+    pub replica_inflight: Vec<Gauge>,
+    /// Calls routed to each replica over the fleet's lifetime.
+    pub replica_dispatched: Vec<Counter>,
+    /// Replicas marked unhealthy after their engine thread died.
+    pub replica_unhealthy: Counter,
+    /// Calls re-routed to another replica after a dead one was observed.
+    pub fleet_reroutes: Counter,
+}
+
+impl FleetMetrics {
+    pub fn new(replicas: usize) -> Self {
+        FleetMetrics {
+            replica_inflight: (0..replicas).map(|_| Gauge::default()).collect(),
+            replica_dispatched: (0..replicas).map(|_| Counter::default()).collect(),
+            replica_unhealthy: Counter::default(),
+            fleet_reroutes: Counter::default(),
+        }
+    }
+
+    /// One-line rendering for the serve/selfcheck summary.
+    pub fn summary(&self) -> String {
+        let join = |it: Vec<String>| it.join(",");
+        format!(
+            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={}",
+            self.replica_inflight.len(),
+            join(self.replica_inflight.iter().map(|g| g.get().to_string()).collect()),
+            join(self.replica_dispatched.iter().map(|c| c.get().to_string()).collect()),
+            self.replica_unhealthy.get(),
+            self.fleet_reroutes.get()
+        )
+    }
+}
+
 /// Throughput meter: events per second over the meter's lifetime.
 #[derive(Debug)]
 pub struct Throughput {
@@ -435,6 +477,22 @@ mod tests {
         assert!((s.mean - 0.68).abs() < 1e-9);
         assert!(s.p50 >= s.min && s.p50 <= s.max);
         assert!(s.report("chosen_t0").contains("n=5"));
+    }
+
+    #[test]
+    fn fleet_metrics_summary_tracks_per_replica_state() {
+        let m = FleetMetrics::new(3);
+        m.replica_inflight[1].inc();
+        m.replica_dispatched[0].add(4);
+        m.replica_dispatched[1].inc();
+        m.replica_unhealthy.inc();
+        m.fleet_reroutes.add(2);
+        let s = m.summary();
+        assert!(s.contains("replicas=3"), "{s}");
+        assert!(s.contains("replica_inflight=[0,1,0]"), "{s}");
+        assert!(s.contains("replica_dispatched=[4,1,0]"), "{s}");
+        assert!(s.contains("replica_unhealthy=1"), "{s}");
+        assert!(s.contains("fleet_reroutes=2"), "{s}");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The PJRT execution engine.
 //!
 //! `xla::PjRtClient` is `Rc`-based and not `Send`, so all PJRT work runs on
-//! one dedicated **engine thread** (the machine has one accelerator — the
-//! CPU plugin — so a single execution stream is also the right throughput
-//! model). The rest of the stack talks to it through [`EngineHandle`], a
-//! cloneable, `Send + Sync` channel front-end implementing [`Executor`].
+//! a dedicated **engine thread** — one independent execution stream per
+//! spawned engine. The rest of the stack talks to it through
+//! [`EngineHandle`], a cloneable, `Send + Sync` channel front-end
+//! implementing [`Executor`]; [`crate::fleet`] replicates whole engines
+//! (thread + artifact cache) behind one routing handle when a single
+//! stream is the throughput bottleneck.
 //!
 //! Artifacts are compiled lazily on first use and cached for the process
 //! lifetime; `preload` warms them eagerly at startup.
@@ -40,6 +42,24 @@ use std::time::{Duration, Instant};
 
 #[cfg(not(feature = "pjrt"))]
 use crate::runtime::xla_stub as xla;
+
+/// Typed error for a dead engine thread: the request or response channel
+/// disconnected, meaning the thread panicked, was shut down, or otherwise
+/// exited. Callers that supervise replicas ([`crate::fleet`]) downcast to
+/// this to distinguish "this engine is gone, re-route" from ordinary
+/// execution errors ("bad artifact name") that would also fail anywhere
+/// else. Every [`EngineHandle`] entry point returns it on disconnect —
+/// never a hang, never a generic string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineDead;
+
+impl std::fmt::Display for EngineDead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine thread dead (channel disconnected)")
+    }
+}
+
+impl std::error::Error for EngineDead {}
 
 /// Executable kinds the engine knows how to drive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -552,14 +572,14 @@ impl EngineHandle {
         let (resp, rx) = mpsc::channel();
         self.tx
             .send(Req::Preload { names: names.to_vec(), resp })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .map_err(|_| anyhow::Error::new(EngineDead))?;
+        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))?
     }
 
     pub fn stats(&self) -> Result<EngineStats> {
         let (resp, rx) = mpsc::channel();
-        self.tx.send(Req::Stats { resp }).map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+        self.tx.send(Req::Stats { resp }).map_err(|_| anyhow::Error::new(EngineDead))?;
+        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))
     }
 
     pub fn shutdown(&self) {
@@ -572,16 +592,16 @@ impl Executor for EngineHandle {
         let (resp, rx) = mpsc::channel();
         self.tx
             .send(Req::Step { name: artifact.to_string(), tokens: tokens.to_vec(), t, h, warp, resp })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .map_err(|_| anyhow::Error::new(EngineDead))?;
+        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))?
     }
 
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
         let (resp, rx) = mpsc::channel();
         self.tx
             .send(Req::Draft { name: artifact.to_string(), noise: noise.to_vec(), resp })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+            .map_err(|_| anyhow::Error::new(EngineDead))?;
+        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))?
     }
 
     fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
@@ -607,8 +627,8 @@ impl Executor for EngineHandle {
         let staged = std::mem::take(tokens);
         self.tx
             .send(Req::RunLoop { spec: spec.clone(), tokens: staged, resp })
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        let (final_tokens, report) = rx.recv().map_err(|_| anyhow!("engine thread gone"))??;
+            .map_err(|_| anyhow::Error::new(EngineDead))?;
+        let (final_tokens, report) = rx.recv().map_err(|_| anyhow::Error::new(EngineDead))??;
         *tokens = final_tokens;
         Ok(report)
     }
@@ -662,6 +682,43 @@ mod tests {
         assert!(as_dyn.meta("nope").is_err());
         assert!(as_dyn.draft("nope", &[0.0]).is_err());
         h.shutdown();
+    }
+
+    #[test]
+    fn dead_engine_surfaces_typed_engine_dead() {
+        // Deliberately kill the engine thread, then hit every handle entry
+        // point: each must return a typed EngineDead error (downcastable
+        // through any anyhow context), never hang and never a generic
+        // string-only failure. Requests are FIFO on one channel, so
+        // anything sent after Shutdown observes the disconnect.
+        let h = EngineHandle::spawn(empty_manifest()).unwrap();
+        h.shutdown();
+        let stats_err = h.stats().unwrap_err();
+        assert!(stats_err.downcast_ref::<EngineDead>().is_some(), "{stats_err:#}");
+        let step_err = Executor::step(&h, "a", &[0], 0.0, 0.1, 1.0).unwrap_err();
+        assert!(step_err.downcast_ref::<EngineDead>().is_some(), "{step_err:#}");
+        let draft_err = h.draft("a", &[0.0]).unwrap_err();
+        assert!(draft_err.downcast_ref::<EngineDead>().is_some(), "{draft_err:#}");
+        let preload_err = h.preload(&["a".to_string()]).unwrap_err();
+        assert!(preload_err.downcast_ref::<EngineDead>().is_some(), "{preload_err:#}");
+        let spec = LoopSpec {
+            artifact: "a".into(),
+            steps_cold: 4,
+            t0: 0.0,
+            warp: 1.0,
+            seed: 0,
+            want_trace: false,
+        };
+        let mut tokens = vec![0i32; 4];
+        let mut scratch = LoopScratch::default();
+        let loop_err = h.run_loop(&spec, &mut tokens, &mut scratch).unwrap_err();
+        assert!(loop_err.downcast_ref::<EngineDead>().is_some(), "{loop_err:#}");
+        // A live engine's ordinary failures (unknown artifact) are NOT
+        // EngineDead — supervisors must be able to tell them apart.
+        let live = EngineHandle::spawn(empty_manifest()).unwrap();
+        let err = live.draft("nope", &[0.0]).unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
+        live.shutdown();
     }
 
     #[test]

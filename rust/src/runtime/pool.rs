@@ -203,6 +203,46 @@ mod tests {
     }
 
     #[test]
+    fn best_fit_beyond_largest_returns_largest() {
+        // When n exceeds every compiled size, best_fit answers with the
+        // largest (the caller splits) — for any non-multiple overshoot.
+        assert_eq!(best_fit(33, &[8, 32]).unwrap(), 32);
+        assert_eq!(best_fit(65, &[1, 8, 32]).unwrap(), 32);
+        assert_eq!(best_fit(1000, &[4]).unwrap(), 4);
+    }
+
+    #[test]
+    fn plan_pins_greedy_largest_first_when_n_exceeds_all_sizes() {
+        // Fixed-case pins of the greedy largest-first decomposition for
+        // `n` beyond every compiled size by a NON-multiple. The property
+        // test above guarantees exact cover + bounded padding; these pin
+        // the exact plans, because the fleet's per-replica chunk dispatch
+        // keys RNG substreams off chunk_index — a planner that re-ordered
+        // or re-grouped chunks would silently re-seed every chunk.
+        //
+        // 70 over {1,8,32}: two full b32 chunks, remainder 6 would need
+        // 6 b1 dispatches — merged into one padded b8 (8 < 4*6).
+        assert_eq!(plan_chunks(70, &[1, 8, 32]).unwrap(), vec![(32, 32), (32, 32), (6, 8)]);
+        // 67 over {1,8,32}: remainder 3 likewise merges into a b8.
+        assert_eq!(plan_chunks(67, &[1, 8, 32]).unwrap(), vec![(32, 32), (32, 32), (3, 8)]);
+        // 33 over {8,32}: short tail keeps the zero-padding-first shape —
+        // one full b32, then the b8 best fit for the single leftover row.
+        assert_eq!(plan_chunks(33, &[8, 32]).unwrap(), vec![(32, 32), (1, 8)]);
+        // 100 over {32} alone: three full chunks + one padded tail.
+        assert_eq!(
+            plan_chunks(100, &[32]).unwrap(),
+            vec![(32, 32), (32, 32), (32, 32), (4, 32)]
+        );
+        // 9 over {4} alone: two full + padded remainder, all on the only
+        // compiled size.
+        assert_eq!(plan_chunks(9, &[4]).unwrap(), vec![(4, 4), (4, 4), (1, 4)]);
+        // Order is part of the contract: full largest-size chunks always
+        // precede the tail, so chunk_index is stable under load.
+        let plan = plan_chunks(70, &[1, 8, 32]).unwrap();
+        assert!(plan.windows(2).all(|w| w[0].1 >= w[1].1), "descending sizes: {plan:?}");
+    }
+
+    #[test]
     fn single_size_always_works() {
         let plan = plan_chunks(10, &[4]).unwrap();
         let total: usize = plan.iter().map(|p| p.0).sum();

@@ -1,11 +1,75 @@
 //! Blocking line-protocol client (used by examples, integration tests, and
 //! the load-generator in `examples/serve_text.rs`).
+//!
+//! BUSY responses are flow control, not failures: [`Client::generate`]
+//! surfaces them as the typed [`Busy`] error carrying the server's
+//! `retry_after_ms` hint, and [`Client::generate_retry`] honors the hint
+//! with capped exponential backoff and deterministic jitter drawn from
+//! the stateless RNG substreams ([`crate::core::rng::Pcg64::substream`]) —
+//! concurrent clients with distinct seeds desynchronize instead of
+//! stampeding the admission queue in lockstep.
 
+use crate::core::rng::Pcg64;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Typed BUSY rejection: the server applied backpressure and suggested
+/// when to retry. Downcast from [`Client::generate`]'s error to tell
+/// flow control apart from real failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    /// The server's `retry_after_ms` hint (>= 1).
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server busy (retry after {} ms)", self.retry_after_ms)
+    }
+}
+
+impl std::error::Error for Busy {}
+
+/// Backoff policy for BUSY retries: the sleep before retry `attempt`
+/// starts from the server's live `retry_after_ms` hint, doubles per
+/// attempt, is capped at `cap`, and is jittered into `[delay/2, delay]`
+/// by a stateless substream of `seed` — fully deterministic per
+/// `(seed, attempt, hint)`, no shared RNG state across clients.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries after the initial attempt (0 = surface BUSY immediately).
+    pub max_retries: u32,
+    /// Upper bound on any single backoff sleep.
+    pub cap: Duration,
+    /// Jitter substream seed; give concurrent clients distinct seeds.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 8, cap: Duration::from_millis(250), seed: 0 }
+    }
+}
+
+/// Substream lane for retry-jitter draws (distinct from the sampler's
+/// step/row coordinates by construction: policy-local seed space).
+const JITTER_LANE: u64 = 0xB0FF;
+
+impl RetryPolicy {
+    /// The backoff before 0-based retry `attempt`, given the server's
+    /// most recent `retry_after_ms` hint.
+    pub fn backoff(&self, attempt: u32, hint_ms: u64) -> Duration {
+        let cap_ms = (self.cap.as_millis() as u64).max(1);
+        let exp = hint_ms.max(1).saturating_mul(1u64 << attempt.min(16)).min(cap_ms);
+        let half = (exp / 2).max(1);
+        let mut rng = Pcg64::substream(self.seed, attempt as u64, JITTER_LANE);
+        let jittered = half + rng.below((exp - half + 1).min(u32::MAX as u64) as u32) as u64;
+        Duration::from_millis(jittered.min(cap_ms))
+    }
+}
 
 /// One connection to a `wsfm serve` instance.
 pub struct Client {
@@ -84,17 +148,13 @@ impl Client {
         ]);
         let j = self.roundtrip(&req.to_string())?;
         if j.get("ok").as_bool() != Some(true) {
-            let busy = j.get("busy").as_bool().unwrap_or(false);
-            let hint = j
-                .get("retry_after_ms")
-                .as_usize()
-                .map(|ms| format!(", retry after {ms} ms"))
-                .unwrap_or_default();
-            bail!(
-                "generate failed{}: {}",
-                if busy { format!(" (busy{hint})") } else { String::new() },
-                j.get("error").as_str().unwrap_or("?")
-            );
+            if j.get("busy").as_bool().unwrap_or(false) {
+                // Typed flow-control signal: callers (and generate_retry)
+                // downcast to Busy and back off by the server's hint.
+                let retry_after_ms = j.get("retry_after_ms").as_usize().unwrap_or(1).max(1) as u64;
+                return Err(anyhow::Error::new(Busy { retry_after_ms }));
+            }
+            bail!("generate failed: {}", j.get("error").as_str().unwrap_or("?"));
         }
         let samples = j
             .get("samples")
@@ -123,5 +183,129 @@ impl Client {
             samples,
             texts,
         })
+    }
+
+    /// [`Client::generate`] that honors BUSY backpressure: on a [`Busy`]
+    /// rejection it sleeps `policy.backoff(attempt, hint)` and retries, up
+    /// to `policy.max_retries` times, then surfaces the last error. Real
+    /// failures (non-BUSY) are never retried. Returns the reply plus how
+    /// many retries it took (0 = first try).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_retry(
+        &mut self,
+        domain: &str,
+        tag: &str,
+        draft: &str,
+        n_samples: usize,
+        t0: f64,
+        steps: usize,
+        seed: u64,
+        decode: bool,
+        policy: &RetryPolicy,
+    ) -> Result<(GenerateReply, u32)> {
+        let mut attempt = 0u32;
+        loop {
+            match self.generate(domain, tag, draft, n_samples, t0, steps, seed, decode) {
+                Ok(reply) => return Ok((reply, attempt)),
+                Err(e) => match e.downcast_ref::<Busy>() {
+                    Some(busy) if attempt < policy.max_retries => {
+                        std::thread::sleep(policy.backoff(attempt, busy.retry_after_ms));
+                        attempt += 1;
+                    }
+                    _ => return Err(e),
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WsfmConfig;
+    use crate::coordinator::testutil::{mock_manifest, TestExec};
+    use crate::coordinator::Service;
+    use crate::server::TcpServer;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn backoff_grows_exponentially_capped_and_jittered() {
+        let p = RetryPolicy { max_retries: 8, cap: Duration::from_millis(100), seed: 7 };
+        // Every backoff stays within [hint/2 * 2^k floor, cap].
+        let mut prev_hi = 0u64;
+        for attempt in 0..8 {
+            let d = p.backoff(attempt, 5).as_millis() as u64;
+            let exp = (5u64 << attempt).min(100);
+            assert!(d >= (exp / 2).max(1), "attempt {attempt}: {d} < {}", exp / 2);
+            assert!(d <= 100, "attempt {attempt}: {d} beyond cap");
+            prev_hi = prev_hi.max(d);
+        }
+        assert!(prev_hi >= 50, "later attempts should reach the cap region, max seen {prev_hi}");
+        // Deterministic per (seed, attempt, hint); distinct seeds jitter
+        // differently somewhere in the schedule.
+        assert_eq!(p.backoff(3, 5), p.backoff(3, 5));
+        let q = RetryPolicy { seed: 8, ..p.clone() };
+        assert!(
+            (0..8).any(|a| p.backoff(a, 5) != q.backoff(a, 5)),
+            "distinct seeds should desynchronize the jitter"
+        );
+        // A zero/absent hint still sleeps at least 1 ms.
+        assert!(p.backoff(0, 0) >= Duration::from_millis(1));
+    }
+
+    /// Socket-level satellite pin: against a deliberately saturated
+    /// service (tiny admission queue, slow refine), plain `generate`
+    /// surfaces typed BUSY errors, while `generate_retry` absorbs them —
+    /// every client completes, and the BUSY pressure is visible in the
+    /// retry counts.
+    #[test]
+    fn generate_retry_drains_a_saturated_service() {
+        let mut exec = TestExec::drift(vec![1, 4], 2, 4, 1);
+        exec.step_sleep = Duration::from_millis(4); // 5 steps -> ~20 ms/bundle
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 4);
+        let mut cfg = WsfmConfig::default();
+        cfg.queue_capacity = 2;
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.max_wait_us = 2_000;
+        cfg.pipeline_depth = 2;
+        let service = Service::start(exec, manifest, cfg);
+        let server = TcpServer::bind(
+            "127.0.0.1:0",
+            service.clone(),
+            mock_manifest(&["cold"], &[1, 4], 2, 4),
+        )
+        .unwrap();
+        let addr = server.local_addr.to_string();
+        let stop = server.stop_handle();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let clients: Vec<_> = (0..16u64)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let policy = RetryPolicy {
+                        max_retries: 200,
+                        cap: Duration::from_millis(25),
+                        seed: i, // distinct jitter substreams per client
+                    };
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.generate_retry("mock", "cold", "noise", 1, 0.5, 10, i, false, &policy)
+                })
+            })
+            .collect();
+
+        let mut total_retries = 0u64;
+        for c in clients {
+            let (reply, retries) = c.join().unwrap().unwrap();
+            assert_eq!(reply.samples.len(), 1);
+            total_retries += retries as u64;
+        }
+        // 16 concurrent clients against ~5 admission slots: some must
+        // have been told BUSY and retried their way through.
+        assert!(total_retries >= 1, "expected BUSY-driven retries under saturation");
+
+        stop.store(true, Ordering::SeqCst);
+        let _ = server_thread.join().unwrap();
+        service.shutdown();
     }
 }

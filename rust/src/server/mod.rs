@@ -1,12 +1,15 @@
 //! TCP serving front-end: newline-delimited JSON protocol over a threaded
-//! accept loop (no async runtime in the vendored crate set — and the
-//! engine serializes on one PJRT stream anyway, so thread-per-connection
-//! with a shared [`crate::coordinator::Service`] is the right shape).
+//! accept loop (no async runtime in the vendored crate set; execution
+//! streams scale via the engine fleet, not per-connection threads, so
+//! thread-per-connection with a shared [`crate::coordinator::Service`] is
+//! the right shape). BUSY backpressure is typed end to end: the wire
+//! response carries `retry_after_ms`, and [`client::RetryPolicy`] turns
+//! it into capped, jittered exponential backoff.
 
 pub mod client;
 pub mod protocol;
 pub mod tcp;
 
-pub use client::Client;
+pub use client::{Busy, Client, RetryPolicy};
 pub use protocol::{parse_request, render_error, render_response, WireRequest};
 pub use tcp::TcpServer;
