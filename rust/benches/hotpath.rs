@@ -374,13 +374,19 @@ impl Executor for StageCostExec {
         _scratch: &mut LoopScratch,
     ) -> anyhow::Result<LoopReport> {
         let start = Instant::now();
-        std::thread::sleep(self.refine_cost);
+        // `refine_cost` is the price of a FULL run; a cascade segment
+        // pays its NFE share, so early exits genuinely save wall-clock
+        // in the serve bench (full specs sleep exactly refine_cost).
+        let schedule = wsfm::core::schedule::Schedule::segment(
+            spec.steps_cold,
+            spec.t0,
+            spec.t_start,
+            spec.t_end,
+        )?;
+        let full = guaranteed_nfe(spec.steps_cold, spec.t0).max(1);
+        std::thread::sleep(self.refine_cost.mul_f64(schedule.nfe() as f64 / full as f64));
         tokens.fill(1);
-        Ok(LoopReport {
-            nfe: guaranteed_nfe(spec.steps_cold, spec.t0),
-            elapsed: start.elapsed(),
-            snapshots: None,
-        })
+        Ok(LoopReport { nfe: schedule.nfe(), elapsed: start.elapsed(), snapshots: None })
     }
 }
 
@@ -466,6 +472,39 @@ fn bench_pipeline_throughput(results: &mut Vec<(String, f64)>) {
         let mut cfg = WsfmConfig::default();
         cfg.pipeline_depth = depth;
         cfg.draft_workers = workers;
+        let ns = run_serve_bench(exec, cfg, 32);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cascade: single-segment vs gated ladder (mock executor)
+// ---------------------------------------------------------------------------
+
+/// Serve the same bundle load with the cascade off (one uninterrupted
+/// segment) vs gated (default [0.75, 0.9] ladder). The stage-cost mock
+/// charges refine time proportional to executed NFE and fills tokens
+/// with a constant — a maximally self-consistent state the proxy scores
+/// high — so the gate passes after stage 1 and the gated rows show the
+/// early-exit saving (≈ the skipped segments' share of refine_cost).
+fn bench_cascade_throughput(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, mode) in [
+        ("serve bundle cascade single-segment", "off"),
+        ("serve bundle cascade gated", "gated"),
+    ] {
+        let exec = StageCostExec {
+            batch,
+            seq_len,
+            vocab,
+            draft_cost: Duration::from_micros(50),
+            refine_cost: Duration::from_micros(200),
+        };
+        let mut cfg = WsfmConfig::default();
+        cfg.pipeline_depth = 2;
+        cfg.draft_workers = 1;
+        cfg.cascade.mode = mode.into();
         let ns = run_serve_bench(exec, cfg, 32);
         println!("{label:<38} {:>10.0} ns/bundle", ns);
         results.push((label.to_string(), ns));
@@ -591,6 +630,9 @@ fn main() {
 
     println!("\n== coordinator: serial vs DRAFT→REFINE pipeline ==");
     bench_pipeline_throughput(&mut results);
+
+    println!("\n== cascade: single-segment vs gated ladder ==");
+    bench_cascade_throughput(&mut results);
 
     println!("\n== fleet: replicated executors vs a single stream ==");
     bench_fleet_throughput(&mut results);

@@ -1,0 +1,255 @@
+//! The cascade executor: drive a planned segment ladder through an
+//! [`Executor`], scoring the intermediate state between segments and
+//! exiting early when the quality gate passes.
+
+use crate::control::proxy_score;
+use crate::runtime::engine::{Executor, LoopScratch, LoopSpec};
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+use super::planner::Segment;
+
+/// What one executed stage of the cascade did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageOutcome {
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Denoiser evaluations this stage performed (== its segment's NFE).
+    pub nfe: usize,
+    /// The gate's quality score of the state *after* this stage (`None`
+    /// for the final planned stage and outside gated mode — no scoring
+    /// work is done where no gate can fire).
+    pub score: Option<f64>,
+    /// Wall-clock of the gate evaluation.
+    pub gate_eval: Option<Duration>,
+}
+
+/// The executed cascade for one chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeOutcome {
+    /// Executed stages, in order (a prefix of the plan).
+    pub stages: Vec<StageOutcome>,
+    /// How many stages the plan held.
+    pub planned_stages: usize,
+    /// Whether a gate passed before the final stage.
+    pub early_exit: bool,
+}
+
+impl CascadeOutcome {
+    pub fn stages_used(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Summed NFE over executed stages — the quantity the guarantee
+    /// bounds: `== ` the unsplit schedule's NFE when every stage ran,
+    /// strictly smaller on early exit.
+    pub fn total_nfe(&self) -> usize {
+        self.stages.iter().map(|s| s.nfe).sum()
+    }
+}
+
+/// Run a planned ladder over `tokens` (resampled in place, exactly as
+/// `Executor::run_loop` does).
+///
+/// Each segment is one `run_loop` dispatch with the shared `seed` — the
+/// engine's absolute-step substreams make the concatenation
+/// bitwise-identical to the unsplit run, and (through a fleet executor)
+/// each dispatch routes independently, with artifact affinity making
+/// resume-on-same-replica the common case. After every non-final
+/// segment, if `gate_threshold` is set, the first `useful_rows` rows
+/// (padding never votes) are scored with the [`crate::control`] proxies;
+/// a score `>= threshold` stops the cascade — the remaining segments are
+/// never executed, which is the only way the cascade changes NFE.
+#[allow(clippy::too_many_arguments)]
+pub fn run_segments(
+    exec: &dyn Executor,
+    plan: &[Segment],
+    steps_cold: usize,
+    run_t0: f64,
+    warp: f32,
+    seed: u64,
+    tokens: &mut Vec<i32>,
+    useful_rows: usize,
+    seq_len: usize,
+    vocab: usize,
+    gate_threshold: Option<f64>,
+    scratch: &mut LoopScratch,
+) -> Result<CascadeOutcome> {
+    if plan.is_empty() {
+        bail!("empty cascade plan");
+    }
+    let mut stages = Vec::with_capacity(plan.len());
+    let mut early_exit = false;
+    for (si, seg) in plan.iter().enumerate() {
+        let mut spec = LoopSpec::full(seg.artifact.clone(), steps_cold, run_t0, warp, seed, false);
+        spec.t_start = seg.t_start;
+        spec.t_end = seg.t_end;
+        let report = exec.run_loop(&spec, tokens, scratch)?;
+        debug_assert_eq!(report.nfe, seg.nfe(), "segment schedule diverged from plan");
+        let mut stage = StageOutcome {
+            t_start: seg.t_start,
+            t_end: seg.t_end,
+            nfe: report.nfe,
+            score: None,
+            gate_eval: None,
+        };
+        let is_last = si + 1 == plan.len();
+        if !is_last {
+            if let Some(threshold) = gate_threshold {
+                let gate_start = Instant::now();
+                let rows: Vec<&[i32]> = tokens
+                    .chunks_exact(seq_len.max(1))
+                    .take(useful_rows)
+                    .collect();
+                let score = proxy_score(&rows, vocab);
+                stage.score = Some(score);
+                stage.gate_eval = Some(gate_start.elapsed());
+                if score >= threshold {
+                    early_exit = true;
+                    stages.push(stage);
+                    break;
+                }
+            }
+        }
+        stages.push(stage);
+    }
+    Ok(CascadeOutcome { stages, planned_stages: plan.len(), early_exit })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::plan_ladder;
+    use crate::coordinator::testutil::TestExec;
+    use crate::core::schedule::guaranteed_nfe;
+
+    const ART: &str = "mock_cold_step_b8";
+
+    fn run(
+        exec: &dyn Executor,
+        ladder: &[f64],
+        gate: Option<f64>,
+        seed: u64,
+    ) -> (Vec<i32>, CascadeOutcome) {
+        let plan = plan_ladder(ladder, 10, 0.5, ART);
+        let mut tokens = vec![2i32; 8 * 4];
+        let mut scratch = LoopScratch::default();
+        let outcome = run_segments(
+            exec,
+            &plan,
+            10,
+            0.5,
+            1.0,
+            seed,
+            &mut tokens,
+            8,
+            4,
+            6,
+            gate,
+            &mut scratch,
+        )
+        .unwrap();
+        (tokens, outcome)
+    }
+
+    #[test]
+    fn fixed_ladder_is_bitwise_identical_to_unsplit() {
+        // seed-sensitive executor: equality is meaningful.
+        let a = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        let (unsplit, base) = run(&a, &[], None, 42);
+        assert_eq!(base.stages_used(), 1);
+        assert_eq!(base.total_nfe(), 5);
+        for ladder in [&[0.75][..], &[0.6, 0.75, 0.9][..]] {
+            let b = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+            let (split, outcome) = run(&b, ladder, None, 42);
+            assert_eq!(split, unsplit, "ladder {ladder:?}");
+            assert!(!outcome.early_exit);
+            assert_eq!(outcome.stages_used(), outcome.planned_stages);
+            assert_eq!(outcome.total_nfe(), 5, "no gates → full budget, tiled");
+            assert!(outcome.stages.iter().all(|s| s.score.is_none()));
+        }
+        // A different seed still differs (the executor is genuinely
+        // stochastic — the equality above is not vacuous).
+        let c = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        assert_ne!(run(&c, &[], None, 43).0, unsplit);
+    }
+
+    #[test]
+    fn gate_pass_exits_early_and_saves_nfe() {
+        // Threshold 0: every score passes → exit right after stage 1.
+        let exec = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        let (_, outcome) = run(&exec, &[0.75, 0.9], Some(0.0), 7);
+        assert!(outcome.early_exit);
+        assert_eq!(outcome.stages_used(), 1);
+        assert_eq!(outcome.planned_stages, 3);
+        assert_eq!(outcome.total_nfe(), 3, "only the [0.5, 0.8) segment ran");
+        assert!(outcome.total_nfe() < guaranteed_nfe(10, 0.5));
+        let s = &outcome.stages[0];
+        assert!(s.score.is_some() && s.gate_eval.is_some());
+        // An unreachable threshold behaves like fixed (scores recorded,
+        // never passes, full budget spent).
+        let exec2 = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        let (_, full) = run(&exec2, &[0.75, 0.9], Some(1.0), 7);
+        assert!(!full.early_exit);
+        assert_eq!(full.stages_used(), 3);
+        assert_eq!(full.total_nfe(), 5);
+        // The final stage never pays for a gate it cannot fire.
+        assert!(full.stages.last().unwrap().score.is_none());
+    }
+
+    #[test]
+    fn early_exit_tokens_are_the_unsplit_intermediate_state() {
+        // A gated exit returns exactly the unsplit trajectory's state at
+        // the boundary — pinned by running just that prefix explicitly.
+        let a = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        let (gated, outcome) = run(&a, &[0.75], Some(0.0), 11);
+        assert!(outcome.early_exit);
+        let b = TestExec::stochastic(vec![1, 8], 4, 6, 1);
+        let plan = plan_ladder(&[0.75], 10, 0.5, ART);
+        let mut prefix = vec![2i32; 8 * 4];
+        let mut scratch = LoopScratch::default();
+        let mut spec = LoopSpec::full(ART.into(), 10, 0.5, 1.0, 11, false);
+        spec.t_start = plan[0].t_start;
+        spec.t_end = plan[0].t_end;
+        b.run_loop(&spec, &mut prefix, &mut scratch).unwrap();
+        assert_eq!(gated, prefix);
+    }
+
+    #[test]
+    fn segments_resume_on_the_same_fleet_replica_by_affinity() {
+        use crate::fleet::FleetHandle;
+        use std::sync::Arc;
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(TestExec::drift(vec![1, 8], 4, 6, 1)) as Arc<dyn Executor>,
+            Arc::new(TestExec::drift(vec![1, 8], 4, 6, 1)) as Arc<dyn Executor>,
+        ]);
+        let (_, outcome) = run(&fleet, &[0.6, 0.75, 0.9], None, 3);
+        assert_eq!(outcome.stages_used(), 4);
+        // All four segment dispatches landed on replica 0: idle fleet,
+        // lowest index first, then artifact affinity on every resume.
+        assert_eq!(fleet.metrics().replica_dispatched[0].get(), 4);
+        assert_eq!(fleet.metrics().replica_dispatched[1].get(), 0);
+    }
+
+    #[test]
+    fn empty_plan_is_rejected() {
+        let exec = TestExec::drift(vec![1, 8], 4, 6, 1);
+        let mut tokens = vec![0i32; 8 * 4];
+        let mut scratch = LoopScratch::default();
+        assert!(run_segments(
+            &exec,
+            &[],
+            10,
+            0.5,
+            1.0,
+            0,
+            &mut tokens,
+            8,
+            4,
+            6,
+            None,
+            &mut scratch,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Cascade refinement: multi-segment warm-start ladders with
+//! mid-trajectory quality gates and early exit.
+//!
+//! The stack used to spend a bundle's whole refinement budget in one
+//! shot: one t0, one uninterrupted Euler segment to `t = 1`. But drafts
+//! differ in how much refinement they actually need (FastFlow's adaptive
+//! step allocation; Distilled Decoding's observation that few-step
+//! drafts are often already acceptable), so this subsystem splits the
+//! run into an ordered **ladder of resumable segments**
+//! `[(t_start, t_end, artifact)]` ([`planner`]), executes each as a
+//! windowed engine loop ([`executor`], via the segmented
+//! `runtime::engine::LoopSpec`), scores the intermediate token state
+//! with the [`crate::control`] draft-quality proxies between segments,
+//! and **exits early** when the quality gate passes — the remaining
+//! segments are simply never paid for.
+//!
+//! ## The guarantee is untouched
+//!
+//! Segment boundaries snap to the unsplit schedule's step grid
+//! (`core::schedule::grid_index`), so the executed segments are a prefix
+//! partition of the unsplit run: the summed per-stage NFE equals the
+//! unsplit `guaranteed_nfe(steps_cold, t0)` when every gate fails and is
+//! strictly smaller on early exit. Combined with the controller's
+//! `t0 >= t0_min` clamp, **total NFE never exceeds
+//! `guaranteed_nfe(steps_cold, t0_min)`** — the paper's floor — in any
+//! cascade mode (asserted in the scheduler and pinned by tests).
+//!
+//! ## Bitwise determinism
+//!
+//! Every categorical draw keys on `(run seed, absolute step, row)`, so a
+//! run split into k segments produces exactly the unsplit run's tokens —
+//! `fixed` mode is bitwise-identical to `off`, and a gated run's output
+//! is the exact intermediate state of the unsplit trajectory. Gates are
+//! pure functions of (tokens, config), so cascade decisions are
+//! deterministic across pipeline depth, draft workers, and fleet
+//! replicas (pinned by the coordinator sweep tests). Segments may hop
+//! between fleet replicas; the fleet's artifact-affinity routing makes
+//! resume-on-same-replica the common case, and hopping never changes
+//! tokens.
+//!
+//! `cascade.mode = off` (the default) bypasses this module entirely —
+//! byte-for-byte the pre-cascade wire behaviour.
+
+pub mod executor;
+pub mod planner;
+
+pub use executor::{run_segments, CascadeOutcome, StageOutcome};
+pub use planner::{plan_ladder, Segment};
+
+use crate::config::CascadeConfig;
+use anyhow::Result;
+
+/// How a bundle's refinement budget is spent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CascadeMode {
+    /// One uninterrupted segment (legacy behaviour, the default).
+    Off,
+    /// Run every ladder segment; no gates. Tokens are bitwise-identical
+    /// to `Off` — the mode exists to exercise (and pin) segmented
+    /// execution in production configurations.
+    Fixed,
+    /// Score the intermediate state after each non-final segment and
+    /// exit early once the quality gate passes.
+    Gated,
+}
+
+impl CascadeMode {
+    pub fn parse(s: &str) -> Result<CascadeMode> {
+        match s {
+            "off" => Ok(CascadeMode::Off),
+            "fixed" => Ok(CascadeMode::Fixed),
+            "gated" => Ok(CascadeMode::Gated),
+            _ => anyhow::bail!("unknown cascade mode {s:?} (off|fixed|gated)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CascadeMode::Off => "off",
+            CascadeMode::Fixed => "fixed",
+            CascadeMode::Gated => "gated",
+        }
+    }
+}
+
+/// The per-bundle cascade policy. Cheap to clone (pure data); each
+/// scheduler instance owns one, so clones plan and gate identically on
+/// every stage thread (the determinism contract).
+#[derive(Debug, Clone)]
+pub struct Cascade {
+    mode: CascadeMode,
+    ladder: Vec<f64>,
+    gate_threshold: f64,
+}
+
+impl Cascade {
+    /// The legacy behaviour: no cascade, one uninterrupted segment.
+    pub fn off() -> Cascade {
+        Cascade { mode: CascadeMode::Off, ladder: Vec::new(), gate_threshold: 1.0 }
+    }
+
+    /// Build from a (validated) [`CascadeConfig`]. Non-finite or
+    /// out-of-range ladder entries are dropped defensively
+    /// (`config::validate` rejects them; direct callers may skip it).
+    pub fn from_config(cfg: &CascadeConfig) -> Result<Cascade> {
+        let mode = CascadeMode::parse(&cfg.mode)?;
+        let mut ladder: Vec<f64> =
+            cfg.ladder.iter().copied().filter(|b| b.is_finite() && *b > 0.0 && *b < 1.0).collect();
+        ladder.sort_by(|a, b| a.partial_cmp(b).expect("finite ladder has no NaN"));
+        ladder.dedup();
+        if !cfg.gate_threshold.is_finite() {
+            anyhow::bail!("cascade.gate_threshold must be finite");
+        }
+        Ok(Cascade { mode, ladder, gate_threshold: cfg.gate_threshold.clamp(0.0, 1.0) })
+    }
+
+    pub fn mode(&self) -> CascadeMode {
+        self.mode
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.mode == CascadeMode::Off
+    }
+
+    /// The gate threshold [`executor::run_segments`] should apply —
+    /// `None` outside `gated` mode (no scoring work is done at all).
+    pub fn gate_threshold(&self) -> Option<f64> {
+        (self.mode == CascadeMode::Gated).then_some(self.gate_threshold)
+    }
+
+    /// Plan the segment ladder for one chunk: the configured boundaries
+    /// snapped onto the `(steps_cold, run_t0)` grid, every segment
+    /// refining on `artifact`. Always returns at least one segment.
+    pub fn plan(&self, steps_cold: usize, run_t0: f64, artifact: &str) -> Vec<Segment> {
+        match self.mode {
+            CascadeMode::Off => plan_ladder(&[], steps_cold, run_t0, artifact),
+            _ => plan_ladder(&self.ladder, steps_cold, run_t0, artifact),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [CascadeMode::Off, CascadeMode::Fixed, CascadeMode::Gated] {
+            assert_eq!(CascadeMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(CascadeMode::parse("diagonal").is_err());
+    }
+
+    #[test]
+    fn off_policy_plans_one_segment() {
+        let c = Cascade::off();
+        assert!(c.is_off());
+        assert_eq!(c.gate_threshold(), None);
+        let plan = c.plan(10, 0.5, "a");
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].nfe(), 5);
+    }
+
+    #[test]
+    fn from_config_sorts_and_filters_ladder() {
+        let cfg = CascadeConfig {
+            mode: "gated".into(),
+            ladder: vec![0.9, 0.6, f64::NAN, 0.6, -1.0, 1.5],
+            gate_threshold: 0.4,
+        };
+        let c = Cascade::from_config(&cfg).unwrap();
+        assert_eq!(c.ladder, vec![0.6, 0.9]);
+        assert_eq!(c.gate_threshold(), Some(0.4));
+        assert_eq!(c.plan(10, 0.5, "a").len(), 3);
+        // Fixed mode still plans segments but never gates.
+        let fixed = Cascade::from_config(&CascadeConfig {
+            mode: "fixed".into(),
+            ..CascadeConfig::default()
+        })
+        .unwrap();
+        assert_eq!(fixed.gate_threshold(), None);
+        assert!(fixed.plan(10, 0.5, "a").len() > 1);
+        // Invalid mode errors; non-finite threshold errors.
+        assert!(Cascade::from_config(&CascadeConfig {
+            mode: "warp".into(),
+            ..CascadeConfig::default()
+        })
+        .is_err());
+        assert!(Cascade::from_config(&CascadeConfig {
+            gate_threshold: f64::NAN,
+            ..CascadeConfig::default()
+        })
+        .is_err());
+    }
+}

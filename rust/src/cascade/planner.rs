@@ -1,0 +1,145 @@
+//! The cascade planner: snap a configured boundary ladder onto one
+//! chunk's step grid, producing an ordered list of non-empty segments
+//! that tile the unsplit schedule exactly.
+
+use crate::core::schedule::{grid_index, guaranteed_nfe};
+
+/// One planned refinement segment: the window `[t_start, t_end)` of the
+/// unsplit run, in both time and absolute-step coordinates, plus the
+/// step artifact that refines it. Carrying the artifact per segment
+/// keeps the design open to per-stage artifacts (e.g. a ws model trained
+/// at a later t0 for the tail of the ladder); today every segment of a
+/// chunk uses the chunk's own artifact, which also makes the fleet's
+/// artifact-affinity routing resume segments on the same replica in the
+/// common case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub t_start: f64,
+    pub t_end: f64,
+    pub artifact: String,
+    /// Absolute index of this segment's first step in the unsplit run.
+    pub step_start: usize,
+    /// One past the absolute index of this segment's last step.
+    pub step_end: usize,
+}
+
+impl Segment {
+    /// Denoiser evaluations this segment performs.
+    pub fn nfe(&self) -> usize {
+        self.step_end - self.step_start
+    }
+}
+
+/// Plan the ladder for a `(steps_cold, run_t0)` schedule: boundaries
+/// outside `(run_t0, 1)` are dropped, the rest snap to the step grid
+/// (`grid_index`, epsilon-robust), and cuts that would produce an empty
+/// segment are merged away. The result always holds >= 1 segment, the
+/// segments are consecutive (`step_end == next.step_start`), and their
+/// NFEs sum to exactly `guaranteed_nfe(steps_cold, run_t0)` — planning
+/// never changes the total budget, only where it can stop.
+pub fn plan_ladder(
+    boundaries: &[f64],
+    steps_cold: usize,
+    run_t0: f64,
+    artifact: &str,
+) -> Vec<Segment> {
+    let n = guaranteed_nfe(steps_cold, run_t0);
+    let h = 1.0 / steps_cold.max(1) as f64;
+    // Cut list in (index, time) form; always starts at (0, run_t0) and
+    // ends at (n, 1.0). Interior cut times are the snapped grid times, so
+    // a segment's t_end maps back to exactly its step_end.
+    let mut cuts: Vec<(usize, f64)> = vec![(0, run_t0)];
+    for &b in boundaries {
+        if !b.is_finite() || b <= run_t0 || b >= 1.0 {
+            continue;
+        }
+        let idx = grid_index(steps_cold, run_t0, b);
+        if idx > cuts.last().expect("cuts never empty").0 && idx < n {
+            cuts.push((idx, run_t0 + idx as f64 * h));
+        }
+    }
+    cuts.push((n, 1.0));
+    cuts.windows(2)
+        .map(|w| Segment {
+            t_start: w[0].1,
+            t_end: w[1].1,
+            artifact: artifact.to_string(),
+            step_start: w[0].0,
+            step_end: w[1].0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_nfe(plan: &[Segment]) -> usize {
+        plan.iter().map(|s| s.nfe()).sum()
+    }
+
+    fn assert_tiles(plan: &[Segment], steps: usize, t0: f64) {
+        assert!(!plan.is_empty());
+        assert_eq!(plan[0].step_start, 0);
+        assert_eq!(plan.last().unwrap().step_end, guaranteed_nfe(steps, t0));
+        assert!((plan.last().unwrap().t_end - 1.0).abs() < 1e-12);
+        for w in plan.windows(2) {
+            assert_eq!(w[0].step_end, w[1].step_start, "segments must be consecutive");
+            assert_eq!(w[0].t_end, w[1].t_start);
+        }
+        for s in plan {
+            assert!(s.nfe() > 0, "empty segments must be merged away: {s:?}");
+        }
+        assert_eq!(total_nfe(plan), guaranteed_nfe(steps, t0));
+    }
+
+    #[test]
+    fn empty_ladder_is_one_full_segment() {
+        let plan = plan_ladder(&[], 10, 0.5, "art");
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0], Segment {
+            t_start: 0.5,
+            t_end: 1.0,
+            artifact: "art".into(),
+            step_start: 0,
+            step_end: 5,
+        });
+        assert_tiles(&plan, 10, 0.5);
+    }
+
+    #[test]
+    fn ladder_snaps_to_grid_and_tiles_exactly() {
+        // t0 = 0.5, 10 cold steps → 5 evaluations at {0.5,…,0.9}. Cuts at
+        // 0.75 and 0.9 snap to step indices 3 and 4.
+        let plan = plan_ladder(&[0.75, 0.9], 10, 0.5, "a");
+        assert_eq!(plan.len(), 3);
+        assert_eq!((plan[0].step_start, plan[0].step_end), (0, 3));
+        assert_eq!((plan[1].step_start, plan[1].step_end), (3, 4));
+        assert_eq!((plan[2].step_start, plan[2].step_end), (4, 5));
+        assert!((plan[0].t_end - 0.8).abs() < 1e-9, "snapped up to the grid: {}", plan[0].t_end);
+        assert_tiles(&plan, 10, 0.5);
+    }
+
+    #[test]
+    fn out_of_range_and_colliding_boundaries_drop() {
+        // Boundaries at/below t0, at/above 1, non-finite, and ones that
+        // snap onto the same grid index all merge away.
+        let plan = plan_ladder(&[0.1, 0.5, 0.72, 0.74, 0.999, 1.0, f64::NAN], 10, 0.5, "a");
+        // 0.72 and 0.74 both snap to index 3; 0.999 snaps to index 5 == n
+        // (would leave an empty tail) and is dropped.
+        assert_eq!(plan.len(), 2);
+        assert_eq!((plan[0].step_start, plan[0].step_end), (0, 3));
+        assert_eq!((plan[1].step_start, plan[1].step_end), (3, 5));
+        assert_tiles(&plan, 10, 0.5);
+    }
+
+    #[test]
+    fn plans_tile_for_assorted_grids() {
+        for (steps, t0) in [(1usize, 0.0), (7, 0.33), (20, 0.8), (1024, 0.5), (20, 1.0 - 1e-9)] {
+            for ladder in [&[][..], &[0.6, 0.75, 0.9][..], &[0.99][..], &[0.2, 0.4, 0.6, 0.8][..]] {
+                let plan = plan_ladder(ladder, steps, t0, "a");
+                assert_tiles(&plan, steps, t0);
+            }
+        }
+    }
+}

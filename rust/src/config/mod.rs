@@ -32,6 +32,39 @@ pub struct WsfmConfig {
     pub control: ControlConfig,
     /// Replicated executor fleet ([`crate::fleet`]).
     pub fleet: FleetConfig,
+    /// Cascade refinement ladder ([`crate::cascade`]).
+    pub cascade: CascadeConfig,
+}
+
+/// Cascade-refinement tuning (`cascade` subsystem).
+///
+/// The cascade splits a bundle's refinement into an ordered ladder of
+/// resumable engine segments and can stop early when an intermediate
+/// quality gate passes. Early exit only ever *saves* evaluations: the
+/// sum of executed-segment NFEs never exceeds the unsplit schedule's
+/// NFE, so the paper's guarantee floor is untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeConfig {
+    /// `off` (one uninterrupted segment — legacy behaviour, the default,
+    /// byte-for-byte the pre-cascade wire output), `fixed` (run every
+    /// ladder segment, no gates — bitwise-identical tokens to `off`), or
+    /// `gated` (score the intermediate state between segments and exit
+    /// early when the gate passes).
+    pub mode: String,
+    /// Interior segment boundaries in `(0, 1)`, strictly ascending. At
+    /// planning time they snap to the bundle's step grid; boundaries at
+    /// or below the bundle's run t0 are dropped, and the ladder always
+    /// implicitly starts at the run t0 and ends at 1.
+    pub ladder: Vec<f64>,
+    /// Quality gate (`gated` mode only): a draft-quality proxy score of
+    /// the intermediate state `>=` this exits the cascade early.
+    pub gate_threshold: f64,
+}
+
+impl Default for CascadeConfig {
+    fn default() -> Self {
+        CascadeConfig { mode: "off".into(), ladder: vec![0.75, 0.9], gate_threshold: 0.45 }
+    }
 }
 
 /// Engine-fleet tuning (`fleet` subsystem).
@@ -126,6 +159,7 @@ impl Default for WsfmConfig {
             seed: 0,
             control: ControlConfig::default(),
             fleet: FleetConfig::default(),
+            cascade: CascadeConfig::default(),
         }
     }
 }
@@ -205,6 +239,16 @@ impl WsfmConfig {
                 })
                 .collect();
         }
+        let cas = j.get("cascade");
+        if let Some(m) = cas.get("mode").as_str() {
+            c.cascade.mode = m.to_string();
+        }
+        if let Some(arr) = cas.get("ladder").as_arr() {
+            c.cascade.ladder = arr.iter().filter_map(|v| v.as_f64()).collect();
+        }
+        if let Some(n) = cas.get("gate_threshold").as_f64() {
+            c.cascade.gate_threshold = n;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -238,6 +282,14 @@ impl WsfmConfig {
                 Json::obj(vec![
                     ("replicas", Json::num(self.fleet.replicas as f64)),
                     ("refine_workers", Json::num(self.fleet.refine_workers as f64)),
+                ]),
+            ),
+            (
+                "cascade",
+                Json::obj(vec![
+                    ("mode", Json::str(self.cascade.mode.clone())),
+                    ("ladder", Json::arr(self.cascade.ladder.iter().map(|&b| Json::num(b)))),
+                    ("gate_threshold", Json::num(self.cascade.gate_threshold)),
                 ]),
             ),
             (
@@ -311,6 +363,23 @@ impl WsfmConfig {
                 bail!("control.calibration entry (min_score={s}, t0={t}) invalid");
             }
         }
+        crate::cascade::CascadeMode::parse(&self.cascade.mode)?;
+        for &b in &self.cascade.ladder {
+            if !b.is_finite() || !(0.0..1.0).contains(&b) || b == 0.0 {
+                bail!("cascade.ladder entry {b} outside (0, 1)");
+            }
+        }
+        // Entries are finite here, so >= is a sound strictness check.
+        for w in self.cascade.ladder.windows(2) {
+            if w[0] >= w[1] {
+                bail!("cascade.ladder must be strictly ascending, got {:?}", self.cascade.ladder);
+            }
+        }
+        if !self.cascade.gate_threshold.is_finite()
+            || !(0.0..=1.0).contains(&self.cascade.gate_threshold)
+        {
+            bail!("cascade.gate_threshold must be in [0, 1], got {}", self.cascade.gate_threshold);
+        }
         Ok(())
     }
 }
@@ -372,6 +441,25 @@ mod tests {
     }
 
     #[test]
+    fn cascade_section_layering() {
+        let j = Json::parse(
+            r#"{"cascade":{"mode":"gated","ladder":[0.6,0.8,0.95],"gate_threshold":0.3}}"#,
+        )
+        .unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.cascade.mode, "gated");
+        assert_eq!(c.cascade.ladder, vec![0.6, 0.8, 0.95]);
+        assert_eq!(c.cascade.gate_threshold, 0.3);
+        // Untouched -> defaults: cascade off = legacy single-segment path.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.cascade, CascadeConfig::default());
+        assert_eq!(d.cascade.mode, "off");
+        // An empty ladder is a degenerate-but-valid single-segment cascade.
+        let e = Json::parse(r#"{"cascade":{"mode":"fixed","ladder":[]}}"#).unwrap();
+        assert!(WsfmConfig::from_json(&e).unwrap().cascade.ladder.is_empty());
+    }
+
+    #[test]
     fn invalid_rejected() {
         for bad in [
             r#"{"batcher":{"max_batch":0}}"#,
@@ -387,6 +475,12 @@ mod tests {
             r#"{"control":{"grid":[]}}"#,
             r#"{"control":{"grid":[0.5,1.2]}}"#,
             r#"{"control":{"calibration":[{"min_score":0.5,"t0":1.5}]}}"#,
+            r#"{"cascade":{"mode":"sideways"}}"#,
+            r#"{"cascade":{"ladder":[0.9,0.6]}}"#,
+            r#"{"cascade":{"ladder":[0.5,0.5]}}"#,
+            r#"{"cascade":{"ladder":[0.0,0.5]}}"#,
+            r#"{"cascade":{"ladder":[0.5,1.0]}}"#,
+            r#"{"cascade":{"gate_threshold":1.5}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

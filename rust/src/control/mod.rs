@@ -221,8 +221,17 @@ pub fn prior_score(draft: DraftSpec) -> f64 {
 /// per-token NLL by `ln(vocab)` (the uniform-noise ceiling). Structured
 /// drafts predict themselves well (score up), uniform noise scores ~0.
 /// Deterministic: no RNG, no unordered iteration.
+///
+/// Degenerate inputs pin to the neutral score `0.0` (never NaN, never a
+/// panic): no rows, no non-empty rows, a single-token vocabulary
+/// (`ln(1) = 0` would divide by zero), or rows too short for any bigram
+/// (`seq_len < 2` leaves self-consistency undefined — only unigram
+/// concentration, which is not the structure this proxy measures).
 pub fn ngram_score(rows: &[&[i32]], vocab: usize) -> f64 {
     if rows.is_empty() || vocab < 2 {
+        return 0.0;
+    }
+    if rows.iter().all(|r| r.len() < 2) {
         return 0.0;
     }
     let stream: Vec<i32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
@@ -231,6 +240,9 @@ pub fn ngram_score(rows: &[&[i32]], vocab: usize) -> f64 {
     }
     let lm = NgramLM::fit(&stream, 2, vocab);
     let mean_nll = rows.iter().map(|r| lm.nll(r)).sum::<f64>() / rows.len() as f64;
+    if !mean_nll.is_finite() {
+        return 0.0;
+    }
     (1.0 - mean_nll / (vocab as f64).ln()).clamp(0.0, 1.0)
 }
 
@@ -242,11 +254,17 @@ pub fn ngram_score(rows: &[&[i32]], vocab: usize) -> f64 {
 /// data couples neighbouring positions when token ids are ordinal
 /// (two-moons grid coordinates, pixel intensities); uniform noise has
 /// none. Positions with zero variance contribute nothing.
+///
+/// Degenerate inputs pin to the neutral score `0.0`: fewer than two
+/// rows, any row shorter than two tokens (ragged batches are measured
+/// over the shortest row — never an out-of-bounds panic), or a
+/// zero-variance batch (e.g. a single-token vocabulary).
 pub fn energy_score(rows: &[&[i32]], _vocab: usize) -> f64 {
     if rows.len() < 2 {
         return 0.0;
     }
-    let seq_len = rows[0].len();
+    // Ragged guard: correlate only the prefix every row actually has.
+    let seq_len = rows.iter().map(|r| r.len()).min().unwrap_or(0);
     if seq_len < 2 {
         return 0.0;
     }
@@ -479,6 +497,45 @@ mod tests {
         // And the components behave at their edges.
         assert_eq!(proxy_score(&[], 128), 0.0);
         assert_eq!(energy_score(&s_rows[..1], 128), 0.0); // < 2 rows
+    }
+
+    #[test]
+    fn degenerate_inputs_pin_the_neutral_score() {
+        // Every proxy returns the pinned neutral 0.0 — never NaN, never a
+        // panic — on degenerate batches.
+        let empty: Vec<&[i32]> = vec![];
+        let empty_rows: Vec<&[i32]> = vec![&[], &[], &[]];
+        let single_tok_rows: Vec<&[i32]> = vec![&[3], &[1], &[2]];
+        let one_row: Vec<&[i32]> = vec![&[1, 2, 3]];
+        for (name, rows, vocab) in [
+            ("no rows", &empty, 16),
+            ("zero useful rows (all empty)", &empty_rows, 16),
+            ("seq_len < 2", &single_tok_rows, 16),
+            ("single-token vocab", &one_row, 1),
+            ("zero vocab", &one_row, 0),
+        ] {
+            for (proxy, s) in [
+                ("ngram", ngram_score(rows, vocab)),
+                ("energy", energy_score(rows, vocab)),
+                ("proxy", proxy_score(rows, vocab)),
+            ] {
+                assert!(s.is_finite(), "{proxy} on {name} returned non-finite {s}");
+                assert_eq!(s, 0.0, "{proxy} on {name} must pin the neutral score");
+            }
+        }
+        // Single-token vocab with >= 2 rows: the energy score sees zero
+        // variance everywhere and also pins to 0.
+        let const_rows: Vec<&[i32]> = vec![&[0, 0, 0], &[0, 0, 0]];
+        assert_eq!(energy_score(&const_rows, 1), 0.0);
+        assert_eq!(proxy_score(&const_rows, 1), 0.0);
+        // Ragged batches measure the shared prefix instead of panicking.
+        let ragged: Vec<&[i32]> = vec![&[1, 2, 3, 4], &[1, 2]];
+        let s = proxy_score(&ragged, 16);
+        assert!((0.0..=1.0).contains(&s));
+        // A ragged batch whose shortest row is a single token is
+        // correlation-degenerate for the energy proxy.
+        let ragged_short: Vec<&[i32]> = vec![&[1, 2, 3, 4], &[1]];
+        assert_eq!(energy_score(&ragged_short, 16), 0.0);
     }
 
     #[test]

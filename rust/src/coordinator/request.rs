@@ -141,18 +141,36 @@ impl BundleKey {
     }
 }
 
+/// Per-response cascade accounting ([`crate::cascade`]): present exactly
+/// when the bundle ran under a cascade mode (`fixed`/`gated`); `None`
+/// under `cascade.mode = off` keeps the wire byte-for-byte the
+/// pre-cascade format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CascadeInfo {
+    /// Ladder stages actually executed (max over the bundle's chunks).
+    pub stages_used: usize,
+    /// Denoiser evaluations per executed stage; sums to the response's
+    /// worst-chunk total NFE.
+    pub nfe_per_stage: Vec<usize>,
+    /// Whether any chunk's quality gate passed before the final stage.
+    pub early_exit: bool,
+}
+
 /// Completed generation.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
     /// `n_samples` rows of `seq_len` tokens.
     pub samples: Vec<Vec<i32>>,
-    /// Denoiser evaluations performed for the batch this request rode.
+    /// Denoiser evaluations performed for the batch this request rode
+    /// (under a gated cascade: the worst chunk's executed total).
     pub nfe: usize,
     /// The warm-start time the refinement actually ran with — equals the
     /// requested t0 under the `static` controller, the controller's
     /// per-bundle choice under `prior`/`scored` ([`crate::control`]).
     pub t0_used: f64,
+    /// Cascade stage accounting (`None` when `cascade.mode = off`).
+    pub cascade: Option<CascadeInfo>,
     pub queue_wait: Duration,
     pub draft_time: Duration,
     pub refine_time: Duration,

@@ -26,9 +26,10 @@
 //! same contract the row-parallel sampler established per `(step, row)`
 //! (EXPERIMENTS.md §Perf), lifted one level up.
 
+use crate::cascade::{self, Cascade};
 use crate::control::{ControlDecision, Controller, ControllerMode};
 use crate::coordinator::batcher::WorkBundle;
-use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
 use crate::core::rng::{splitmix64, Pcg64};
 use crate::core::tensor::TokenBatch;
 use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
@@ -112,6 +113,9 @@ pub struct Scheduler<'a> {
     /// Per-bundle t0 controller ([`crate::control`]); the default
     /// [`Scheduler::new`] uses the static pass-through controller.
     controller: Controller,
+    /// Cascade-refinement policy ([`crate::cascade`]); the default is
+    /// [`Cascade::off`] — one uninterrupted segment, the legacy path.
+    cascade: Cascade,
     scratch: RefCell<LoopScratch>,
     drafts: RefCell<HashMap<DraftCacheKey, Box<dyn Draft + 'a>>>,
 }
@@ -143,12 +147,27 @@ impl<'a> Scheduler<'a> {
         seed: u64,
         controller: Controller,
     ) -> Self {
+        Self::with_policies(exec, manifest, metrics, seed, controller, Cascade::off())
+    }
+
+    /// [`Scheduler::with_controller`] plus an explicit cascade policy
+    /// ([`crate::cascade`]). Both policies are pure data; stage threads
+    /// holding clones of the same config decide identically.
+    pub fn with_policies(
+        exec: &'a dyn Executor,
+        manifest: &'a Manifest,
+        metrics: &'a ServingMetrics,
+        seed: u64,
+        controller: Controller,
+        cascade: Cascade,
+    ) -> Self {
         Scheduler {
             exec,
             manifest,
             metrics,
             seed,
             controller,
+            cascade,
             scratch: RefCell::new(LoopScratch::default()),
             drafts: RefCell::new(HashMap::new()),
         }
@@ -305,33 +324,96 @@ impl<'a> Scheduler<'a> {
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
         let mut nfe = 0;
         let mut refine_time = Duration::ZERO;
+        // Cascade stage accounting, aggregated over chunks (None when the
+        // cascade is off — the wire stays byte-for-byte the legacy format).
+        let mut cascade_info: Option<CascadeInfo> = None;
 
         for chunk in chunks {
-            let params = SamplerParams {
-                artifact: chunk.meta.name.clone(),
-                steps_cold: key.steps_cold,
-                t0,
-                warp_mode: key.warp_mode(),
-            };
             let mut rng = Pcg64::substream(seed, chunk.chunk_index as u64, REFINE_LANE);
-            let t_refine = Instant::now();
-            let out = sample_warm_with_scratch(
-                self.exec,
-                &params,
-                chunk.init,
-                &mut rng,
-                false,
-                &mut self.scratch.borrow_mut(),
-            )?;
-            refine_time += t_refine.elapsed();
-            nfe = out.nfe; // same schedule for every chunk in the bundle
-            debug_assert!(out.nfe <= nfe_budget, "NFE guarantee floor violated");
-            self.metrics.nfe_saved.add(nfe_budget.saturating_sub(out.nfe) as u64);
-            self.metrics.denoiser_calls.add(out.nfe as u64);
-            self.metrics.batches_executed.inc();
-            self.metrics.padded_rows.add((out.tokens.batch - chunk.chunk_len) as u64);
-
-            let mut tokens = out.tokens;
+            let mut tokens = if self.cascade.is_off() {
+                // Legacy path: one uninterrupted engine-resident segment.
+                let params = SamplerParams {
+                    artifact: chunk.meta.name.clone(),
+                    steps_cold: key.steps_cold,
+                    t0,
+                    warp_mode: key.warp_mode(),
+                };
+                let t_refine = Instant::now();
+                let out = sample_warm_with_scratch(
+                    self.exec,
+                    &params,
+                    chunk.init,
+                    &mut rng,
+                    false,
+                    &mut self.scratch.borrow_mut(),
+                )?;
+                refine_time += t_refine.elapsed();
+                nfe = out.nfe; // same schedule for every chunk in the bundle
+                debug_assert!(out.nfe <= nfe_budget, "NFE guarantee floor violated");
+                self.metrics.nfe_saved.add(nfe_budget.saturating_sub(out.nfe) as u64);
+                self.metrics.denoiser_calls.add(out.nfe as u64);
+                self.metrics.batches_executed.inc();
+                self.metrics.padded_rows.add((out.tokens.batch - chunk.chunk_len) as u64);
+                out.tokens
+            } else {
+                // Cascade path: the same run split into ladder segments,
+                // with optional quality gates between them. The run seed
+                // draw matches the legacy path exactly (`sample_warm`
+                // draws one u64), so `fixed` mode is bitwise-identical.
+                let plan = self.cascade.plan(key.steps_cold, t0, &chunk.meta.name);
+                let run_seed = rng.next_u64();
+                let warp = key.warp_mode().warp_factor(t0) as f32;
+                let mut init = chunk.init;
+                crate::sampler::dfm::check_shape(
+                    chunk.meta.batch,
+                    chunk.meta.seq_len,
+                    &chunk.meta.name,
+                    &init,
+                )?;
+                let t_refine = Instant::now();
+                let outcome = cascade::run_segments(
+                    self.exec,
+                    &plan,
+                    key.steps_cold,
+                    t0,
+                    warp,
+                    run_seed,
+                    &mut init.tokens,
+                    chunk.chunk_len,
+                    chunk.meta.seq_len,
+                    chunk.meta.vocab,
+                    self.cascade.gate_threshold(),
+                    &mut self.scratch.borrow_mut(),
+                )?;
+                refine_time += t_refine.elapsed();
+                let total = outcome.total_nfe();
+                nfe = nfe.max(total); // chunks may gate out at different stages
+                debug_assert!(total <= nfe_budget, "NFE guarantee floor violated");
+                self.metrics.nfe_saved.add(nfe_budget.saturating_sub(total) as u64);
+                if outcome.early_exit {
+                    self.metrics.cascade_early_exits.inc();
+                }
+                for stage in &outcome.stages {
+                    self.metrics.cascade_stage_nfe.record(stage.nfe as f64);
+                    if let Some(d) = stage.gate_eval {
+                        self.metrics.gate_eval.record(d);
+                    }
+                }
+                let info = cascade_info.get_or_insert(CascadeInfo {
+                    stages_used: 0,
+                    nfe_per_stage: Vec::new(),
+                    early_exit: false,
+                });
+                if outcome.stages_used() > info.stages_used {
+                    info.stages_used = outcome.stages_used();
+                    info.nfe_per_stage = outcome.stages.iter().map(|s| s.nfe).collect();
+                }
+                info.early_exit |= outcome.early_exit;
+                self.metrics.denoiser_calls.add(total as u64);
+                self.metrics.batches_executed.inc();
+                self.metrics.padded_rows.add((init.batch - chunk.chunk_len) as u64);
+                init
+            };
             tokens.truncate(chunk.chunk_len); // strip padding — never leaks out
             for r in 0..chunk.chunk_len {
                 rows.push(tokens.row(r).to_vec());
@@ -352,6 +434,7 @@ impl<'a> Scheduler<'a> {
                 samples,
                 nfe,
                 t0_used: t0,
+                cascade: cascade_info.clone(),
                 queue_wait: now.saturating_duration_since(req.submitted).saturating_sub(total_time),
                 draft_time,
                 refine_time,
@@ -603,6 +686,125 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn cascade_fixed_is_bitwise_identical_to_off_and_tiles_the_budget() {
+        use crate::cascade::Cascade;
+        use crate::config::CascadeConfig;
+        let run = |mode: &str| {
+            let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+            let metrics = ServingMetrics::default();
+            let cascade = Cascade::from_config(&CascadeConfig {
+                mode: mode.into(),
+                ..CascadeConfig::default()
+            })
+            .unwrap();
+            let sched = Scheduler::with_policies(
+                &exec,
+                &manifest,
+                &metrics,
+                9,
+                Controller::static_default(),
+                cascade,
+            );
+            let reqs = vec![request(1, 3), request(2, 2)];
+            let bundle = WorkBundle::new(reqs[0].bundle_key(), reqs);
+            sched.run_bundle(bundle).unwrap()
+        };
+        let off = run("off");
+        let fixed = run("fixed");
+        assert_eq!(off.len(), fixed.len());
+        for (a, b) in off.iter().zip(&fixed) {
+            // Split == unsplit, end to end through the scheduler.
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.nfe, b.nfe);
+            assert_eq!(a.t0_used, b.t0_used);
+            // Off stays wire-invisible; fixed reports its stage tiling.
+            assert!(a.cascade.is_none());
+            let info = b.cascade.as_ref().unwrap();
+            // Default ladder [0.75, 0.9] over t0=0.5 / 10 cold steps:
+            // segments of 3 + 1 + 1 evaluations.
+            assert_eq!(info.stages_used, 3);
+            assert_eq!(info.nfe_per_stage, vec![3, 1, 1]);
+            assert!(!info.early_exit);
+            assert_eq!(info.nfe_per_stage.iter().sum::<usize>(), b.nfe);
+        }
+    }
+
+    #[test]
+    fn gated_cascade_exits_early_within_the_guarantee() {
+        use crate::cascade::Cascade;
+        use crate::config::CascadeConfig;
+        use crate::core::schedule::guaranteed_nfe;
+        let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+        let metrics = ServingMetrics::default();
+        // Threshold 0: the first gate always passes — the deterministic
+        // early-exit scenario.
+        let cascade = Cascade::from_config(&CascadeConfig {
+            mode: "gated".into(),
+            gate_threshold: 0.0,
+            ..CascadeConfig::default()
+        })
+        .unwrap();
+        let sched = Scheduler::with_policies(
+            &exec,
+            &manifest,
+            &metrics,
+            9,
+            Controller::static_default(),
+            cascade,
+        );
+        let resp = sched.run_single(request(1, 4)).unwrap();
+        let info = resp.cascade.as_ref().unwrap();
+        assert!(info.early_exit);
+        assert_eq!(info.stages_used, 1);
+        assert_eq!(info.nfe_per_stage, vec![3]);
+        assert_eq!(resp.nfe, 3);
+        // The guarantee: early exit only ever *saves* against the budget.
+        assert!(resp.nfe <= guaranteed_nfe(10, 0.5));
+        assert_eq!(metrics.nfe_saved.get(), 2);
+        assert_eq!(metrics.cascade_early_exits.get(), 1);
+        assert_eq!(metrics.cascade_stage_nfe.snapshot().count, 1);
+        assert!(metrics.gate_eval.snapshot().count >= 1);
+    }
+
+    #[test]
+    fn cascade_under_adaptive_controller_keeps_the_floor_budget() {
+        use crate::cascade::Cascade;
+        use crate::config::{CascadeConfig, ControlConfig};
+        use crate::core::schedule::guaranteed_nfe;
+        // Every cascade mode × the scored controller: summed per-stage
+        // NFE never exceeds guaranteed_nfe(steps_cold, t0_min) — the
+        // paper's floor, with both adaptivity layers stacked.
+        for mode in ["off", "fixed", "gated"] {
+            let exec = TestExec::stochastic(vec![1, 4, 8], 3, 8, 1);
+            let manifest = mock_manifest(&["cold"], &[1, 4, 8], 3, 8);
+            let metrics = ServingMetrics::default();
+            let controller = Controller::from_config(&ControlConfig {
+                mode: "scored".into(),
+                ..ControlConfig::default()
+            })
+            .unwrap();
+            let cascade = Cascade::from_config(&CascadeConfig {
+                mode: mode.into(),
+                ..CascadeConfig::default()
+            })
+            .unwrap();
+            let sched =
+                Scheduler::with_policies(&exec, &manifest, &metrics, 0, controller, cascade);
+            let resp = sched.run_single(request(1, 4)).unwrap();
+            let floor = guaranteed_nfe(10, 0.35); // t0_min default
+            assert!(resp.nfe <= floor, "{mode}: nfe {} > floor {floor}", resp.nfe);
+            if let Some(info) = &resp.cascade {
+                assert_eq!(info.nfe_per_stage.iter().sum::<usize>(), resp.nfe, "{mode}");
+                assert!(info.stages_used >= 1);
+            } else {
+                assert_eq!(mode, "off");
+            }
+        }
     }
 
     #[test]

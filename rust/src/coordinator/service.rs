@@ -34,6 +34,7 @@
 //! drains and exits. Every admitted envelope gets a response or a clean
 //! error — no hung receivers (pinned by the shutdown-under-load test).
 
+use crate::cascade::Cascade;
 use crate::config::WsfmConfig;
 use crate::control::Controller;
 use crate::coordinator::batcher::{Batcher, FlushPolicy, WorkBundle};
@@ -140,16 +141,25 @@ impl Service {
             crate::error!("invalid control config ({e:#}); using static t0");
             Controller::static_default()
         });
+        // Same pattern for the cascade policy: pure data, cloned per stage
+        // thread; an invalid section degrades to the legacy single-segment
+        // path (config::validate rejects it at load time).
+        let cascade = Cascade::from_config(&config.cascade).unwrap_or_else(|e| {
+            crate::error!("invalid cascade config ({e:#}); cascade off");
+            Cascade::off()
+        });
 
         if config.pipeline_depth <= 1 {
             // Serial path: the admission thread executes bundles inline.
             let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
             let controller = controller.clone();
+            let cascade = cascade.clone();
             std::thread::Builder::new()
                 .name("wsfm-coordinator".into())
                 .spawn(move || {
-                    let scheduler =
-                        Scheduler::with_controller(&*exec, &*manifest, &*m, seed, controller);
+                    let scheduler = Scheduler::with_policies(
+                        &*exec, &*manifest, &*m, seed, controller, cascade,
+                    );
                     admission_loop(&q, &r, policy, |bundle, envelopes| {
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
@@ -171,11 +181,13 @@ impl Service {
                 let (dq, rq, gate) = (draft_q.clone(), refine_q.clone(), gate.clone());
                 let active = active_drafters.clone();
                 let controller = controller.clone();
+                let cascade = cascade.clone();
                 std::thread::Builder::new()
                     .name(format!("wsfm-draft-{w}"))
                     .spawn(move || {
                         draft_stage(
-                            &*exec, &*manifest, &metrics, seed, controller, &dq, &rq, &gate,
+                            &*exec, &*manifest, &metrics, seed, controller, cascade, &dq, &rq,
+                            &gate,
                         );
                         // Last drafter out closes the refine channel so
                         // the refine thread can drain and exit.
@@ -196,10 +208,13 @@ impl Service {
                 let (exec, manifest, metrics) = (exec.clone(), manifest.clone(), metrics.clone());
                 let (rq, gate) = (refine_q.clone(), gate.clone());
                 let controller = controller.clone();
+                let cascade = cascade.clone();
                 std::thread::Builder::new()
                     .name(format!("wsfm-refine-{w}"))
                     .spawn(move || {
-                        refine_stage(&*exec, &*manifest, &metrics, seed, controller, &rq, &gate)
+                        refine_stage(
+                            &*exec, &*manifest, &metrics, seed, controller, cascade, &rq, &gate,
+                        )
                     })
                     .expect("spawning refine worker thread");
             }
@@ -406,11 +421,12 @@ fn draft_stage(
     metrics: &ServingMetrics,
     seed: u64,
     controller: Controller,
+    cascade: Cascade,
     draft_q: &BoundedQueue<PipelineJob>,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
 ) {
-    let scheduler = Scheduler::with_controller(exec, manifest, metrics, seed, controller);
+    let scheduler = Scheduler::with_policies(exec, manifest, metrics, seed, controller, cascade);
     loop {
         match draft_q.pop_timeout(Duration::from_millis(50)) {
             Some(job) => {
@@ -451,16 +467,18 @@ fn draft_stage(
 /// refine channel; with a replicated executor fleet each concurrently
 /// popped bundle lands on a distinct engine replica (least-loaded
 /// routing), so refinement itself scales past one execution stream.
+#[allow(clippy::too_many_arguments)]
 fn refine_stage(
     exec: &dyn Executor,
     manifest: &Manifest,
     metrics: &ServingMetrics,
     seed: u64,
     controller: Controller,
+    cascade: Cascade,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
 ) {
-    let scheduler = Scheduler::with_controller(exec, manifest, metrics, seed, controller);
+    let scheduler = Scheduler::with_policies(exec, manifest, metrics, seed, controller, cascade);
     loop {
         match refine_q.pop_timeout(Duration::from_millis(50)) {
             Some(job) => {
@@ -638,6 +656,15 @@ mod tests {
     }
 
     fn pipeline_outputs(depth: usize, workers: usize, mode: &str) -> Vec<(f64, Vec<Vec<i32>>)> {
+        pipeline_outputs_cascade(depth, workers, mode, "off")
+    }
+
+    fn pipeline_outputs_cascade(
+        depth: usize,
+        workers: usize,
+        mode: &str,
+        cascade_mode: &str,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
         // seq_len 16 keeps the different-seed inequality check below safe
         // from chance collisions (the drift keeps ~40% per-token overlap).
         let exec = TestExec::stochastic(vec![1, 4, 8], 16, 5, 2);
@@ -650,6 +677,7 @@ mod tests {
         cfg.draft_workers = workers;
         cfg.seed = 99;
         cfg.control.mode = mode.into();
+        cfg.cascade.mode = cascade_mode.into();
         let svc = Service::start(exec, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -702,6 +730,15 @@ mod tests {
     /// stochastic mocks behind the least-loaded router, REFINE stage
     /// running `refine_workers` threads.
     fn fleet_outputs(replicas: usize, refine_workers: usize) -> Vec<(f64, Vec<Vec<i32>>)> {
+        fleet_outputs_cascade(replicas, refine_workers, 4, "off")
+    }
+
+    fn fleet_outputs_cascade(
+        replicas: usize,
+        refine_workers: usize,
+        depth: usize,
+        cascade_mode: &str,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
         use crate::fleet::FleetHandle;
         let execs: Vec<Arc<dyn Executor>> = (0..replicas)
             .map(|_| Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2)) as Arc<dyn Executor>)
@@ -710,12 +747,13 @@ mod tests {
         let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
         let mut cfg = WsfmConfig::default();
         cfg.batcher.max_batch = 1;
-        cfg.pipeline_depth = 4;
+        cfg.pipeline_depth = depth;
         cfg.draft_workers = 2;
         // (The replica count lives in the pre-built FleetHandle; the
         // service only reads fleet.refine_workers.)
         cfg.fleet.refine_workers = refine_workers;
         cfg.seed = 99;
+        cfg.cascade.mode = cascade_mode.into();
         let svc = Service::start(fleet, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -748,6 +786,40 @@ mod tests {
                 "outputs diverged at replicas={replicas} refine_workers={refine_workers}"
             );
         }
+    }
+
+    #[test]
+    fn split_cascade_outputs_bitwise_identical_across_fleet_settings() {
+        // Acceptance pin (a) of the cascade: a run split into ladder
+        // segments (`fixed` mode, default [0.75, 0.9] ladder) reproduces
+        // the unsplit run's tokens exactly — swept across fleet replicas
+        // {1, 4} × refine_workers {1, 2} × pipeline depth {1, 4}, so a
+        // bundle hopping between replicas mid-cascade can never change
+        // its output. Reference is the serial, fleet-less, cascade-off
+        // path.
+        let reference = pipeline_outputs(1, 1, "static");
+        assert_eq!(
+            reference,
+            pipeline_outputs_cascade(1, 1, "static", "fixed"),
+            "split diverged on the serial fleet-less path"
+        );
+        for depth in [1usize, 4] {
+            for (replicas, refine_workers) in [(1, 1), (1, 2), (4, 1), (4, 2)] {
+                assert_eq!(
+                    reference,
+                    fleet_outputs_cascade(replicas, refine_workers, depth, "fixed"),
+                    "split diverged at replicas={replicas} refine_workers={refine_workers} depth={depth}"
+                );
+            }
+        }
+        // And cascade off through the same sweep is the PR 4 behaviour
+        // verbatim (pin (b), service level).
+        assert_eq!(reference, fleet_outputs_cascade(4, 2, 4, "off"));
+        // Gated outputs differ from the unsplit run when a gate passes —
+        // but they are still a pure function of (seed, bundle, config):
+        // identical across the serial path and a 4-replica fleet.
+        let gated = pipeline_outputs_cascade(1, 1, "static", "gated");
+        assert_eq!(gated, fleet_outputs_cascade(4, 2, 4, "gated"));
     }
 
     #[test]

@@ -34,7 +34,9 @@ impl WarpMode {
     }
 }
 
-/// An Euler integration schedule over `[t0, 1]`.
+/// An Euler integration schedule over `[t0, 1]` — or, for a cascade
+/// segment ([`Schedule::segment`]), over a contiguous sub-window
+/// `[t_start, t_end)` of that run's step grid.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     pub t0: f64,
@@ -43,6 +45,15 @@ pub struct Schedule {
     pub h: f64,
     /// The time points at which the denoiser is evaluated.
     pub times: Vec<f64>,
+    /// Index of `times[0]` in the unsplit run's schedule — the absolute
+    /// step coordinate the per-`(step, row)` RNG substreams key on, so a
+    /// run split into segments samples exactly like the unsplit run.
+    /// Always 0 for [`Schedule::new`].
+    pub step_offset: usize,
+    /// Whether this schedule's final step lands on `t = 1` (and is
+    /// therefore clipped to `1 - t_last`). Interior cascade segments end
+    /// on the grid instead, so every one of their steps is a full `h`.
+    pub reaches_one: bool,
 }
 
 impl Schedule {
@@ -71,7 +82,32 @@ impl Schedule {
                 *last = (1.0 - h).max(t0);
             }
         }
-        Ok(Schedule { t0, h, times })
+        Ok(Schedule { t0, h, times, step_offset: 0, reaches_one: true })
+    }
+
+    /// The sub-schedule of `Schedule::new(steps_cold, run_t0)` covering
+    /// the window `[t_start, t_end)` — the cascade-segment constructor.
+    ///
+    /// The segment executes exactly the unsplit run's evaluation times
+    /// that fall inside the window ([`grid_index`] snaps both boundaries
+    /// to the run grid, epsilon-robustly), with `step_offset` recording
+    /// where they sit in the unsplit run. Consequently **any** partition
+    /// of `[run_t0, 1]` into consecutive windows reproduces the unsplit
+    /// schedule's times, step sizes, and total NFE exactly (pinned by the
+    /// partition property test). `t_end >= 1` selects everything to the
+    /// end of the run; a window containing no grid step yields an empty
+    /// (0-NFE) schedule.
+    pub fn segment(steps_cold: usize, run_t0: f64, t_start: f64, t_end: f64) -> Result<Schedule> {
+        if !t_start.is_finite() || !t_end.is_finite() {
+            bail!("segment window [{t_start}, {t_end}] must be finite");
+        }
+        let full = Schedule::new(steps_cold, run_t0)?;
+        let a = grid_index(steps_cold, run_t0, t_start);
+        let b = grid_index(steps_cold, run_t0, t_end).max(a);
+        let n = full.nfe();
+        let times = full.times[a..b].to_vec();
+        let t0 = times.first().copied().unwrap_or_else(|| t_start.max(run_t0));
+        Ok(Schedule { t0, h: full.h, times, step_offset: a, reaches_one: b == n })
     }
 
     /// Number of function evaluations (== `times.len()`).
@@ -79,11 +115,12 @@ impl Schedule {
         self.times.len()
     }
 
-    /// The step size to use at step `i` (the last step is clipped to land
-    /// exactly on 1.0).
+    /// The step size to use at step `i`. The final step of a run that
+    /// reaches `t = 1` is clipped to land exactly on 1.0; every step of
+    /// an interior segment is a full grid step.
     pub fn step_size(&self, i: usize) -> f64 {
         let t = self.times[i];
-        if i + 1 == self.times.len() {
+        if self.reaches_one && i + 1 == self.times.len() {
             1.0 - t
         } else {
             self.h
@@ -100,6 +137,26 @@ impl Schedule {
 /// cases in `rust/tests/cross_lang.rs`).
 fn nfe_eps(steps_cold: usize) -> f64 {
     1e-9 + steps_cold as f64 * 1e-12
+}
+
+/// Map a time boundary onto the unsplit run's evaluation-step grid: the
+/// number of evaluation times of `Schedule::new(steps_cold, t0)` lying
+/// strictly below `t`, clamped to `[0, nfe]`.
+///
+/// Epsilon-robust at grid points (same tolerance as [`guaranteed_nfe`]):
+/// a boundary computed as `t0 + k·h` in f64 maps to exactly `k`, so
+/// cascade-ladder boundaries snap deterministically and consecutive
+/// segments tile the run without gaps or overlaps. `t >= 1` always maps
+/// to the full NFE (the end of the run), even for `t0` hard against 1
+/// where the product underflows the epsilon.
+pub fn grid_index(steps_cold: usize, t0: f64, t: f64) -> usize {
+    let n = guaranteed_nfe(steps_cold, t0);
+    if t >= 1.0 {
+        return n;
+    }
+    let x = (t - t0) * steps_cold as f64;
+    let i = (x - nfe_eps(steps_cold)).ceil().max(0.0) as usize;
+    i.min(n)
 }
 
 /// `ceil(steps_cold * (1 - t0))` — the paper's guaranteed NFE.
@@ -256,5 +313,139 @@ mod tests {
         assert!(Schedule::new(0, 0.0).is_err());
         assert!(Schedule::new(10, 1.0).is_err());
         assert!(Schedule::new(10, -0.1).is_err());
+        assert!(Schedule::segment(10, 0.5, f64::NAN, 1.0).is_err());
+        assert!(Schedule::segment(10, 0.5, 0.5, f64::INFINITY).is_err());
+        assert!(Schedule::segment(0, 0.0, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn grid_index_snaps_grid_points() {
+        for steps in [1usize, 7, 20, 1024] {
+            let h = 1.0 / steps as f64;
+            for t0 in [0.0, h, 0.5, 1.0 - h] {
+                if !(0.0..1.0).contains(&t0) {
+                    continue;
+                }
+                let n = guaranteed_nfe(steps, t0);
+                assert_eq!(grid_index(steps, t0, t0), 0, "steps={steps} t0={t0}");
+                assert_eq!(grid_index(steps, t0, 1.0), n, "steps={steps} t0={t0}");
+                for k in 0..=n {
+                    // A boundary computed in f64 as the k-th grid time maps
+                    // to exactly k (epsilon-robust).
+                    let b = t0 + k as f64 * h;
+                    let want = k.min(n);
+                    assert_eq!(grid_index(steps, t0, b), want, "steps={steps} t0={t0} k={k}");
+                }
+                // Off-grid boundaries round up to the next step count.
+                if n >= 2 {
+                    assert_eq!(grid_index(steps, t0, t0 + 1.5 * h), 2);
+                }
+            }
+        }
+        // t0 hard against 1: the product underflows the epsilon, but t=1
+        // still maps to the full (clamped-to-1) NFE.
+        assert_eq!(grid_index(20, 1.0 - 1e-12, 1.0), guaranteed_nfe(20, 1.0 - 1e-12));
+    }
+
+    #[test]
+    fn full_window_segment_equals_new() {
+        for (steps, t0) in [(20usize, 0.0), (20, 0.8), (7, 0.33), (1024, 0.5), (1, 0.0)] {
+            let full = Schedule::new(steps, t0).unwrap();
+            let seg = Schedule::segment(steps, t0, t0, 1.0).unwrap();
+            assert_eq!(seg, full, "steps={steps} t0={t0}");
+            assert_eq!(seg.step_offset, 0);
+            assert!(seg.reaches_one);
+        }
+    }
+
+    #[test]
+    fn interior_segments_keep_full_steps_and_offsets() {
+        // [0.5, 1] over 10 cold steps = 5 evaluations; cut at 0.8 → the
+        // first segment runs steps {0,1,2} with full-h steps (it ends on
+        // the grid), the second runs {3,4} and clips its final step.
+        let a = Schedule::segment(10, 0.5, 0.5, 0.8).unwrap();
+        let b = Schedule::segment(10, 0.5, 0.8, 1.0).unwrap();
+        assert_eq!(a.nfe(), 3);
+        assert_eq!(a.step_offset, 0);
+        assert!(!a.reaches_one);
+        for i in 0..a.nfe() {
+            assert!((a.step_size(i) - 0.1).abs() < 1e-12, "interior steps are full h");
+        }
+        assert_eq!(b.nfe(), 2);
+        assert_eq!(b.step_offset, 3);
+        assert!(b.reaches_one);
+        // The second segment resumes exactly where the first ended.
+        let end_a = a.times.last().unwrap() + a.step_size(a.nfe() - 1);
+        assert!((end_a - b.times[0]).abs() < 1e-9);
+        // Empty windows yield empty (0-NFE) schedules, not errors.
+        assert_eq!(Schedule::segment(10, 0.5, 0.8, 0.8).unwrap().nfe(), 0);
+        assert_eq!(Schedule::segment(10, 0.5, 0.9, 0.6).unwrap().nfe(), 0);
+    }
+
+    /// Partition a run at `cuts` (clamped into `[t0, 1]`, sorted) and
+    /// require the concatenated segments to reproduce the unsplit
+    /// schedule exactly: same times, same per-step sizes, same total NFE,
+    /// offsets tiling `[0, nfe)`.
+    fn check_partition(steps: usize, t0: f64, cuts: &[f64]) -> Result<(), String> {
+        let full = Schedule::new(steps, t0).map_err(|e| e.to_string())?;
+        let mut bounds: Vec<f64> = cuts.to_vec();
+        bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bounds.push(1.0);
+        let mut prev = t0;
+        let mut times: Vec<f64> = Vec::new();
+        for &b in &bounds {
+            let seg = Schedule::segment(steps, t0, prev, b).map_err(|e| e.to_string())?;
+            if seg.nfe() > 0 && seg.step_offset != times.len() {
+                return Err(format!(
+                    "offset {} != concat position {} (steps={steps} t0={t0} b={b})",
+                    seg.step_offset,
+                    times.len()
+                ));
+            }
+            for i in 0..seg.nfe() {
+                let j = seg.step_offset + i;
+                if (seg.step_size(i) - full.step_size(j)).abs() > 1e-12 {
+                    return Err(format!("step size diverged at absolute step {j}"));
+                }
+            }
+            times.extend_from_slice(&seg.times);
+            prev = b;
+        }
+        if times != full.times {
+            return Err(format!("times diverged: {} vs {} entries", times.len(), full.nfe()));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn segment_partition_property() {
+        use crate::util::prop::{check, F64Range, Pair, UsizeRange, VecOf};
+        // Random (steps, t0, up-to-5 arbitrary cut points): any partition
+        // of [t0, 1] tiles the unsplit schedule exactly.
+        let strat =
+            Pair(Pair(UsizeRange(1, 300), F64Range(0.0, 0.999)), VecOf(F64Range(0.0, 1.0), 5));
+        check("segment partition == unsplit schedule", strat, |((steps, t0), cuts)| {
+            check_partition(*steps, *t0, cuts)
+        });
+    }
+
+    #[test]
+    fn segment_partition_epsilon_boundaries() {
+        // The PR 3 epsilon boundary cases, now partitioned at every grid
+        // point: t0 ∈ {0, h, 1-h, 1-1e-9} with boundaries computed as
+        // t0 + k·h in f64 (the exact values a cascade ladder produces).
+        for steps in [1usize, 2, 3, 5, 7, 13, 20, 49, 128, 1024] {
+            let h = 1.0 / steps as f64;
+            for t0 in [0.0, h, 1.0 - h, 1.0 - 1e-9] {
+                if !(0.0..1.0).contains(&t0) {
+                    continue;
+                }
+                let n = guaranteed_nfe(steps, t0);
+                let cuts: Vec<f64> = (1..n).map(|k| t0 + k as f64 * h).collect();
+                check_partition(steps, t0, &cuts).unwrap();
+                // And a coarse 2-segment split through the middle.
+                check_partition(steps, t0, &[t0 + (1.0 - t0) / 2.0]).unwrap();
+            }
+        }
     }
 }

@@ -470,14 +470,7 @@ mod tests {
         // death mid-dispatch must not corrupt the retried run. A
         // stochastic mock makes the output depend on the init tokens, so
         // equality with a direct solo run proves the backup restored them.
-        let spec = LoopSpec {
-            artifact: "mock_cold_step_b4".into(),
-            steps_cold: 10,
-            t0: 0.5,
-            warp: 1.0,
-            seed: 7,
-            want_trace: false,
-        };
+        let spec = LoopSpec::full("mock_cold_step_b4".into(), 10, 0.5, 1.0, 7, false);
         let solo = TestExec::stochastic(vec![1, 4], 2, 4, 1);
         let mut expected = vec![3i32; 8];
         solo.run_loop(&spec, &mut expected, &mut LoopScratch::default()).unwrap();

@@ -2,8 +2,9 @@
 //! refinement (the Rust-side mirror of the build-time refiner), and row
 //! formatting.
 
+use crate::cascade::Cascade;
 use crate::control::Controller;
-use crate::coordinator::request::{DraftSpec, GenRequest};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest};
 use crate::coordinator::Scheduler;
 use crate::core::rng::Pcg64;
 use crate::core::schedule::WarpMode;
@@ -97,6 +98,48 @@ impl Env {
             Scheduler::with_controller(&self.engine, &self.manifest, &self.metrics, 0, controller);
         let resp = scheduler.run_single(req)?;
         Ok((resp.samples, resp.nfe, resp.t0_used, resp.refine_time))
+    }
+
+    /// [`Env::run_system`] under explicit controller + cascade policies
+    /// (the Tables 2/3 cascade rows). Returns the samples, worst-chunk
+    /// total NFE, the t0 used, the cascade stage accounting, and the
+    /// refine wall-clock.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_system_cascade(
+        &self,
+        domain: &str,
+        tag: &str,
+        draft: DraftSpec,
+        t0: f64,
+        steps_cold: usize,
+        warp: WarpMode,
+        n: usize,
+        seed: u64,
+        controller: Controller,
+        cascade: Cascade,
+    ) -> Result<(Vec<Vec<i32>>, usize, f64, Option<CascadeInfo>, Duration)> {
+        let req = GenRequest {
+            id: 0,
+            domain: domain.to_string(),
+            tag: tag.to_string(),
+            draft,
+            n_samples: n,
+            t0,
+            steps_cold,
+            warp_mode: warp,
+            seed,
+            submitted: Instant::now(),
+        };
+        let scheduler = Scheduler::with_policies(
+            &self.engine,
+            &self.manifest,
+            &self.metrics,
+            0,
+            controller,
+            cascade,
+        );
+        let resp = scheduler.run_single(req)?;
+        Ok((resp.samples, resp.nfe, resp.t0_used, resp.cascade, resp.refine_time))
     }
 
     /// Generate `n` draft-only samples (the "LSTM"/"DC-GAN" table rows),

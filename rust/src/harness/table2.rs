@@ -131,6 +131,51 @@ pub fn run_text(env: &Env, cfg: &TextBenchCfg, eval_stream: &[i32], train_stream
         eval_rows(&format!("WS-DFM scored (t0={t0_used:.2})"), &samples, nfe, t);
     }
 
+    // WS-DFM under the gated cascade (§Cascade): the same ws_t050 static
+    // run split into ladder segments, with a quality gate between them —
+    // a bundle whose intermediate state already scores well exits early,
+    // so the reported NFE can only be <= the static row's. The guarantee
+    // is asserted: summed per-stage NFE never exceeds the unsplit budget.
+    {
+        use crate::cascade::Cascade;
+        use crate::config::CascadeConfig;
+        use crate::control::Controller;
+        use crate::core::schedule::guaranteed_nfe;
+        let cascade = Cascade::from_config(&CascadeConfig {
+            mode: "gated".into(),
+            ..CascadeConfig::default()
+        })?;
+        let (samples, nfe, _t0_used, info, t) = env.run_system_cascade(
+            cfg.domain,
+            &common::ws_tag(0.5),
+            DraftSpec::Lstm,
+            0.5,
+            cfg.steps_cold,
+            WarpMode::Literal,
+            cfg.n_eval,
+            cfg.seed + 2,
+            Controller::static_default(),
+            cascade,
+        )?;
+        let budget = guaranteed_nfe(cfg.steps_cold, 0.5);
+        assert!(nfe <= budget, "cascade: NFE {nfe} exceeds unsplit budget {budget}");
+        let (stages, exited) = info
+            .as_ref()
+            .map(|i| (i.stages_used, i.early_exit))
+            .unwrap_or((1, false));
+        if let Some(i) = &info {
+            assert_eq!(i.nfe_per_stage.iter().sum::<usize>(), nfe, "stage NFEs must tile");
+        }
+        eval_rows(
+            &format!("WS-DFM cascade gated ({stages} stage{}{})",
+                if stages == 1 { "" } else { "s" },
+                if exited { ", early exit" } else { "" }),
+            &samples,
+            nfe,
+            t,
+        );
+    }
+
     Ok(rows)
 }
 

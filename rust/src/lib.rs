@@ -74,9 +74,26 @@
 //! functions of (bundle contents, config), preserving the bitwise
 //! determinism contract. See EXPERIMENTS.md §Control.
 //!
+//! ## Cascade refinement
+//!
+//! The controller decides *where to start*; [`cascade`] decides *where
+//! to stop*. Refinement runs as an ordered ladder of **resumable engine
+//! segments** (`core::schedule::Schedule::segment`, windowed
+//! `runtime::engine::LoopSpec`s): after each segment the intermediate
+//! state can be scored with the [`control`] proxies and, if the quality
+//! gate passes, the bundle exits early — the remaining segments are
+//! never paid for. RNG substreams key on the *absolute* step index, so
+//! a run split into any segments (even hopping fleet replicas between
+//! them; artifact affinity keeps resumes local) is bitwise-identical to
+//! the unsplit run, and total NFE can only shrink: the paper's
+//! `guaranteed_nfe(steps_cold, t0_min)` floor holds in every mode.
+//! `cascade.mode = off` (default) is the single-segment path verbatim.
+//! See EXPERIMENTS.md §Cascade.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 
+pub mod cascade;
 pub mod config;
 pub mod control;
 pub mod coordinator;

@@ -138,6 +138,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         cfg.control.grid,
         if cfg.control.calibration.is_empty() { "" } else { " (calibrated)" }
     );
+    if cfg.cascade.mode != "off" {
+        println!(
+            "cascade: mode={} ladder {:?} gate_threshold={}",
+            cfg.cascade.mode, cfg.cascade.ladder, cfg.cascade.gate_threshold
+        );
+    } else {
+        println!("cascade: off (single-segment refinement)");
+    }
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
     println!("fleet: {}", fleet.summary());

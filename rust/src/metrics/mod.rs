@@ -184,22 +184,31 @@ impl ValueHistogram {
         let g = self.inner.lock().unwrap();
         let mut v = g.samples.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pct = |p: f64| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v[((p / 100.0) * (v.len() - 1) as f64).round() as usize]
+        };
         ValueSnapshot {
             count: g.count,
             mean: if g.count > 0 { g.sum / g.count as f64 } else { 0.0 },
-            p50: if v.is_empty() { 0.0 } else { v[(v.len() - 1) / 2] },
+            p50: pct(50.0),
+            p95: pct(95.0),
             min: if g.count > 0 { g.min } else { 0.0 },
             max: if g.count > 0 { g.max } else { 0.0 },
         }
     }
 }
 
-/// Point-in-time view of a [`ValueHistogram`].
+/// Point-in-time view of a [`ValueHistogram`], with percentile summaries
+/// (p50/p95 over the retained reservoir) like its latency counterpart.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ValueSnapshot {
     pub count: u64,
     pub mean: f64,
     pub p50: f64,
+    pub p95: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -207,8 +216,8 @@ pub struct ValueSnapshot {
 impl ValueSnapshot {
     pub fn report(&self, name: &str) -> String {
         format!(
-            "{name}: n={} mean={:.3} p50={:.3} min={:.3} max={:.3}",
-            self.count, self.mean, self.p50, self.min, self.max
+            "{name}: n={} mean={:.3} p50={:.3} p95={:.3} min={:.3} max={:.3}",
+            self.count, self.mean, self.p50, self.p95, self.min, self.max
         )
     }
 }
@@ -308,8 +317,17 @@ pub struct ServingMetrics {
     pub chosen_t0: ValueHistogram,
     /// Denoiser evaluations saved vs. the guarantee-floor budget
     /// (`guaranteed_nfe(steps_cold, t0_min)`), summed per executed chunk.
-    /// Always 0 in `static` controller mode.
+    /// Always 0 in `static` controller mode with the cascade off; a gated
+    /// cascade's early exits land here too.
     pub nfe_saved: Counter,
+    /// Chunks whose cascade quality gate passed before the final ladder
+    /// stage ([`crate::cascade`], `gated` mode).
+    pub cascade_early_exits: Counter,
+    /// NFE of each executed cascade stage (the per-stage NFE histogram;
+    /// only cascade modes record here).
+    pub cascade_stage_nfe: ValueHistogram,
+    /// Wall-clock of each mid-cascade quality-gate evaluation.
+    pub gate_eval: LatencyHistogram,
     /// Flushed bundle → DRAFT-stage pickup wait (pipeline only).
     pub draft_queue_wait: LatencyHistogram,
     /// How far past its deadline a deadline-flushed bundle was dispatched.
@@ -344,6 +362,9 @@ impl Default for ServingMetrics {
             inflight_bundles: Gauge::default(),
             chosen_t0: ValueHistogram::new(4096),
             nfe_saved: Counter::default(),
+            cascade_early_exits: Counter::default(),
+            cascade_stage_nfe: ValueHistogram::new(4096),
+            gate_eval: LatencyHistogram::new(4096),
             draft_queue_wait: LatencyHistogram::new(4096),
             flush_lag: LatencyHistogram::new(4096),
             early_flushes: Counter::default(),
@@ -359,7 +380,7 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} early_flushes={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
@@ -370,9 +391,12 @@ impl ServingMetrics {
             self.padded_rows.get(),
             self.inflight_bundles.get(),
             self.nfe_saved.get(),
+            self.cascade_early_exits.get(),
             self.early_flushes.get(),
             self.samples.per_second(),
             self.chosen_t0.snapshot().report("chosen_t0"),
+            self.cascade_stage_nfe.snapshot().report("cascade_stage_nfe"),
+            self.gate_eval.snapshot().report("gate_eval"),
             self.queue_wait.snapshot().report("queue_wait"),
             self.draft_queue_wait.snapshot().report("draft_queue_wait"),
             self.flush_lag.snapshot().report("flush_lag"),
@@ -459,6 +483,9 @@ mod tests {
         assert!(r.contains("flush_lag"));
         assert!(r.contains("flush_early"));
         assert!(r.contains("nfe_saved=0"));
+        assert!(r.contains("cascade_early_exits=0"));
+        assert!(r.contains("cascade_stage_nfe"));
+        assert!(r.contains("gate_eval"));
         assert!(r.contains("early_flushes=0"));
         assert!(r.contains("chosen_t0"));
         assert!(r.contains("request_latency"));
@@ -476,7 +503,25 @@ mod tests {
         assert!((s.max - 0.95).abs() < 1e-12);
         assert!((s.mean - 0.68).abs() < 1e-9);
         assert!(s.p50 >= s.min && s.p50 <= s.max);
-        assert!(s.report("chosen_t0").contains("n=5"));
+        assert!(s.p95 >= s.p50 && s.p95 <= s.max, "percentiles must be ordered");
+        assert_eq!(s.p50, 0.8);
+        assert_eq!(s.p95, 0.95);
+        let rep = s.report("chosen_t0");
+        assert!(rep.contains("n=5") && rep.contains("p95="), "{rep}");
+    }
+
+    #[test]
+    fn value_histogram_percentiles_over_uniform_ramp() {
+        let h = ValueHistogram::new(1024);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let s = h.snapshot();
+        assert!((s.p50 - 50.0).abs() <= 2.0, "{}", s.p50);
+        assert!((s.p95 - 95.0).abs() <= 2.0, "{}", s.p95);
+        // Empty snapshot keeps both at zero.
+        let e = ValueHistogram::new(16).snapshot();
+        assert_eq!((e.p50, e.p95), (0.0, 0.0));
     }
 
     #[test]

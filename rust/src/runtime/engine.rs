@@ -35,6 +35,7 @@ use crate::core::prob;
 use crate::core::schedule::Schedule;
 use crate::core::workers::WorkerPool;
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::sampler::trace::Trace;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -71,23 +72,69 @@ pub enum ExecutableKind {
 }
 
 /// Everything an engine-resident Euler run needs besides the init tokens.
+///
+/// A spec describes either a full run (`t_start == t0`, `t_end == 1.0` —
+/// the [`LoopSpec::full`] constructor) or one **cascade segment** of it:
+/// the window `[t_start, t_end)` of the run's step grid. Segments are
+/// resumable and bitwise-faithful: the run seed plus the *absolute* step
+/// index (via `Schedule::segment`'s `step_offset`) key every categorical
+/// substream, so executing a run in k consecutive segments — even on
+/// different engine replicas — produces exactly the unsplit run's tokens.
 #[derive(Debug, Clone)]
 pub struct LoopSpec {
     /// Step artifact name (fixed `[B, N]` shape).
     pub artifact: String,
     /// Cold-run step count (grid resolution).
     pub steps_cold: usize,
-    /// Warm-start time (`0.0` = cold DFM).
+    /// Run-level warm-start time (`0.0` = cold DFM): anchors the step
+    /// grid (and the pre-resolved warp factor) for every segment.
     pub t0: f64,
+    /// Segment window start (`== t0` for a full run).
+    pub t_start: f64,
+    /// Segment window end (`1.0` = run to completion).
+    pub t_end: f64,
     /// Pre-resolved warp factor (`WarpMode::warp_factor(t0)`).
     pub warp: f32,
-    /// Run seed. Every `(step, row)` categorical draw derives its own
-    /// substream from it (`Pcg64::substream`), making results independent
-    /// of worker count and of where the loop runs.
+    /// Run seed. Every `(absolute step, row)` categorical draw derives
+    /// its own substream from it (`Pcg64::substream`), making results
+    /// independent of worker count, of where the loop runs, and of how
+    /// the run is split into segments.
     pub seed: u64,
     /// Capture per-step token snapshots (Fig. 5/7 dumps; costs one
     /// `[B, N]` clone per step, so off on the serving path).
     pub want_trace: bool,
+    /// Trace recording stride (record every n-th snapshot; `1` = every
+    /// step). Only read when `want_trace` is set.
+    pub trace_stride: usize,
+    /// Retained-trace-snapshot bound (`0` = unbounded). Bounds the
+    /// engine-side collection itself (`sampler::trace::Trace` policy),
+    /// so long traced runs hold at most `cap + 1` states.
+    pub trace_cap: usize,
+}
+
+impl LoopSpec {
+    /// A spec covering the whole run `[t0, 1]` (the non-cascade path).
+    pub fn full(
+        artifact: String,
+        steps_cold: usize,
+        t0: f64,
+        warp: f32,
+        seed: u64,
+        want_trace: bool,
+    ) -> LoopSpec {
+        LoopSpec {
+            artifact,
+            steps_cold,
+            t0,
+            t_start: t0,
+            t_end: 1.0,
+            warp,
+            seed,
+            want_trace,
+            trace_stride: 1,
+            trace_cap: 0,
+        }
+    }
 }
 
 /// Reusable scratch for the sampling loop. In steady state the loop
@@ -108,9 +155,11 @@ pub struct LoopReport {
     pub nfe: usize,
     /// Wall-clock of the refinement loop.
     pub elapsed: Duration,
-    /// `(time, tokens)` snapshots including the initial state, when
-    /// `want_trace` was set.
-    pub snapshots: Option<Vec<(f64, Vec<i32>)>>,
+    /// The recorded trajectory (initial state + per-step snapshots under
+    /// the spec's stride/cap policy), when `want_trace` was set. Bounded
+    /// at the collection site, so the channel never carries an unbounded
+    /// snapshot payload.
+    pub snapshots: Option<Trace>,
 }
 
 /// Drive the Euler CTMC loop over a step callback: the single loop body
@@ -140,16 +189,19 @@ where
             seq_len
         );
     }
-    let schedule = Schedule::new(spec.steps_cold, spec.t0)?;
+    // A full spec (t_start == t0, t_end == 1) yields the unsplit schedule
+    // with step_offset 0 — the legacy path, bit for bit. A segment spec
+    // yields the corresponding sub-window of that same grid.
+    let schedule = Schedule::segment(spec.steps_cold, spec.t0, spec.t_start, spec.t_end)?;
     let want = batch * seq_len * vocab;
     scratch.probs.clear();
     scratch.probs.reserve(want); // one-time growth; steady state reuses it
 
     let start = Instant::now();
     let mut snapshots = spec.want_trace.then(|| {
-        let mut v = Vec::with_capacity(schedule.nfe() + 1);
-        v.push((schedule.t0, tokens.clone()));
-        v
+        let mut tr = Trace::with_policy(spec.trace_stride, spec.trace_cap);
+        tr.push_raw(schedule.t0, batch, seq_len, tokens);
+        tr
     });
     for i in 0..schedule.nfe() {
         let t = schedule.times[i] as f32;
@@ -168,11 +220,11 @@ where
             vocab,
             tokens.as_mut_slice(),
             spec.seed,
-            i as u64,
+            (schedule.step_offset + i) as u64, // absolute step: split == unsplit
             WorkerPool::shared(),
         );
         if let Some(sn) = snapshots.as_mut() {
-            sn.push((schedule.times[i] + schedule.step_size(i), tokens.clone()));
+            sn.push_raw(schedule.times[i] + schedule.step_size(i), batch, seq_len, tokens);
         }
     }
     Ok(LoopReport { nfe: schedule.nfe(), elapsed: start.elapsed(), snapshots })
@@ -658,14 +710,7 @@ mod tests {
         assert!(h.meta("nope").is_err());
         assert!(Executor::step(&h, "nope", &[0], 0.0, 0.1, 1.0).is_err());
         assert!(h.draft("nope", &[0.0]).is_err());
-        let spec = LoopSpec {
-            artifact: "nope".into(),
-            steps_cold: 4,
-            t0: 0.0,
-            warp: 1.0,
-            seed: 0,
-            want_trace: false,
-        };
+        let spec = LoopSpec::full("nope".into(), 4, 0.0, 1.0, 0, false);
         let mut tokens = vec![0i32; 4];
         let mut scratch = LoopScratch::default();
         assert!(h.run_loop(&spec, &mut tokens, &mut scratch).is_err());
@@ -701,14 +746,7 @@ mod tests {
         assert!(draft_err.downcast_ref::<EngineDead>().is_some(), "{draft_err:#}");
         let preload_err = h.preload(&["a".to_string()]).unwrap_err();
         assert!(preload_err.downcast_ref::<EngineDead>().is_some(), "{preload_err:#}");
-        let spec = LoopSpec {
-            artifact: "a".into(),
-            steps_cold: 4,
-            t0: 0.0,
-            warp: 1.0,
-            seed: 0,
-            want_trace: false,
-        };
+        let spec = LoopSpec::full("a".into(), 4, 0.0, 1.0, 0, false);
         let mut tokens = vec![0i32; 4];
         let mut scratch = LoopScratch::default();
         let loop_err = h.run_loop(&spec, &mut tokens, &mut scratch).unwrap_err();

@@ -51,16 +51,25 @@ pub struct SamplerParams {
 }
 
 impl SamplerParams {
-    /// Resolve into an engine [`LoopSpec`], drawing the run seed.
+    /// Resolve into a full-run engine [`LoopSpec`], drawing the run seed.
+    /// Traced runs carry the process trace policy
+    /// ([`crate::sampler::trace::policy_from_env`]) so long trajectories
+    /// can be bounded at the engine-side collection site.
     fn loop_spec(&self, rng: &mut Pcg64, want_trace: bool) -> LoopSpec {
-        LoopSpec {
-            artifact: self.artifact.clone(),
-            steps_cold: self.steps_cold,
-            t0: self.t0,
-            warp: self.warp_mode.warp_factor(self.t0) as f32,
-            seed: rng.next_u64(),
+        let mut spec = LoopSpec::full(
+            self.artifact.clone(),
+            self.steps_cold,
+            self.t0,
+            self.warp_mode.warp_factor(self.t0) as f32,
+            rng.next_u64(),
             want_trace,
+        );
+        if want_trace {
+            let (stride, cap) = crate::sampler::trace::policy_from_env();
+            spec.trace_stride = stride;
+            spec.trace_cap = cap;
         }
+        spec
     }
 }
 
@@ -76,7 +85,14 @@ pub struct SampleOutput {
     pub trace: Option<Trace>,
 }
 
-fn check_shape(meta_batch: usize, meta_seq: usize, artifact: &str, init: &TokenBatch) -> Result<()> {
+/// Validate a warm-start init batch against an artifact's compiled shape
+/// (shared with the cascade path in the coordinator scheduler).
+pub(crate) fn check_shape(
+    meta_batch: usize,
+    meta_seq: usize,
+    artifact: &str,
+    init: &TokenBatch,
+) -> Result<()> {
     if meta_batch != init.batch || meta_seq != init.seq_len {
         bail!(
             "init shape [{}, {}] != artifact {} shape [{}, {}]",
@@ -127,13 +143,9 @@ pub fn sample_warm_with_scratch(
 
     let mut x = init;
     let report = exec.run_loop(&spec, &mut x.tokens, scratch)?;
-    let trace = report.snapshots.map(|snaps| {
-        let mut tr = Trace::new();
-        for (t, tokens) in snaps {
-            tr.push(t, &TokenBatch { batch: x.batch, seq_len: x.seq_len, tokens });
-        }
-        tr
-    });
+    // The engine-side collector already is a policy-bounded Trace — no
+    // rebuild (and no second full-trajectory copy) on the way out.
+    let trace = report.snapshots;
     Ok(SampleOutput { nfe: report.nfe, elapsed: report.elapsed, tokens: x, trace })
 }
 
@@ -161,7 +173,10 @@ pub fn sample_warm_stepwise(
     let start = Instant::now();
     let mut x = init;
     let mut trace = want_trace.then(|| {
-        let mut tr = Trace::new();
+        // Same policy as the engine-resident path, so traces stay
+        // identical between the two (the parity tests pin this).
+        let (stride, cap) = crate::sampler::trace::policy_from_env();
+        let mut tr = Trace::with_policy(stride, cap);
         tr.push(schedule.t0, &x);
         tr
     });
@@ -474,14 +489,7 @@ mod tests {
         use crate::runtime::engine::LoopSpec;
         let mock = MockStep::new(4, 8, vec![0.25, 0.25, 0.5]);
         let mut scratch = LoopScratch::default();
-        let spec = |steps: usize, t0: f64| LoopSpec {
-            artifact: "m".into(),
-            steps_cold: steps,
-            t0,
-            warp: 1.0,
-            seed: 42,
-            want_trace: false,
-        };
+        let spec = |steps: usize, t0: f64| LoopSpec::full("m".into(), steps, t0, 1.0, 42, false);
         let mut tokens = vec![0i32; 4 * 8];
         let tokens_cap = tokens.capacity();
         mock.run_loop(&spec(2, 0.0), &mut tokens, &mut scratch).unwrap();
@@ -500,6 +508,48 @@ mod tests {
             assert_eq!(tokens.capacity(), tokens_cap, "token buffer must be resampled in place");
         }
         assert_eq!(tokens.len(), 4 * 8);
+    }
+
+    #[test]
+    fn segmented_run_loop_matches_unsplit_bitwise() {
+        // The cascade-resume contract at the loop level: running a warm
+        // run as k consecutive segments — feeding each segment's tokens
+        // into the next — produces exactly the unsplit run's tokens, for
+        // any partition, because substreams key on the absolute step.
+        use crate::runtime::engine::LoopSpec;
+        let partitions: [&[f64]; 4] = [
+            &[],                // single segment == unsplit by definition
+            &[0.75],            // two segments
+            &[0.6, 0.75, 0.9],  // four segments
+            &[0.55, 0.56, 0.9], // includes an empty (0-step) window
+        ];
+        for (t0, steps) in [(0.5, 20), (0.0, 16), (0.8, 20)] {
+            let mock = MockStep::new(8, 16, vec![0.2, 0.5, 0.3]);
+            let full = LoopSpec::full("m".into(), steps, t0, 1.0, 77, false);
+            let mut unsplit = vec![0i32; 8 * 16];
+            let mut scratch = LoopScratch::default();
+            let full_report = mock.run_loop(&full, &mut unsplit, &mut scratch).unwrap();
+
+            for cuts in partitions {
+                let mock2 = MockStep::new(8, 16, vec![0.2, 0.5, 0.3]);
+                let mut tokens = vec![0i32; 8 * 16];
+                let mut scratch2 = LoopScratch::default();
+                let mut bounds: Vec<f64> = cuts.iter().copied().filter(|&c| c > t0).collect();
+                bounds.push(1.0);
+                let mut prev = t0;
+                let mut total_nfe = 0;
+                for &b in &bounds {
+                    let mut seg = full.clone();
+                    seg.t_start = prev;
+                    seg.t_end = b;
+                    total_nfe +=
+                        mock2.run_loop(&seg, &mut tokens, &mut scratch2).unwrap().nfe;
+                    prev = b;
+                }
+                assert_eq!(tokens, unsplit, "t0={t0} steps={steps} cuts={cuts:?}");
+                assert_eq!(total_nfe, full_report.nfe, "NFE must tile exactly");
+            }
+        }
     }
 
     #[test]

@@ -3,16 +3,54 @@
 //! The trace stores the full token state after every Euler step so the
 //! figure harnesses can dump "progress strips": the draft on the left,
 //! refinement steps in between, the final sample on the right.
+//!
+//! Memory is boundable: [`Trace::with_policy`] records only every
+//! `stride`-th offered snapshot and, once `cap` retained snapshots are
+//! reached, halves the resolution in place (dropping every other kept
+//! entry and doubling the stride) — so arbitrarily long cascade runs
+//! hold at most `cap + 1` states while the **first and last offered
+//! snapshots stay exact** (the latest non-stride state rides along as a
+//! provisional tail, replaced on the next push). The default policy
+//! (`stride = 1`, `cap = 0` = unbounded) is the legacy record-everything
+//! behaviour.
 
 use crate::core::tensor::TokenBatch;
 use std::io::Write;
 use std::path::Path;
 
+/// The process-wide default trace policy, read from the
+/// `WSFM_TRACE_STRIDE` / `WSFM_TRACE_CAP` environment knobs (defaults
+/// `1` / `0` = record everything, the legacy behaviour). Applied by the
+/// sampler whenever a run requests a trace, so long traced runs (figure
+/// dumps over thousands of steps, cascade trajectories) can be bounded
+/// without touching call sites — recording policy never changes the
+/// sampled tokens.
+pub fn policy_from_env() -> (usize, usize) {
+    let get =
+        |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    (get("WSFM_TRACE_STRIDE", 1).max(1), get("WSFM_TRACE_CAP", 0))
+}
+
 /// A recorded trajectory of token states.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Trace {
     pub times: Vec<f64>,
     pub states: Vec<TokenBatch>,
+    /// Record every `stride`-th offered snapshot (>= 1).
+    stride: usize,
+    /// Retained-snapshot bound (0 = unbounded).
+    cap: usize,
+    /// Total snapshots offered via [`Trace::push`].
+    offered: usize,
+    /// Whether the current tail is a provisional (off-stride) last
+    /// snapshot, kept so the final state is always exact.
+    tail_provisional: bool,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::with_policy(1, 0)
+    }
 }
 
 impl Trace {
@@ -20,9 +58,78 @@ impl Trace {
         Trace::default()
     }
 
+    /// A bounded trace: keep every `stride`-th snapshot, at most `cap`
+    /// of them (0 = unbounded; bounded caps are floored at 2 so first
+    /// and last always fit). The last offered snapshot is always
+    /// retained exactly, whatever the policy.
+    pub fn with_policy(stride: usize, cap: usize) -> Self {
+        Trace {
+            times: Vec::new(),
+            states: Vec::new(),
+            stride: stride.max(1),
+            cap: if cap == 0 { 0 } else { cap.max(2) },
+            offered: 0,
+            tail_provisional: false,
+        }
+    }
+
+    /// Total snapshots offered (recorded or not) — the unsplit step
+    /// count plus one for the initial state.
+    pub fn offered(&self) -> usize {
+        self.offered
+    }
+
+    fn drop_every_other(&mut self) {
+        let mut i = 0;
+        self.times.retain(|_| {
+            let keep = i % 2 == 0;
+            i += 1;
+            keep
+        });
+        let mut j = 0;
+        self.states.retain(|_| {
+            let keep = j % 2 == 0;
+            j += 1;
+            keep
+        });
+        self.stride *= 2;
+    }
+
     pub fn push(&mut self, t: f64, state: &TokenBatch) {
+        self.push_owned(t, state.clone());
+    }
+
+    /// [`Trace::push`] from the raw engine-loop parts, constructing the
+    /// [`TokenBatch`] only once (the engine-resident collector's entry).
+    pub fn push_raw(&mut self, t: f64, batch: usize, seq_len: usize, tokens: &[i32]) {
+        self.push_owned(t, TokenBatch { batch, seq_len, tokens: tokens.to_vec() });
+    }
+
+    pub fn push_owned(&mut self, t: f64, state: TokenBatch) {
+        // The previous tail, if provisional, existed only to keep "last"
+        // exact; this push supersedes it.
+        if self.tail_provisional {
+            self.times.pop();
+            self.states.pop();
+            self.tail_provisional = false;
+        }
+        let on_stride = self.offered % self.stride == 0; // first is always on-stride
+        self.offered += 1;
+        if on_stride && self.cap != 0 && self.times.len() >= self.cap {
+            // Bounded and full: halve resolution (keeps the first exact),
+            // then re-check whether this snapshot still lands on the
+            // doubled stride.
+            self.drop_every_other();
+            if (self.offered - 1) % self.stride != 0 {
+                self.times.push(t);
+                self.states.push(state);
+                self.tail_provisional = true;
+                return;
+            }
+        }
         self.times.push(t);
-        self.states.push(state.clone());
+        self.states.push(state);
+        self.tail_provisional = !on_stride;
     }
 
     pub fn len(&self) -> usize {
@@ -112,6 +219,54 @@ mod tests {
         assert_eq!(snaps.len(), 3);
         assert_eq!(snaps[0].1, vec![0, 0]);
         assert_eq!(snaps[2].1, vec![4, 4]);
+    }
+
+    #[test]
+    fn stride_policy_records_every_nth_with_exact_first_and_last() {
+        // Offer 10 snapshots (t = 0..9) at stride 2: the even indices are
+        // recorded, and the off-stride final state rides along exactly.
+        let mut tr = Trace::with_policy(2, 0);
+        for i in 0..10 {
+            let mut tb = TokenBatch::zeros(1, 2);
+            tb.tokens = vec![i, i];
+            tr.push(i as f64, &tb);
+        }
+        assert_eq!(tr.offered(), 10);
+        assert_eq!(tr.times, vec![0.0, 2.0, 4.0, 6.0, 8.0, 9.0]);
+        // row_snapshots reads the recorded points (k >= len returns all).
+        let snaps = tr.row_snapshots(0, 100);
+        assert_eq!(snaps.len(), 6);
+        assert_eq!(snaps[0], (0.0, vec![0, 0]), "first offered state is exact");
+        assert_eq!(snaps[5], (9.0, vec![9, 9]), "last offered state is exact");
+        assert_eq!(snaps[2], (4.0, vec![4, 4]), "interior points sit on the stride");
+        // One more push replaces the provisional tail with an on-stride
+        // entry — no duplicate of t=9 survives.
+        let mut tb = TokenBatch::zeros(1, 2);
+        tb.tokens = vec![10, 10];
+        tr.push(10.0, &tb);
+        assert_eq!(tr.times, vec![0.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn cap_bounds_memory_while_keeping_ends_exact() {
+        // A long (cascade-length) run through a cap-8 trace: retained
+        // snapshots never exceed cap + 1 (the provisional tail), the
+        // first and last states stay exact, and times stay sorted.
+        let mut tr = Trace::with_policy(1, 8);
+        for i in 0..500 {
+            let mut tb = TokenBatch::zeros(1, 1);
+            tb.tokens = vec![i];
+            tr.push(i as f64, &tb);
+            assert!(tr.len() <= 9, "cap breached at step {i}: {}", tr.len());
+        }
+        assert_eq!(tr.offered(), 500);
+        assert_eq!(tr.times[0], 0.0);
+        assert_eq!(*tr.times.last().unwrap(), 499.0);
+        assert_eq!(tr.states.last().unwrap().tokens, vec![499]);
+        assert!(tr.times.windows(2).all(|w| w[0] < w[1]), "{:?}", tr.times);
+        // Unbounded default still records everything (legacy behaviour).
+        let full = toy_trace(499);
+        assert_eq!(full.len(), 500);
     }
 
     #[test]

@@ -72,6 +72,11 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
 
 /// Render a successful generate response. `texts` is optional decoded
 /// output (char/word domains).
+///
+/// Cascade stage accounting (`stages_used`, per-stage `nfe_stages`,
+/// `early_exit`) is emitted only when the bundle ran under a cascade
+/// mode — with `cascade.mode = off` the response stays **byte-for-byte**
+/// the pre-cascade wire format (pinned by tests).
 pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String {
     let mut fields = vec![
         ("ok", Json::Bool(true)),
@@ -82,15 +87,21 @@ pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String
         ("draft_us", Json::num(resp.draft_time.as_micros() as f64)),
         ("refine_us", Json::num(resp.refine_time.as_micros() as f64)),
         ("total_us", Json::num(resp.total_time.as_micros() as f64)),
-        (
-            "samples",
-            Json::arr(
-                resp.samples
-                    .iter()
-                    .map(|row| Json::arr(row.iter().map(|&t| Json::num(t as f64)))),
-            ),
-        ),
     ];
+    if let Some(c) = &resp.cascade {
+        fields.push(("stages_used", Json::num(c.stages_used as f64)));
+        fields.push((
+            "nfe_stages",
+            Json::arr(c.nfe_per_stage.iter().map(|&n| Json::num(n as f64))),
+        ));
+        fields.push(("early_exit", Json::Bool(c.early_exit)));
+    }
+    fields.push((
+        "samples",
+        Json::arr(
+            resp.samples.iter().map(|row| Json::arr(row.iter().map(|&t| Json::num(t as f64)))),
+        ),
+    ));
     if let Some(ts) = texts {
         fields.push(("texts", Json::arr(ts.into_iter().map(Json::str))));
     }
@@ -168,25 +179,63 @@ mod tests {
         assert!(parse_request(r#"{"cmd":"generate","domain":"x","t0":1.5}"#).is_err());
     }
 
-    #[test]
-    fn render_roundtrip() {
-        let resp = GenResponse {
+    fn resp_without_cascade() -> GenResponse {
+        GenResponse {
             id: 3,
             samples: vec![vec![1, 2], vec![3, 4]],
             nfe: 205,
             t0_used: 0.8,
+            cascade: None,
             queue_wait: Duration::from_micros(120),
             draft_time: Duration::from_micros(900),
             refine_time: Duration::from_micros(52_000),
             total_time: Duration::from_micros(53_100),
-        };
-        let line = render_response(&resp, Some(vec!["ab".into()]));
+        }
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let line = render_response(&resp_without_cascade(), Some(vec!["ab".into()]));
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").as_bool(), Some(true));
         assert_eq!(j.get("nfe").as_usize(), Some(205));
         assert_eq!(j.get("t0_used").as_f64(), Some(0.8));
         assert_eq!(j.get("samples").as_arr().unwrap().len(), 2);
         assert_eq!(j.get("texts").as_arr().unwrap()[0].as_str(), Some("ab"));
+    }
+
+    #[test]
+    fn cascade_off_wire_is_byte_for_byte_the_legacy_format() {
+        // Pin (b): a response produced under cascade.mode = off carries
+        // no cascade fields at all — the exact pre-cascade byte layout.
+        let line = render_response(&resp_without_cascade(), None);
+        assert!(!line.contains("stages_used"), "{line}");
+        assert!(!line.contains("nfe_stages"), "{line}");
+        assert!(!line.contains("early_exit"), "{line}");
+        let expected = concat!(
+            r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
+            r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+            r#""samples":[[1,2],[3,4]]}"#
+        );
+        assert_eq!(line, expected, "off-mode wire bytes changed");
+    }
+
+    #[test]
+    fn cascade_response_carries_stage_accounting() {
+        use crate::coordinator::request::CascadeInfo;
+        let mut resp = resp_without_cascade();
+        resp.cascade =
+            Some(CascadeInfo { stages_used: 2, nfe_per_stage: vec![150, 55], early_exit: true });
+        let line = render_response(&resp, None);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("stages_used").as_usize(), Some(2));
+        let stages = j.get("nfe_stages").as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].as_usize(), Some(150));
+        assert_eq!(stages[1].as_usize(), Some(55));
+        assert_eq!(j.get("early_exit").as_bool(), Some(true));
+        // Per-stage NFEs sum to the headline nfe.
+        assert_eq!(j.get("nfe").as_usize(), Some(205));
     }
 
     #[test]

@@ -142,14 +142,8 @@ fn run_loop_performs_exactly_nfe_denoiser_calls() {
 fn scratch_capacity_is_flat_in_steady_state() {
     let exec = DriftExec::new(4, 16, 6, 2);
     let mut scratch = LoopScratch::default();
-    let spec = |steps: usize, seed: u64| LoopSpec {
-        artifact: "drift".into(),
-        steps_cold: steps,
-        t0: 0.0,
-        warp: 1.0,
-        seed,
-        want_trace: false,
-    };
+    let spec =
+        |steps: usize, seed: u64| LoopSpec::full("drift".into(), steps, 0.0, 1.0, seed, false);
     let mut tokens = vec![0i32; 4 * 16];
     let token_cap = tokens.capacity();
 
