@@ -5,9 +5,10 @@
 //! loop's channel round-trip cost (per-step vs engine-resident), batcher
 //! offer/flush, queue handoff, JSON protocol encode/decode, the serving
 //! coordinator's serial-vs-pipelined bundle throughput, the executor
-//! fleet's replica scaling (replicas=1 vs 4 on a flat-cost stage mock) —
-//! and the engine step itself per domain/batch, so the "coordinator must
-//! not be the bottleneck" target is quantified.
+//! fleet's replica scaling (replicas=1 vs 4 on a flat-cost stage mock),
+//! the watchdog-guarded vs bare engine-call reply wait — and the engine
+//! step itself per domain/batch, so the "coordinator must not be the
+//! bottleneck" target is quantified.
 //!
 //! Results additionally land in `BENCH_hotpath.json` (benchmark name →
 //! mean ns/iter) so the perf trajectory is tracked across PRs.
@@ -512,6 +513,34 @@ fn bench_cascade_throughput(results: &mut Vec<(String, f64)>) {
 }
 
 // ---------------------------------------------------------------------------
+// Watchdog overhead on the engine-call reply path
+// ---------------------------------------------------------------------------
+
+/// The robustness watchdog (`robustness.call_timeout_ms`) swaps the
+/// blocking `recv()` on every engine reply for a deadline-bounded
+/// `recv_timeout()`. Measure the same stats round-trip bare vs with a
+/// generous, never-firing deadline armed, so the guard's overhead on the
+/// fault-free hot path stays visible in the trajectory.
+fn bench_watchdog_overhead(results: &mut Vec<(String, f64)>) {
+    let b = Bench::default();
+    let manifest = wsfm::runtime::Manifest {
+        dir: std::path::PathBuf::from("/tmp"),
+        artifacts: vec![],
+        domains: Json::Null,
+        batch_sizes: std::collections::BTreeMap::new(),
+    };
+    let bare = wsfm::runtime::EngineHandle::spawn(manifest).expect("engine thread");
+    rec(results, b.run("engine call roundtrip bare", || {
+        black_box(bare.stats().unwrap());
+    }));
+    let guarded = bare.clone().with_call_timeout(Some(Duration::from_secs(5)));
+    rec(results, b.run("engine call roundtrip watchdog", || {
+        black_box(guarded.stats().unwrap());
+    }));
+    bare.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // Fleet scaling: replicated executors vs a single stream (mock executor)
 // ---------------------------------------------------------------------------
 
@@ -636,6 +665,9 @@ fn main() {
 
     println!("\n== fleet: replicated executors vs a single stream ==");
     bench_fleet_throughput(&mut results);
+
+    println!("\n== watchdog: bare vs guarded engine-call reply wait ==");
+    bench_watchdog_overhead(&mut results);
 
     match Env::load("artifacts") {
         Ok(env) => {

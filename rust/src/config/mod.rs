@@ -34,6 +34,65 @@ pub struct WsfmConfig {
     pub fleet: FleetConfig,
     /// Cascade refinement ladder ([`crate::cascade`]).
     pub cascade: CascadeConfig,
+    /// Fault-tolerance envelope ([`crate::faults`], fleet health loop,
+    /// refine watchdog, draft-fallback degradation).
+    pub robustness: RobustnessConfig,
+}
+
+/// Fault-tolerance tuning (`robustness` subsystem).
+///
+/// Governs the failure-side serving envelope: the engine-call watchdog,
+/// the fleet health loop that resurrects quarantined replicas, the
+/// coordinator's stage-poll cadence, and whether REFINE failures degrade
+/// to the already-computed draft tokens instead of erroring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RobustnessConfig {
+    /// Watchdog deadline on each engine call (ms). A reply that takes
+    /// longer surfaces a typed `EngineTimeout`, which the fleet treats
+    /// like a dead replica (quarantine + reroute). `0` (the default)
+    /// disables the watchdog — calls block until the engine replies,
+    /// the pre-robustness behaviour verbatim.
+    pub call_timeout_ms: u64,
+    /// Poll interval (ms) for the coordinator stage loops (admission,
+    /// DRAFT, REFINE). Drain on shutdown completes within a small
+    /// multiple of this (pinned by test).
+    pub stage_poll_ms: u64,
+    /// Serve the bundle's draft tokens (with `degraded: true` on the
+    /// wire) when REFINE exhausts its reroutes, instead of erroring.
+    pub draft_fallback: bool,
+    /// Initial backoff (ms) before the health loop retries a replica
+    /// respawn; doubles per consecutive failure.
+    pub respawn_backoff_ms: u64,
+    /// Upper bound on the respawn backoff (ms).
+    pub respawn_backoff_cap_ms: u64,
+    /// Circuit breaker: after this many *consecutive* failed respawn
+    /// attempts the replica is retired permanently.
+    pub max_respawns: u32,
+}
+
+impl Default for RobustnessConfig {
+    fn default() -> Self {
+        RobustnessConfig {
+            call_timeout_ms: 0,
+            stage_poll_ms: 50,
+            draft_fallback: true,
+            respawn_backoff_ms: 50,
+            respawn_backoff_cap_ms: 5000,
+            max_respawns: 5,
+        }
+    }
+}
+
+impl RobustnessConfig {
+    /// The watchdog deadline as a `Duration`; `None` when disabled (0).
+    pub fn call_timeout(&self) -> Option<std::time::Duration> {
+        (self.call_timeout_ms > 0).then(|| std::time::Duration::from_millis(self.call_timeout_ms))
+    }
+
+    /// The coordinator stage-loop poll interval.
+    pub fn stage_poll(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.stage_poll_ms)
+    }
 }
 
 /// Cascade-refinement tuning (`cascade` subsystem).
@@ -160,6 +219,7 @@ impl Default for WsfmConfig {
             control: ControlConfig::default(),
             fleet: FleetConfig::default(),
             cascade: CascadeConfig::default(),
+            robustness: RobustnessConfig::default(),
         }
     }
 }
@@ -249,6 +309,25 @@ impl WsfmConfig {
         if let Some(n) = cas.get("gate_threshold").as_f64() {
             c.cascade.gate_threshold = n;
         }
+        let rb = j.get("robustness");
+        if let Some(n) = rb.get("call_timeout_ms").as_f64() {
+            c.robustness.call_timeout_ms = n as u64;
+        }
+        if let Some(n) = rb.get("stage_poll_ms").as_f64() {
+            c.robustness.stage_poll_ms = n as u64;
+        }
+        if let Some(b) = rb.get("draft_fallback").as_bool() {
+            c.robustness.draft_fallback = b;
+        }
+        if let Some(n) = rb.get("respawn_backoff_ms").as_f64() {
+            c.robustness.respawn_backoff_ms = n as u64;
+        }
+        if let Some(n) = rb.get("respawn_backoff_cap_ms").as_f64() {
+            c.robustness.respawn_backoff_cap_ms = n as u64;
+        }
+        if let Some(n) = rb.get("max_respawns").as_usize() {
+            c.robustness.max_respawns = n as u32;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -290,6 +369,20 @@ impl WsfmConfig {
                     ("mode", Json::str(self.cascade.mode.clone())),
                     ("ladder", Json::arr(self.cascade.ladder.iter().map(|&b| Json::num(b)))),
                     ("gate_threshold", Json::num(self.cascade.gate_threshold)),
+                ]),
+            ),
+            (
+                "robustness",
+                Json::obj(vec![
+                    ("call_timeout_ms", Json::num(self.robustness.call_timeout_ms as f64)),
+                    ("stage_poll_ms", Json::num(self.robustness.stage_poll_ms as f64)),
+                    ("draft_fallback", Json::Bool(self.robustness.draft_fallback)),
+                    ("respawn_backoff_ms", Json::num(self.robustness.respawn_backoff_ms as f64)),
+                    (
+                        "respawn_backoff_cap_ms",
+                        Json::num(self.robustness.respawn_backoff_cap_ms as f64),
+                    ),
+                    ("max_respawns", Json::num(self.robustness.max_respawns as f64)),
                 ]),
             ),
             (
@@ -380,6 +473,22 @@ impl WsfmConfig {
         {
             bail!("cascade.gate_threshold must be in [0, 1], got {}", self.cascade.gate_threshold);
         }
+        if self.robustness.stage_poll_ms == 0 {
+            bail!("robustness.stage_poll_ms must be positive");
+        }
+        if self.robustness.respawn_backoff_ms == 0 {
+            bail!("robustness.respawn_backoff_ms must be positive");
+        }
+        if self.robustness.respawn_backoff_cap_ms < self.robustness.respawn_backoff_ms {
+            bail!(
+                "robustness.respawn_backoff_cap_ms ({}) must be >= respawn_backoff_ms ({})",
+                self.robustness.respawn_backoff_cap_ms,
+                self.robustness.respawn_backoff_ms
+            );
+        }
+        if self.robustness.max_respawns == 0 {
+            bail!("robustness.max_respawns must be positive");
+        }
         Ok(())
     }
 }
@@ -460,6 +569,26 @@ mod tests {
     }
 
     #[test]
+    fn robustness_section_layering() {
+        let j = Json::parse(
+            r#"{"robustness":{"call_timeout_ms":2000,"stage_poll_ms":10,"draft_fallback":false,"respawn_backoff_ms":25,"respawn_backoff_cap_ms":400,"max_respawns":3}}"#,
+        )
+        .unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.robustness.call_timeout_ms, 2000);
+        assert_eq!(c.robustness.stage_poll_ms, 10);
+        assert!(!c.robustness.draft_fallback);
+        assert_eq!(c.robustness.respawn_backoff_ms, 25);
+        assert_eq!(c.robustness.respawn_backoff_cap_ms, 400);
+        assert_eq!(c.robustness.max_respawns, 3);
+        // Untouched -> defaults: watchdog off, fallback on.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.robustness, RobustnessConfig::default());
+        assert_eq!(d.robustness.call_timeout_ms, 0);
+        assert!(d.robustness.draft_fallback);
+    }
+
+    #[test]
     fn invalid_rejected() {
         for bad in [
             r#"{"batcher":{"max_batch":0}}"#,
@@ -481,6 +610,10 @@ mod tests {
             r#"{"cascade":{"ladder":[0.0,0.5]}}"#,
             r#"{"cascade":{"ladder":[0.5,1.0]}}"#,
             r#"{"cascade":{"gate_threshold":1.5}}"#,
+            r#"{"robustness":{"stage_poll_ms":0}}"#,
+            r#"{"robustness":{"respawn_backoff_ms":0}}"#,
+            r#"{"robustness":{"respawn_backoff_cap_ms":10}}"#,
+            r#"{"robustness":{"max_respawns":0}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

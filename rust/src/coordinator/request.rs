@@ -175,6 +175,12 @@ pub struct GenResponse {
     pub draft_time: Duration,
     pub refine_time: Duration,
     pub total_time: Duration,
+    /// `Some(reason)` when refinement failed and the coordinator served
+    /// the already-computed draft tokens instead (graceful degradation:
+    /// `samples` are the warm-start *drafts*, `nfe` is 0). `None` on the
+    /// normal path — the wire format then carries no degraded fields at
+    /// all, keeping the legacy byte layout.
+    pub degraded: Option<String>,
 }
 
 #[cfg(test)]

@@ -439,6 +439,7 @@ impl<'a> Scheduler<'a> {
                 draft_time,
                 refine_time,
                 total_time,
+                degraded: None,
             });
             self.metrics.requests_completed.inc();
             self.metrics.samples.record(req.n_samples as u64);

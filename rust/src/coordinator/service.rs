@@ -33,6 +33,22 @@
 //! last draft worker closes the refine channel; every refine worker
 //! drains and exits. Every admitted envelope gets a response or a clean
 //! error — no hung receivers (pinned by the shutdown-under-load test).
+//! Stage threads poll their channels at `robustness.stage_poll_ms`, so
+//! drain latency is a small multiple of that knob (pinned by the
+//! shutdown-latency test).
+//!
+//! ## Draft-fallback degradation
+//!
+//! When REFINE fails — the fleet exhausted its reroutes (`FleetDown`),
+//! or an execution error survived — the bundle's **already-computed
+//! draft tokens** are served instead of an error: the warm-start draft
+//! is a complete (if unrefined) sample by construction, which is the
+//! paper's premise. Degraded responses carry `degraded: true` plus a
+//! reason on the wire (absent otherwise — the legacy byte layout is
+//! pinned), report `nfe: 0`, and count in `degraded_responses`. Disable
+//! with `robustness.draft_fallback = false` to surface refine errors
+//! verbatim. Draft-stage failures are *not* degradable (there is nothing
+//! to serve yet) and stay typed errors.
 
 use crate::cascade::Cascade;
 use crate::config::WsfmConfig;
@@ -148,9 +164,15 @@ impl Service {
             crate::error!("invalid cascade config ({e:#}); cascade off");
             Cascade::off()
         });
+        // Robustness knobs threaded to every stage thread: channel poll
+        // cadence (bounds drain latency) and the draft-fallback switch.
+        let stage_poll = config.robustness.stage_poll();
+        let draft_fallback = config.robustness.draft_fallback;
 
         if config.pipeline_depth <= 1 {
-            // Serial path: the admission thread executes bundles inline.
+            // Serial path: the admission thread executes bundles inline —
+            // split into DRAFT then REFINE so a refine failure can still
+            // degrade to the drafted tokens.
             let (q, m, r) = (queue.clone(), metrics.clone(), running.clone());
             let controller = controller.clone();
             let cascade = cascade.clone();
@@ -160,12 +182,24 @@ impl Service {
                     let scheduler = Scheduler::with_policies(
                         &*exec, &*manifest, &*m, seed, controller, cascade,
                     );
-                    admission_loop(&q, &r, policy, |bundle, envelopes| {
+                    admission_loop(&q, &r, policy, stage_poll, |bundle, envelopes| {
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
                         m.inflight_bundles.inc();
                         let key = bundle.key.clone();
-                        deliver(scheduler.run_bundle(bundle), responders, &m, &key);
+                        match scheduler.draft_bundle(bundle) {
+                            Ok(drafted) => {
+                                let fallback = fallback_plan(&drafted, draft_fallback);
+                                deliver_or_degrade(
+                                    scheduler.refine_bundle(drafted),
+                                    fallback,
+                                    responders,
+                                    &m,
+                                    &key,
+                                );
+                            }
+                            Err(e) => deliver(Err(e), responders, &m, &key),
+                        }
                         m.inflight_bundles.dec();
                     });
                 })
@@ -187,7 +221,7 @@ impl Service {
                     .spawn(move || {
                         draft_stage(
                             &*exec, &*manifest, &metrics, seed, controller, cascade, &dq, &rq,
-                            &gate,
+                            &gate, stage_poll, draft_fallback,
                         );
                         // Last drafter out closes the refine channel so
                         // the refine thread can drain and exit.
@@ -214,6 +248,7 @@ impl Service {
                     .spawn(move || {
                         refine_stage(
                             &*exec, &*manifest, &metrics, seed, controller, cascade, &rq, &gate,
+                            stage_poll, draft_fallback,
                         )
                     })
                     .expect("spawning refine worker thread");
@@ -223,7 +258,7 @@ impl Service {
             std::thread::Builder::new()
                 .name("wsfm-coordinator".into())
                 .spawn(move || {
-                    admission_loop(&q, &r, policy, |bundle, envelopes| {
+                    admission_loop(&q, &r, policy, stage_poll, |bundle, envelopes| {
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
                         gate.acquire();
@@ -366,6 +401,114 @@ fn deliver(
     }
 }
 
+/// Everything needed to serve a bundle's *draft* tokens if refinement
+/// fails, captured before [`Scheduler::refine_bundle`] consumes the
+/// [`DraftedBundle`]: the useful (non-padding) drafted rows in FIFO
+/// scatter order, plus the per-request bookkeeping the response needs.
+struct FallbackPlan {
+    /// Useful drafted rows across chunks, in request FIFO order.
+    rows: Vec<Vec<i32>>,
+    /// `(id, n_samples, submitted)` per request, same order.
+    per_request: Vec<(u64, usize, Instant)>,
+    t0: f64,
+    draft_time: Duration,
+    started: Instant,
+}
+
+impl FallbackPlan {
+    /// Scatter the drafted rows into degraded responses (`nfe: 0`, no
+    /// cascade info, `degraded: Some(reason)`).
+    fn into_responses(self, reason: &str) -> Vec<GenResponse> {
+        let FallbackPlan { rows, per_request, t0, draft_time, started } = self;
+        let total_time = started.elapsed();
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(per_request.len());
+        let mut cursor = 0;
+        for (id, n_samples, submitted) in per_request {
+            let samples = rows[cursor..cursor + n_samples].to_vec();
+            cursor += n_samples;
+            responses.push(GenResponse {
+                id,
+                samples,
+                nfe: 0,
+                t0_used: t0,
+                cascade: None,
+                queue_wait: now.saturating_duration_since(submitted).saturating_sub(total_time),
+                draft_time,
+                refine_time: Duration::ZERO,
+                total_time,
+                degraded: Some(reason.to_string()),
+            });
+        }
+        responses
+    }
+}
+
+/// Capture the draft-fallback for a bundle about to refine. `None` when
+/// degradation is disabled (`robustness.draft_fallback = false`).
+fn fallback_plan(drafted: &DraftedBundle, enabled: bool) -> Option<FallbackPlan> {
+    if !enabled {
+        return None;
+    }
+    let mut rows = Vec::with_capacity(drafted.bundle.total_samples());
+    for chunk in &drafted.chunks {
+        for r in 0..chunk.chunk_len {
+            rows.push(chunk.init.row(r).to_vec());
+        }
+    }
+    Some(FallbackPlan {
+        rows,
+        per_request: drafted
+            .bundle
+            .requests
+            .iter()
+            .map(|r| (r.id, r.n_samples, r.submitted))
+            .collect(),
+        t0: drafted.decision.t0,
+        draft_time: drafted.draft_time,
+        started: drafted.started,
+    })
+}
+
+/// [`deliver`], except a refine failure with a captured fallback serves
+/// the drafted tokens as degraded successes instead of errors. Counts
+/// completions/samples itself on the degraded path (the normal path
+/// counts them inside `refine_bundle`), so the "every admitted envelope
+/// is accounted for" invariant holds either way.
+fn deliver_or_degrade(
+    result: Result<Vec<GenResponse>>,
+    fallback: Option<FallbackPlan>,
+    responders: Vec<Responder>,
+    metrics: &ServingMetrics,
+    key: &BundleKey,
+) {
+    match result {
+        Err(e) => {
+            let Some(plan) = fallback else {
+                deliver(Err(e), responders, metrics, key);
+                return;
+            };
+            let reason = format!("refine failed: {e:#}");
+            crate::error!(
+                "bundle {}/{} degraded to draft tokens: {reason}",
+                key.domain,
+                key.tag
+            );
+            let responses = plan.into_responses(&reason);
+            debug_assert_eq!(responses.len(), responders.len());
+            for (resp, tx) in responses.into_iter().zip(responders) {
+                metrics.queue_wait.record(resp.queue_wait);
+                metrics.request_latency.record(resp.queue_wait + resp.total_time);
+                metrics.requests_completed.inc();
+                metrics.samples.record(resp.samples.len() as u64);
+                metrics.degraded_responses.inc();
+                let _ = tx.send(Ok(resp));
+            }
+        }
+        ok => deliver(ok, responders, metrics, key),
+    }
+}
+
 /// The admission thread body: validate, batch, flush — never execute.
 /// `dispatch` is the only difference between the serial path (runs the
 /// bundle inline) and the pipelined path (hands it to the DRAFT stage).
@@ -373,6 +516,7 @@ fn admission_loop(
     queue: &BoundedQueue<Envelope>,
     running: &AtomicBool,
     policy: FlushPolicy,
+    stage_poll: Duration,
     mut dispatch: impl FnMut(WorkBundle, &mut HashMap<u64, Responder>),
 ) {
     let mut batcher = Batcher::new(policy);
@@ -380,12 +524,13 @@ fn admission_loop(
     // itself stays a pure GenRequest structure.
     let mut envelopes: HashMap<u64, Responder> = HashMap::new();
     loop {
-        // Sleep until the next flush deadline (or a short max when idle).
+        // Sleep until the next flush deadline (capped at the stage poll so
+        // shutdown is always noticed within one poll interval).
         let timeout = batcher
             .next_deadline()
             .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match queue.pop_timeout(timeout.min(Duration::from_millis(50))) {
+            .unwrap_or(stage_poll);
+        match queue.pop_timeout(timeout.min(stage_poll)) {
             Some(env) => {
                 if let Err(e) = env.request.validate() {
                     let _ = env.resp.send(Err(format!("invalid request: {e:#}")));
@@ -425,10 +570,12 @@ fn draft_stage(
     draft_q: &BoundedQueue<PipelineJob>,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
+    stage_poll: Duration,
+    draft_fallback: bool,
 ) {
     let scheduler = Scheduler::with_policies(exec, manifest, metrics, seed, controller, cascade);
     loop {
-        match draft_q.pop_timeout(Duration::from_millis(50)) {
+        match draft_q.pop_timeout(stage_poll) {
             Some(job) => {
                 metrics.draft_queue_wait.record(job.dispatched.elapsed());
                 let key = job.bundle.key.clone();
@@ -436,9 +583,15 @@ fn draft_stage(
                     Ok(drafted) => {
                         let handoff = DraftedJob { drafted, responders: job.responders };
                         if let Err(handoff) = refine_q.push_wait(handoff) {
-                            deliver(
+                            // The refine channel closed under us: the
+                            // drafts exist, so this still degrades
+                            // rather than erroring.
+                            let DraftedJob { drafted, responders } = handoff;
+                            let fallback = fallback_plan(&drafted, draft_fallback);
+                            deliver_or_degrade(
                                 Err(anyhow::anyhow!("refine stage shut down")),
-                                handoff.responders,
+                                fallback,
+                                responders,
                                 metrics,
                                 &key,
                             );
@@ -477,14 +630,23 @@ fn refine_stage(
     cascade: Cascade,
     refine_q: &BoundedQueue<DraftedJob>,
     gate: &InflightGate,
+    stage_poll: Duration,
+    draft_fallback: bool,
 ) {
     let scheduler = Scheduler::with_policies(exec, manifest, metrics, seed, controller, cascade);
     loop {
-        match refine_q.pop_timeout(Duration::from_millis(50)) {
+        match refine_q.pop_timeout(stage_poll) {
             Some(job) => {
                 let DraftedJob { drafted, responders } = job;
                 let key = drafted.bundle.key.clone();
-                deliver(scheduler.refine_bundle(drafted), responders, metrics, &key);
+                let fallback = fallback_plan(&drafted, draft_fallback);
+                deliver_or_degrade(
+                    scheduler.refine_bundle(drafted),
+                    fallback,
+                    responders,
+                    metrics,
+                    &key,
+                );
                 metrics.inflight_bundles.dec();
                 gate.release();
             }
@@ -955,6 +1117,187 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         svc.shutdown();
+    }
+
+    #[test]
+    fn refine_failure_degrades_to_draft_tokens() {
+        use crate::faults::{FaultPlan, FaultyExec};
+        // Every RUN_LOOP call errors, so refinement can never succeed;
+        // the DRAFT stage (noise drafts, no executor involvement) does —
+        // the response is the drafted tokens, marked degraded.
+        let plan =
+            FaultPlan { seed: 1, p_panic: 0.0, p_wedge: 0.0, p_error: 1.0, wedge: Duration::ZERO };
+        let inner = Arc::new(TestExec::drift(vec![1, 4], 2, 4, 2)) as Arc<dyn Executor>;
+        let svc = Service::start(
+            FaultyExec::new(inner, plan),
+            mock_manifest(&["cold"], &[1, 4], 2, 4),
+            test_config(),
+        );
+        let resp = svc.generate(request(0, 2)).unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        assert_eq!(resp.samples[0].len(), 2, "draft rows keep the artifact seq_len");
+        assert_eq!(resp.nfe, 0, "no refinement was paid for");
+        let reason = resp.degraded.clone().expect("response must be marked degraded");
+        assert!(reason.contains("injected fault"), "{reason}");
+        assert!(resp.cascade.is_none());
+        assert_eq!(svc.metrics.degraded_responses.get(), 1);
+        assert_eq!(svc.metrics.requests_completed.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn draft_fallback_disabled_surfaces_the_refine_error() {
+        use crate::faults::{FaultPlan, FaultyExec};
+        let plan =
+            FaultPlan { seed: 1, p_panic: 0.0, p_wedge: 0.0, p_error: 1.0, wedge: Duration::ZERO };
+        let inner = Arc::new(TestExec::drift(vec![1, 4], 2, 4, 2)) as Arc<dyn Executor>;
+        let mut cfg = test_config();
+        cfg.robustness.draft_fallback = false;
+        let svc = Service::start(
+            FaultyExec::new(inner, plan),
+            mock_manifest(&["cold"], &[1, 4], 2, 4),
+            cfg,
+        );
+        let err = svc.generate(request(0, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert_eq!(svc.metrics.degraded_responses.get(), 0);
+        svc.shutdown();
+    }
+
+    /// The chaos workload of [`pipeline_outputs_cascade`] served through
+    /// a resurrectable 4-replica fleet of fault-injected stochastic
+    /// mocks (watchdog 2 ms, so the plan's 5 ms wedges trip the typed
+    /// EngineTimeout path).
+    fn chaos_run(
+        plan: crate::faults::FaultPlan,
+        rb: &crate::config::RobustnessConfig,
+    ) -> Vec<Result<GenResponse, String>> {
+        use crate::faults::FaultyExec;
+        use crate::fleet::{FleetHandle, ReplicaFactory};
+        let factories: Vec<ReplicaFactory> = (0..4)
+            .map(|_| {
+                let plan = plan.clone();
+                Box::new(move || {
+                    let inner = Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2))
+                        as Arc<dyn Executor>;
+                    let faulty = FaultyExec::new(inner, plan.clone())
+                        .with_watchdog(Duration::from_millis(2));
+                    Ok(Arc::new(faulty) as Arc<dyn Executor>)
+                }) as ReplicaFactory
+            })
+            .collect();
+        let fleet = FleetHandle::from_factories(factories, rb).unwrap();
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 2;
+        cfg.fleet.refine_workers = 2;
+        cfg.seed = 99;
+        cfg.cascade.mode = "gated".into();
+        cfg.robustness = rb.clone();
+        let svc = Service::start(fleet, manifest, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut r = request(0, (i as usize % 3) + 1);
+            r.seed = 1000 + i;
+            rxs.push(svc.submit(r).unwrap());
+        }
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("chaos hung a response"))
+            .collect();
+        svc.shutdown();
+        out
+    }
+
+    #[test]
+    fn chaos_seeded_faults_never_hang_and_preserve_the_bitwise_contract() {
+        use crate::config::RobustnessConfig;
+        use crate::faults::FaultPlan;
+        // The tentpole integration pin: deterministic chaos over the full
+        // pipeline (depth 4, four fault-injected replicas, two refine
+        // workers, gated cascade). Every admitted request resolves as ok,
+        // degraded, or a typed error — no hangs, no lost envelopes — and
+        // any response that *did* refine is bitwise-identical to the
+        // fault-free run. Seeds come from WSFM_FAULT_SEED (the CI
+        // chaos-smoke matrix) or a fixed default.
+        let rb = RobustnessConfig {
+            stage_poll_ms: 10,
+            respawn_backoff_ms: 1,
+            respawn_backoff_cap_ms: 5,
+            max_respawns: 1000,
+            ..RobustnessConfig::default()
+        };
+        let expected = pipeline_outputs_cascade(1, 1, "static", "gated");
+        // Fault-free through the whole chaos harness (FaultyExec wrappers,
+        // factory fleet, health loop armed) is the serial fleet-less gated
+        // path, byte for byte — the wrappers are invisible when quiet.
+        let reference = chaos_run(FaultPlan::none(0), &rb);
+        assert_eq!(reference.len(), expected.len());
+        for (got, want) in reference.iter().zip(&expected) {
+            let resp = got.as_ref().expect("fault-free run must not error");
+            assert!(resp.degraded.is_none(), "fault-free run must not degrade");
+            assert_eq!((resp.t0_used, resp.samples.clone()), *want);
+        }
+        let seeds: Vec<u64> = match std::env::var("WSFM_FAULT_SEED") {
+            Ok(s) => vec![s.trim().parse().expect("WSFM_FAULT_SEED must be a u64")],
+            Err(_) => vec![7, 21],
+        };
+        for seed in seeds {
+            let out = chaos_run(FaultPlan::chaos(seed), &rb);
+            assert_eq!(out.len(), expected.len(), "lost envelopes under chaos (seed {seed})");
+            let (mut ok, mut degraded, mut errors) = (0usize, 0usize, 0usize);
+            for (got, want) in out.iter().zip(&expected) {
+                match got {
+                    Ok(resp) if resp.degraded.is_some() => {
+                        degraded += 1;
+                        assert_eq!(resp.nfe, 0, "degraded response claims refine NFE");
+                    }
+                    Ok(resp) => {
+                        ok += 1;
+                        assert_eq!(
+                            (resp.t0_used, resp.samples.clone()),
+                            *want,
+                            "refined-under-chaos output diverged (seed {seed})"
+                        );
+                    }
+                    Err(msg) => {
+                        errors += 1;
+                        assert!(!msg.is_empty());
+                    }
+                }
+            }
+            assert_eq!(ok + degraded + errors, expected.len());
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_within_a_small_multiple_of_stage_poll() {
+        // Satellite: the stage channel polls come from
+        // robustness.stage_poll_ms. A bundle parked behind a 10 s batcher
+        // deadline must still flush and complete within a small multiple
+        // of the poll once shutdown lands (admission notices the close,
+        // flushes, and the two stages each add at most one poll).
+        let mut cfg = test_config();
+        cfg.batcher.max_batch = 1000;
+        cfg.batcher.max_wait_us = 10_000_000;
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 1;
+        cfg.robustness.stage_poll_ms = 20;
+        let svc = Service::start(
+            TestExec::drift(vec![1, 4], 2, 4, 1),
+            mock_manifest(&["cold"], &[1, 4], 2, 4),
+            cfg,
+        );
+        let rx = svc.submit(request(0, 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // parked in the batcher
+        assert!(rx.try_recv().is_err(), "bundle flushed before its 10 s deadline");
+        let t = Instant::now();
+        svc.shutdown();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let drained = t.elapsed();
+        assert!(drained < Duration::from_millis(200), "drain took {drained:?}, want < 10 polls");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing is only useful if a failing run can be replayed: every
+//! fault here fires from a **stateless RNG draw**
+//! (`Pcg64::substream(fault_seed, call_index, site)`), so the fault
+//! schedule — which call at which entry point panics, wedges, or errors —
+//! is a pure function of the plan's seed. The same seed replays the same
+//! schedule bitwise (pinned by tests); the CI `chaos-smoke` job runs a
+//! small seed matrix and logs the seed, so any flaky failure-handling
+//! regression arrives with its reproduction recipe attached.
+//!
+//! [`FaultyExec`] wraps any [`Executor`] (a fleet replica, a mock) and
+//! gates each entry point:
+//!
+//! * **Panic** — the wrapper marks itself dead and returns the typed
+//!   [`EngineDead`] from this and every later call. This models the
+//!   *observable* of a panicked engine thread: callers of a real
+//!   `EngineHandle` whose thread unwound see exactly `EngineDead`
+//!   (pinned by the engine tests), so supervising code exercises the
+//!   same path without unwinding across the test harness.
+//! * **Wedge** — the call stalls for the plan's wedge duration. With a
+//!   watchdog armed ([`FaultyExec::with_watchdog`]) and a wedge at or
+//!   beyond the deadline, the call sleeps only the deadline and returns
+//!   the typed [`EngineTimeout`] — the same observable a watchdog-guarded
+//!   `EngineHandle` produces for a wedged engine thread.
+//! * **Error** — an ordinary (non-typed) execution failure, the kind a
+//!   bad artifact or a transient PJRT error would produce.
+//!
+//! `meta` is never faulted: it is a pure manifest lookup, identical on
+//! every replica, and faulting it would break planning rather than
+//! execution — the failure domain this module targets.
+
+use crate::core::rng::Pcg64;
+use crate::runtime::{
+    ArtifactMeta, EngineDead, EngineTimeout, Executor, LoopReport, LoopScratch, LoopSpec,
+};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fault-injection sites — one per faultable [`Executor`] entry point.
+/// The site index is the `row` coordinate of the fault draw's substream,
+/// so each entry point sees an independent deterministic schedule.
+pub mod site {
+    /// `step` / `step_into`.
+    pub const STEP: usize = 0;
+    /// `draft`.
+    pub const DRAFT: usize = 1;
+    /// `run_loop` (the REFINE hot path).
+    pub const RUN_LOOP: usize = 2;
+    /// `probe` (health-loop readmission checks).
+    pub const PROBE: usize = 3;
+    /// Number of sites (sizes the per-site counters).
+    pub const COUNT: usize = 4;
+}
+
+/// What a single fault draw decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// No fault: the call proceeds normally.
+    None,
+    /// Kill the wrapped executor: this call and all later ones return the
+    /// typed `EngineDead`.
+    Panic,
+    /// Stall the call for the plan's wedge duration (or trip the armed
+    /// watchdog as a typed `EngineTimeout`).
+    Wedge,
+    /// Fail the call with an ordinary (non-typed) error.
+    Error,
+}
+
+/// A deterministic fault schedule: per-call probabilities plus the seed
+/// that makes every draw a pure function of `(call_index, site)`.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Substream seed — the whole chaos schedule replays from this.
+    pub seed: u64,
+    /// Probability a call panics the executor (kills it permanently).
+    pub p_panic: f64,
+    /// Probability a call wedges for `wedge`.
+    pub p_wedge: f64,
+    /// Probability a call fails with an ordinary error.
+    pub p_error: f64,
+    /// Stall length for wedge faults.
+    pub wedge: Duration,
+}
+
+impl FaultPlan {
+    /// A plan that never fires — the passthrough control for
+    /// fault-free-path determinism pins.
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan { seed, p_panic: 0.0, p_wedge: 0.0, p_error: 0.0, wedge: Duration::ZERO }
+    }
+
+    /// A mixed chaos plan: mostly healthy calls with occasional errors,
+    /// short wedges, and rare panics — the profile the chaos integration
+    /// test and the CI `chaos-smoke` seeds run under.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            p_panic: 0.02,
+            p_wedge: 0.05,
+            p_error: 0.10,
+            wedge: Duration::from_millis(5),
+        }
+    }
+
+    /// Decide the fault for call `call_index` at `site` — a pure function
+    /// of `(self.seed, call_index, site)`: one uniform draw from the
+    /// stateless substream, partitioned panic → wedge → error → none.
+    pub fn draw(&self, call_index: u64, site: usize) -> Fault {
+        let total = self.p_panic + self.p_wedge + self.p_error;
+        if total <= 0.0 {
+            return Fault::None;
+        }
+        let u = Pcg64::substream(self.seed, call_index, site as u64).uniform();
+        if u < self.p_panic {
+            Fault::Panic
+        } else if u < self.p_panic + self.p_wedge {
+            Fault::Wedge
+        } else if u < total {
+            Fault::Error
+        } else {
+            Fault::None
+        }
+    }
+}
+
+/// An [`Executor`] wrapper that injects the plan's faults at every entry
+/// point. Each site keeps its own call counter, so the k-th `run_loop`
+/// call always draws the same fault for a given seed regardless of what
+/// the other sites did — per-site schedules are independent and exactly
+/// replayable. (Under concurrent dispatch the *assignment* of call
+/// indices to callers follows arrival order; the schedule itself — which
+/// index faults how — is fixed by the seed.)
+pub struct FaultyExec {
+    inner: Arc<dyn Executor>,
+    plan: FaultPlan,
+    /// Armed watchdog deadline: wedges at/beyond it become `EngineTimeout`.
+    watchdog: Option<Duration>,
+    dead: AtomicBool,
+    calls: [AtomicU64; site::COUNT],
+    fired: [AtomicU64; site::COUNT],
+}
+
+impl FaultyExec {
+    pub fn new(inner: Arc<dyn Executor>, plan: FaultPlan) -> FaultyExec {
+        FaultyExec {
+            inner,
+            plan,
+            watchdog: None,
+            dead: AtomicBool::new(false),
+            calls: Default::default(),
+            fired: Default::default(),
+        }
+    }
+
+    /// Model a watchdog-guarded engine call: a wedge fault whose stall
+    /// reaches `timeout` sleeps only `timeout` and returns the typed
+    /// [`EngineTimeout`] instead of completing late.
+    pub fn with_watchdog(mut self, timeout: Duration) -> FaultyExec {
+        self.watchdog = Some(timeout);
+        self
+    }
+
+    /// Whether a panic fault has killed this executor.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Calls gated at `site` so far (faulted or not).
+    pub fn calls_at(&self, site: usize) -> u64 {
+        self.calls[site].load(Ordering::SeqCst)
+    }
+
+    /// Faults fired at `site` so far.
+    pub fn fired_at(&self, site: usize) -> u64 {
+        self.fired[site].load(Ordering::SeqCst)
+    }
+
+    /// Total faults fired across all sites.
+    pub fn fired_total(&self) -> u64 {
+        self.fired.iter().map(|c| c.load(Ordering::SeqCst)).sum()
+    }
+
+    /// The per-call fault gate: draw this call's fault and either pass
+    /// (Ok) or produce the fault's observable error.
+    fn gate(&self, site: usize) -> Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(EngineDead));
+        }
+        let index = self.calls[site].fetch_add(1, Ordering::SeqCst);
+        match self.plan.draw(index, site) {
+            Fault::None => Ok(()),
+            Fault::Panic => {
+                self.fired[site].fetch_add(1, Ordering::SeqCst);
+                self.dead.store(true, Ordering::SeqCst);
+                Err(anyhow::Error::new(EngineDead))
+            }
+            Fault::Wedge => {
+                self.fired[site].fetch_add(1, Ordering::SeqCst);
+                match self.watchdog {
+                    Some(timeout) if self.plan.wedge >= timeout => {
+                        std::thread::sleep(timeout);
+                        Err(anyhow::Error::new(EngineTimeout { timeout }))
+                    }
+                    _ => {
+                        std::thread::sleep(self.plan.wedge);
+                        Ok(())
+                    }
+                }
+            }
+            Fault::Error => {
+                self.fired[site].fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("injected fault: error at site {site} (call {index})"))
+            }
+        }
+    }
+}
+
+impl Executor for FaultyExec {
+    fn step_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.gate(site::STEP)?;
+        self.inner.step_into(artifact, tokens, t, h, warp, out)
+    }
+
+    fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
+        self.gate(site::DRAFT)?;
+        self.inner.draft(artifact, noise)
+    }
+
+    // Pure manifest lookup, deliberately never faulted (module docs).
+    fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+        self.inner.meta(artifact)
+    }
+
+    fn probe(&self) -> Result<()> {
+        self.gate(site::PROBE)?;
+        self.inner.probe()
+    }
+
+    fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        tokens: &mut Vec<i32>,
+        scratch: &mut LoopScratch,
+    ) -> Result<LoopReport> {
+        self.gate(site::RUN_LOOP)?;
+        self.inner.run_loop(spec, tokens, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::TestExec;
+    use std::time::Instant;
+
+    fn wrapped(plan: FaultPlan) -> FaultyExec {
+        let inner: Arc<dyn Executor> = Arc::new(TestExec::drift(vec![1, 4], 2, 4, 1));
+        FaultyExec::new(inner, plan)
+    }
+
+    #[test]
+    fn draw_is_a_pure_function_of_seed_index_site() {
+        let plan = FaultPlan::chaos(7);
+        // Bitwise replay: the same (index, site) always draws the same
+        // fault, across fresh plan values with the same seed.
+        let replay = FaultPlan::chaos(7);
+        for index in 0..200 {
+            for s in 0..site::COUNT {
+                assert_eq!(plan.draw(index, s), replay.draw(index, s), "index {index} site {s}");
+            }
+        }
+        // Sites are independent schedules: some index must differ across
+        // sites, and distinct seeds must produce distinct schedules.
+        assert!(
+            (0..200).any(|i| plan.draw(i, site::STEP) != plan.draw(i, site::RUN_LOOP)),
+            "per-site schedules should be independent"
+        );
+        let other = FaultPlan::chaos(8);
+        assert!(
+            (0..200).any(|i| plan.draw(i, site::RUN_LOOP) != other.draw(i, site::RUN_LOOP)),
+            "distinct seeds should produce distinct schedules"
+        );
+        // A chaos plan actually fires — and fires every kind somewhere.
+        for want in [Fault::Panic, Fault::Wedge, Fault::Error, Fault::None] {
+            assert!(
+                (0..5000).any(|i| plan.draw(i, site::RUN_LOOP) == want),
+                "fault kind {want:?} never drawn in 5000 calls"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_free_plan_is_a_passthrough() {
+        let exec = wrapped(FaultPlan::none(7));
+        let meta = exec.meta("mock_cold_step_b4").unwrap();
+        assert_eq!(meta.batch, 4);
+        exec.probe().unwrap();
+        let spec = LoopSpec::full("mock_cold_step_b4".into(), 10, 0.5, 1.0, 7, false);
+        let mut tokens = vec![0i32; 4 * 2];
+        let mut scratch = LoopScratch::default();
+        let report = exec.run_loop(&spec, &mut tokens, &mut scratch).unwrap();
+        assert_eq!(report.nfe, 5);
+        assert_eq!(exec.fired_total(), 0);
+        assert!(!exec.is_dead());
+        assert_eq!(exec.calls_at(site::RUN_LOOP), 1);
+    }
+
+    #[test]
+    fn panic_fault_kills_the_executor_permanently() {
+        // p_panic = 1: the first gated call dies, and every later call —
+        // at any site — returns the typed EngineDead without reaching the
+        // inner executor.
+        let plan = FaultPlan {
+            seed: 3,
+            p_panic: 1.0,
+            p_wedge: 0.0,
+            p_error: 0.0,
+            wedge: Duration::ZERO,
+        };
+        let exec = wrapped(plan);
+        let err = exec.probe().unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_some(), "{err:#}");
+        assert!(exec.is_dead());
+        let err = exec.draft("mock_cold_step_b4", &[0.0]).unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_some(), "{err:#}");
+        // Dead calls are not drawn: only the killing call counted.
+        assert_eq!(exec.calls_at(site::PROBE), 1);
+        assert_eq!(exec.calls_at(site::DRAFT), 0);
+        // meta stays un-faulted even on a dead wrapper (pure lookup).
+        assert!(exec.meta("mock_cold_step_b4").is_ok());
+    }
+
+    #[test]
+    fn error_fault_is_ordinary_not_typed() {
+        let plan =
+            FaultPlan { seed: 3, p_panic: 0.0, p_wedge: 0.0, p_error: 1.0, wedge: Duration::ZERO };
+        let exec = wrapped(plan);
+        let err = exec.probe().unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
+        assert!(err.downcast_ref::<EngineTimeout>().is_none(), "{err:#}");
+        assert!(err.to_string().contains("injected fault"), "{err:#}");
+        assert!(!exec.is_dead());
+        // The next call draws independently; the wrapper survives errors.
+        assert!(exec.probe().is_err());
+        assert_eq!(exec.calls_at(site::PROBE), 2);
+    }
+
+    #[test]
+    fn wedge_with_armed_watchdog_trips_typed_timeout() {
+        let plan = FaultPlan {
+            seed: 3,
+            p_panic: 0.0,
+            p_wedge: 1.0,
+            p_error: 0.0,
+            wedge: Duration::from_millis(200),
+        };
+        let exec = wrapped(plan).with_watchdog(Duration::from_millis(10));
+        let start = Instant::now();
+        let err = exec.probe().unwrap_err();
+        let t = err
+            .downcast_ref::<EngineTimeout>()
+            .unwrap_or_else(|| panic!("expected EngineTimeout, got {err:#}"));
+        assert_eq!(t.timeout, Duration::from_millis(10));
+        assert!(
+            start.elapsed() < Duration::from_millis(200),
+            "watchdog should cut the wedge short"
+        );
+        assert!(!exec.is_dead(), "a timeout is not a death — the supervisor decides");
+    }
+
+    #[test]
+    fn short_wedge_under_watchdog_completes_normally() {
+        let plan = FaultPlan {
+            seed: 3,
+            p_panic: 0.0,
+            p_wedge: 1.0,
+            p_error: 0.0,
+            wedge: Duration::from_millis(1),
+        };
+        let exec = wrapped(plan).with_watchdog(Duration::from_millis(500));
+        exec.probe().unwrap();
+        assert_eq!(exec.fired_at(site::PROBE), 1, "the wedge did fire, just sub-deadline");
+    }
+}

@@ -22,36 +22,58 @@
 //!
 //! ## Failure isolation
 //!
-//! A replica whose engine thread dies surfaces the typed
-//! [`EngineDead`] error (never a hang). The fleet quarantines it
-//! (`replica_unhealthy`), re-routes the failed call to another healthy
-//! replica (`fleet_reroutes`, with the run's init tokens restored from a
-//! backup for `run_loop`, whose engine protocol moves token storage), and
-//! surfaces the typed [`FleetDown`] error once no healthy replica
-//! remains. Replica deaths are independent: one panicked engine thread
-//! never takes the fleet down.
+//! A replica whose engine thread dies surfaces the typed [`EngineDead`]
+//! error, and one whose engine wedges past the watchdog deadline
+//! surfaces the typed [`EngineTimeout`] — never a hang. The fleet treats
+//! both identically: quarantine (`replica_unhealthy`), re-route the
+//! failed call to another healthy replica (`fleet_reroutes`, with the
+//! run's init tokens restored from a backup for `run_loop`, whose engine
+//! protocol moves token storage), and surface the typed [`FleetDown`]
+//! error once no healthy replica remains. Replica deaths are
+//! independent: one panicked engine thread never takes the fleet down.
+//!
+//! ## Resurrection
+//!
+//! Fleets built with a respawn recipe ([`FleetHandle::spawn_with`] /
+//! [`FleetHandle::from_factories`]) run a health loop that brings
+//! quarantined replicas back: build a fresh executor (for engine
+//! replicas: a new engine thread plus a re-preload of the slot's
+//! affinity artifacts), require a passing [`Executor::probe`], then swap
+//! it in (`replica_respawns`). Failed attempts (`respawn_failures`) back
+//! off exponentially (`robustness.respawn_backoff_ms`, capped) and a
+//! circuit breaker retires the slot after `robustness.max_respawns`
+//! consecutive failures. Each slot carries a **generation** tag bumped on
+//! every respawn; a failure observed by a call that started on an older
+//! generation can never quarantine the resurrected replica, and —
+//! because the watchdog drops the timed-out call's reply channel — a
+//! wedged old engine's late answer is discarded structurally, never
+//! delivered stale. Fleets without a recipe ([`FleetHandle::spawn`],
+//! [`FleetHandle::from_executors`]) keep permanent-quarantine semantics.
 //!
 //! ## Determinism
 //!
 //! Outputs are a pure function of `(config seed, bundle)` — the stateless
 //! RNG substream contract established by the engine-resident loop and the
-//! pipelined coordinator — so *which* replica refines a bundle can never
-//! change its tokens. Bitwise-identical outputs across
-//! `fleet.replicas × fleet.refine_workers` sweeps are pinned by the
-//! coordinator's determinism tests.
+//! pipelined coordinator — so *which* replica refines a bundle (or how
+//! many times it was respawned) can never change its tokens.
+//! Bitwise-identical outputs across `fleet.replicas × fleet.refine_workers`
+//! sweeps are pinned by the coordinator's determinism tests.
 
 pub mod router;
 
+use crate::config::RobustnessConfig;
 use crate::fleet::router::{route, Candidate};
 use crate::metrics::FleetMetrics;
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::runtime::engine::{
-    EngineDead, EngineHandle, EngineStats, Executor, LoopReport, LoopScratch, LoopSpec,
+    EngineDead, EngineHandle, EngineStats, EngineTimeout, Executor, LoopReport, LoopScratch,
+    LoopSpec,
 };
 use anyhow::{Context, Result};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Typed error surfaced when every replica in the fleet is unhealthy:
 /// callers get a fast, downcastable failure instead of a hang or a
@@ -67,14 +89,63 @@ impl std::fmt::Display for FleetDown {
 
 impl std::error::Error for FleetDown {}
 
-/// One replica slot: the executor, its health flag, and the set of
-/// artifacts it has been sent (its compile-cache shadow, for affinity).
-struct Replica {
+/// Builds a replacement executor for one replica slot (by index).
+pub type ReplicaFactory = Box<dyn Fn() -> Result<Arc<dyn Executor>> + Send + Sync>;
+
+/// How the health loop rebuilds a quarantined replica.
+enum Respawner {
+    /// No recipe: quarantine is permanent (the pre-resurrection
+    /// behaviour of [`FleetHandle::spawn`] / `from_executors`).
+    None,
+    /// Spawn a fresh engine thread over the manifest, re-preload the
+    /// slot's affinity artifacts, arm the same watchdog.
+    Engine { manifest: Manifest, call_timeout: Option<Duration> },
+    /// Call the slot's factory (tests, mock fleets).
+    Factories(Vec<ReplicaFactory>),
+}
+
+/// The swappable part of a replica slot. `generation` increments on
+/// every respawn; failures reported against an older generation are
+/// stale and must not quarantine the current executor.
+struct ReplicaState {
     exec: Arc<dyn Executor>,
     /// Engine-backed replicas keep the handle for preload/stats/shutdown.
     engine: Option<EngineHandle>,
+    generation: u64,
+}
+
+/// Respawn bookkeeping for one slot (touched only by the health loop).
+struct RepairState {
+    consecutive_failures: u32,
+    next_attempt: Instant,
+    /// Circuit breaker tripped: no further respawn attempts.
+    retired: bool,
+}
+
+/// One replica slot: the swappable executor state, its health flag, the
+/// set of artifacts it has been sent (its compile-cache shadow, for
+/// affinity — preserved across respawns so the replacement re-warms the
+/// same cache), and the respawn bookkeeping.
+struct Replica {
+    state: Mutex<ReplicaState>,
     healthy: AtomicBool,
     artifacts: Mutex<HashSet<String>>,
+    repair: Mutex<RepairState>,
+}
+
+impl Replica {
+    fn new(exec: Arc<dyn Executor>, engine: Option<EngineHandle>) -> Replica {
+        Replica {
+            state: Mutex::new(ReplicaState { exec, engine, generation: 0 }),
+            healthy: AtomicBool::new(true),
+            artifacts: Mutex::new(HashSet::new()),
+            repair: Mutex::new(RepairState {
+                consecutive_failures: 0,
+                next_attempt: Instant::now(),
+                retired: false,
+            }),
+        }
+    }
 }
 
 struct FleetInner {
@@ -84,7 +155,15 @@ struct FleetInner {
     /// in-flight increments (without it, two simultaneous dispatches on an
     /// idle fleet would both pick replica 0).
     router_lock: Mutex<()>,
+    respawner: Respawner,
+    robustness: RobustnessConfig,
+    /// Signals the health loop to exit (set by [`FleetHandle::shutdown`]).
+    stop: AtomicBool,
 }
+
+/// Health-loop poll cadence (how often quarantined slots are checked for
+/// a due respawn attempt; the actual retry schedule is the backoff).
+const HEALTH_POLL: Duration = Duration::from_millis(5);
 
 /// Cloneable, thread-safe front-end to the replica pool; implements
 /// [`Executor`] so it drops in anywhere an engine handle does.
@@ -95,44 +174,108 @@ pub struct FleetHandle {
 
 impl FleetHandle {
     /// Spawn `replicas` engine replicas over a manifest (each its own
-    /// engine thread + artifact cache). `replicas` is floored at 1.
+    /// engine thread + artifact cache). `replicas` is floored at 1. No
+    /// watchdog, no health loop: quarantine is permanent — the legacy
+    /// behaviour. Production serving uses [`FleetHandle::spawn_with`].
     pub fn spawn(manifest: Manifest, replicas: usize) -> Result<FleetHandle> {
         let n = replicas.max(1);
         let mut slots = Vec::with_capacity(n);
         for i in 0..n {
             let engine = EngineHandle::spawn(manifest.clone())
                 .with_context(|| format!("spawning fleet replica {i}"))?;
-            slots.push(Replica {
-                exec: Arc::new(engine.clone()),
-                engine: Some(engine),
-                healthy: AtomicBool::new(true),
-                artifacts: Mutex::new(HashSet::new()),
-            });
+            slots.push(Replica::new(Arc::new(engine.clone()), Some(engine)));
         }
-        Ok(FleetHandle::from_slots(slots))
+        Ok(FleetHandle::from_slots(slots, Respawner::None, RobustnessConfig::default()))
+    }
+
+    /// [`FleetHandle::spawn`] plus the fault-tolerance envelope: every
+    /// replica's calls run under the `robustness.call_timeout_ms`
+    /// watchdog, and a health loop resurrects quarantined replicas
+    /// (fresh engine thread + affinity re-preload + passing probe) with
+    /// capped exponential backoff and a `max_respawns` circuit breaker.
+    pub fn spawn_with(
+        manifest: Manifest,
+        replicas: usize,
+        robustness: &RobustnessConfig,
+    ) -> Result<FleetHandle> {
+        let n = replicas.max(1);
+        let call_timeout = robustness.call_timeout();
+        let mut slots = Vec::with_capacity(n);
+        for i in 0..n {
+            let engine = EngineHandle::spawn(manifest.clone())
+                .with_context(|| format!("spawning fleet replica {i}"))?
+                .with_call_timeout(call_timeout);
+            slots.push(Replica::new(Arc::new(engine.clone()), Some(engine)));
+        }
+        let respawner = Respawner::Engine { manifest, call_timeout };
+        let fleet = FleetHandle::from_slots(slots, respawner, robustness.clone());
+        fleet.spawn_health_loop();
+        Ok(fleet)
     }
 
     /// Build a fleet over arbitrary executors (tests, benches: mock
-    /// replicas with controlled behaviour). Panics on an empty pool.
+    /// replicas with controlled behaviour). No health loop: quarantine
+    /// is permanent. Panics on an empty pool.
     pub fn from_executors(execs: Vec<Arc<dyn Executor>>) -> FleetHandle {
-        let slots = execs
-            .into_iter()
-            .map(|exec| Replica {
-                exec,
-                engine: None,
-                healthy: AtomicBool::new(true),
-                artifacts: Mutex::new(HashSet::new()),
-            })
-            .collect();
-        FleetHandle::from_slots(slots)
+        let slots = execs.into_iter().map(|exec| Replica::new(exec, None)).collect();
+        FleetHandle::from_slots(slots, Respawner::None, RobustnessConfig::default())
     }
 
-    fn from_slots(slots: Vec<Replica>) -> FleetHandle {
+    /// Build a fleet where each slot knows how to rebuild itself: the
+    /// health loop respawns a quarantined slot by calling its factory
+    /// (probe-gated, backed off, circuit-broken per `robustness`).
+    /// Panics on an empty pool; errors if an initial build fails.
+    pub fn from_factories(
+        factories: Vec<ReplicaFactory>,
+        robustness: &RobustnessConfig,
+    ) -> Result<FleetHandle> {
+        let mut slots = Vec::with_capacity(factories.len());
+        for (i, f) in factories.iter().enumerate() {
+            let exec = f().with_context(|| format!("building fleet replica {i}"))?;
+            slots.push(Replica::new(exec, None));
+        }
+        let fleet =
+            FleetHandle::from_slots(slots, Respawner::Factories(factories), robustness.clone());
+        fleet.spawn_health_loop();
+        Ok(fleet)
+    }
+
+    fn from_slots(
+        slots: Vec<Replica>,
+        respawner: Respawner,
+        robustness: RobustnessConfig,
+    ) -> FleetHandle {
         assert!(!slots.is_empty(), "fleet needs at least one replica");
         let metrics = FleetMetrics::new(slots.len());
         FleetHandle {
-            inner: Arc::new(FleetInner { replicas: slots, metrics, router_lock: Mutex::new(()) }),
+            inner: Arc::new(FleetInner {
+                replicas: slots,
+                metrics,
+                router_lock: Mutex::new(()),
+                respawner,
+                robustness,
+                stop: AtomicBool::new(false),
+            }),
         }
+    }
+
+    /// Start the resurrection thread. It holds only a `Weak` to the pool
+    /// — dropping the last handle (or `shutdown`) ends it.
+    fn spawn_health_loop(&self) {
+        let weak = Arc::downgrade(&self.inner);
+        std::thread::Builder::new()
+            .name("wsfm-fleet-health".into())
+            .spawn(move || loop {
+                std::thread::sleep(HEALTH_POLL);
+                let Some(inner) = weak.upgrade() else { return };
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                for idx in 0..inner.replicas.len() {
+                    try_repair(&inner, idx);
+                }
+            })
+            .expect("spawning fleet health thread");
     }
 
     /// Total replicas (healthy or not).
@@ -146,15 +289,17 @@ impl FleetHandle {
     }
 
     /// The fleet's routing/health metrics (per-replica inflight gauges,
-    /// unhealthy + reroute counters).
+    /// unhealthy + reroute + respawn counters).
     pub fn metrics(&self) -> &FleetMetrics {
         &self.inner.metrics
     }
 
     /// Route + claim a replica for `artifact` under the router lock:
     /// increments its inflight gauge and records the artifact in its
-    /// affinity set before releasing the lock.
-    fn claim(&self, artifact: &str) -> Result<usize> {
+    /// affinity set before releasing the lock. Returns the slot index,
+    /// the claimed executor, and its generation (for stale-failure
+    /// detection at quarantine time).
+    fn claim(&self, artifact: &str) -> Result<(usize, u64, Arc<dyn Executor>)> {
         let m = &self.inner.metrics;
         let _g = self.inner.router_lock.lock().unwrap();
         let candidates: Vec<Candidate> = self
@@ -177,38 +322,67 @@ impl FleetHandle {
         if !candidates[idx].has_artifact {
             self.inner.replicas[idx].artifacts.lock().unwrap().insert(artifact.to_string());
         }
-        Ok(idx)
+        let state = self.inner.replicas[idx].state.lock().unwrap();
+        Ok((idx, state.generation, state.exec.clone()))
     }
 
-    /// Run `call` on the routed replica. On the typed [`EngineDead`]
-    /// error the replica is quarantined and the call re-routed; every
-    /// other error (bad artifact, shape mismatch) returns unchanged —
-    /// it would fail identically anywhere. Each death permanently removes
-    /// one candidate, so the loop is bounded by the replica count before
-    /// [`claim`](Self::claim) surfaces [`FleetDown`].
+    /// Quarantine slot `idx` — unless the failure is stale: a call that
+    /// started on generation `generation` but failed after the health
+    /// loop swapped in generation `generation + 1` must not take down
+    /// the fresh replica. The generation check and the health flip
+    /// happen under the slot's state lock, the same lock the respawn
+    /// swap-in holds, so the two can never interleave inconsistently.
+    fn quarantine(&self, idx: usize, generation: u64) {
+        let replica = &self.inner.replicas[idx];
+        let state = replica.state.lock().unwrap();
+        if state.generation != generation {
+            crate::info!("fleet: ignoring stale failure from replica {idx} gen {generation}");
+            return;
+        }
+        // swap() keeps the unhealthy counter exact when two in-flight
+        // calls observe the same death.
+        if replica.healthy.swap(false, Ordering::SeqCst) {
+            self.inner.metrics.replica_unhealthy.inc();
+            crate::error!("fleet: replica {idx} unusable (dead or wedged); re-routing its work");
+        }
+    }
+
+    /// Run `call` on the routed replica. On the typed [`EngineDead`] or
+    /// [`EngineTimeout`] errors the replica is quarantined and the call
+    /// re-routed; every other error (bad artifact, shape mismatch)
+    /// returns unchanged — it would fail identically anywhere. Because
+    /// resurrection can re-admit a replica mid-dispatch, the old "each
+    /// death removes a candidate" bound no longer holds; attempts are
+    /// capped at `replicas + 1`, after which the last typed error
+    /// surfaces (an empty pool still fails fast with [`FleetDown`] at
+    /// claim time).
     fn dispatch<T>(
         &self,
         artifact: &str,
         mut call: impl FnMut(&dyn Executor) -> Result<T>,
     ) -> Result<T> {
         let m = &self.inner.metrics;
+        let max_attempts = self.replicas() + 1;
         let mut attempt = 0usize;
         loop {
-            let idx = self.claim(artifact)?;
+            let (idx, generation, exec) = self.claim(artifact)?;
             if attempt > 0 {
                 m.fleet_reroutes.inc();
             }
             attempt += 1;
-            let replica = &self.inner.replicas[idx];
-            let result = call(&*replica.exec);
+            let result = call(&*exec);
             m.replica_inflight[idx].dec();
             match result {
-                Err(e) if e.downcast_ref::<EngineDead>().is_some() => {
-                    // swap() keeps the unhealthy counter exact when two
-                    // in-flight calls observe the same death.
-                    if replica.healthy.swap(false, Ordering::SeqCst) {
-                        m.replica_unhealthy.inc();
-                        crate::error!("fleet: replica {idx} engine died; re-routing its work");
+                Err(e)
+                    if e.downcast_ref::<EngineDead>().is_some()
+                        || e.downcast_ref::<EngineTimeout>().is_some() =>
+                {
+                    if e.downcast_ref::<EngineTimeout>().is_some() {
+                        m.engine_timeouts.inc();
+                    }
+                    self.quarantine(idx, generation);
+                    if attempt >= max_attempts {
+                        return Err(e);
                     }
                 }
                 other => return other,
@@ -226,17 +400,19 @@ impl FleetHandle {
     /// and an entirely dead pool surfaces [`FleetDown`].
     pub fn preload(&self, names: &[String]) -> Result<()> {
         for (i, r) in self.inner.replicas.iter().enumerate() {
-            let Some(engine) = &r.engine else { continue };
+            let (engine, generation) = {
+                let state = r.state.lock().unwrap();
+                (state.engine.clone(), state.generation)
+            };
+            let Some(engine) = engine else { continue };
             if !r.healthy.load(Ordering::SeqCst) {
                 continue;
             }
             match engine.preload(names) {
                 Ok(()) => r.artifacts.lock().unwrap().extend(names.iter().cloned()),
                 Err(e) if e.downcast_ref::<EngineDead>().is_some() => {
-                    if r.healthy.swap(false, Ordering::SeqCst) {
-                        self.inner.metrics.replica_unhealthy.inc();
-                        crate::error!("fleet: replica {i} engine died during preload; quarantined");
-                    }
+                    crate::error!("fleet: replica {i} engine died during preload; quarantined");
+                    self.quarantine(i, generation);
                 }
                 Err(e) => return Err(e.context(format!("preloading fleet replica {i}"))),
             }
@@ -253,7 +429,10 @@ impl FleetHandle {
         self.inner
             .replicas
             .iter()
-            .map(|r| r.engine.as_ref().and_then(|e| e.stats().ok()))
+            .map(|r| {
+                let engine = r.state.lock().unwrap().engine.clone();
+                engine.and_then(|e| e.stats().ok())
+            })
             .collect()
     }
 
@@ -263,7 +442,8 @@ impl FleetHandle {
         let mut s = self.inner.metrics.summary();
         for (i, r) in self.inner.replicas.iter().enumerate() {
             let health = if r.healthy.load(Ordering::SeqCst) { "" } else { " (unhealthy)" };
-            match &r.engine {
+            let engine = r.state.lock().unwrap().engine.clone();
+            match engine {
                 Some(engine) => match engine.stats() {
                     Ok(es) => s.push_str(&format!("\n  replica {i}{health}: {}", es.summary())),
                     Err(_) => s.push_str(&format!("\n  replica {i}{health}: engine dead")),
@@ -274,11 +454,112 @@ impl FleetHandle {
         s
     }
 
-    /// Shut down every engine-backed replica.
+    /// Shut down every engine-backed replica and stop the health loop.
     pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
         for r in &self.inner.replicas {
-            if let Some(engine) = &r.engine {
+            let engine = r.state.lock().unwrap().engine.clone();
+            if let Some(engine) = engine {
                 engine.shutdown();
+            }
+        }
+    }
+
+    /// Test hook: kill `idx` right now — shut down its engine (if any)
+    /// and quarantine it, exactly as a dispatch observing the death
+    /// would. The health loop (if running) takes it from there.
+    #[cfg(test)]
+    pub(crate) fn kill_replica(&self, idx: usize) {
+        let (engine, generation) = {
+            let state = self.inner.replicas[idx].state.lock().unwrap();
+            (state.engine.clone(), state.generation)
+        };
+        if let Some(engine) = engine {
+            engine.shutdown();
+        }
+        self.quarantine(idx, generation);
+    }
+}
+
+/// One health-loop pass over slot `idx`: if it is quarantined, not
+/// retired, and its backoff has elapsed, build a replacement, require a
+/// passing probe, and swap it in under the state lock (bumping the
+/// generation so stale failures from the old incarnation are inert).
+fn try_repair(inner: &Arc<FleetInner>, idx: usize) {
+    let replica = &inner.replicas[idx];
+    if replica.healthy.load(Ordering::SeqCst) {
+        return;
+    }
+    {
+        let repair = replica.repair.lock().unwrap();
+        if repair.retired || Instant::now() < repair.next_attempt {
+            return;
+        }
+    }
+    // Build outside all locks: engine spawn + preload can take a while.
+    let built: Result<(Arc<dyn Executor>, Option<EngineHandle>)> = match &inner.respawner {
+        Respawner::None => return, // no recipe: permanent quarantine
+        Respawner::Engine { manifest, call_timeout } => (|| {
+            let engine = EngineHandle::spawn(manifest.clone())
+                .with_context(|| format!("respawning fleet replica {idx}"))?
+                .with_call_timeout(*call_timeout);
+            let names: Vec<String> =
+                replica.artifacts.lock().unwrap().iter().cloned().collect();
+            if !names.is_empty() {
+                engine
+                    .preload(&names)
+                    .with_context(|| format!("re-preloading fleet replica {idx}"))?;
+            }
+            Ok((Arc::new(engine.clone()) as Arc<dyn Executor>, Some(engine)))
+        })(),
+        Respawner::Factories(factories) => factories[idx]().map(|exec| (exec, None)),
+    };
+    // Readmission is probe-gated: a replacement that cannot answer a
+    // health check never enters the routing pool.
+    let probed = built.and_then(|(exec, engine)| {
+        exec.probe().context("probing respawned replica")?;
+        Ok((exec, engine))
+    });
+    match probed {
+        Ok((exec, engine)) => {
+            if inner.stop.load(Ordering::SeqCst) {
+                if let Some(e) = &engine {
+                    e.shutdown();
+                }
+                return;
+            }
+            {
+                let mut state = replica.state.lock().unwrap();
+                if let Some(old) = &state.engine {
+                    old.shutdown();
+                }
+                state.exec = exec;
+                state.engine = engine;
+                state.generation += 1;
+                replica.healthy.store(true, Ordering::SeqCst);
+            }
+            replica.repair.lock().unwrap().consecutive_failures = 0;
+            inner.metrics.replica_respawns.inc();
+            crate::info!("fleet: replica {idx} resurrected (probe passed)");
+        }
+        Err(e) => {
+            inner.metrics.respawn_failures.inc();
+            let mut repair = replica.repair.lock().unwrap();
+            repair.consecutive_failures += 1;
+            if repair.consecutive_failures >= inner.robustness.max_respawns {
+                repair.retired = true;
+                crate::error!(
+                    "fleet: replica {idx} retired after {} failed respawns: {e:#}",
+                    repair.consecutive_failures
+                );
+            } else {
+                let exp = inner
+                    .robustness
+                    .respawn_backoff_ms
+                    .saturating_mul(1u64 << (repair.consecutive_failures - 1).min(16));
+                let backoff = exp.min(inner.robustness.respawn_backoff_cap_ms);
+                repair.next_attempt = Instant::now() + Duration::from_millis(backoff);
+                crate::error!("fleet: replica {idx} respawn failed (retry in {backoff} ms): {e:#}");
             }
         }
     }
@@ -305,7 +586,8 @@ impl Executor for FleetHandle {
         // Metadata is replica-independent (every replica shares the
         // manifest) and, for engine replicas, served without touching the
         // engine thread — so no routing and no health check.
-        self.inner.replicas[0].exec.meta(artifact)
+        let exec = self.inner.replicas[0].state.lock().unwrap().exec.clone();
+        exec.meta(artifact)
     }
 
     fn run_loop(
@@ -353,9 +635,11 @@ thread_local! {
 mod tests {
     use super::*;
     use crate::coordinator::testutil::TestExec;
+    use crate::runtime::engine::testsupport::{wedged_handle, WedgeCtl};
     use crate::util::json::Json;
     use std::collections::BTreeMap;
     use std::path::PathBuf;
+    use std::sync::atomic::AtomicUsize;
 
     fn empty_manifest() -> Manifest {
         Manifest {
@@ -377,6 +661,26 @@ mod tests {
 
     fn mock() -> TestExec {
         TestExec::drift(vec![1, 4], 2, 4, 1)
+    }
+
+    /// Fast respawn schedule for tests: near-immediate retries.
+    fn fast_robustness() -> RobustnessConfig {
+        RobustnessConfig {
+            respawn_backoff_ms: 1,
+            respawn_backoff_cap_ms: 5,
+            max_respawns: 5,
+            ..RobustnessConfig::default()
+        }
+    }
+
+    /// Spin until `cond` holds (5 s cap — generous; failure hangs are
+    /// what this module exists to prevent).
+    fn wait_for(what: &str, cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
     #[test]
@@ -516,5 +820,216 @@ mod tests {
         let one = FleetHandle::spawn(empty_manifest(), 0).unwrap();
         assert_eq!(one.replicas(), 1);
         one.shutdown();
+    }
+
+    #[test]
+    fn wedged_replica_trips_timeout_quarantine_and_late_reply_is_discarded() {
+        // Replica 0 is a real EngineHandle over a wedged serving thread,
+        // watchdog armed at 40 ms. The dispatched call must (a) trip the
+        // typed EngineTimeout within the deadline, (b) quarantine + re-
+        // route to replica 1 and still succeed, and (c) leave the wedged
+        // engine's eventual late reply with no receiver.
+        let ctl = WedgeCtl::new();
+        let wedged = wedged_handle(empty_manifest(), ctl.clone())
+            .with_call_timeout(Some(Duration::from_millis(40)));
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(wedged) as Arc<dyn Executor>,
+            Arc::new(mock()) as Arc<dyn Executor>,
+        ]);
+        let start = Instant::now();
+        let mut out = Vec::new();
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert!(start.elapsed() < Duration::from_secs(5), "watchdog did not bound the wait");
+        assert_eq!(out.len(), 8 * 4);
+        let m = fleet.metrics();
+        assert_eq!(m.engine_timeouts.get(), 1);
+        assert_eq!(m.replica_unhealthy.get(), 1);
+        assert_eq!(m.fleet_reroutes.get(), 1);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        // Un-wedge: the parked reply is sent late — to a dropped channel.
+        ctl.release();
+        wait_for("the wedged engine's late reply", || ctl.late_sends() >= 1);
+        assert_eq!(ctl.late_delivered(), 0, "stale late reply reached a live receiver");
+    }
+
+    #[test]
+    fn killed_engine_replica_is_resurrected_and_serves_traffic_again() {
+        let fleet = FleetHandle::spawn_with(empty_manifest(), 2, &fast_robustness()).unwrap();
+        assert_eq!(fleet.healthy_replicas(), 2);
+        fleet.kill_replica(0);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        assert_eq!(fleet.metrics().replica_unhealthy.get(), 1);
+        // The health loop respawns a fresh engine thread, probes it, and
+        // readmits the slot.
+        wait_for("replica 0 resurrection", || fleet.healthy_replicas() == 2);
+        assert!(fleet.metrics().replica_respawns.get() >= 1);
+        // It serves traffic again: the next dispatch routes to replica 0
+        // (idle, lowest index) and fails with an *ordinary* error on the
+        // empty manifest — a live engine answering, not EngineDead, not
+        // FleetDown.
+        let err = fleet.draft("nope", &[0.0]).unwrap_err();
+        assert!(err.downcast_ref::<FleetDown>().is_none(), "{err:#}");
+        assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
+        assert_eq!(fleet.metrics().replica_dispatched[0].get(), 1);
+        assert_eq!(fleet.healthy_replicas(), 2, "an ordinary error must not re-quarantine");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn factory_replica_resurrected_with_a_fresh_build() {
+        let builds = Arc::new(AtomicUsize::new(0));
+        let factory = |builds: Arc<AtomicUsize>| -> ReplicaFactory {
+            Box::new(move || {
+                builds.fetch_add(1, Ordering::SeqCst);
+                Ok(Arc::new(TestExec::drift(vec![1, 4], 2, 4, 1)) as Arc<dyn Executor>)
+            })
+        };
+        let fleet = FleetHandle::from_factories(
+            vec![factory(builds.clone()), factory(builds.clone())],
+            &fast_robustness(),
+        )
+        .unwrap();
+        assert_eq!(builds.load(Ordering::SeqCst), 2);
+        fleet.kill_replica(1);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        wait_for("replica 1 resurrection", || fleet.healthy_replicas() == 2);
+        assert_eq!(builds.load(Ordering::SeqCst), 3, "resurrection must build a fresh executor");
+        assert_eq!(fleet.metrics().replica_respawns.get(), 1);
+        // The resurrected slot takes traffic: saturate replica 0 and
+        // dispatch — least-loaded routing picks replica 1.
+        fleet.metrics().replica_inflight[0].inc();
+        let mut out = Vec::new();
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(fleet.metrics().replica_dispatched[1].get(), 1);
+        fleet.metrics().replica_inflight[0].dec();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn stale_generation_failure_cannot_quarantine_a_resurrected_replica() {
+        let factory = || -> ReplicaFactory {
+            Box::new(|| Ok(Arc::new(TestExec::drift(vec![1, 4], 2, 4, 1)) as Arc<dyn Executor>))
+        };
+        let fleet =
+            FleetHandle::from_factories(vec![factory(), factory()], &fast_robustness()).unwrap();
+        fleet.kill_replica(0);
+        wait_for("replica 0 resurrection", || fleet.healthy_replicas() == 2);
+        let unhealthy_before = fleet.metrics().replica_unhealthy.get();
+        // A call that started on generation 0 reports its failure only
+        // now — after the slot moved to generation 1. It must be inert.
+        fleet.quarantine(0, 0);
+        assert_eq!(fleet.healthy_replicas(), 2, "stale failure quarantined the new replica");
+        assert_eq!(fleet.metrics().replica_unhealthy.get(), unhealthy_before);
+        // The same failure reported against the *current* generation
+        // quarantines as usual.
+        fleet.quarantine(0, 1);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn respawn_circuit_breaker_retires_after_consecutive_failures() {
+        // Initial builds succeed; every respawn fails. With
+        // max_respawns = 2 the health loop must try exactly twice, then
+        // retire the slot permanently.
+        let builds = Arc::new(AtomicUsize::new(0));
+        let factory = |builds: Arc<AtomicUsize>, initial_ok: usize| -> ReplicaFactory {
+            Box::new(move || {
+                let n = builds.fetch_add(1, Ordering::SeqCst);
+                if n < initial_ok {
+                    Ok(Arc::new(TestExec::drift(vec![1, 4], 2, 4, 1)) as Arc<dyn Executor>)
+                } else {
+                    anyhow::bail!("replacement hardware not available")
+                }
+            })
+        };
+        let rb = RobustnessConfig {
+            respawn_backoff_ms: 1,
+            respawn_backoff_cap_ms: 2,
+            max_respawns: 2,
+            ..RobustnessConfig::default()
+        };
+        let fleet = FleetHandle::from_factories(
+            vec![factory(builds.clone(), 2), factory(builds.clone(), 2)],
+            &rb,
+        )
+        .unwrap();
+        fleet.kill_replica(1);
+        wait_for("both respawn attempts to fail", || {
+            fleet.metrics().respawn_failures.get() >= 2
+        });
+        // Retired: no further attempts, the slot stays quarantined.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(fleet.metrics().respawn_failures.get(), 2, "circuit breaker kept retrying");
+        assert_eq!(fleet.metrics().replica_respawns.get(), 0);
+        assert_eq!(fleet.healthy_replicas(), 1);
+        // The surviving replica still serves.
+        let mut out = Vec::new();
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn stress_route_claim_vs_quarantine_race_conserves_accounting() {
+        // Satellite: N dispatcher threads drive a 2-replica fleet while a
+        // killer thread repeatedly murders replica 1 and the health loop
+        // resurrects it. Invariants: every call resolves (success or
+        // typed error — no hangs, joined below), every inflight gauge
+        // returns to zero, and the dispatch accounting is conserved:
+        // every claim incremented exactly one dispatched counter, and
+        // every extra attempt was counted as a reroute, so
+        // sum(dispatched) == resolved calls + reroutes.
+        const THREADS: usize = 4;
+        const CALLS: usize = 25;
+        let factory = || -> ReplicaFactory {
+            Box::new(|| Ok(Arc::new(TestExec::drift(vec![1, 4], 2, 4, 1)) as Arc<dyn Executor>))
+        };
+        let fleet =
+            FleetHandle::from_factories(vec![factory(), factory()], &fast_robustness()).unwrap();
+
+        let killer = {
+            let fleet = fleet.clone();
+            std::thread::spawn(move || {
+                for _ in 0..10 {
+                    fleet.kill_replica(1);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        let dispatchers: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let fleet = fleet.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0usize;
+                    let mut out = Vec::new();
+                    for _ in 0..CALLS {
+                        if fleet
+                            .step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out)
+                            .is_ok()
+                        {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let ok: usize = dispatchers.into_iter().map(|d| d.join().unwrap()).sum();
+        killer.join().unwrap();
+
+        // TestExec replicas never fail, so even mid-kill calls succeed —
+        // the kill only flips routing state. Every call resolved.
+        assert_eq!(ok, THREADS * CALLS, "calls were lost under kill/resurrect churn");
+        let m = fleet.metrics();
+        for (i, g) in m.replica_inflight.iter().enumerate() {
+            assert_eq!(g.get(), 0, "replica {i} inflight gauge leaked");
+        }
+        let dispatched: u64 = m.replica_dispatched.iter().map(|c| c.get()).sum();
+        assert_eq!(
+            dispatched,
+            (THREADS * CALLS) as u64 + m.fleet_reroutes.get(),
+            "dispatch accounting not conserved"
+        );
+        fleet.shutdown();
     }
 }

@@ -90,6 +90,25 @@
 //! `cascade.mode = off` (default) is the single-segment path verbatim.
 //! See EXPERIMENTS.md §Cascade.
 //!
+//! ## Fault tolerance
+//!
+//! The failure-side envelope: every request resolves to ok, a degraded
+//! draft, or a typed error — never a hang. [`faults`] provides
+//! deterministic chaos (an `Executor`-wrapping `FaultyExec` whose
+//! panic/wedge/error faults fire from stateless
+//! `Pcg64::substream(fault_seed, call_index, site)` draws, so failure
+//! tests pin exact outcomes per seed). The engine watchdog
+//! (`robustness.call_timeout_ms`) turns a wedged-but-alive engine into a
+//! typed `EngineTimeout`, which the [`fleet`] treats like `EngineDead`:
+//! quarantine and re-route, with per-slot generation tags discarding any
+//! stale late reply. A fleet health loop resurrects quarantined replicas
+//! (fresh engine thread, artifact re-preload, probe-gated readmission)
+//! under capped exponential backoff with a consecutive-failure circuit
+//! breaker. When REFINE exhausts its reroutes, the [`coordinator`] serves
+//! the bundle's already-computed draft tokens with `degraded: true` on
+//! the wire — the paper's "drafts are already decent" claim as a
+//! graceful-degradation contract. See EXPERIMENTS.md §Robustness.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 
@@ -101,6 +120,7 @@ pub mod core;
 pub mod data;
 pub mod draft;
 pub mod eval;
+pub mod faults;
 pub mod fleet;
 pub mod harness;
 pub mod metrics;

@@ -99,8 +99,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     manifest.selfcheck()?;
     // The executor fleet: `fleet.replicas` engine threads (each with its
-    // own artifact cache) behind one least-loaded routing handle.
-    let fleet = FleetHandle::spawn(manifest.clone(), cfg.fleet.replicas)?;
+    // own artifact cache) behind one least-loaded routing handle, with
+    // the robustness envelope armed (call watchdog + replica
+    // resurrection per `cfg.robustness`).
+    let fleet = FleetHandle::spawn_with(manifest.clone(), cfg.fleet.replicas, &cfg.robustness)?;
 
     if !args.get("preload").is_empty() {
         for domain in args.get("preload").split(',') {
@@ -275,8 +277,9 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     let domain = args.get("domain");
     let batches = manifest.step_batches(domain, "cold");
     let b = *batches.first().context("no cold artifacts for domain")?;
-    // Smoke the executor fleet exactly as `serve` would run it.
-    let fleet = FleetHandle::spawn(manifest.clone(), cfg.fleet.replicas)?;
+    // Smoke the executor fleet exactly as `serve` would run it —
+    // including the watchdog + resurrection envelope.
+    let fleet = FleetHandle::spawn_with(manifest.clone(), cfg.fleet.replicas, &cfg.robustness)?;
     let metrics = wsfm::metrics::ServingMetrics::default();
     let scheduler = wsfm::coordinator::Scheduler::new(&fleet, &manifest, &metrics, 0);
     let req = GenRequest {

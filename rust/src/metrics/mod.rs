@@ -234,10 +234,20 @@ pub struct FleetMetrics {
     pub replica_inflight: Vec<Gauge>,
     /// Calls routed to each replica over the fleet's lifetime.
     pub replica_dispatched: Vec<Counter>,
-    /// Replicas marked unhealthy after their engine thread died.
+    /// Replicas marked unhealthy after their engine thread died (or a
+    /// watchdog timeout quarantined them).
     pub replica_unhealthy: Counter,
     /// Calls re-routed to another replica after a dead one was observed.
     pub fleet_reroutes: Counter,
+    /// Quarantined replicas brought back by the health loop (fresh engine
+    /// + re-preload + passing probe).
+    pub replica_respawns: Counter,
+    /// Respawn attempts that failed (spawn error or failed probe); the
+    /// circuit breaker retires a replica after `max_respawns` consecutive
+    /// ones.
+    pub respawn_failures: Counter,
+    /// Calls that tripped the engine-call watchdog (`EngineTimeout`).
+    pub engine_timeouts: Counter,
 }
 
 impl FleetMetrics {
@@ -247,6 +257,9 @@ impl FleetMetrics {
             replica_dispatched: (0..replicas).map(|_| Counter::default()).collect(),
             replica_unhealthy: Counter::default(),
             fleet_reroutes: Counter::default(),
+            replica_respawns: Counter::default(),
+            respawn_failures: Counter::default(),
+            engine_timeouts: Counter::default(),
         }
     }
 
@@ -254,12 +267,15 @@ impl FleetMetrics {
     pub fn summary(&self) -> String {
         let join = |it: Vec<String>| it.join(",");
         format!(
-            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={}",
+            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={} replica_respawns={} respawn_failures={} engine_timeouts={}",
             self.replica_inflight.len(),
             join(self.replica_inflight.iter().map(|g| g.get().to_string()).collect()),
             join(self.replica_dispatched.iter().map(|c| c.get().to_string()).collect()),
             self.replica_unhealthy.get(),
-            self.fleet_reroutes.get()
+            self.fleet_reroutes.get(),
+            self.replica_respawns.get(),
+            self.respawn_failures.get(),
+            self.engine_timeouts.get()
         )
     }
 }
@@ -339,6 +355,10 @@ pub struct ServingMetrics {
     pub flush_lag: LatencyHistogram,
     /// Bundles dispatched before their flush deadline (size-triggered).
     pub early_flushes: Counter,
+    /// Responses served from draft tokens after REFINE failed
+    /// (`degraded: true` on the wire; counted per request, not per
+    /// bundle).
+    pub degraded_responses: Counter,
     /// How far *ahead* of its deadline an early-flushed bundle was
     /// dispatched (the headroom the size trigger bought).
     pub flush_early: LatencyHistogram,
@@ -368,6 +388,7 @@ impl Default for ServingMetrics {
             draft_queue_wait: LatencyHistogram::new(4096),
             flush_lag: LatencyHistogram::new(4096),
             early_flushes: Counter::default(),
+            degraded_responses: Counter::default(),
             flush_early: LatencyHistogram::new(4096),
             queue_wait: LatencyHistogram::new(4096),
             batch_exec: LatencyHistogram::new(4096),
@@ -380,7 +401,7 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
@@ -393,6 +414,7 @@ impl ServingMetrics {
             self.nfe_saved.get(),
             self.cascade_early_exits.get(),
             self.early_flushes.get(),
+            self.degraded_responses.get(),
             self.samples.per_second(),
             self.chosen_t0.snapshot().report("chosen_t0"),
             self.cascade_stage_nfe.snapshot().report("cascade_stage_nfe"),
@@ -489,6 +511,8 @@ mod tests {
         assert!(r.contains("early_flushes=0"));
         assert!(r.contains("chosen_t0"));
         assert!(r.contains("request_latency"));
+        m.degraded_responses.inc();
+        assert!(m.report().contains("degraded=1"));
     }
 
     #[test]
@@ -538,6 +562,13 @@ mod tests {
         assert!(s.contains("replica_dispatched=[4,1,0]"), "{s}");
         assert!(s.contains("replica_unhealthy=1"), "{s}");
         assert!(s.contains("fleet_reroutes=2"), "{s}");
+        m.replica_respawns.inc();
+        m.respawn_failures.add(3);
+        m.engine_timeouts.add(2);
+        let s = m.summary();
+        assert!(s.contains("replica_respawns=1"), "{s}");
+        assert!(s.contains("respawn_failures=3"), "{s}");
+        assert!(s.contains("engine_timeouts=2"), "{s}");
     }
 
     #[test]

@@ -62,6 +62,28 @@ impl std::fmt::Display for EngineDead {
 
 impl std::error::Error for EngineDead {}
 
+/// Typed error for a wedged engine thread: the engine is still connected
+/// but did not reply within the watchdog deadline
+/// (`robustness.call_timeout_ms`). Supervisors treat it exactly like
+/// [`EngineDead`] — quarantine the replica and re-route — because a
+/// wedged-but-alive stream is just as unusable. The caller's reply
+/// channel is dropped on timeout, so a late reply from the wedged engine
+/// has no receiver and is discarded structurally (the engine-side `send`
+/// fails); a resurrected replica can never observe a stale answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineTimeout {
+    /// The deadline that was exceeded.
+    pub timeout: Duration,
+}
+
+impl std::fmt::Display for EngineTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine call exceeded watchdog deadline ({:?})", self.timeout)
+    }
+}
+
+impl std::error::Error for EngineTimeout {}
+
 /// Executable kinds the engine knows how to drive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecutableKind {
@@ -267,6 +289,15 @@ pub trait Executor: Send + Sync {
     /// Metadata lookup.
     fn meta(&self, artifact: &str) -> Result<ArtifactMeta>;
 
+    /// Liveness probe: a cheap round-trip that succeeds iff the executor
+    /// can serve calls. The fleet health loop requires a passing probe
+    /// before readmitting a resurrected replica. Default: trivially
+    /// healthy (pure mocks never wedge); [`EngineHandle`] overrides this
+    /// with a real engine-thread round-trip.
+    fn probe(&self) -> Result<()> {
+        Ok(())
+    }
+
     /// Run the whole Euler sampling loop, resampling `tokens` in place.
     ///
     /// The default drives [`drive_loop`] through `step_into` using the
@@ -322,6 +353,10 @@ impl<T: Executor + ?Sized> Executor for std::sync::Arc<T> {
 
     fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
         (**self).meta(artifact)
+    }
+
+    fn probe(&self) -> Result<()> {
+        (**self).probe()
     }
 
     fn run_loop(
@@ -560,6 +595,11 @@ impl Engine {
 pub struct EngineHandle {
     tx: mpsc::Sender<Req>,
     manifest: std::sync::Arc<Manifest>,
+    /// Watchdog deadline applied to every call's reply wait (`None` =
+    /// block until the engine replies, the pre-robustness behaviour).
+    /// `preload` is exempt — initial compilation of a large artifact set
+    /// legitimately outlasts any per-call deadline.
+    call_timeout: Option<Duration>,
 }
 
 impl EngineHandle {
@@ -612,11 +652,35 @@ impl EngineHandle {
             })
             .context("spawning engine thread")?;
         ready_rx.recv().context("engine thread died during init")??;
-        Ok(EngineHandle { tx, manifest: manifest_arc })
+        Ok(EngineHandle { tx, manifest: manifest_arc, call_timeout: None })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Arm the refine watchdog: every subsequent call on this handle (and
+    /// its clones) waits at most `timeout` for the engine's reply, then
+    /// surfaces a typed [`EngineTimeout`]. The timed-out call's reply
+    /// channel is dropped, so the wedged engine's eventual answer is
+    /// discarded, never delivered stale.
+    pub fn with_call_timeout(mut self, timeout: Option<Duration>) -> EngineHandle {
+        self.call_timeout = timeout;
+        self
+    }
+
+    /// Wait for a reply under the watchdog policy: no deadline = block
+    /// until reply or disconnect (`EngineDead`); with a deadline, a slow
+    /// reply becomes `EngineTimeout` and the receiver is dropped on
+    /// return, orphaning the late reply.
+    fn recv_guarded<T>(&self, rx: mpsc::Receiver<T>) -> Result<T> {
+        match self.call_timeout {
+            None => rx.recv().map_err(|_| anyhow::Error::new(EngineDead)),
+            Some(timeout) => rx.recv_timeout(timeout).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => anyhow::Error::new(EngineTimeout { timeout }),
+                mpsc::RecvTimeoutError::Disconnected => anyhow::Error::new(EngineDead),
+            }),
+        }
     }
 
     /// Eagerly compile a set of artifacts.
@@ -631,7 +695,7 @@ impl EngineHandle {
     pub fn stats(&self) -> Result<EngineStats> {
         let (resp, rx) = mpsc::channel();
         self.tx.send(Req::Stats { resp }).map_err(|_| anyhow::Error::new(EngineDead))?;
-        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))
+        self.recv_guarded(rx)
     }
 
     pub fn shutdown(&self) {
@@ -645,7 +709,7 @@ impl Executor for EngineHandle {
         self.tx
             .send(Req::Step { name: artifact.to_string(), tokens: tokens.to_vec(), t, h, warp, resp })
             .map_err(|_| anyhow::Error::new(EngineDead))?;
-        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))?
+        self.recv_guarded(rx)?
     }
 
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
@@ -653,7 +717,7 @@ impl Executor for EngineHandle {
         self.tx
             .send(Req::Draft { name: artifact.to_string(), noise: noise.to_vec(), resp })
             .map_err(|_| anyhow::Error::new(EngineDead))?;
-        rx.recv().map_err(|_| anyhow::Error::new(EngineDead))?
+        self.recv_guarded(rx)?
     }
 
     fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
@@ -663,6 +727,12 @@ impl Executor for EngineHandle {
             .find(|a| a.name == artifact)
             .cloned()
             .with_context(|| format!("unknown artifact {artifact:?}"))
+    }
+
+    /// A real engine-thread round-trip (stats request) under the watchdog
+    /// — succeeds iff the thread is alive and draining its queue.
+    fn probe(&self) -> Result<()> {
+        self.stats().map(|_| ())
     }
 
     /// One channel round-trip for the entire run (vs one per step through
@@ -680,9 +750,112 @@ impl Executor for EngineHandle {
         self.tx
             .send(Req::RunLoop { spec: spec.clone(), tokens: staged, resp })
             .map_err(|_| anyhow::Error::new(EngineDead))?;
-        let (final_tokens, report) = rx.recv().map_err(|_| anyhow::Error::new(EngineDead))??;
+        let (final_tokens, report) = self.recv_guarded(rx)??;
         *tokens = final_tokens;
         Ok(report)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    //! Wedged-engine harness shared by the engine and fleet tests: a real
+    //! [`EngineHandle`] whose serving thread parks every work request on a
+    //! gate, then records whether its (late) reply ever reached a live
+    //! receiver — the structural proof that a timed-out call's reply is
+    //! discarded, not delivered stale.
+
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    /// Gate + late-reply accounting for a wedged engine.
+    pub(crate) struct WedgeCtl {
+        released: Mutex<bool>,
+        cv: Condvar,
+        late_sends: AtomicUsize,
+        late_delivered: AtomicUsize,
+    }
+
+    impl WedgeCtl {
+        pub(crate) fn new() -> Arc<WedgeCtl> {
+            Arc::new(WedgeCtl {
+                released: Mutex::new(false),
+                cv: Condvar::new(),
+                late_sends: AtomicUsize::new(0),
+                late_delivered: AtomicUsize::new(0),
+            })
+        }
+
+        /// Un-wedge: parked requests reply (late) and new ones flow.
+        pub(crate) fn release(&self) {
+            *self.released.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+
+        fn wait(&self) {
+            let mut released = self.released.lock().unwrap();
+            while !*released {
+                released = self.cv.wait(released).unwrap();
+            }
+        }
+
+        fn record<T>(&self, sent: std::result::Result<(), mpsc::SendError<T>>) {
+            self.late_sends.fetch_add(1, Ordering::SeqCst);
+            if sent.is_ok() {
+                self.late_delivered.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+
+        /// Work replies sent after the wedge released.
+        pub(crate) fn late_sends(&self) -> usize {
+            self.late_sends.load(Ordering::SeqCst)
+        }
+
+        /// Of those, how many found a live receiver (0 = all discarded).
+        pub(crate) fn late_delivered(&self) -> usize {
+            self.late_delivered.load(Ordering::SeqCst)
+        }
+    }
+
+    /// Spawn a wedged engine behind a real [`EngineHandle`]: work
+    /// requests (step / draft / run_loop) park on `ctl` before replying;
+    /// stats/preload reply immediately (so probes still succeed).
+    pub(crate) fn wedged_handle(manifest: Manifest, ctl: Arc<WedgeCtl>) -> EngineHandle {
+        let (tx, rx) = mpsc::channel::<Req>();
+        std::thread::Builder::new()
+            .name("wsfm-wedged-engine".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Step { tokens, resp, .. } => {
+                            ctl.wait();
+                            ctl.record(resp.send(Ok(vec![0.0; tokens.len()])));
+                        }
+                        Req::RunLoop { tokens, resp, .. } => {
+                            ctl.wait();
+                            let report = LoopReport {
+                                nfe: 0,
+                                elapsed: Duration::ZERO,
+                                snapshots: None,
+                            };
+                            ctl.record(resp.send(Ok((tokens, report))));
+                        }
+                        Req::Draft { resp, .. } => {
+                            ctl.wait();
+                            ctl.record(resp.send(Ok(Vec::new())));
+                        }
+                        Req::Preload { resp, .. } => {
+                            let _ = resp.send(Ok(()));
+                        }
+                        Req::Stats { resp } => {
+                            let _ = resp.send(EngineStats::default());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning wedged engine thread");
+        EngineHandle { tx, manifest: std::sync::Arc::new(manifest), call_timeout: None }
     }
 }
 
@@ -767,5 +940,54 @@ mod tests {
         assert_eq!(s.loop_runs, 0);
         assert!(s.summary().contains("0 compiled"));
         h.shutdown();
+    }
+
+    #[test]
+    fn watchdog_times_out_wedged_engine_and_discards_late_reply() {
+        // A wedged-but-alive engine must trip the typed EngineTimeout
+        // within the configured deadline — and its eventual late reply
+        // must find no receiver (provably discarded, never stale-served).
+        let ctl = testsupport::WedgeCtl::new();
+        let h = testsupport::wedged_handle(empty_manifest(), ctl.clone())
+            .with_call_timeout(Some(Duration::from_millis(40)));
+        let start = Instant::now();
+        let err = Executor::step(&h, "a", &[0, 0], 0.0, 0.1, 1.0).unwrap_err();
+        let timeout = err.downcast_ref::<EngineTimeout>().unwrap_or_else(|| {
+            panic!("expected EngineTimeout, got {err:#}");
+        });
+        assert_eq!(timeout.timeout, Duration::from_millis(40));
+        assert!(start.elapsed() < Duration::from_secs(5), "watchdog did not bound the wait");
+        // Probes (stats) bypass the wedge in this harness, so supervisors
+        // can still health-check the handle.
+        h.probe().unwrap();
+        // Un-wedge: the parked reply goes out late — to a dropped channel.
+        ctl.release();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ctl.late_sends() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(ctl.late_sends(), 1, "wedged engine never sent its late reply");
+        assert_eq!(ctl.late_delivered(), 0, "stale late reply reached a live receiver");
+        h.shutdown();
+    }
+
+    #[test]
+    fn watchdog_disabled_or_generous_leaves_behaviour_unchanged() {
+        // No deadline = the legacy blocking wait; a generous deadline
+        // passes healthy calls through and keeps ordinary errors typed as
+        // themselves (not EngineTimeout / EngineDead).
+        let h = EngineHandle::spawn(empty_manifest()).unwrap();
+        assert!(h.stats().is_ok());
+        let h = h.with_call_timeout(Some(Duration::from_secs(30)));
+        h.probe().unwrap();
+        let err = h.draft("nope", &[0.0]).unwrap_err();
+        assert!(err.downcast_ref::<EngineTimeout>().is_none(), "{err:#}");
+        assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
+        // Under the watchdog a *dead* engine still surfaces EngineDead —
+        // disconnect is observed before the deadline, never conflated
+        // with a timeout.
+        h.shutdown();
+        let err = h.stats().unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_some(), "{err:#}");
     }
 }

@@ -11,7 +11,7 @@ pub mod xla_stub;
 
 pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
 pub use engine::{
-    drive_loop, Engine, EngineDead, EngineHandle, EngineStats, ExecutableKind, Executor,
-    LoopReport, LoopScratch, LoopSpec,
+    drive_loop, Engine, EngineDead, EngineHandle, EngineStats, EngineTimeout, ExecutableKind,
+    Executor, LoopReport, LoopScratch, LoopSpec,
 };
 pub use pool::{best_fit, padding_cost, plan_chunks};

@@ -14,7 +14,7 @@ use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Typed BUSY rejection: the server applied backpressure and suggested
 /// when to retry. Downcast from [`Client::generate`]'s error to tell
@@ -33,6 +33,30 @@ impl std::fmt::Display for Busy {
 
 impl std::error::Error for Busy {}
 
+/// Typed give-up: [`Client::generate_retry`] exhausted its total
+/// wall-clock `deadline` while the server kept answering BUSY. Distinct
+/// from [`Busy`] (one rejection, retryable) — this is the client-side
+/// latency budget saying stop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryDeadline {
+    /// Total wall-clock spent (ms) when the budget ran out.
+    pub waited_ms: u64,
+    /// BUSY retries performed before giving up.
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for RetryDeadline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gave up after {} ms and {} busy retries (retry deadline exceeded)",
+            self.waited_ms, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RetryDeadline {}
+
 /// Backoff policy for BUSY retries: the sleep before retry `attempt`
 /// starts from the server's live `retry_after_ms` hint, doubles per
 /// attempt, is capped at `cap`, and is jittered into `[delay/2, delay]`
@@ -46,11 +70,16 @@ pub struct RetryPolicy {
     pub cap: Duration,
     /// Jitter substream seed; give concurrent clients distinct seeds.
     pub seed: u64,
+    /// Total wall-clock budget across all attempts and sleeps: a retry
+    /// whose backoff would cross it gives up with the typed
+    /// [`RetryDeadline`] instead of sleeping. `None` = retries bounded
+    /// only by `max_retries`.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_retries: 8, cap: Duration::from_millis(250), seed: 0 }
+        RetryPolicy { max_retries: 8, cap: Duration::from_millis(250), seed: 0, deadline: None }
     }
 }
 
@@ -187,9 +216,11 @@ impl Client {
 
     /// [`Client::generate`] that honors BUSY backpressure: on a [`Busy`]
     /// rejection it sleeps `policy.backoff(attempt, hint)` and retries, up
-    /// to `policy.max_retries` times, then surfaces the last error. Real
-    /// failures (non-BUSY) are never retried. Returns the reply plus how
-    /// many retries it took (0 = first try).
+    /// to `policy.max_retries` times — within `policy.deadline` of total
+    /// wall-clock, if set: when the next sleep would cross the budget it
+    /// gives up with the typed [`RetryDeadline`] instead. Real failures
+    /// (non-BUSY) are never retried. Returns the reply plus how many
+    /// retries it took (0 = first try).
     #[allow(clippy::too_many_arguments)]
     pub fn generate_retry(
         &mut self,
@@ -203,13 +234,24 @@ impl Client {
         decode: bool,
         policy: &RetryPolicy,
     ) -> Result<(GenerateReply, u32)> {
+        let started = Instant::now();
         let mut attempt = 0u32;
         loop {
             match self.generate(domain, tag, draft, n_samples, t0, steps, seed, decode) {
                 Ok(reply) => return Ok((reply, attempt)),
                 Err(e) => match e.downcast_ref::<Busy>() {
                     Some(busy) if attempt < policy.max_retries => {
-                        std::thread::sleep(policy.backoff(attempt, busy.retry_after_ms));
+                        let delay = policy.backoff(attempt, busy.retry_after_ms);
+                        if let Some(deadline) = policy.deadline {
+                            let waited = started.elapsed();
+                            if waited + delay > deadline {
+                                return Err(anyhow::Error::new(RetryDeadline {
+                                    waited_ms: waited.as_millis() as u64,
+                                    attempts: attempt,
+                                }));
+                            }
+                        }
+                        std::thread::sleep(delay);
                         attempt += 1;
                     }
                     _ => return Err(e),
@@ -230,7 +272,12 @@ mod tests {
 
     #[test]
     fn backoff_grows_exponentially_capped_and_jittered() {
-        let p = RetryPolicy { max_retries: 8, cap: Duration::from_millis(100), seed: 7 };
+        let p = RetryPolicy {
+            max_retries: 8,
+            cap: Duration::from_millis(100),
+            seed: 7,
+            deadline: None,
+        };
         // Every backoff stays within [hint/2 * 2^k floor, cap].
         let mut prev_hi = 0u64;
         for attempt in 0..8 {
@@ -287,6 +334,7 @@ mod tests {
                         max_retries: 200,
                         cap: Duration::from_millis(25),
                         seed: i, // distinct jitter substreams per client
+                        deadline: None,
                     };
                     let mut c = Client::connect(&addr).unwrap();
                     c.generate_retry("mock", "cold", "noise", 1, 0.5, 10, i, false, &policy)
@@ -307,5 +355,50 @@ mod tests {
         stop.store(true, Ordering::SeqCst);
         let _ = server_thread.join().unwrap();
         service.shutdown();
+    }
+
+    /// Satellite pin: the total wall-clock deadline. A raw listener that
+    /// answers BUSY forever would make an unbounded policy retry 200
+    /// times; with a deadline the client gives up early, with the typed
+    /// [`RetryDeadline`] carrying its accounting.
+    #[test]
+    fn retry_deadline_gives_up_with_a_typed_error() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut w = &stream;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                    break; // client hung up
+                }
+                w.write_all(
+                    b"{\"ok\":false,\"error\":\"server busy\",\"busy\":true,\"retry_after_ms\":5}\n",
+                )
+                .unwrap();
+            }
+        });
+
+        let policy = RetryPolicy {
+            max_retries: u32::MAX, // retries alone would never stop
+            cap: Duration::from_millis(10),
+            seed: 3,
+            deadline: Some(Duration::from_millis(60)),
+        };
+        let mut c = Client::connect(&addr).unwrap();
+        let t = Instant::now();
+        let err =
+            c.generate_retry("mock", "cold", "noise", 1, 0.5, 10, 0, false, &policy).unwrap_err();
+        assert!(t.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
+        let gave_up = err.downcast_ref::<RetryDeadline>().expect("typed deadline error");
+        assert!(gave_up.attempts >= 1, "should have retried at least once before giving up");
+        assert!(gave_up.waited_ms < 5_000, "implausible waited_ms {}", gave_up.waited_ms);
+        drop(c);
+        server.join().unwrap();
     }
 }

@@ -10,6 +10,6 @@ pub mod client;
 pub mod protocol;
 pub mod tcp;
 
-pub use client::{Busy, Client, RetryPolicy};
+pub use client::{Busy, Client, RetryDeadline, RetryPolicy};
 pub use protocol::{parse_request, render_error, render_response, WireRequest};
 pub use tcp::TcpServer;

@@ -75,8 +75,11 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
 ///
 /// Cascade stage accounting (`stages_used`, per-stage `nfe_stages`,
 /// `early_exit`) is emitted only when the bundle ran under a cascade
-/// mode — with `cascade.mode = off` the response stays **byte-for-byte**
-/// the pre-cascade wire format (pinned by tests).
+/// mode, and the degradation marker (`degraded: true` plus
+/// `degraded_reason`) only when refinement failed and the coordinator
+/// served draft tokens — with `cascade.mode = off` and refinement
+/// healthy the response stays **byte-for-byte** the pre-cascade wire
+/// format (pinned by tests).
 pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String {
     let mut fields = vec![
         ("ok", Json::Bool(true)),
@@ -95,6 +98,10 @@ pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String
             Json::arr(c.nfe_per_stage.iter().map(|&n| Json::num(n as f64))),
         ));
         fields.push(("early_exit", Json::Bool(c.early_exit)));
+    }
+    if let Some(reason) = &resp.degraded {
+        fields.push(("degraded", Json::Bool(true)));
+        fields.push(("degraded_reason", Json::str(reason)));
     }
     fields.push((
         "samples",
@@ -190,6 +197,7 @@ mod tests {
             draft_time: Duration::from_micros(900),
             refine_time: Duration::from_micros(52_000),
             total_time: Duration::from_micros(53_100),
+            degraded: None,
         }
     }
 
@@ -212,6 +220,7 @@ mod tests {
         assert!(!line.contains("stages_used"), "{line}");
         assert!(!line.contains("nfe_stages"), "{line}");
         assert!(!line.contains("early_exit"), "{line}");
+        assert!(!line.contains("degraded"), "{line}");
         let expected = concat!(
             r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
             r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
@@ -236,6 +245,23 @@ mod tests {
         assert_eq!(j.get("early_exit").as_bool(), Some(true));
         // Per-stage NFEs sum to the headline nfe.
         assert_eq!(j.get("nfe").as_usize(), Some(205));
+    }
+
+    #[test]
+    fn degraded_response_carries_marker_and_reason() {
+        let mut resp = resp_without_cascade();
+        resp.degraded = Some("refine failed: all fleet replicas are down".into());
+        resp.nfe = 0;
+        let line = render_response(&resp, None);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true), "degraded is still a success");
+        assert_eq!(j.get("degraded").as_bool(), Some(true));
+        assert!(
+            j.get("degraded_reason").as_str().unwrap().contains("fleet replicas"),
+            "{line}"
+        );
+        assert_eq!(j.get("nfe").as_usize(), Some(0), "draft tokens cost zero refine NFE");
+        assert_eq!(j.get("samples").as_arr().unwrap().len(), 2, "draft samples still served");
     }
 
     #[test]
