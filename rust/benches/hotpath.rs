@@ -6,7 +6,9 @@
 //! offer/flush, queue handoff, JSON protocol encode/decode, the serving
 //! coordinator's serial-vs-pipelined bundle throughput, the executor
 //! fleet's replica scaling (replicas=1 vs 4 on a flat-cost stage mock),
-//! the watchdog-guarded vs bare engine-call reply wait — and the engine
+//! the step-level batch composer (per-bundle vs composed refinement on a
+//! flat per-call-cost mock), the watchdog-guarded vs bare engine-call
+//! reply wait — and the engine
 //! step itself per domain/batch, so the "coordinator must not be the
 //! bottleneck" target is quantified.
 //!
@@ -513,6 +515,87 @@ fn bench_cascade_throughput(results: &mut Vec<(String, f64)>) {
 }
 
 // ---------------------------------------------------------------------------
+// Composer: per-bundle refinement vs continuous cross-bundle batching
+// ---------------------------------------------------------------------------
+
+/// Executor pricing each *forward pass* at a flat `call_cost` (the fixed
+/// kernel-launch/engine overhead batching amortises), then producing the
+/// analytic drift probs per token. Unlike [`StageCostExec`] it leaves
+/// `run_loop` at the trait default, so the per-bundle path and the
+/// composed path pay the same per-step price — the only variable is how
+/// many rows share each call.
+struct StepCostExec {
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    call_cost: Duration,
+}
+
+impl Executor for StepCostExec {
+    fn step_into(
+        &self,
+        _a: &str,
+        tokens: &[i32],
+        t: f32,
+        h: f32,
+        warp: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        std::thread::sleep(self.call_cost);
+        let coef = (h * warp / (1.0 - t).max(1e-6)).min(1.0);
+        out.clear();
+        out.reserve(tokens.len() * self.vocab);
+        let base = coef / self.vocab as f32;
+        for &tok in tokens {
+            for j in 0..self.vocab {
+                let stay = if j as i32 == tok { 1.0 - coef } else { 0.0 };
+                out.push(stay + base);
+            }
+        }
+        Ok(())
+    }
+
+    fn draft(&self, _a: &str, _noise: &[f32]) -> anyhow::Result<Vec<i32>> {
+        Ok(vec![0; self.batch * self.seq_len])
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        StageCostExec {
+            batch: self.batch,
+            seq_len: self.seq_len,
+            vocab: self.vocab,
+            draft_cost: Duration::ZERO,
+            refine_cost: Duration::ZERO,
+        }
+        .meta(artifact)
+    }
+}
+
+/// Mixed concurrent load (one full bundle per request, depth-8 pipeline,
+/// one REFINE stream) refined per-bundle vs through the step-level batch
+/// composer. Per-bundle, every in-flight bundle pays `call_cost` per
+/// Euler step on its own; composed, bundles admitted at the same step
+/// boundary march in lockstep and rows on equal `(t, h, warp)` share one
+/// forward pass — the call count (and wall-clock) drops toward one per
+/// *composed* step. Outputs are bitwise-identical either way (pinned in
+/// `coordinator::service` tests); this row prices the grouping win.
+fn bench_composer_throughput(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, composed) in
+        [("serve bundle per-bundle", false), ("serve bundle composed", true)]
+    {
+        let exec = StepCostExec { batch, seq_len, vocab, call_cost: Duration::from_micros(100) };
+        let mut cfg = WsfmConfig::default();
+        cfg.pipeline_depth = 8;
+        cfg.draft_workers = 2;
+        cfg.composer.enabled = composed;
+        let ns = run_serve_bench(exec, cfg, 32);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Watchdog overhead on the engine-call reply path
 // ---------------------------------------------------------------------------
 
@@ -665,6 +748,9 @@ fn main() {
 
     println!("\n== fleet: replicated executors vs a single stream ==");
     bench_fleet_throughput(&mut results);
+
+    println!("\n== composer: per-bundle vs continuous cross-bundle batching ==");
+    bench_composer_throughput(&mut results);
 
     println!("\n== watchdog: bare vs guarded engine-call reply wait ==");
     bench_watchdog_overhead(&mut results);

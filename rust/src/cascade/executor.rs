@@ -35,6 +35,26 @@ pub struct CascadeOutcome {
     pub early_exit: bool,
 }
 
+/// Score a chunk's intermediate token state for a quality gate: the
+/// first `useful_rows` rows (padding never votes) go through the
+/// [`crate::control`] proxies. Returns `(score, gate wall-clock)`.
+///
+/// The single gate implementation shared by [`run_segments`] and the
+/// step-level batch composer ([`crate::coordinator::composer`]) — gates
+/// are pure functions of (tokens, config), so both paths deciding from
+/// the same state exit at the same stage (the determinism contract).
+pub(crate) fn eval_gate(
+    tokens: &[i32],
+    useful_rows: usize,
+    seq_len: usize,
+    vocab: usize,
+) -> (f64, Duration) {
+    let gate_start = Instant::now();
+    let rows: Vec<&[i32]> = tokens.chunks_exact(seq_len.max(1)).take(useful_rows).collect();
+    let score = proxy_score(&rows, vocab);
+    (score, gate_start.elapsed())
+}
+
 impl CascadeOutcome {
     pub fn stages_used(&self) -> usize {
         self.stages.len()
@@ -96,14 +116,9 @@ pub fn run_segments(
         let is_last = si + 1 == plan.len();
         if !is_last {
             if let Some(threshold) = gate_threshold {
-                let gate_start = Instant::now();
-                let rows: Vec<&[i32]> = tokens
-                    .chunks_exact(seq_len.max(1))
-                    .take(useful_rows)
-                    .collect();
-                let score = proxy_score(&rows, vocab);
+                let (score, gate_elapsed) = eval_gate(tokens, useful_rows, seq_len, vocab);
                 stage.score = Some(score);
-                stage.gate_eval = Some(gate_start.elapsed());
+                stage.gate_eval = Some(gate_elapsed);
                 if score >= threshold {
                     early_exit = true;
                     stages.push(stage);

@@ -37,6 +37,34 @@ pub struct WsfmConfig {
     /// Fault-tolerance envelope ([`crate::faults`], fleet health loop,
     /// refine watchdog, draft-fallback degradation).
     pub robustness: RobustnessConfig,
+    /// Step-level batch composer ([`crate::coordinator::composer`]).
+    pub composer: ComposerConfig,
+}
+
+/// Continuous cross-bundle batching tuning (`composer` subsystem).
+///
+/// When enabled, REFINE merges rows from every in-flight bundle (and
+/// cascade segment) into shared engine steps instead of driving one
+/// bundle at a time: rows retire as their segments finish and freshly
+/// drafted bundles join at the next step boundary. Composition only
+/// changes grouping — outputs stay bitwise-identical to the per-bundle
+/// path (each row samples from its own `(run_seed, step, position)`
+/// substream).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ComposerConfig {
+    /// Compose steps across in-flight bundles (default off — the
+    /// per-bundle REFINE path verbatim).
+    pub enabled: bool,
+    /// Row cap per composed engine dispatch; `0` (default) = uncapped,
+    /// letting the engine tile oversized dispatches over its compiled
+    /// batch sizes.
+    pub max_rows: usize,
+}
+
+impl Default for ComposerConfig {
+    fn default() -> Self {
+        ComposerConfig { enabled: false, max_rows: 0 }
+    }
 }
 
 /// Fault-tolerance tuning (`robustness` subsystem).
@@ -220,6 +248,7 @@ impl Default for WsfmConfig {
             fleet: FleetConfig::default(),
             cascade: CascadeConfig::default(),
             robustness: RobustnessConfig::default(),
+            composer: ComposerConfig::default(),
         }
     }
 }
@@ -328,6 +357,13 @@ impl WsfmConfig {
         if let Some(n) = rb.get("max_respawns").as_usize() {
             c.robustness.max_respawns = n as u32;
         }
+        let cp = j.get("composer");
+        if let Some(b) = cp.get("enabled").as_bool() {
+            c.composer.enabled = b;
+        }
+        if let Some(n) = cp.get("max_rows").as_usize() {
+            c.composer.max_rows = n;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -383,6 +419,13 @@ impl WsfmConfig {
                         Json::num(self.robustness.respawn_backoff_cap_ms as f64),
                     ),
                     ("max_respawns", Json::num(self.robustness.max_respawns as f64)),
+                ]),
+            ),
+            (
+                "composer",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.composer.enabled)),
+                    ("max_rows", Json::num(self.composer.max_rows as f64)),
                 ]),
             ),
             (
@@ -586,6 +629,19 @@ mod tests {
         assert_eq!(d.robustness, RobustnessConfig::default());
         assert_eq!(d.robustness.call_timeout_ms, 0);
         assert!(d.robustness.draft_fallback);
+    }
+
+    #[test]
+    fn composer_section_layering() {
+        let j = Json::parse(r#"{"composer":{"enabled":true,"max_rows":64}}"#).unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert!(c.composer.enabled);
+        assert_eq!(c.composer.max_rows, 64);
+        // Untouched -> defaults: composer off = per-bundle REFINE path.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.composer, ComposerConfig::default());
+        assert!(!d.composer.enabled);
+        assert_eq!(d.composer.max_rows, 0);
     }
 
     #[test]

@@ -1,0 +1,823 @@
+//! Continuous cross-bundle batching: the step-level batch composer.
+//!
+//! The per-bundle REFINE path ([`crate::coordinator::scheduler`]) drives
+//! each drafted chunk through its whole Euler trajectory as one engine
+//! loop — simple, but under concurrent load the engine sees a sequence
+//! of small batches, one bundle at a time. The composer instead treats
+//! the **step** as the scheduling quantum, vLLM-style: every in-flight
+//! chunk contributes its useful rows to a shared engine dispatch each
+//! step, rows retire as their segment ladders complete, and freshly
+//! drafted bundles join at the next step boundary instead of queueing
+//! behind a whole foreign trajectory.
+//!
+//! ## Row bookkeeping
+//!
+//! Each admitted [`DraftedBundle`] breaks into per-chunk lockstep groups
+//! ([`ChunkState`]): a chunk's useful rows (padding never enters the
+//! composer) advance together, carrying their own schedule cursor —
+//! current cascade segment, step-in-segment, absolute step offset — plus
+//! their identity (job slot, chunk index). Chunks from different bundles
+//! at different trajectory points coexist in one composed step.
+//!
+//! ## Why outputs are bitwise-identical to the per-bundle path
+//!
+//! Nothing in the numerical chain depends on *who else* shares a step:
+//!
+//! 1. the run seed is drawn exactly as the per-bundle path draws it
+//!    (first `next_u64` of `Pcg64::substream(bundle_seed, chunk_index,
+//!    REFINE_LANE)`);
+//! 2. each composed step evaluates the chunk at its own `(t, h, warp)`
+//!    from the same sliced [`Schedule`] the segment executor uses;
+//! 3. every categorical draw keys on `(run_seed, absolute step,
+//!    position)` via [`crate::core::prob`]'s seeded row sampler — the
+//!    same substreams the engine-resident loop uses, with positions
+//!    indexed within the chunk exactly as the unbatched padded batch
+//!    indexes its useful prefix;
+//! 4. gates are evaluated with the shared [`eval_gate`] on the same
+//!    intermediate state, so composed and per-bundle cascades exit at
+//!    the same stage.
+//!
+//! Composition therefore only changes *grouping*, never values — pinned
+//! by the parity tests below and the service-level sweep
+//! (`composer on/off × fleet replicas × refine workers × pipeline depth
+//! × cascade modes`).
+//!
+//! ## Failure containment
+//!
+//! A composed dispatch that errors fails over: every in-flight bundle is
+//! re-run from its untouched draft through the per-bundle
+//! [`Scheduler::refine_bundle`] (deterministic, so a fault-free retry
+//! yields the exact tokens the composed run would have produced). The
+//! caller sees the same `(ctx, Result)` contract either way.
+
+use crate::cascade::executor::eval_gate;
+use crate::cascade::{Segment, StageOutcome};
+use crate::coordinator::request::{CascadeInfo, GenResponse};
+use crate::coordinator::scheduler::{DraftedBundle, Scheduler, REFINE_LANE};
+use crate::core::prob::sample_row_seeded;
+use crate::core::rng::Pcg64;
+use crate::core::schedule::Schedule;
+use crate::runtime::engine::RowStep;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// One admitted bundle riding the composer: its context (whatever the
+/// service needs to deliver the result), the untouched drafted bundle
+/// (kept whole for finalization and the failure-containment re-run), and
+/// the per-chunk completion slots.
+struct Job<C> {
+    ctx: C,
+    drafted: DraftedBundle,
+    /// Finished chunks, indexed by position in `drafted.chunks`.
+    done: Vec<Option<DoneChunk>>,
+    remaining: usize,
+    /// Wall-clock of composed steps this job participated in.
+    refine_time: Duration,
+}
+
+/// A chunk that finished its ladder: final tokens (useful rows only) and
+/// the executed stage accounting, mirroring a `CascadeOutcome` prefix.
+struct DoneChunk {
+    tokens: Vec<i32>,
+    stages: Vec<StageOutcome>,
+    early_exit: bool,
+}
+
+/// One chunk's lockstep row group advancing through its segment ladder.
+struct ChunkState {
+    /// Owning job slot in `ComposedRefiner::jobs`.
+    job: usize,
+    /// Position in the job's `drafted.chunks` (completion slot).
+    slot: usize,
+    /// Useful rows (== `chunk_len`; padding never enters the composer).
+    rows: usize,
+    seq_len: usize,
+    vocab: usize,
+    domain: String,
+    tag: String,
+    /// The chunk's own step artifact — names the compiled family for
+    /// dispatch (and fleet affinity); the engine re-pads per dispatch.
+    artifact: String,
+    /// `[rows * seq_len]` current token state, resampled every step.
+    tokens: Vec<i32>,
+    run_seed: u64,
+    warp: f32,
+    steps_cold: usize,
+    t0: f64,
+    plan: Vec<Segment>,
+    seg_idx: usize,
+    /// Sliced schedule of the current segment (absolute `step_offset`).
+    schedule: Schedule,
+    step_in_seg: usize,
+    stages: Vec<StageOutcome>,
+    early_exit: bool,
+    retired: bool,
+}
+
+impl ChunkState {
+    /// The per-row step parameters for the chunk's next step — exactly
+    /// the `(t, h, warp)` the engine-resident loop would dispatch.
+    fn row_step(&self) -> RowStep {
+        RowStep {
+            t: self.schedule.times[self.step_in_seg] as f32,
+            h: self.schedule.step_size(self.step_in_seg) as f32,
+            warp: self.warp,
+        }
+    }
+
+    fn family(&self) -> (&str, &str, usize, usize) {
+        (self.domain.as_str(), self.tag.as_str(), self.seq_len, self.vocab)
+    }
+}
+
+/// The step-level batch composer: merges rows from multiple in-flight
+/// [`DraftedBundle`]s (and their cascade segments) into shared engine
+/// steps, retiring rows as segments complete and admitting new bundles
+/// at step boundaries.
+///
+/// Generic over a caller context `C` (response channels, fallback plans)
+/// returned verbatim with each finished bundle's result. Borrows the
+/// stage thread's [`Scheduler`] so composed and per-bundle refinement
+/// share one executor, controller, cascade policy, and metrics sink.
+pub struct ComposedRefiner<'s, 'a, C> {
+    sched: &'s Scheduler<'a>,
+    /// Row cap per composed dispatch (`composer.max_rows`); 0 = no cap
+    /// (the engine tiles oversized dispatches over its compiled batches).
+    max_rows: usize,
+    jobs: Vec<Option<Job<C>>>,
+    free: Vec<usize>,
+    chunks: Vec<ChunkState>,
+    completed: Vec<(C, Result<Vec<GenResponse>>)>,
+}
+
+impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
+    pub fn new(sched: &'s Scheduler<'a>, max_rows: usize) -> Self {
+        ComposedRefiner {
+            sched,
+            max_rows,
+            jobs: Vec::new(),
+            free: Vec::new(),
+            chunks: Vec::new(),
+            completed: Vec::new(),
+        }
+    }
+
+    /// Whether any rows are still in flight (i.e. [`ComposedRefiner::step`]
+    /// has work to do).
+    pub fn has_work(&self) -> bool {
+        !self.chunks.is_empty()
+    }
+
+    /// Finished bundles: `(ctx, responses)` in completion order. Errors
+    /// here already survived the per-bundle fallback re-run.
+    pub fn take_completed(&mut self) -> Vec<(C, Result<Vec<GenResponse>>)> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Admit a drafted bundle: its chunks join the composed step loop at
+    /// the next step boundary. Admission never fails outward — a chunk
+    /// that cannot be set up (shape mismatch, unschedulable segment)
+    /// sends the whole bundle down the per-bundle path instead.
+    pub fn admit(&mut self, ctx: C, drafted: DraftedBundle) {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.jobs.push(None);
+            self.jobs.len() - 1
+        });
+        let n_chunks = drafted.chunks.len();
+        debug_assert!(n_chunks > 0, "draft_bundle never yields zero chunks");
+        match self.build_chunks(slot, &drafted) {
+            Ok(states) => {
+                self.chunks.extend(states);
+                self.jobs[slot] = Some(Job {
+                    ctx,
+                    drafted,
+                    done: (0..n_chunks).map(|_| None).collect(),
+                    remaining: n_chunks,
+                    refine_time: Duration::ZERO,
+                });
+            }
+            Err(e) => {
+                crate::error!("composed admission failed ({e:#}); per-bundle fallback");
+                self.free.push(slot);
+                self.completed.push((ctx, self.sched.refine_bundle(drafted)));
+            }
+        }
+    }
+
+    /// Build the per-chunk lockstep states for a job. RNG, plan, and
+    /// schedule derivation mirror `Scheduler::refine_bundle` exactly.
+    fn build_chunks(&self, slot: usize, drafted: &DraftedBundle) -> Result<Vec<ChunkState>> {
+        let key = &drafted.bundle.key;
+        let t0 = drafted.decision.t0;
+        let warp = key.warp_mode().warp_factor(t0) as f32;
+        let mut states = Vec::with_capacity(drafted.chunks.len());
+        for (ci, chunk) in drafted.chunks.iter().enumerate() {
+            crate::sampler::dfm::check_shape(
+                chunk.meta.batch,
+                chunk.meta.seq_len,
+                &chunk.meta.name,
+                &chunk.init,
+            )?;
+            // The run-seed draw matches both per-bundle paths (`sample_warm`
+            // and the cascade executor draw one u64 from this substream).
+            let mut rng = Pcg64::substream(drafted.bundle_seed, chunk.chunk_index as u64, REFINE_LANE);
+            let run_seed = rng.next_u64();
+            let plan = self.sched.cascade().plan(key.steps_cold, t0, &chunk.meta.name);
+            let seg = &plan[0];
+            let schedule = Schedule::segment(key.steps_cold, t0, seg.t_start, seg.t_end)?;
+            let mut tokens = Vec::with_capacity(chunk.chunk_len * chunk.meta.seq_len);
+            for r in 0..chunk.chunk_len {
+                tokens.extend_from_slice(chunk.init.row(r));
+            }
+            states.push(ChunkState {
+                job: slot,
+                slot: ci,
+                rows: chunk.chunk_len,
+                seq_len: chunk.meta.seq_len,
+                vocab: chunk.meta.vocab,
+                domain: chunk.meta.domain.clone(),
+                tag: chunk.meta.tag.clone(),
+                artifact: chunk.meta.name.clone(),
+                tokens,
+                run_seed,
+                warp,
+                steps_cold: key.steps_cold,
+                t0,
+                plan,
+                seg_idx: 0,
+                schedule,
+                step_in_seg: 0,
+                stages: Vec::new(),
+                early_exit: false,
+                retired: false,
+            });
+        }
+        Ok(states)
+    }
+
+    /// Drive every in-flight chunk one Euler step through shared engine
+    /// dispatches. Returns `false` when nothing was in flight.
+    ///
+    /// Active chunks group by compiled family `(domain, tag, seq_len,
+    /// vocab)`; within a family, chunks at equal `(t, h, warp)` sort
+    /// adjacent (stably, so admission order breaks ties) and merge into
+    /// one forward pass via [`RowStep`] run-grouping — concurrently
+    /// admitted bundles on the same schedule share compute, while
+    /// heterogeneous rows still share the single engine round-trip.
+    pub fn step(&mut self) -> bool {
+        if self.chunks.is_empty() {
+            return false;
+        }
+        let step_start = Instant::now();
+        let active_jobs: Vec<usize> = {
+            let mut v: Vec<usize> = self.chunks.iter().map(|c| c.job).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+
+        // Plan dispatches over a family-then-parameters ordering. The
+        // ordering affects only which rows share a forward pass, never
+        // their values (each row's substream and step params are its own).
+        let mut order: Vec<usize> = (0..self.chunks.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ca, cb) = (&self.chunks[a], &self.chunks[b]);
+            let (ra, rb) = (ca.row_step(), cb.row_step());
+            ca.family()
+                .cmp(&cb.family())
+                .then(ra.t.total_cmp(&rb.t))
+                .then(ra.h.total_cmp(&rb.h))
+                .then(ra.warp.total_cmp(&rb.warp))
+        });
+        let cap = if self.max_rows > 0 { self.max_rows } else { usize::MAX };
+        let mut dispatches: Vec<Vec<usize>> = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_rows = 0usize;
+        for &i in &order {
+            let c = &self.chunks[i];
+            let fresh = cur.is_empty()
+                || self.chunks[cur[0]].family() != c.family()
+                || cur_rows + c.rows > cap;
+            if fresh && !cur.is_empty() {
+                dispatches.push(std::mem::take(&mut cur));
+                cur_rows = 0;
+            }
+            cur_rows += c.rows;
+            cur.push(i);
+        }
+        if !cur.is_empty() {
+            dispatches.push(cur);
+        }
+
+        // Occupancy accounting: rows advanced this composed step, and how
+        // full each dispatch ran against its row budget (the configured
+        // cap, else the family's largest compiled batch — >100% means one
+        // dispatch tiled over multiple compiled batches).
+        let total_rows: usize = self.chunks.iter().map(|c| c.rows).sum();
+        self.sched.metrics.rows_per_step.record(total_rows as f64);
+        let mut occ_sum = 0i64;
+        for d in &dispatches {
+            let c = &self.chunks[d[0]];
+            let rows: usize = d.iter().map(|&i| self.chunks[i].rows).sum();
+            let denom = if self.max_rows > 0 {
+                self.max_rows
+            } else {
+                self.sched
+                    .manifest
+                    .step_batches(&c.domain, &c.tag)
+                    .last()
+                    .copied()
+                    .unwrap_or(rows)
+                    .max(1)
+            };
+            occ_sum += (100 * rows / denom) as i64;
+        }
+        self.sched.metrics.batch_occupancy.set(occ_sum / dispatches.len().max(1) as i64);
+
+        for d in &dispatches {
+            let (seq_len, vocab) = (self.chunks[d[0]].seq_len, self.chunks[d[0]].vocab);
+            let artifact = self.chunks[d[0]].artifact.clone();
+            let mut toks: Vec<i32> = Vec::new();
+            let mut row_steps: Vec<RowStep> = Vec::new();
+            for &i in d {
+                let c = &self.chunks[i];
+                toks.extend_from_slice(&c.tokens);
+                row_steps.extend(std::iter::repeat(c.row_step()).take(c.rows));
+            }
+            let mut probs = Vec::new();
+            if let Err(e) =
+                self.sched.exec.step_rows_into(&artifact, &toks, seq_len, &row_steps, &mut probs)
+            {
+                crate::error!("composed step failed ({e:#}); per-bundle fallback");
+                self.fail_over();
+                return true;
+            }
+            // Scatter: each chunk resamples its own positions under its
+            // own (run_seed, absolute step) substream — position indices
+            // match the unbatched padded batch's useful prefix.
+            let mut off = 0usize;
+            for &i in d {
+                let c = &mut self.chunks[i];
+                let abs_step = (c.schedule.step_offset + c.step_in_seg) as u64;
+                for p in 0..c.rows * c.seq_len {
+                    let row = &probs[(off + p) * vocab..(off + p + 1) * vocab];
+                    c.tokens[p] = sample_row_seeded(row, c.run_seed, abs_step, p as u64);
+                }
+                off += c.rows * c.seq_len;
+                c.step_in_seg += 1;
+            }
+        }
+
+        // Segment boundaries: close stages, fire gates, advance or retire.
+        let gate_threshold = self.sched.cascade().gate_threshold();
+        let mut schedule_err = None;
+        for c in &mut self.chunks {
+            if c.step_in_seg < c.schedule.nfe() {
+                continue;
+            }
+            let seg = &c.plan[c.seg_idx];
+            let mut stage = StageOutcome {
+                t_start: seg.t_start,
+                t_end: seg.t_end,
+                nfe: c.schedule.nfe(),
+                score: None,
+                gate_eval: None,
+            };
+            let is_last = c.seg_idx + 1 == c.plan.len();
+            if !is_last {
+                if let Some(threshold) = gate_threshold {
+                    let (score, gate_elapsed) = eval_gate(&c.tokens, c.rows, c.seq_len, c.vocab);
+                    stage.score = Some(score);
+                    stage.gate_eval = Some(gate_elapsed);
+                    if score >= threshold {
+                        c.early_exit = true;
+                        c.stages.push(stage);
+                        c.retired = true;
+                        continue;
+                    }
+                }
+            }
+            c.stages.push(stage);
+            if is_last {
+                c.retired = true;
+                continue;
+            }
+            c.seg_idx += 1;
+            let next = &c.plan[c.seg_idx];
+            match Schedule::segment(c.steps_cold, c.t0, next.t_start, next.t_end) {
+                Ok(s) => {
+                    c.schedule = s;
+                    c.step_in_seg = 0;
+                }
+                Err(e) => {
+                    schedule_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = schedule_err {
+            crate::error!("composed segment advance failed ({e:#}); per-bundle fallback");
+            self.fail_over();
+            return true;
+        }
+
+        let elapsed = step_start.elapsed();
+        for slot in active_jobs {
+            if let Some(job) = self.jobs[slot].as_mut() {
+                job.refine_time += elapsed;
+            }
+        }
+
+        // Retire finished chunks; finalize jobs whose last chunk landed.
+        let mut finished_jobs: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < self.chunks.len() {
+            if !self.chunks[i].retired {
+                i += 1;
+                continue;
+            }
+            let c = self.chunks.swap_remove(i);
+            let job = self.jobs[c.job].as_mut().expect("retiring chunk of a live job");
+            job.done[c.slot] =
+                Some(DoneChunk { tokens: c.tokens, stages: c.stages, early_exit: c.early_exit });
+            job.remaining -= 1;
+            if job.remaining == 0 {
+                finished_jobs.push(c.job);
+            }
+        }
+        for slot in finished_jobs {
+            self.finalize(slot);
+        }
+        true
+    }
+
+    /// Run composed steps until every in-flight bundle has finished (the
+    /// serial-path driver; the pipelined service interleaves `step` with
+    /// queue ingest instead).
+    pub fn run_until_idle(&mut self) {
+        while self.step() {}
+    }
+
+    /// A composed dispatch failed: discard all composed state and re-run
+    /// every in-flight bundle from its untouched draft through the
+    /// per-bundle path. Deterministic RNG makes the retry's outputs
+    /// identical to what the composed run would have produced; per-chunk
+    /// metrics were deferred to finalization, so nothing double-counts.
+    fn fail_over(&mut self) {
+        self.chunks.clear();
+        for slot in 0..self.jobs.len() {
+            if let Some(job) = self.jobs[slot].take() {
+                self.free.push(slot);
+                self.completed.push((job.ctx, self.sched.refine_bundle(job.drafted)));
+            }
+        }
+    }
+
+    /// Assemble a finished job's responses — the mirror of
+    /// `Scheduler::refine_bundle`'s aggregation, scatter, and metrics
+    /// (sans `padded_rows`: the composer admits useful rows only, and
+    /// padding is a per-dispatch engine concern here).
+    fn finalize(&mut self, slot: usize) {
+        let job = self.jobs[slot].take().expect("finalizing a live job");
+        self.free.push(slot);
+        let Job { ctx, drafted, done, refine_time, .. } = job;
+        let result = self.build_responses(drafted, done, refine_time);
+        self.completed.push((ctx, result));
+    }
+
+    fn build_responses(
+        &self,
+        drafted: DraftedBundle,
+        done: Vec<Option<DoneChunk>>,
+        refine_time: Duration,
+    ) -> Result<Vec<GenResponse>> {
+        let m = self.sched.metrics;
+        let DraftedBundle { bundle, chunks, decision, draft_time, started, .. } = drafted;
+        let key = &bundle.key;
+        let n_total = bundle.total_samples();
+        let t0 = decision.t0;
+        let nfe_budget = self.sched.controller().nfe_budget(key.steps_cold, key.t0());
+        m.chosen_t0.record(t0);
+        let cascade_off = self.sched.cascade().is_off();
+
+        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
+        let mut nfe = 0usize;
+        let mut cascade_info: Option<CascadeInfo> = None;
+        for (chunk, dc) in chunks.iter().zip(done) {
+            let dc = dc.expect("every chunk retired before finalize");
+            let total: usize = dc.stages.iter().map(|s| s.nfe).sum();
+            debug_assert!(total <= nfe_budget, "NFE guarantee floor violated");
+            m.nfe_saved.add(nfe_budget.saturating_sub(total) as u64);
+            m.denoiser_calls.add(total as u64);
+            m.batches_executed.inc();
+            if cascade_off {
+                nfe = total; // same schedule for every chunk in the bundle
+            } else {
+                nfe = nfe.max(total); // chunks may gate out at different stages
+                if dc.early_exit {
+                    m.cascade_early_exits.inc();
+                }
+                for stage in &dc.stages {
+                    m.cascade_stage_nfe.record(stage.nfe as f64);
+                    if let Some(d) = stage.gate_eval {
+                        m.gate_eval.record(d);
+                    }
+                }
+                let info = cascade_info.get_or_insert(CascadeInfo {
+                    stages_used: 0,
+                    nfe_per_stage: Vec::new(),
+                    early_exit: false,
+                });
+                if dc.stages.len() > info.stages_used {
+                    info.stages_used = dc.stages.len();
+                    info.nfe_per_stage = dc.stages.iter().map(|s| s.nfe).collect();
+                }
+                info.early_exit |= dc.early_exit;
+            }
+            for r in 0..chunk.chunk_len {
+                rows.push(dc.tokens[r * chunk.meta.seq_len..(r + 1) * chunk.meta.seq_len].to_vec());
+            }
+        }
+        debug_assert_eq!(rows.len(), n_total);
+
+        let total_time = started.elapsed();
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(bundle.requests.len());
+        let mut cursor = 0;
+        for req in &bundle.requests {
+            let samples = rows[cursor..cursor + req.n_samples].to_vec();
+            cursor += req.n_samples;
+            responses.push(GenResponse {
+                id: req.id,
+                samples,
+                nfe,
+                t0_used: t0,
+                cascade: cascade_info.clone(),
+                queue_wait: now.saturating_duration_since(req.submitted).saturating_sub(total_time),
+                draft_time,
+                refine_time,
+                total_time,
+                degraded: None,
+            });
+            m.requests_completed.inc();
+            m.samples.record(req.n_samples as u64);
+        }
+        m.batch_exec.record(total_time);
+        Ok(responses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::Cascade;
+    use crate::config::CascadeConfig;
+    use crate::control::Controller;
+    use crate::coordinator::batcher::WorkBundle;
+    use crate::coordinator::request::GenRequest;
+    use crate::coordinator::testutil::{mock_manifest, request, TestExec};
+    use crate::core::schedule::guaranteed_nfe;
+    use crate::metrics::ServingMetrics;
+    use crate::runtime::engine::{Executor, LoopReport, LoopScratch, LoopSpec};
+    use crate::runtime::artifact::ArtifactMeta;
+    use crate::runtime::Manifest;
+    use anyhow::bail;
+
+    fn mk_bundle(spec: &[(u64, usize)]) -> WorkBundle {
+        let reqs: Vec<GenRequest> = spec
+            .iter()
+            .map(|&(seed, n)| {
+                let mut r = request(0, n);
+                r.seed = seed;
+                r
+            })
+            .collect();
+        WorkBundle::new(reqs[0].bundle_key(), reqs)
+    }
+
+    fn cascade_for(mode: &str) -> Cascade {
+        // Threshold 0 makes `gated` deterministically exit after stage 1 —
+        // the retirement-asymmetry case worth pinning.
+        let cfg =
+            CascadeConfig { mode: mode.into(), gate_threshold: 0.0, ..CascadeConfig::default() };
+        Cascade::from_config(&cfg).unwrap()
+    }
+
+    /// The wire-visible part of a response (timings excluded).
+    fn wire(r: &GenResponse) -> (f64, usize, Vec<Vec<i32>>, Option<CascadeInfo>, bool) {
+        (r.t0_used, r.nfe, r.samples.clone(), r.cascade.clone(), r.degraded.is_some())
+    }
+
+    fn reference(mode: &str, bundles: &[Vec<(u64, usize)>]) -> Vec<Vec<(f64, usize, Vec<Vec<i32>>, Option<CascadeInfo>, bool)>> {
+        let exec = TestExec::stochastic(vec![1, 4, 8], 6, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 6, 5);
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::with_policies(
+            &exec,
+            &manifest,
+            &metrics,
+            99,
+            Controller::static_default(),
+            cascade_for(mode),
+        );
+        bundles
+            .iter()
+            .map(|b| {
+                let drafted = sched.draft_bundle(mk_bundle(b)).unwrap();
+                sched.refine_bundle(drafted).unwrap().iter().map(wire).collect()
+            })
+            .collect()
+    }
+
+    const BUNDLES: &[&[(u64, usize)]] =
+        &[&[(1000, 2), (1001, 3)], &[(2000, 1)], &[(3000, 6), (3001, 1), (3002, 2)]];
+
+    #[test]
+    fn composed_output_is_bitwise_identical_to_per_bundle_refine() {
+        // The tentpole parity pin, composer-core level: three bundles of
+        // mixed sizes admitted together, stepped through shared composed
+        // dispatches, must produce exactly the per-bundle path's wire
+        // responses — per cascade mode, including the gated early exit.
+        for mode in ["off", "fixed", "gated"] {
+            let bundles: Vec<Vec<(u64, usize)>> =
+                BUNDLES.iter().map(|b| b.to_vec()).collect();
+            let want = reference(mode, &bundles);
+
+            let exec = TestExec::stochastic(vec![1, 4, 8], 6, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4, 8], 6, 5);
+            let metrics = ServingMetrics::default();
+            let sched = Scheduler::with_policies(
+                &exec,
+                &manifest,
+                &metrics,
+                99,
+                Controller::static_default(),
+                cascade_for(mode),
+            );
+            let mut comp: ComposedRefiner<usize> = ComposedRefiner::new(&sched, 0);
+            for (bi, b) in bundles.iter().enumerate() {
+                comp.admit(bi, sched.draft_bundle(mk_bundle(b)).unwrap());
+            }
+            comp.run_until_idle();
+            let mut got = comp.take_completed();
+            assert_eq!(got.len(), bundles.len(), "{mode}: lost bundles");
+            got.sort_by_key(|(bi, _)| *bi);
+            for (bi, result) in got {
+                let responses = result.unwrap();
+                let wired: Vec<_> = responses.iter().map(wire).collect();
+                assert_eq!(wired, want[bi], "{mode}: bundle {bi} diverged composed");
+            }
+            // Composed steps actually happened and were observed.
+            assert!(metrics.rows_per_step.snapshot().count > 0);
+            assert!(metrics.batch_occupancy.get() > 0);
+        }
+    }
+
+    #[test]
+    fn mid_flight_admission_at_step_boundaries_changes_nothing() {
+        // vLLM-style continuous admission: bundle B joins after A already
+        // advanced two composed steps; both still match their per-bundle
+        // references bit for bit, and a row cap that splits dispatches
+        // doesn't change values either.
+        for max_rows in [0usize, 4] {
+            let bundles: Vec<Vec<(u64, usize)>> =
+                vec![BUNDLES[0].to_vec(), BUNDLES[2].to_vec()];
+            let want = reference("fixed", &bundles);
+            let exec = TestExec::stochastic(vec![1, 4, 8], 6, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4, 8], 6, 5);
+            let metrics = ServingMetrics::default();
+            let sched = Scheduler::with_policies(
+                &exec,
+                &manifest,
+                &metrics,
+                99,
+                Controller::static_default(),
+                cascade_for("fixed"),
+            );
+            let mut comp: ComposedRefiner<usize> = ComposedRefiner::new(&sched, max_rows);
+            comp.admit(0, sched.draft_bundle(mk_bundle(&bundles[0])).unwrap());
+            assert!(comp.step());
+            assert!(comp.step());
+            comp.admit(1, sched.draft_bundle(mk_bundle(&bundles[1])).unwrap());
+            comp.run_until_idle();
+            assert!(!comp.has_work());
+            let mut got = comp.take_completed();
+            got.sort_by_key(|(bi, _)| *bi);
+            for (bi, result) in got {
+                let wired: Vec<_> = result.unwrap().iter().map(wire).collect();
+                assert_eq!(wired, want[bi], "max_rows={max_rows}: bundle {bi} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn composed_nfe_respects_the_guarantee() {
+        // The per-request guarantee with the composer engaged: summed
+        // per-stage NFE never exceeds guaranteed_nfe(steps_cold, t0).
+        for mode in ["off", "fixed", "gated"] {
+            let exec = TestExec::stochastic(vec![1, 4, 8], 6, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4, 8], 6, 5);
+            let metrics = ServingMetrics::default();
+            let sched = Scheduler::with_policies(
+                &exec,
+                &manifest,
+                &metrics,
+                7,
+                Controller::static_default(),
+                cascade_for(mode),
+            );
+            let mut comp: ComposedRefiner<()> = ComposedRefiner::new(&sched, 0);
+            comp.admit((), sched.draft_bundle(mk_bundle(&[(5, 4), (6, 3)])).unwrap());
+            comp.run_until_idle();
+            let budget = guaranteed_nfe(10, 0.5); // request(): t0=0.5, 10 steps
+            for (_, result) in comp.take_completed() {
+                for resp in result.unwrap() {
+                    assert!(resp.nfe <= budget, "{mode}: nfe {} > budget {budget}", resp.nfe);
+                    assert!(resp.nfe >= 1);
+                    if let Some(info) = &resp.cascade {
+                        assert_eq!(info.nfe_per_stage.iter().sum::<usize>(), resp.nfe, "{mode}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// An executor whose composed (`step_rows_into`) path always fails
+    /// but whose per-bundle loop works — exercises failure containment.
+    struct ComposedPathDown(TestExec);
+
+    impl Executor for ComposedPathDown {
+        fn step_into(
+            &self,
+            artifact: &str,
+            tokens: &[i32],
+            t: f32,
+            h: f32,
+            warp: f32,
+            out: &mut Vec<f32>,
+        ) -> anyhow::Result<()> {
+            self.0.step_into(artifact, tokens, t, h, warp, out)
+        }
+        fn step_rows_into(
+            &self,
+            _artifact: &str,
+            _tokens: &[i32],
+            _seq_len: usize,
+            _rows: &[RowStep],
+            _out: &mut Vec<f32>,
+        ) -> anyhow::Result<()> {
+            bail!("composed path down")
+        }
+        fn run_loop(
+            &self,
+            spec: &LoopSpec,
+            tokens: &mut Vec<i32>,
+            scratch: &mut LoopScratch,
+        ) -> anyhow::Result<LoopReport> {
+            self.0.run_loop(spec, tokens, scratch)
+        }
+        fn draft(&self, a: &str, n: &[f32]) -> anyhow::Result<Vec<i32>> {
+            self.0.draft(a, n)
+        }
+        fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+            self.0.meta(artifact)
+        }
+    }
+
+    fn manifest_and(mode: &str) -> (Manifest, Cascade) {
+        (mock_manifest(&["cold"], &[1, 4, 8], 6, 5), cascade_for(mode))
+    }
+
+    #[test]
+    fn dispatch_failure_falls_back_to_the_per_bundle_path_bitwise() {
+        // A composed-step error re-runs every in-flight bundle from its
+        // untouched draft: no lost bundles, and (stateless RNG) the
+        // fallback outputs equal the healthy composed/per-bundle outputs.
+        let bundles: Vec<Vec<(u64, usize)>> = BUNDLES.iter().map(|b| b.to_vec()).collect();
+        let want = reference("fixed", &bundles);
+        let exec = ComposedPathDown(TestExec::stochastic(vec![1, 4, 8], 6, 5, 2));
+        let (manifest, cascade) = manifest_and("fixed");
+        let metrics = ServingMetrics::default();
+        let sched = Scheduler::with_policies(
+            &exec,
+            &manifest,
+            &metrics,
+            99,
+            Controller::static_default(),
+            cascade,
+        );
+        let mut comp: ComposedRefiner<usize> = ComposedRefiner::new(&sched, 0);
+        for (bi, b) in bundles.iter().enumerate() {
+            comp.admit(bi, sched.draft_bundle(mk_bundle(b)).unwrap());
+        }
+        comp.run_until_idle();
+        assert!(!comp.has_work());
+        let mut got = comp.take_completed();
+        assert_eq!(got.len(), bundles.len(), "fallback lost bundles");
+        got.sort_by_key(|(bi, _)| *bi);
+        for (bi, result) in got {
+            let wired: Vec<_> = result.unwrap().iter().map(wire).collect();
+            assert_eq!(wired, want[bi], "fallback diverged for bundle {bi}");
+        }
+    }
+}

@@ -32,12 +32,14 @@
 //! order within a bundle; NFE == the paper's guaranteed formula.
 
 pub mod batcher;
+pub mod composer;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
 pub mod service;
 
 pub use batcher::{Batcher, FlushPolicy, WorkBundle};
+pub use composer::ComposedRefiner;
 pub use queue::BoundedQueue;
 pub use request::{BundleKey, DraftSpec, GenRequest, GenResponse};
 pub use scheduler::{DraftedBundle, DraftedChunk, Scheduler};

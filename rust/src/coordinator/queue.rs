@@ -98,6 +98,36 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Blocking pop of **everything ready** in one wakeup: waits like
+    /// [`BoundedQueue::pop_timeout`] for the first item, then drains the
+    /// rest of the backlog under the same lock. One notify wakes a
+    /// consumer once, not once per item — the ingest primitive for the
+    /// step-level batch composer, which wants every ready bundle admitted
+    /// at the same step boundary. Returns an empty vec on timeout or when
+    /// closed+empty.
+    pub fn pop_many(&self, timeout: Duration) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let out: Vec<T> = g.items.drain(..).collect();
+                self.cv.notify_all(); // wake push_wait-ers: space freed
+                return out;
+            }
+            if g.closed {
+                return Vec::new();
+            }
+            let (g2, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = g2;
+            if res.timed_out() {
+                let out: Vec<T> = g.items.drain(..).collect();
+                if !out.is_empty() {
+                    self.cv.notify_all();
+                }
+                return out;
+            }
+        }
+    }
+
     /// Drain everything currently queued (non-blocking).
     pub fn drain(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
@@ -215,6 +245,42 @@ mod tests {
         assert_eq!(pusher.join().unwrap(), Err(2));
         // The original item still drains.
         assert_eq!(q.pop_timeout(Duration::from_millis(10)), Some(1));
+    }
+
+    #[test]
+    fn pop_many_takes_whole_backlog_in_one_wakeup() {
+        let q = Arc::new(BoundedQueue::new(8));
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        // A ready backlog comes out whole, FIFO, in one call.
+        assert_eq!(q.pop_many(Duration::from_millis(1)), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+        // Empty + timeout -> empty vec, bounded wait.
+        assert_eq!(q.pop_many(Duration::from_millis(1)), Vec::<i32>::new());
+        // A blocked pop_many wakes for the first push and drains whatever
+        // arrived by the time it gets the lock.
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || q2.pop_many(Duration::from_millis(500)));
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(41).unwrap();
+        q.push(42).unwrap();
+        let got = popper.join().unwrap();
+        assert!(!got.is_empty() && got[0] == 41, "{got:?}");
+        // Closed + empty -> empty vec immediately; closed + backlog drains.
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop_many(Duration::from_millis(1)), vec![7]);
+        assert_eq!(q.pop_many(Duration::from_millis(1)), Vec::<i32>::new());
+        // pop_many frees space for a blocked push_wait-er.
+        let q3 = Arc::new(BoundedQueue::new(1));
+        q3.push(1).unwrap();
+        let q4 = q3.clone();
+        let pusher = std::thread::spawn(move || q4.push_wait(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q3.pop_many(Duration::from_millis(100)), vec![1]);
+        pusher.join().unwrap().unwrap();
+        assert_eq!(q3.pop_many(Duration::from_millis(100)), vec![2]);
     }
 
     #[test]

@@ -45,8 +45,9 @@ use std::time::{Duration, Instant};
 
 /// Substream lane for draft-phase RNG draws.
 const DRAFT_LANE: u64 = 0;
-/// Substream lane for refine-phase run seeds.
-const REFINE_LANE: u64 = 1;
+/// Substream lane for refine-phase run seeds. `pub(crate)` so the batch
+/// composer derives exactly the run seeds the per-bundle path would.
+pub(crate) const REFINE_LANE: u64 = 1;
 
 /// Derive the stateless per-bundle seed from the config seed, the bundle
 /// key, and the request seeds (in FIFO order). Request ids and timestamps
@@ -176,6 +177,19 @@ impl<'a> Scheduler<'a> {
     /// The stateless seed this scheduler derives for a bundle.
     pub fn bundle_seed(&self, bundle: &WorkBundle) -> u64 {
         bundle_seed(self.seed, bundle)
+    }
+
+    /// The warm-start controller — shared with the step-level batch
+    /// composer ([`crate::coordinator::composer`]) so composed and
+    /// per-bundle refinement compute identical NFE budgets.
+    pub(crate) fn controller(&self) -> &Controller {
+        &self.controller
+    }
+
+    /// The cascade policy — shared with the batch composer so both
+    /// refine paths plan identical segment ladders and gates.
+    pub(crate) fn cascade(&self) -> &Cascade {
+        &self.cascade
     }
 
     /// Resolve the draft model for a bundle at a given compiled batch size

@@ -51,9 +51,10 @@
 //! to serve yet) and stay typed errors.
 
 use crate::cascade::Cascade;
-use crate::config::WsfmConfig;
+use crate::config::{ComposerConfig, WsfmConfig};
 use crate::control::Controller;
 use crate::coordinator::batcher::{Batcher, FlushPolicy, WorkBundle};
+use crate::coordinator::composer::ComposedRefiner;
 use crate::coordinator::queue::{BoundedQueue, QueueFull};
 use crate::coordinator::request::{BundleKey, GenRequest, GenResponse};
 use crate::coordinator::scheduler::{DraftedBundle, Scheduler};
@@ -168,6 +169,10 @@ impl Service {
         // cadence (bounds drain latency) and the draft-fallback switch.
         let stage_poll = config.robustness.stage_poll();
         let draft_fallback = config.robustness.draft_fallback;
+        // Step-level batch composer: when enabled, REFINE merges rows
+        // from every in-flight bundle into shared engine steps
+        // ([`crate::coordinator::composer`]); off = per-bundle path.
+        let composer = config.composer.clone();
 
         if config.pipeline_depth <= 1 {
             // Serial path: the admission thread executes bundles inline —
@@ -190,13 +195,22 @@ impl Service {
                         match scheduler.draft_bundle(bundle) {
                             Ok(drafted) => {
                                 let fallback = fallback_plan(&drafted, draft_fallback);
-                                deliver_or_degrade(
-                                    scheduler.refine_bundle(drafted),
-                                    fallback,
-                                    responders,
-                                    &m,
-                                    &key,
-                                );
+                                // Even serially the composer earns its
+                                // keep: a bundle's chunks (and cascade
+                                // segments) share engine steps.
+                                let result = if composer.enabled {
+                                    let mut comp =
+                                        ComposedRefiner::new(&scheduler, composer.max_rows);
+                                    comp.admit((), drafted);
+                                    comp.run_until_idle();
+                                    match comp.take_completed().pop() {
+                                        Some((_, r)) => r,
+                                        None => Err(anyhow::anyhow!("composer lost the bundle")),
+                                    }
+                                } else {
+                                    scheduler.refine_bundle(drafted)
+                                };
+                                deliver_or_degrade(result, fallback, responders, &m, &key);
                             }
                             Err(e) => deliver(Err(e), responders, &m, &key),
                         }
@@ -243,12 +257,13 @@ impl Service {
                 let (rq, gate) = (refine_q.clone(), gate.clone());
                 let controller = controller.clone();
                 let cascade = cascade.clone();
+                let composer = composer.clone();
                 std::thread::Builder::new()
                     .name(format!("wsfm-refine-{w}"))
                     .spawn(move || {
                         refine_stage(
                             &*exec, &*manifest, &metrics, seed, controller, cascade, &rq, &gate,
-                            stage_poll, draft_fallback,
+                            stage_poll, draft_fallback, composer,
                         )
                     })
                     .expect("spawning refine worker thread");
@@ -620,6 +635,13 @@ fn draft_stage(
 /// refine channel; with a replicated executor fleet each concurrently
 /// popped bundle lands on a distinct engine replica (least-loaded
 /// routing), so refinement itself scales past one execution stream.
+///
+/// With `composer.enabled` the worker runs the continuous-batching loop
+/// instead: every ready [`DraftedJob`] admits into a [`ComposedRefiner`]
+/// at the next step boundary, in-flight bundles share composed engine
+/// steps, and finished bundles deliver as they retire — same outputs
+/// ([`crate::coordinator::composer`]'s bitwise contract), same
+/// accounting, different grouping.
 #[allow(clippy::too_many_arguments)]
 fn refine_stage(
     exec: &dyn Executor,
@@ -632,8 +654,13 @@ fn refine_stage(
     gate: &InflightGate,
     stage_poll: Duration,
     draft_fallback: bool,
+    composer: ComposerConfig,
 ) {
     let scheduler = Scheduler::with_policies(exec, manifest, metrics, seed, controller, cascade);
+    if composer.enabled {
+        composed_refine_loop(&scheduler, refine_q, gate, stage_poll, draft_fallback, &composer);
+        return;
+    }
     loop {
         match refine_q.pop_timeout(stage_poll) {
             Some(job) => {
@@ -655,6 +682,50 @@ fn refine_stage(
                     break;
                 }
             }
+        }
+    }
+}
+
+/// What the composed REFINE loop needs to deliver a finished bundle —
+/// captured at admission (the fallback borrows the pre-refine draft).
+struct RefineCtx {
+    key: BundleKey,
+    fallback: Option<FallbackPlan>,
+    responders: Vec<Responder>,
+}
+
+/// The continuous cross-bundle batching loop: interleave queue ingest
+/// with composed steps. While rows are in flight, ingest is a
+/// non-blocking drain (new bundles join at the next step boundary
+/// without stalling the ones mid-trajectory); idle, it blocks one poll
+/// like the per-bundle loop so drain latency keeps the same bound.
+fn composed_refine_loop(
+    scheduler: &Scheduler<'_>,
+    refine_q: &BoundedQueue<DraftedJob>,
+    gate: &InflightGate,
+    stage_poll: Duration,
+    draft_fallback: bool,
+    composer: &ComposerConfig,
+) {
+    let mut comp: ComposedRefiner<'_, '_, RefineCtx> =
+        ComposedRefiner::new(scheduler, composer.max_rows);
+    loop {
+        let ready =
+            if comp.has_work() { refine_q.drain() } else { refine_q.pop_many(stage_poll) };
+        for job in ready {
+            let DraftedJob { drafted, responders } = job;
+            let key = drafted.bundle.key.clone();
+            let fallback = fallback_plan(&drafted, draft_fallback);
+            comp.admit(RefineCtx { key, fallback, responders }, drafted);
+        }
+        comp.step();
+        for (ctx, result) in comp.take_completed() {
+            deliver_or_degrade(result, ctx.fallback, ctx.responders, scheduler.metrics, &ctx.key);
+            scheduler.metrics.inflight_bundles.dec();
+            gate.release();
+        }
+        if !comp.has_work() && refine_q.is_closed() && refine_q.is_empty() {
+            break;
         }
     }
 }
@@ -827,6 +898,16 @@ mod tests {
         mode: &str,
         cascade_mode: &str,
     ) -> Vec<(f64, Vec<Vec<i32>>)> {
+        pipeline_outputs_composer(depth, workers, mode, cascade_mode, false)
+    }
+
+    fn pipeline_outputs_composer(
+        depth: usize,
+        workers: usize,
+        mode: &str,
+        cascade_mode: &str,
+        composed: bool,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
         // seq_len 16 keeps the different-seed inequality check below safe
         // from chance collisions (the drift keeps ~40% per-token overlap).
         let exec = TestExec::stochastic(vec![1, 4, 8], 16, 5, 2);
@@ -840,6 +921,7 @@ mod tests {
         cfg.seed = 99;
         cfg.control.mode = mode.into();
         cfg.cascade.mode = cascade_mode.into();
+        cfg.composer.enabled = composed;
         let svc = Service::start(exec, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -901,6 +983,16 @@ mod tests {
         depth: usize,
         cascade_mode: &str,
     ) -> Vec<(f64, Vec<Vec<i32>>)> {
+        fleet_outputs_composer(replicas, refine_workers, depth, cascade_mode, false)
+    }
+
+    fn fleet_outputs_composer(
+        replicas: usize,
+        refine_workers: usize,
+        depth: usize,
+        cascade_mode: &str,
+        composed: bool,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
         use crate::fleet::FleetHandle;
         let execs: Vec<Arc<dyn Executor>> = (0..replicas)
             .map(|_| Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2)) as Arc<dyn Executor>)
@@ -916,6 +1008,7 @@ mod tests {
         cfg.fleet.refine_workers = refine_workers;
         cfg.seed = 99;
         cfg.cascade.mode = cascade_mode.into();
+        cfg.composer.enabled = composed;
         let svc = Service::start(fleet, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -982,6 +1075,87 @@ mod tests {
         // identical across the serial path and a 4-replica fleet.
         let gated = pipeline_outputs_cascade(1, 1, "static", "gated");
         assert_eq!(gated, fleet_outputs_cascade(4, 2, 4, "gated"));
+    }
+
+    #[test]
+    fn composed_outputs_bitwise_identical_across_settings() {
+        // The tentpole acceptance pin: the step-level batch composer is a
+        // pure regrouping. Reference is the serial, fleet-less, composer-
+        // off, cascade-off path; composer-on must reproduce it byte for
+        // byte across the serial path, the pipelined path, and a fleet
+        // sweep of replicas {1, 4} × refine_workers {1, 2} × pipeline
+        // depth {1, 4} — cross-bundle sharing, mid-flight admission, and
+        // row retirement can never change a single token.
+        let reference = pipeline_outputs(1, 1, "static");
+        assert_eq!(
+            reference,
+            pipeline_outputs_composer(1, 1, "static", "off", true),
+            "composer diverged on the serial path"
+        );
+        assert_eq!(
+            reference,
+            pipeline_outputs_composer(4, 2, "static", "off", true),
+            "composer diverged on the pipelined path"
+        );
+        // Composer × cascade: split segments compose across bundles too.
+        assert_eq!(
+            reference,
+            pipeline_outputs_composer(4, 2, "static", "fixed", true),
+            "composer diverged with a fixed cascade ladder"
+        );
+        for depth in [1usize, 4] {
+            for (replicas, refine_workers) in [(1, 1), (1, 2), (4, 1), (4, 2)] {
+                assert_eq!(
+                    reference,
+                    fleet_outputs_composer(replicas, refine_workers, depth, "fixed", true),
+                    "composed outputs diverged at replicas={replicas} \
+                     refine_workers={refine_workers} depth={depth}"
+                );
+            }
+        }
+        // Gated cascades take data-dependent exits; composed gated output
+        // equals uncomposed gated output, serial and fleet alike.
+        let gated = pipeline_outputs_cascade(1, 1, "static", "gated");
+        assert_eq!(gated, pipeline_outputs_composer(1, 1, "static", "gated", true));
+        assert_eq!(gated, fleet_outputs_composer(4, 2, 4, "gated", true));
+    }
+
+    #[test]
+    fn composed_serving_respects_the_nfe_guarantee() {
+        // The paper's per-request guarantee survives composition: every
+        // response refined through shared engine steps still reports
+        // nfe <= guaranteed_nfe(steps_cold, t0) — sharing a step with
+        // another bundle never bills extra denoiser calls to a request.
+        use crate::core::schedule::guaranteed_nfe;
+        let exec = TestExec::stochastic(vec![1, 4, 8], 16, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
+        let mut cfg = test_config();
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 2;
+        cfg.seed = 99;
+        cfg.cascade.mode = "gated".into();
+        cfg.composer.enabled = true;
+        let svc = Service::start(exec, manifest, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            let mut r = request(0, (i as usize % 3) + 1);
+            r.seed = 2000 + i;
+            rxs.push(svc.submit(r).unwrap());
+        }
+        let bound = guaranteed_nfe(10, 0.5); // request(): steps_cold 10, t0 0.5
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert!(resp.degraded.is_none());
+            assert!(resp.nfe > 0 && resp.nfe <= bound, "nfe {} > bound {bound}", resp.nfe);
+            if let Some(c) = &resp.cascade {
+                assert_eq!(c.nfe_per_stage.iter().sum::<usize>(), resp.nfe);
+            }
+        }
+        // The composer's step-level telemetry flowed: rows-per-step
+        // samples were recorded and occupancy was published.
+        assert!(svc.metrics.rows_per_step.snapshot().count > 0);
+        assert!(svc.metrics.batch_occupancy.get() > 0);
+        svc.shutdown();
     }
 
     #[test]
@@ -1172,6 +1346,14 @@ mod tests {
         plan: crate::faults::FaultPlan,
         rb: &crate::config::RobustnessConfig,
     ) -> Vec<Result<GenResponse, String>> {
+        chaos_run_composer(plan, rb, false)
+    }
+
+    fn chaos_run_composer(
+        plan: crate::faults::FaultPlan,
+        rb: &crate::config::RobustnessConfig,
+        composed: bool,
+    ) -> Vec<Result<GenResponse, String>> {
         use crate::faults::FaultyExec;
         use crate::fleet::{FleetHandle, ReplicaFactory};
         let factories: Vec<ReplicaFactory> = (0..4)
@@ -1196,6 +1378,7 @@ mod tests {
         cfg.seed = 99;
         cfg.cascade.mode = "gated".into();
         cfg.robustness = rb.clone();
+        cfg.composer.enabled = composed;
         let svc = Service::start(fleet, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -1260,6 +1443,61 @@ mod tests {
                             (resp.t0_used, resp.samples.clone()),
                             *want,
                             "refined-under-chaos output diverged (seed {seed})"
+                        );
+                    }
+                    Err(msg) => {
+                        errors += 1;
+                        assert!(!msg.is_empty());
+                    }
+                }
+            }
+            assert_eq!(ok + degraded + errors, expected.len());
+        }
+    }
+
+    #[test]
+    fn chaos_with_composer_preserves_the_bitwise_contract() {
+        use crate::config::RobustnessConfig;
+        use crate::faults::FaultPlan;
+        // Satellite: the chaos harness re-run with the step-level batch
+        // composer driving REFINE. A dispatch fault now hits a *composed*
+        // step shared by several bundles — the composer fails the whole
+        // cohort over to the per-bundle path, which re-runs each bundle
+        // deterministically, so refined outputs stay bitwise-identical
+        // and every envelope still resolves ok/degraded/error.
+        let rb = RobustnessConfig {
+            stage_poll_ms: 10,
+            respawn_backoff_ms: 1,
+            respawn_backoff_cap_ms: 5,
+            max_respawns: 1000,
+            ..RobustnessConfig::default()
+        };
+        let expected = pipeline_outputs_cascade(1, 1, "static", "gated");
+        // Fault-free composed chaos is the serial uncomposed gated path,
+        // byte for byte.
+        let reference = chaos_run_composer(FaultPlan::none(0), &rb, true);
+        assert_eq!(reference.len(), expected.len());
+        for (got, want) in reference.iter().zip(&expected) {
+            let resp = got.as_ref().expect("fault-free composed run must not error");
+            assert!(resp.degraded.is_none(), "fault-free composed run must not degrade");
+            assert_eq!((resp.t0_used, resp.samples.clone()), *want);
+        }
+        for seed in [7u64, 21] {
+            let out = chaos_run_composer(FaultPlan::chaos(seed), &rb, true);
+            assert_eq!(out.len(), expected.len(), "lost envelopes under composed chaos");
+            let (mut ok, mut degraded, mut errors) = (0usize, 0usize, 0usize);
+            for (got, want) in out.iter().zip(&expected) {
+                match got {
+                    Ok(resp) if resp.degraded.is_some() => {
+                        degraded += 1;
+                        assert_eq!(resp.nfe, 0, "degraded response claims refine NFE");
+                    }
+                    Ok(resp) => {
+                        ok += 1;
+                        assert_eq!(
+                            (resp.t0_used, resp.samples.clone()),
+                            *want,
+                            "composed refined-under-chaos output diverged (seed {seed})"
                         );
                     }
                     Err(msg) => {

@@ -123,8 +123,14 @@ pub fn categorical_batch(probs: &[f32], vocab: usize, out: &mut [i32], rng: &mut
     }
 }
 
+/// One row of the substream path: row `row_i` at absolute Euler step
+/// `step` draws its uniform from `Pcg64::substream(seed, step, row_i)`.
+/// `pub(crate)` so the step-level batch composer
+/// ([`crate::coordinator::composer`]) can sample individual rows of a
+/// composed batch with exactly the coordinates the unbatched loop uses —
+/// that is what makes composed and per-bundle outputs bitwise-identical.
 #[inline]
-fn sample_row_seeded(row: &[f32], seed: u64, step: u64, row_i: u64) -> i32 {
+pub(crate) fn sample_row_seeded(row: &[f32], seed: u64, step: u64, row_i: u64) -> i32 {
     let u = Pcg64::substream(seed, step, row_i).uniform_f32();
     sample_row_icdf(row, u).unwrap_or(DEGENERATE_TOKEN) as i32
 }

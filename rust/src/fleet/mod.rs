@@ -578,6 +578,20 @@ impl Executor for FleetHandle {
         self.dispatch(artifact, |exec| exec.step_into(artifact, tokens, t, h, warp, out))
     }
 
+    fn step_rows_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        seq_len: usize,
+        rows: &[crate::runtime::engine::RowStep],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // One routing decision per composed dispatch: every row of a
+        // composed step lands on the same replica (artifact affinity makes
+        // consecutive steps of the same family resume there too).
+        self.dispatch(artifact, |exec| exec.step_rows_into(artifact, tokens, seq_len, rows, out))
+    }
+
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
         self.dispatch(artifact, |exec| exec.draft(artifact, noise))
     }

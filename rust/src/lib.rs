@@ -90,6 +90,24 @@
 //! `cascade.mode = off` (default) is the single-segment path verbatim.
 //! See EXPERIMENTS.md §Cascade.
 //!
+//! ## Continuous cross-bundle batching
+//!
+//! Per-bundle refinement leaves the engine under-filled whenever bundles
+//! are small or staggered. [`coordinator::ComposedRefiner`] is a
+//! step-level batch composer over the REFINE stage: rows from every
+//! in-flight bundle (and cascade segment) merge into shared engine
+//! steps, grouped by `(domain, tag, seq_len)` family and sorted so rows
+//! on the same `(t, h, warp)` coordinates share one forward pass. Rows
+//! retire as their segments complete and newly drafted bundles admit at
+//! the next step boundary — continuous batching in the vLLM sense, at
+//! flow-matching-step granularity. Because every token draw keys on
+//! `(run_seed, absolute step, row position)` and composition only
+//! changes *grouping*, never values, composed outputs are
+//! bitwise-identical to the per-bundle path; a failed composed dispatch
+//! fails the whole cohort over to that path, keeping the fault envelope.
+//! `composer.enabled = false` (default) is the per-bundle loop verbatim.
+//! See EXPERIMENTS.md §Batching.
+//!
 //! ## Fault tolerance
 //!
 //! The failure-side envelope: every request resolves to ok, a degraded

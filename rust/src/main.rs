@@ -148,6 +148,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     } else {
         println!("cascade: off (single-segment refinement)");
     }
+    if cfg.composer.enabled {
+        println!(
+            "composer: continuous cross-bundle batching, max_rows={} \
+             (rows_per_step / batch_occupancy in the metrics report)",
+            if cfg.composer.max_rows == 0 { "unbounded".into() } else { cfg.composer.max_rows.to_string() }
+        );
+    } else {
+        println!("composer: off (per-bundle refinement)");
+    }
     server.run()?;
     println!("server stopped; final metrics:\n{}", service.metrics.report());
     println!("fleet: {}", fleet.summary());

@@ -37,6 +37,11 @@ impl Gauge {
     pub fn dec(&self) {
         self.v.fetch_sub(1, Ordering::Relaxed);
     }
+    /// Overwrite with a point-in-time level (e.g. batch occupancy after a
+    /// composed step).
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
     pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -366,6 +371,14 @@ pub struct ServingMetrics {
     pub batch_exec: LatencyHistogram,
     pub request_latency: LatencyHistogram,
     pub samples: Throughput,
+    /// Useful rows advanced per composed engine step (the step-level
+    /// batch composer's merge width; empty when the composer is off).
+    pub rows_per_step: ValueHistogram,
+    /// Mean row occupancy of the latest composed step's dispatches, in
+    /// percent of the dispatch row budget (`composer.max_rows`, else the
+    /// family's largest compiled batch; >100 = tiled over several
+    /// compiled batches).
+    pub batch_occupancy: Gauge,
 }
 
 impl Default for ServingMetrics {
@@ -394,6 +407,8 @@ impl Default for ServingMetrics {
             batch_exec: LatencyHistogram::new(4096),
             request_latency: LatencyHistogram::new(4096),
             samples: Throughput::new(),
+            rows_per_step: ValueHistogram::new(4096),
+            batch_occupancy: Gauge::default(),
         }
     }
 }
@@ -401,7 +416,7 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} batch_occupancy={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
@@ -415,8 +430,10 @@ impl ServingMetrics {
             self.cascade_early_exits.get(),
             self.early_flushes.get(),
             self.degraded_responses.get(),
+            self.batch_occupancy.get(),
             self.samples.per_second(),
             self.chosen_t0.snapshot().report("chosen_t0"),
+            self.rows_per_step.snapshot().report("rows_per_step"),
             self.cascade_stage_nfe.snapshot().report("cascade_stage_nfe"),
             self.gate_eval.snapshot().report("gate_eval"),
             self.queue_wait.snapshot().report("queue_wait"),
@@ -491,6 +508,10 @@ mod tests {
         assert_eq!(g.get(), 1);
         g.dec();
         assert_eq!(g.get(), 0);
+        g.set(42);
+        assert_eq!(g.get(), 42);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
     }
 
     #[test]
@@ -511,8 +532,13 @@ mod tests {
         assert!(r.contains("early_flushes=0"));
         assert!(r.contains("chosen_t0"));
         assert!(r.contains("request_latency"));
+        assert!(r.contains("rows_per_step"));
+        assert!(r.contains("batch_occupancy=0"));
         m.degraded_responses.inc();
-        assert!(m.report().contains("degraded=1"));
+        m.batch_occupancy.set(87);
+        let r = m.report();
+        assert!(r.contains("degraded=1"));
+        assert!(r.contains("batch_occupancy=87"));
     }
 
     #[test]

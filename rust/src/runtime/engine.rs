@@ -252,6 +252,23 @@ where
     Ok(LoopReport { nfe: schedule.nfe(), elapsed: start.elapsed(), snapshots })
 }
 
+/// Per-row step parameters for a **composed** engine step: rows merged
+/// from different bundles (or cascade segments) may sit at different
+/// trajectory points, so each row carries its own evaluation time, step
+/// size, and warp factor. Rows with equal `RowStep` values share one
+/// denoiser forward pass; the composer sorts same-parameter rows together
+/// so the common case (concurrently admitted bundles with the same
+/// schedule) is a single full forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowStep {
+    /// Evaluation time of this row's current Euler step.
+    pub t: f32,
+    /// Step size of this row's current Euler step.
+    pub h: f32,
+    /// The row's run-level warp factor.
+    pub warp: f32,
+}
+
 /// Abstract executor — the seam between the coordinator/sampler and PJRT.
 /// Tests substitute a mock; production uses [`EngineHandle`].
 ///
@@ -280,6 +297,60 @@ pub trait Executor: Send + Sync {
         let probs = self.step(artifact, tokens, t, h, warp)?;
         out.clear();
         out.extend_from_slice(&probs);
+        Ok(())
+    }
+
+    /// Run one **composed** step: `rows.len()` rows (`tokens` is
+    /// `[rows, seq_len]`, row-major), each advancing by its own
+    /// [`RowStep`] parameters, in a single executor dispatch. Fills `out`
+    /// with the concatenated `[rows, seq_len, vocab]` transition probs in
+    /// row order. `artifact` names a step artifact of the rows' shared
+    /// `(domain, tag, seq_len, vocab)` family; implementations may
+    /// execute on any compiled batch of that family (padding rows never
+    /// leak — `out` holds exactly `rows.len()` rows' probs).
+    ///
+    /// The default groups maximal runs of parameter-equal rows and issues
+    /// one `step_into` per run — correct for shape-flexible executors
+    /// (mocks, whose kernels are per-row). [`EngineHandle`] overrides it
+    /// to ship the whole composed step to the engine thread in one
+    /// round-trip, where runs are padded onto compiled batches.
+    fn step_rows_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        seq_len: usize,
+        rows: &[RowStep],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if tokens.len() != rows.len() * seq_len.max(1) {
+            bail!(
+                "composed step {}: tokens len {} != {} rows x {}",
+                artifact,
+                tokens.len(),
+                rows.len(),
+                seq_len
+            );
+        }
+        out.clear();
+        let mut probs = Vec::new();
+        let mut start = 0;
+        while start < rows.len() {
+            let mut end = start + 1;
+            while end < rows.len() && rows[end] == rows[start] {
+                end += 1;
+            }
+            let rs = rows[start];
+            self.step_into(
+                artifact,
+                &tokens[start * seq_len..end * seq_len],
+                rs.t,
+                rs.h,
+                rs.warp,
+                &mut probs,
+            )?;
+            out.extend_from_slice(&probs);
+            start = end;
+        }
         Ok(())
     }
 
@@ -347,6 +418,17 @@ impl<T: Executor + ?Sized> Executor for std::sync::Arc<T> {
         (**self).step_into(artifact, tokens, t, h, warp, out)
     }
 
+    fn step_rows_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        seq_len: usize,
+        rows: &[RowStep],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        (**self).step_rows_into(artifact, tokens, seq_len, rows, out)
+    }
+
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
         (**self).draft(artifact, noise)
     }
@@ -378,6 +460,9 @@ pub type StepFn = dyn Executor;
 
 enum Req {
     Step { name: String, tokens: Vec<i32>, t: f32, h: f32, warp: f32, resp: mpsc::Sender<Result<Vec<f32>>> },
+    /// One composed step over rows merged from multiple bundles: one
+    /// round-trip per composed step, not per contributing bundle.
+    StepRows { name: String, tokens: Vec<i32>, seq_len: usize, rows: Vec<RowStep>, resp: mpsc::Sender<Result<Vec<f32>>> },
     /// The engine-resident Euler loop: one request per *run*, not per step.
     RunLoop { spec: LoopSpec, tokens: Vec<i32>, resp: mpsc::Sender<Result<(Vec<i32>, LoopReport)>> },
     Draft { name: String, noise: Vec<f32>, resp: mpsc::Sender<Result<Vec<i32>>> },
@@ -527,6 +612,82 @@ impl Engine {
         Ok(out)
     }
 
+    /// Run one composed step (the `Req::StepRows` service routine):
+    /// maximal runs of parameter-equal rows are padded onto compiled
+    /// batches of the artifact's `(domain, tag)` family and executed;
+    /// padding probs are stripped before the reply, so the caller sees
+    /// exactly `rows.len()` rows — and, because the position-wise step
+    /// kernels are row-independent, exactly the probs the unbatched path
+    /// would have produced for those rows.
+    pub fn exec_step_rows(
+        &mut self,
+        name: &str,
+        tokens: &[i32],
+        seq_len: usize,
+        rows: &[RowStep],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let family = self.meta(name)?;
+        if family.kind != "step" {
+            bail!("artifact {} is not a step (kind={})", family.name, family.kind);
+        }
+        if seq_len != family.seq_len {
+            bail!(
+                "composed step {name}: seq_len {seq_len} != artifact seq_len {}",
+                family.seq_len
+            );
+        }
+        if tokens.len() != rows.len() * seq_len {
+            bail!(
+                "composed step {name}: tokens len {} != {} rows x {seq_len}",
+                tokens.len(),
+                rows.len()
+            );
+        }
+        let mut batches: Vec<usize> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "step" && a.domain == family.domain && a.tag == family.tag)
+            .map(|a| a.batch)
+            .collect();
+        batches.sort_unstable();
+        batches.dedup();
+        let largest = *batches.last().expect("family contains the named artifact");
+        out.clear();
+        out.reserve(rows.len() * seq_len * family.vocab);
+        let mut probs = Vec::new();
+        let mut padded: Vec<i32> = Vec::new();
+        let mut start = 0;
+        while start < rows.len() {
+            let mut end = start + 1;
+            while end < rows.len() && rows[end] == rows[start] {
+                end += 1;
+            }
+            let rs = rows[start];
+            // A run larger than the largest compiled batch executes in
+            // largest-batch slices; smaller runs pad up to the smallest
+            // compiled batch that fits.
+            let mut cursor = start;
+            while cursor < end {
+                let remaining = end - cursor;
+                let exec_batch =
+                    batches.iter().copied().find(|&b| b >= remaining).unwrap_or(largest);
+                let take = remaining.min(exec_batch);
+                let meta =
+                    self.manifest.find_step(&family.domain, &family.tag, exec_batch)?.clone();
+                padded.clear();
+                padded.extend_from_slice(&tokens[cursor * seq_len..(cursor + take) * seq_len]);
+                padded.resize(exec_batch * seq_len, 0);
+                self.exec_step_with_meta(&meta, &padded, rs.t, rs.h, rs.warp, &mut probs)?;
+                out.extend_from_slice(&probs[..take * seq_len * meta.vocab]);
+                cursor += take;
+            }
+            start = end;
+        }
+        Ok(())
+    }
+
     /// Run the whole Euler loop on the engine thread (the `Req::RunLoop`
     /// service routine). Scratch buffers persist per artifact, so
     /// steady-state runs allocate nothing per step beyond what the PJRT
@@ -626,6 +787,13 @@ impl EngineHandle {
                         Req::Step { name, tokens, t, h, warp, resp } => {
                             let _ = resp.send(engine.exec_step(&name, &tokens, t, h, warp));
                         }
+                        Req::StepRows { name, tokens, seq_len, rows, resp } => {
+                            let mut out = Vec::new();
+                            let r = engine
+                                .exec_step_rows(&name, &tokens, seq_len, &rows, &mut out)
+                                .map(|()| out);
+                            let _ = resp.send(r);
+                        }
                         Req::RunLoop { spec, mut tokens, resp } => {
                             let r = engine.exec_loop(&spec, &mut tokens).map(|rep| (tokens, rep));
                             let _ = resp.send(r);
@@ -710,6 +878,31 @@ impl Executor for EngineHandle {
             .send(Req::Step { name: artifact.to_string(), tokens: tokens.to_vec(), t, h, warp, resp })
             .map_err(|_| anyhow::Error::new(EngineDead))?;
         self.recv_guarded(rx)?
+    }
+
+    /// One channel round-trip for the whole composed step (vs one per
+    /// parameter-run through `step`); the engine thread pads runs onto
+    /// compiled batches and strips the padding before replying.
+    fn step_rows_into(
+        &self,
+        artifact: &str,
+        tokens: &[i32],
+        seq_len: usize,
+        rows: &[RowStep],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::StepRows {
+                name: artifact.to_string(),
+                tokens: tokens.to_vec(),
+                seq_len,
+                rows: rows.to_vec(),
+                resp,
+            })
+            .map_err(|_| anyhow::Error::new(EngineDead))?;
+        *out = self.recv_guarded(rx)??;
+        Ok(())
     }
 
     fn draft(&self, artifact: &str, noise: &[f32]) -> Result<Vec<i32>> {
@@ -831,6 +1024,10 @@ pub(crate) mod testsupport {
                             ctl.wait();
                             ctl.record(resp.send(Ok(vec![0.0; tokens.len()])));
                         }
+                        Req::StepRows { tokens, resp, .. } => {
+                            ctl.wait();
+                            ctl.record(resp.send(Ok(vec![0.0; tokens.len()])));
+                        }
                         Req::RunLoop { tokens, resp, .. } => {
                             ctl.wait();
                             let report = LoopReport {
@@ -924,12 +1121,41 @@ mod tests {
         let mut scratch = LoopScratch::default();
         let loop_err = h.run_loop(&spec, &mut tokens, &mut scratch).unwrap_err();
         assert!(loop_err.downcast_ref::<EngineDead>().is_some(), "{loop_err:#}");
+        let mut probs = Vec::new();
+        let rows_err = h
+            .step_rows_into("a", &[0, 0], 1, &[RowStep { t: 0.0, h: 0.5, warp: 1.0 }; 2], &mut probs)
+            .unwrap_err();
+        assert!(rows_err.downcast_ref::<EngineDead>().is_some(), "{rows_err:#}");
         // A live engine's ordinary failures (unknown artifact) are NOT
         // EngineDead — supervisors must be able to tell them apart.
         let live = EngineHandle::spawn(empty_manifest()).unwrap();
         let err = live.draft("nope", &[0.0]).unwrap_err();
         assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
         live.shutdown();
+    }
+
+    #[test]
+    fn step_rows_default_impl_groups_parameter_runs_and_concatenates() {
+        use crate::coordinator::testutil::TestExec;
+        // Three rows at step params A, one at B: the default impl must
+        // issue one step_into per maximal parameter run and return the
+        // same probs as stepping each run separately.
+        let exec = TestExec::stochastic(vec![1, 4, 8], 2, 5, 2);
+        let a = RowStep { t: 0.5, h: 0.1, warp: 2.0 };
+        let b = RowStep { t: 0.6, h: 0.1, warp: 2.0 };
+        let tokens = vec![1, 2, 3, 4, 0, 1, 2, 3];
+        let mut composed = Vec::new();
+        exec.step_rows_into("mock_cold_step_b4", &tokens, 2, &[a, a, a, b], &mut composed)
+            .unwrap();
+        assert_eq!(composed.len(), 4 * 2 * 5);
+        let mut run_a = Vec::new();
+        exec.step_into("mock_cold_step_b4", &tokens[..6], a.t, a.h, a.warp, &mut run_a).unwrap();
+        let mut run_b = Vec::new();
+        exec.step_into("mock_cold_step_b4", &tokens[6..], b.t, b.h, b.warp, &mut run_b).unwrap();
+        assert_eq!(&composed[..6 * 5], &run_a[..]);
+        assert_eq!(&composed[6 * 5..], &run_b[..]);
+        // A shape mismatch is rejected before any dispatch.
+        assert!(exec.step_rows_into("mock_cold_step_b4", &tokens, 3, &[a, a], &mut run_a).is_err());
     }
 
     #[test]
