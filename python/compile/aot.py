@@ -92,6 +92,19 @@ DOMAIN_SHAPES = {
 # ---------------------------------------------------------------------------
 
 
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit — must match ``core::rng::fnv1a64`` in Rust."""
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
 def to_hlo_text(lowered) -> str:
     """StableHLO -> XlaComputation -> HLO text (the interchange gotcha)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -116,6 +129,9 @@ class Emitter:
             "inputs": inputs,
             "outputs": outputs,
             "hlo_bytes": len(hlo),
+            # Versioned artifact contract: FNV-1a 64 over the HLO bytes,
+            # the same hash `wsfm verify-artifacts` recomputes.
+            "content_hash": f"{fnv1a64(hlo.encode()):016x}",
         }
         if extra:
             meta.update(extra)
@@ -454,8 +470,10 @@ def main() -> None:
     manifest: dict = (
         json.loads(manifest_file.read_text())
         if manifest_file.exists()
-        else {"batch_sizes": BATCH_SIZES, "domains": {}, "artifacts": []}
+        else {"schema_version": 2, "batch_sizes": BATCH_SIZES, "domains": {}, "artifacts": []}
     )
+    # Manifests written before the versioned contract upgrade in place.
+    manifest["schema_version"] = 2
 
     todo = [d for d in domains if args.force or hashes.get(d) != shash or d not in manifest["domains"]]
     skipped = [d for d in domains if d not in todo]

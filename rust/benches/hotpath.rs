@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wsfm::config::WsfmConfig;
 use wsfm::coordinator::batcher::{Batcher, FlushPolicy};
-use wsfm::coordinator::request::{DraftSpec, GenRequest};
+use wsfm::coordinator::request::{DraftSpec, GenRequest, GenResponse};
 use wsfm::coordinator::Service;
 use wsfm::core::prob;
 use wsfm::core::rng::Pcg64;
@@ -34,6 +34,7 @@ use wsfm::fleet::FleetHandle;
 use wsfm::harness::common::Env;
 use wsfm::runtime::{ArtifactMeta, Executor, LoopReport, LoopScratch, LoopSpec, TensorSpec};
 use wsfm::sampler::{sample_warm, sample_warm_stepwise, SamplerParams};
+use wsfm::server::{Binary, Codec, JsonLines, WireResponse};
 use wsfm::util::bench::{black_box, Bench, BenchStats};
 use wsfm::util::json::Json;
 
@@ -123,6 +124,50 @@ fn bench_l3_components(results: &mut Vec<(String, f64)>) {
 }
 
 // ---------------------------------------------------------------------------
+// Wire codecs: json lines vs length-prefixed binary frames
+// ---------------------------------------------------------------------------
+
+/// Price the framing itself (EXPERIMENTS.md §Wire): one Generate
+/// response carrying 8 rows × 1k tokens, encoded to a buffer and decoded
+/// back per codec. The JSON wire renders every token as decimal text;
+/// the binary wire writes `i32` LE words behind a length prefix — these
+/// rows quantify that gap on the payload shape the serving path ships.
+fn bench_wire_codecs(results: &mut Vec<(String, f64)>) {
+    let b = Bench::default();
+    let resp = WireResponse::Generate {
+        resp: GenResponse {
+            id: 7,
+            samples: (0..8)
+                .map(|r| (0..1000).map(|i| ((r * 1000 + i) % 27) as i32).collect())
+                .collect(),
+            nfe: 205,
+            t0_used: 0.8,
+            cascade: None,
+            queue_wait: Duration::from_micros(120),
+            draft_time: Duration::from_micros(800),
+            refine_time: Duration::from_micros(2600),
+            total_time: Duration::from_micros(3520),
+            degraded: None,
+        },
+        texts: None,
+    };
+    let codecs: [(&str, Box<dyn Codec>); 2] =
+        [("json", Box::new(JsonLines)), ("binary", Box::new(Binary))];
+    for (name, mut codec) in codecs {
+        let mut buf: Vec<u8> = Vec::new();
+        rec(results, b.run(&format!("wire encode {name} 8x1k"), || {
+            buf.clear();
+            codec.write_response(&mut buf, black_box(&resp)).unwrap();
+            black_box(buf.len());
+        }));
+        rec(results, b.run(&format!("wire decode {name} 8x1k"), || {
+            let mut slice: &[u8] = black_box(&buf);
+            black_box(codec.read_response(&mut slice).unwrap());
+        }));
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Sampling-loop round-trip cost (mock executor, no artifacts needed)
 // ---------------------------------------------------------------------------
 
@@ -191,6 +236,7 @@ impl Executor for LoopMock {
                 shape: vec![self.batch, self.seq_len, self.vocab],
                 dtype: "f32".into(),
             }],
+            content_hash: None,
         })
     }
 }
@@ -367,6 +413,7 @@ impl Executor for StageCostExec {
                 dtype: if is_draft { "f32".into() } else { "s32".into() },
             }],
             outputs: vec![],
+            content_hash: None,
         })
     }
 
@@ -412,6 +459,7 @@ fn stage_cost_manifest(batch: usize, seq_len: usize, vocab: usize) -> wsfm::runt
             dtype: "f32".into(),
         }],
         outputs: vec![],
+        content_hash: None,
     };
     wsfm::runtime::Manifest {
         dir: std::path::PathBuf::from("/tmp"),
@@ -421,6 +469,7 @@ fn stage_cost_manifest(batch: usize, seq_len: usize, vocab: usize) -> wsfm::runt
         ],
         domains: wsfm::util::json::Json::Null,
         batch_sizes: std::collections::BTreeMap::new(),
+        schema_version: 1,
     }
 }
 
@@ -611,6 +660,7 @@ fn bench_watchdog_overhead(results: &mut Vec<(String, f64)>) {
         artifacts: vec![],
         domains: Json::Null,
         batch_sizes: std::collections::BTreeMap::new(),
+        schema_version: 1,
     };
     let bare = wsfm::runtime::EngineHandle::spawn(manifest).expect("engine thread");
     rec(results, b.run("engine call roundtrip bare", || {
@@ -736,6 +786,9 @@ fn main() {
 
     println!("== L3 coordinator components ==");
     bench_l3_components(&mut results);
+
+    println!("\n== wire codecs: json lines vs binary frames ==");
+    bench_wire_codecs(&mut results);
 
     println!("\n== sampling-loop round-trips (mock executor, {} workers) ==", WorkerPool::shared().threads());
     bench_loop_roundtrip(&mut results);

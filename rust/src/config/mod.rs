@@ -39,6 +39,31 @@ pub struct WsfmConfig {
     pub robustness: RobustnessConfig,
     /// Step-level batch composer ([`crate::coordinator::composer`]).
     pub composer: ComposerConfig,
+    /// Wire codec negotiation ([`crate::server::codec`]).
+    pub wire: WireConfig,
+}
+
+/// Wire-codec tuning (`wire` subsystem).
+///
+/// The server accepts the codecs listed in `codecs` when a client sends
+/// `{"cmd":"hello","codecs":[...]}`, and starts every connection on
+/// `default`. With `default = "json"` (the default) a client that never
+/// sends a hello gets the legacy JSON-lines wire format byte-for-byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireConfig {
+    /// Codec names the server will negotiate ("json", "binary").
+    pub codecs: Vec<String>,
+    /// Codec every connection starts on (before any hello).
+    pub default: String,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            codecs: vec!["json".to_string(), "binary".to_string()],
+            default: "json".to_string(),
+        }
+    }
 }
 
 /// Continuous cross-bundle batching tuning (`composer` subsystem).
@@ -249,6 +274,7 @@ impl Default for WsfmConfig {
             cascade: CascadeConfig::default(),
             robustness: RobustnessConfig::default(),
             composer: ComposerConfig::default(),
+            wire: WireConfig::default(),
         }
     }
 }
@@ -279,8 +305,10 @@ impl WsfmConfig {
         if let Some(n) = j.get("draft_workers").as_usize() {
             c.draft_workers = n;
         }
-        if let Some(n) = j.get("seed").as_f64() {
-            c.seed = n as u64;
+        // Integer-preserving: the run seed feeds every RNG substream, so
+        // values above 2^53 must not round through f64.
+        if let Some(n) = j.get("seed").as_u64() {
+            c.seed = n;
         }
         let b = j.get("batcher");
         if let Some(n) = b.get("max_batch").as_usize() {
@@ -364,6 +392,14 @@ impl WsfmConfig {
         if let Some(n) = cp.get("max_rows").as_usize() {
             c.composer.max_rows = n;
         }
+        let w = j.get("wire");
+        if let Some(arr) = w.get("codecs").as_arr() {
+            c.wire.codecs =
+                arr.iter().filter_map(|v| v.as_str().map(str::to_string)).collect();
+        }
+        if let Some(d) = w.get("default").as_str() {
+            c.wire.default = d.to_string();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -426,6 +462,16 @@ impl WsfmConfig {
                 Json::obj(vec![
                     ("enabled", Json::Bool(self.composer.enabled)),
                     ("max_rows", Json::num(self.composer.max_rows as f64)),
+                ]),
+            ),
+            (
+                "wire",
+                Json::obj(vec![
+                    (
+                        "codecs",
+                        Json::arr(self.wire.codecs.iter().map(|c| Json::str(c.clone()))),
+                    ),
+                    ("default", Json::str(self.wire.default.clone())),
                 ]),
             ),
             (
@@ -531,6 +577,24 @@ impl WsfmConfig {
         }
         if self.robustness.max_respawns == 0 {
             bail!("robustness.max_respawns must be positive");
+        }
+        if self.wire.codecs.is_empty() {
+            bail!("wire.codecs must be non-empty");
+        }
+        for name in &self.wire.codecs {
+            if !crate::server::codec::SUPPORTED.contains(&name.as_str()) {
+                bail!(
+                    "wire.codecs entry {name:?} unknown (supported: {:?})",
+                    crate::server::codec::SUPPORTED
+                );
+            }
+        }
+        if !self.wire.codecs.contains(&self.wire.default) {
+            bail!(
+                "wire.default {:?} must be one of wire.codecs {:?}",
+                self.wire.default,
+                self.wire.codecs
+            );
         }
         Ok(())
     }
@@ -645,8 +709,32 @@ mod tests {
     }
 
     #[test]
+    fn wire_section_layering() {
+        let j = Json::parse(r#"{"wire":{"codecs":["binary"],"default":"binary"}}"#).unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.wire.codecs, vec!["binary"]);
+        assert_eq!(c.wire.default, "binary");
+        // Untouched -> defaults: both codecs offered, json (legacy) first.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.wire, WireConfig::default());
+        assert_eq!(d.wire.default, "json");
+        assert_eq!(d.wire.codecs, vec!["json", "binary"]);
+    }
+
+    #[test]
+    fn config_seed_is_exact_above_2_53() {
+        let j = Json::parse(&format!("{{\"seed\":{}}}", u64::MAX)).unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert_eq!(c.seed, u64::MAX);
+    }
+
+    #[test]
     fn invalid_rejected() {
         for bad in [
+            r#"{"wire":{"codecs":[]}}"#,
+            r#"{"wire":{"codecs":["zstd"]}}"#,
+            r#"{"wire":{"codecs":["binary"],"default":"json"}}"#,
+            r#"{"wire":{"default":"zstd"}}"#,
             r#"{"batcher":{"max_batch":0}}"#,
             r#"{"sampler":{"t0":1.5}}"#,
             r#"{"sampler":{"warp_mode":"sideways"}}"#,

@@ -179,6 +179,7 @@ pub(crate) mod testutil {
                     shape: vec![b, self.seq_len, self.vocab],
                     dtype: "f32".into(),
                 }],
+                content_hash: None,
             })
         }
     }
@@ -207,6 +208,7 @@ pub(crate) mod testutil {
                     latent_dim: None,
                     inputs: vec![],
                     outputs: vec![],
+                    content_hash: None,
                 });
             }
         }
@@ -215,6 +217,7 @@ pub(crate) mod testutil {
             artifacts,
             domains: Json::Null,
             batch_sizes: BTreeMap::new(),
+            schema_version: 1,
         }
     }
 

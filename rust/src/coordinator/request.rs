@@ -62,7 +62,54 @@ pub struct GenRequest {
     pub submitted: Instant,
 }
 
+/// Wire equality: everything except `submitted` (a local timestamp that
+/// never travels over the wire and differs on every parse). Lets codec
+/// round-trip property tests compare parsed requests directly.
+impl PartialEq for GenRequest {
+    fn eq(&self, other: &GenRequest) -> bool {
+        self.id == other.id
+            && self.domain == other.domain
+            && self.tag == other.tag
+            && self.draft == other.draft
+            && self.n_samples == other.n_samples
+            && self.t0 == other.t0
+            && self.steps_cold == other.steps_cold
+            && self.warp_mode == other.warp_mode
+            && self.seed == other.seed
+    }
+}
+
 impl GenRequest {
+    /// Construct a validated request from decoded wire fields (shared by
+    /// the JSON and binary codecs, so validation cannot diverge between
+    /// them). `id` is assigned later at admission; `submitted` is now.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_wire(
+        domain: String,
+        tag: String,
+        draft: DraftSpec,
+        n_samples: usize,
+        t0: f64,
+        steps_cold: usize,
+        warp_mode: WarpMode,
+        seed: u64,
+    ) -> Result<GenRequest> {
+        let request = GenRequest {
+            id: 0,
+            domain,
+            tag,
+            draft,
+            n_samples,
+            t0,
+            steps_cold,
+            warp_mode,
+            seed,
+            submitted: Instant::now(),
+        };
+        request.validate()?;
+        Ok(request)
+    }
+
     /// The batching key: requests sharing it can ride the same executor
     /// batch (same artifact and identical sampler schedule).
     pub fn bundle_key(&self) -> BundleKey {
@@ -157,7 +204,7 @@ pub struct CascadeInfo {
 }
 
 /// Completed generation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GenResponse {
     pub id: u64,
     /// `n_samples` rows of `seq_len` tokens.

@@ -32,6 +32,13 @@ impl WarpMode {
             _ => bail!("unknown warp mode {s:?} (literal|exact)"),
         }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WarpMode::Literal => "literal",
+            WarpMode::Exact => "exact",
+        }
+    }
 }
 
 /// An Euler integration schedule over `[t0, 1]` — or, for a cascade

@@ -71,7 +71,7 @@ use crate::runtime::engine::{
 };
 use anyhow::{Context, Result};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -98,8 +98,10 @@ enum Respawner {
     /// behaviour of [`FleetHandle::spawn`] / `from_executors`).
     None,
     /// Spawn a fresh engine thread over the manifest, re-preload the
-    /// slot's affinity artifacts, arm the same watchdog.
-    Engine { manifest: Manifest, call_timeout: Option<Duration> },
+    /// slot's affinity artifacts, arm the same watchdog. The manifest is
+    /// behind a mutex because [`FleetHandle::swap_artifacts`] republishes
+    /// it: respawns after a swap must build against the *new* contract.
+    Engine { manifest: Mutex<Manifest>, call_timeout: Option<Duration> },
     /// Call the slot's factory (tests, mock fleets).
     Factories(Vec<ReplicaFactory>),
 }
@@ -112,6 +114,11 @@ struct ReplicaState {
     /// Engine-backed replicas keep the handle for preload/stats/shutdown.
     engine: Option<EngineHandle>,
     generation: u64,
+    /// Which artifact contract this replica serves: the fleet's
+    /// `swap_epoch` at install time. A mixed fleet (replicas on
+    /// different epochs) is a bug [`FleetHandle::swap_artifacts`] is
+    /// designed to make impossible.
+    manifest_epoch: u64,
 }
 
 /// Respawn bookkeeping for one slot (touched only by the health loop).
@@ -136,7 +143,7 @@ struct Replica {
 impl Replica {
     fn new(exec: Arc<dyn Executor>, engine: Option<EngineHandle>) -> Replica {
         Replica {
-            state: Mutex::new(ReplicaState { exec, engine, generation: 0 }),
+            state: Mutex::new(ReplicaState { exec, engine, generation: 0, manifest_epoch: 0 }),
             healthy: AtomicBool::new(true),
             artifacts: Mutex::new(HashSet::new()),
             repair: Mutex::new(RepairState {
@@ -159,6 +166,12 @@ struct FleetInner {
     robustness: RobustnessConfig,
     /// Signals the health loop to exit (set by [`FleetHandle::shutdown`]).
     stop: AtomicBool,
+    /// Bumped once per published [`FleetHandle::swap_artifacts`]. Repair
+    /// builds snapshot it and discard themselves if it moved — a respawn
+    /// racing a swap can never readmit an old-contract engine.
+    swap_epoch: AtomicU64,
+    /// Serializes concurrent `swap_artifacts` calls.
+    swap_lock: Mutex<()>,
 }
 
 /// Health-loop poll cadence (how often quarantined slots are checked for
@@ -207,7 +220,7 @@ impl FleetHandle {
                 .with_call_timeout(call_timeout);
             slots.push(Replica::new(Arc::new(engine.clone()), Some(engine)));
         }
-        let respawner = Respawner::Engine { manifest, call_timeout };
+        let respawner = Respawner::Engine { manifest: Mutex::new(manifest), call_timeout };
         let fleet = FleetHandle::from_slots(slots, respawner, robustness.clone());
         fleet.spawn_health_loop();
         Ok(fleet)
@@ -255,6 +268,8 @@ impl FleetHandle {
                 respawner,
                 robustness,
                 stop: AtomicBool::new(false),
+                swap_epoch: AtomicU64::new(0),
+                swap_lock: Mutex::new(()),
             }),
         }
     }
@@ -465,6 +480,119 @@ impl FleetHandle {
         }
     }
 
+    /// The manifest epoch each replica currently serves (the fleet-wide
+    /// swap counter at its install time). A correct fleet is uniform:
+    /// every entry equal — [`FleetHandle::swap_artifacts`] either moves
+    /// all replicas to the new epoch or none of them.
+    pub fn manifest_epochs(&self) -> Vec<u64> {
+        self.inner.replicas.iter().map(|r| r.state.lock().unwrap().manifest_epoch).collect()
+    }
+
+    /// Hot-swap the artifact contract: point every replica at `manifest`
+    /// without dropping the fleet, **all-or-nothing**.
+    ///
+    /// Phase 1 (no locks held): verify the manifest's content hashes,
+    /// then build one replacement engine per slot — fresh engine thread
+    /// over the new manifest, re-preload of the slot's affinity artifacts
+    /// (those still present in the new contract), and a passing
+    /// [`Executor::probe`]. Any failure shuts down everything built so
+    /// far and returns with the old fleet untouched
+    /// (`artifact_swap_rollbacks`).
+    ///
+    /// Phase 2: publish. The fleet's swap epoch is bumped first (so a
+    /// concurrent health-loop respawn built against the old manifest
+    /// discards itself instead of readmitting a stale contract), the
+    /// respawner's manifest is replaced, and each slot's probed
+    /// replacement is installed under its state lock — generation bumped,
+    /// epoch stamped, health and repair state reset. Installation is pure
+    /// pointer swapping: once phase 1 succeeds the swap cannot strand the
+    /// fleet mixed, even if replicas are killed mid-swap (a kill only
+    /// shuts down an engine about to be replaced).
+    ///
+    /// Only engine-backed fleets can swap; a slot without an engine
+    /// (mock/factory executors) is an error before anything is built.
+    pub fn swap_artifacts(&self, manifest: Manifest) -> Result<()> {
+        let _swap = self.inner.swap_lock.lock().unwrap();
+        let report = manifest.verify_hashes().context("verifying new manifest before swap")?;
+        if !report.ok() {
+            self.inner.metrics.artifact_swap_rollbacks.inc();
+            let names: Vec<&str> = report.mismatches.iter().map(|(n, _, _)| n.as_str()).collect();
+            anyhow::bail!("artifact swap rejected: content hash mismatch for {names:?} ({report})");
+        }
+        let call_timeout = match &self.inner.respawner {
+            Respawner::Engine { call_timeout, .. } => *call_timeout,
+            _ => None,
+        };
+        // Phase 1: build + preload + probe a full replacement set.
+        let mut replacements: Vec<EngineHandle> = Vec::with_capacity(self.replicas());
+        for (i, r) in self.inner.replicas.iter().enumerate() {
+            let built: Result<EngineHandle> = (|| {
+                if r.state.lock().unwrap().engine.is_none() {
+                    anyhow::bail!("replica {i} is not engine-backed");
+                }
+                let engine = EngineHandle::spawn(manifest.clone())
+                    .with_context(|| format!("spawning replacement for replica {i}"))?
+                    .with_call_timeout(call_timeout);
+                // Re-warm the slot's compile cache — but only for
+                // artifacts the new contract still ships.
+                let names: Vec<String> = r
+                    .artifacts
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .filter(|n| manifest.artifacts.iter().any(|a| &a.name == *n))
+                    .cloned()
+                    .collect();
+                if !names.is_empty() {
+                    engine
+                        .preload(&names)
+                        .with_context(|| format!("preloading replacement for replica {i}"))?;
+                }
+                engine
+                    .probe()
+                    .with_context(|| format!("probing replacement for replica {i}"))?;
+                Ok(engine)
+            })();
+            match built {
+                Ok(engine) => replacements.push(engine),
+                Err(e) => {
+                    for b in &replacements {
+                        b.shutdown();
+                    }
+                    self.inner.metrics.artifact_swap_rollbacks.inc();
+                    return Err(e.context("artifact swap rolled back; old fleet untouched"));
+                }
+            }
+        }
+        // Phase 2: publish. Epoch first — from here on, in-flight repair
+        // builds against the old manifest are inert.
+        let epoch = self.inner.swap_epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Respawner::Engine { manifest: m, .. } = &self.inner.respawner {
+            *m.lock().unwrap() = manifest.clone();
+        }
+        for (r, engine) in self.inner.replicas.iter().zip(replacements) {
+            {
+                let mut state = r.state.lock().unwrap();
+                if let Some(old) = &state.engine {
+                    old.shutdown();
+                }
+                state.exec = Arc::new(engine.clone());
+                state.engine = Some(engine);
+                state.generation += 1;
+                state.manifest_epoch = epoch;
+                r.healthy.store(true, Ordering::SeqCst);
+            }
+            // Fresh engine, fresh start: a slot retired by the circuit
+            // breaker under the old contract is back in play.
+            let mut repair = r.repair.lock().unwrap();
+            repair.consecutive_failures = 0;
+            repair.retired = false;
+        }
+        self.inner.metrics.artifact_swaps.inc();
+        crate::info!("fleet: artifact swap published (epoch {epoch})");
+        Ok(())
+    }
+
     /// Test hook: kill `idx` right now — shut down its engine (if any)
     /// and quarantine it, exactly as a dispatch observing the death
     /// would. The health loop (if running) takes it from there.
@@ -497,10 +625,15 @@ fn try_repair(inner: &Arc<FleetInner>, idx: usize) {
         }
     }
     // Build outside all locks: engine spawn + preload can take a while.
+    // Snapshot the swap epoch first: if a swap_artifacts publishes while
+    // we build, this replacement embodies the old contract and must be
+    // discarded, not installed.
+    let epoch = inner.swap_epoch.load(Ordering::SeqCst);
     let built: Result<(Arc<dyn Executor>, Option<EngineHandle>)> = match &inner.respawner {
         Respawner::None => return, // no recipe: permanent quarantine
         Respawner::Engine { manifest, call_timeout } => (|| {
-            let engine = EngineHandle::spawn(manifest.clone())
+            let manifest = manifest.lock().unwrap().clone();
+            let engine = EngineHandle::spawn(manifest)
                 .with_context(|| format!("respawning fleet replica {idx}"))?
                 .with_call_timeout(*call_timeout);
             let names: Vec<String> =
@@ -522,20 +655,29 @@ fn try_repair(inner: &Arc<FleetInner>, idx: usize) {
     });
     match probed {
         Ok((exec, engine)) => {
-            if inner.stop.load(Ordering::SeqCst) {
-                if let Some(e) = &engine {
-                    e.shutdown();
-                }
-                return;
-            }
             {
                 let mut state = replica.state.lock().unwrap();
+                // Checked under the slot lock — the same lock
+                // swap_artifacts installs under — so the decision cannot
+                // interleave with a publication: shutting down, or a swap
+                // published a new contract while we built against the old
+                // one, means discard (the next poll rebuilds fresh).
+                if inner.stop.load(Ordering::SeqCst)
+                    || inner.swap_epoch.load(Ordering::SeqCst) != epoch
+                {
+                    drop(state);
+                    if let Some(e) = &engine {
+                        e.shutdown();
+                    }
+                    return;
+                }
                 if let Some(old) = &state.engine {
                     old.shutdown();
                 }
                 state.exec = exec;
                 state.engine = engine;
                 state.generation += 1;
+                state.manifest_epoch = epoch;
                 replica.healthy.store(true, Ordering::SeqCst);
             }
             replica.repair.lock().unwrap().consecutive_failures = 0;
@@ -661,6 +803,7 @@ mod tests {
             artifacts: vec![],
             domains: Json::Null,
             batch_sizes: BTreeMap::new(),
+            schema_version: 1,
         }
     }
 
@@ -980,6 +1123,119 @@ mod tests {
         // The surviving replica still serves.
         let mut out = Vec::new();
         fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn swap_artifacts_moves_every_replica_to_the_new_epoch() {
+        let fleet = FleetHandle::spawn_with(empty_manifest(), 2, &fast_robustness()).unwrap();
+        assert_eq!(fleet.manifest_epochs(), vec![0, 0]);
+        fleet.swap_artifacts(empty_manifest()).unwrap();
+        assert_eq!(fleet.manifest_epochs(), vec![1, 1]);
+        assert_eq!(fleet.healthy_replicas(), 2);
+        assert_eq!(fleet.metrics().artifact_swaps.get(), 1);
+        assert_eq!(fleet.metrics().artifact_swap_rollbacks.get(), 0);
+        // The swapped-in engines serve: an unknown artifact gets an
+        // ordinary error from a live engine, not EngineDead/FleetDown.
+        let err = fleet.draft("nope", &[0.0]).unwrap_err();
+        assert!(err.downcast_ref::<EngineDead>().is_none(), "{err:#}");
+        assert!(err.downcast_ref::<FleetDown>().is_none(), "{err:#}");
+        assert!(fleet.summary().contains("artifact_swaps=1"), "{}", fleet.summary());
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn swap_rejects_hash_mismatch_with_the_old_fleet_untouched() {
+        use crate::core::rng::{fnv1a64, FNV_OFFSET};
+        let dir = std::env::temp_dir().join(format!("wsfm_swap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), b"actual bytes").unwrap();
+        let wrong = fnv1a64(FNV_OFFSET, b"different bytes");
+        let bad = Manifest {
+            dir: dir.clone(),
+            artifacts: vec![ArtifactMeta {
+                name: "a".into(),
+                hlo_file: "a.hlo.txt".into(),
+                domain: "d".into(),
+                kind: "step".into(),
+                tag: "cold".into(),
+                draft: None,
+                batch: 1,
+                seq_len: 1,
+                vocab: 2,
+                t0: Some(0.0),
+                latent_dim: None,
+                inputs: vec![],
+                outputs: vec![],
+                content_hash: Some(wrong),
+            }],
+            domains: Json::Null,
+            batch_sizes: BTreeMap::new(),
+            schema_version: 2,
+        };
+        let fleet = FleetHandle::spawn(empty_manifest(), 2).unwrap();
+        let err = fleet.swap_artifacts(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("content hash mismatch"), "{err:#}");
+        // Nothing moved: old epoch, old engines, still serving.
+        assert_eq!(fleet.manifest_epochs(), vec![0, 0]);
+        assert_eq!(fleet.healthy_replicas(), 2);
+        assert_eq!(fleet.metrics().artifact_swaps.get(), 0);
+        assert_eq!(fleet.metrics().artifact_swap_rollbacks.get(), 1);
+        fleet.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn swap_rejects_non_engine_fleets_before_building_anything() {
+        let fleet = FleetHandle::from_executors(vec![Arc::new(mock()) as Arc<dyn Executor>]);
+        let err = fleet.swap_artifacts(empty_manifest()).unwrap_err();
+        assert!(format!("{err:#}").contains("not engine-backed"), "{err:#}");
+        assert_eq!(fleet.metrics().artifact_swap_rollbacks.get(), 1);
+        assert_eq!(fleet.manifest_epochs(), vec![0]);
+    }
+
+    /// Acceptance pin: repeated swaps while a killer thread murders
+    /// replicas (and the health loop resurrects them) must end every
+    /// swap with a **uniform** fleet — all replicas on the published
+    /// epoch, never mixed old/new contracts.
+    #[test]
+    fn swap_under_killed_replica_chaos_never_yields_a_mixed_fleet() {
+        const REPLICAS: usize = 3;
+        const SWAPS: u64 = 4;
+        let fleet = FleetHandle::spawn_with(empty_manifest(), REPLICAS, &fast_robustness()).unwrap();
+        let stop_killing = Arc::new(AtomicBool::new(false));
+        let killer = {
+            let fleet = fleet.clone();
+            let stop = stop_killing.clone();
+            std::thread::spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    fleet.kill_replica(i % REPLICAS);
+                    i += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        for swap in 1..=SWAPS {
+            fleet.swap_artifacts(empty_manifest()).unwrap();
+            let epochs = fleet.manifest_epochs();
+            // The killer may quarantine a replica right after publication,
+            // but it can never split the *contract*: every slot carries
+            // the epoch this swap stamped.
+            assert!(
+                epochs.iter().all(|&e| e == swap),
+                "mixed fleet after swap {swap}: {epochs:?}"
+            );
+        }
+        stop_killing.store(true, Ordering::SeqCst);
+        killer.join().unwrap();
+        // Let the health loop repair any post-swap kill, then confirm the
+        // fleet is whole and uniform on the final epoch.
+        wait_for("post-chaos resurrection", || fleet.healthy_replicas() == REPLICAS);
+        let epochs = fleet.manifest_epochs();
+        assert!(epochs.iter().all(|&e| e == SWAPS), "post-chaos mixed fleet: {epochs:?}");
+        assert_eq!(fleet.metrics().artifact_swaps.get(), SWAPS);
+        assert_eq!(fleet.metrics().artifact_swap_rollbacks.get(), 0);
         fleet.shutdown();
     }
 

@@ -127,6 +127,26 @@
 //! the wire — the paper's "drafts are already decent" claim as a
 //! graceful-degradation contract. See EXPERIMENTS.md §Robustness.
 //!
+//! ## The wire and the artifact contract
+//!
+//! The TCP protocol is a pluggable codec ([`server::codec`]): requests
+//! and responses are typed structs ([`server::protocol`]), and a
+//! per-connection [`server::codec::Codec`] decides the framing — the
+//! legacy newline-delimited JSON (byte-pinned by golden tests; what a
+//! hello-free client always gets) or length-prefixed binary frames,
+//! negotiated by a `{"cmd":"hello","codecs":[...]}` handshake against
+//! `wire.codecs`. Seeds and counters ride the wire as exact integers
+//! (`util::json::Json::U64`) — a `u64::MAX` seed round-trips losslessly
+//! on both codecs. On the artifact side, `manifest.json` is a versioned
+//! contract ([`runtime::artifact`]): schema v2 stamps every artifact
+//! with an FNV-1a 64 content hash (emitted by `python/compile/aot.py`,
+//! recomputed by `wsfm verify-artifacts`), and
+//! [`fleet::FleetHandle::swap_artifacts`] hot-swaps the whole fleet to a
+//! new verified manifest all-or-nothing — build + preload + probe every
+//! replacement first, then publish under an epoch tag that concurrent
+//! respawns respect, so the fleet never serves mixed contracts. See
+//! EXPERIMENTS.md §Wire.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured results.
 

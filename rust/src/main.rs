@@ -37,10 +37,11 @@ wsfm — Warm-Start Flow Matching serving stack
 USAGE: wsfm <subcommand> [options]
 
 SUBCOMMANDS:
-  serve          start the TCP server (line-delimited JSON protocol)
+  serve          start the TCP server (negotiated json/binary wire codecs)
   generate       one-shot local generation
   info           print the artifact inventory
   selfcheck      validate artifacts and run a smoke execution
+  verify-artifacts  check manifest content hashes against the files on disk
   bench-table1   two-moons SKL/NFE table (paper Table 1, Figs 4/5)
   bench-table2   text8 NLL/entropy/time table (paper Table 2, Fig 10)
   bench-table3   wiki perplexity table (paper Table 3, Fig 14)
@@ -60,6 +61,7 @@ fn run(args: &[String]) -> Result<()> {
         "generate" => cmd_generate(rest),
         "info" => cmd_info(rest),
         "selfcheck" => cmd_selfcheck(rest),
+        "verify-artifacts" => cmd_verify_artifacts(rest),
         "bench-table1" => harness::table1::main(rest),
         "bench-table2" => harness::table2::main(rest),
         "bench-table3" => harness::table3::main(rest),
@@ -121,8 +123,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     }
 
     let service = Service::start(fleet.clone(), manifest.clone(), cfg.clone());
-    let server = TcpServer::bind(&cfg.listen_addr, service.clone(), manifest)?;
+    let server =
+        TcpServer::bind_with(&cfg.listen_addr, service.clone(), manifest, cfg.wire.clone())?;
     println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
+    println!("wire: codecs={:?} default={}", cfg.wire.codecs, cfg.wire.default);
     if cfg.pipeline_depth > 1 {
         println!(
             "pipeline: depth={} draft_workers={} refine_workers={} (DRAFT overlaps REFINE)",
@@ -243,6 +247,35 @@ fn cmd_info(rest: &[String]) -> Result<()> {
         println!("  {d:<10} N={:<4} V={:<4} tags={:?}", first.seq_len, first.vocab, tags);
     }
     println!("total artifacts: {}", manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_verify_artifacts(rest: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "wsfm verify-artifacts",
+        "check every manifest content hash against the bytes on disk",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .flag("strict", "also fail if any artifact carries no content hash (schema v1)");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let manifest = Manifest::load(std::path::Path::new(args.get("artifacts")))?;
+    println!(
+        "manifest schema v{} — {} artifacts",
+        manifest.schema_version,
+        manifest.artifacts.len()
+    );
+    let report = manifest.verify_hashes()?;
+    println!("{report}");
+    for (name, declared, actual) in &report.mismatches {
+        println!("  MISMATCH {name}: declared {declared:016x}, on disk {actual:016x}");
+    }
+    if !report.ok() {
+        bail!("{} artifact(s) do not match their declared content hash", report.mismatches.len());
+    }
+    if args.flag("strict") && report.unhashed > 0 {
+        bail!("{} artifact(s) carry no content hash (strict mode)", report.unhashed);
+    }
+    println!("all declared hashes match");
     Ok(())
 }
 

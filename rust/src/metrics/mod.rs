@@ -253,6 +253,14 @@ pub struct FleetMetrics {
     pub respawn_failures: Counter,
     /// Calls that tripped the engine-call watchdog (`EngineTimeout`).
     pub engine_timeouts: Counter,
+    /// Completed all-or-nothing artifact swaps ([`swap_artifacts`]:
+    /// every replica now serves the new manifest).
+    ///
+    /// [`swap_artifacts`]: ../fleet/struct.FleetHandle.html#method.swap_artifacts
+    pub artifact_swaps: Counter,
+    /// Artifact swaps abandoned before publication (a replacement failed
+    /// to build, preload, or probe — the old fleet kept serving).
+    pub artifact_swap_rollbacks: Counter,
 }
 
 impl FleetMetrics {
@@ -265,6 +273,8 @@ impl FleetMetrics {
             replica_respawns: Counter::default(),
             respawn_failures: Counter::default(),
             engine_timeouts: Counter::default(),
+            artifact_swaps: Counter::default(),
+            artifact_swap_rollbacks: Counter::default(),
         }
     }
 
@@ -272,7 +282,7 @@ impl FleetMetrics {
     pub fn summary(&self) -> String {
         let join = |it: Vec<String>| it.join(",");
         format!(
-            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={} replica_respawns={} respawn_failures={} engine_timeouts={}",
+            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={} replica_respawns={} respawn_failures={} engine_timeouts={} artifact_swaps={} artifact_swap_rollbacks={}",
             self.replica_inflight.len(),
             join(self.replica_inflight.iter().map(|g| g.get().to_string()).collect()),
             join(self.replica_dispatched.iter().map(|c| c.get().to_string()).collect()),
@@ -280,7 +290,9 @@ impl FleetMetrics {
             self.fleet_reroutes.get(),
             self.replica_respawns.get(),
             self.respawn_failures.get(),
-            self.engine_timeouts.get()
+            self.engine_timeouts.get(),
+            self.artifact_swaps.get(),
+            self.artifact_swap_rollbacks.get()
         )
     }
 }
@@ -379,6 +391,13 @@ pub struct ServingMetrics {
     /// family's largest compiled batch; >100 = tiled over several
     /// compiled batches).
     pub batch_occupancy: Gauge,
+    /// Codec hellos received on the wire ([`crate::server::codec`]).
+    pub wire_hellos: Counter,
+    /// Connections that switched off the default codec after a hello.
+    pub wire_codec_switches: Counter,
+    /// Undecodable inbound wire messages (malformed JSON lines, bad
+    /// binary frames) answered with a typed error.
+    pub wire_malformed: Counter,
 }
 
 impl Default for ServingMetrics {
@@ -409,6 +428,9 @@ impl Default for ServingMetrics {
             samples: Throughput::new(),
             rows_per_step: ValueHistogram::new(4096),
             batch_occupancy: Gauge::default(),
+            wire_hellos: Counter::default(),
+            wire_codec_switches: Counter::default(),
+            wire_malformed: Counter::default(),
         }
     }
 }
@@ -416,7 +438,7 @@ impl Default for ServingMetrics {
 impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} batch_occupancy={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} batch_occupancy={} wire_hellos={} wire_codec_switches={} wire_malformed={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             self.requests_admitted.get(),
             self.requests_rejected.get(),
             self.requests_completed.get(),
@@ -431,6 +453,9 @@ impl ServingMetrics {
             self.early_flushes.get(),
             self.degraded_responses.get(),
             self.batch_occupancy.get(),
+            self.wire_hellos.get(),
+            self.wire_codec_switches.get(),
+            self.wire_malformed.get(),
             self.samples.per_second(),
             self.chosen_t0.snapshot().report("chosen_t0"),
             self.rows_per_step.snapshot().report("rows_per_step"),
@@ -534,6 +559,9 @@ mod tests {
         assert!(r.contains("request_latency"));
         assert!(r.contains("rows_per_step"));
         assert!(r.contains("batch_occupancy=0"));
+        assert!(r.contains("wire_hellos=0"));
+        assert!(r.contains("wire_codec_switches=0"));
+        assert!(r.contains("wire_malformed=0"));
         m.degraded_responses.inc();
         m.batch_occupancy.set(87);
         let r = m.report();

@@ -1,10 +1,16 @@
 //! Artifact metadata: the `*.meta.json` sidecars and `manifest.json`
 //! emitted by `python/compile/aot.py`.
 
+use crate::core::rng::{fnv1a64, FNV_OFFSET};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// Current manifest schema version. v1 manifests (no `schema_version`
+/// field, no content hashes) still load — hashes are simply absent and
+/// `verify_hashes` reports them as unhashed rather than failing.
+pub const MANIFEST_SCHEMA_VERSION: u64 = 2;
 
 /// One input/output tensor spec.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +58,10 @@ pub struct ArtifactMeta {
     pub latent_dim: Option<usize>,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// FNV-1a 64 hash of the referenced HLO file's bytes, as emitted by
+    /// the AOT pipeline (`content_hash: "<16 hex digits>"`). `None` on
+    /// schema-v1 manifests.
+    pub content_hash: Option<u64>,
 }
 
 impl ArtifactMeta {
@@ -83,7 +93,43 @@ impl ArtifactMeta {
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect::<Result<Vec<_>>>()?,
+            content_hash: match j.get("content_hash").as_str() {
+                Some(h) => Some(
+                    u64::from_str_radix(h, 16)
+                        .with_context(|| format!("bad content_hash {h:?}"))?,
+                ),
+                None => None,
+            },
         })
+    }
+}
+
+/// Outcome of [`Manifest::verify_hashes`]: how many artifacts matched
+/// their declared content hash, how many carry no hash (schema v1), and
+/// which ones disagreed with the bytes on disk.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VerifyReport {
+    pub verified: usize,
+    pub unhashed: usize,
+    /// `(artifact name, declared hash, actual hash)` per mismatch.
+    pub mismatches: Vec<(String, u64, u64)>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "verified={} unhashed={} mismatched={}",
+            self.verified,
+            self.unhashed,
+            self.mismatches.len()
+        )
     }
 }
 
@@ -94,6 +140,9 @@ pub struct Manifest {
     pub artifacts: Vec<ArtifactMeta>,
     pub domains: Json,
     pub batch_sizes: BTreeMap<String, Vec<usize>>,
+    /// Declared `schema_version` (1 when the field is absent — legacy
+    /// manifests predate the versioned contract).
+    pub schema_version: u64,
 }
 
 impl Manifest {
@@ -121,7 +170,50 @@ impl Manifest {
                 batch_sizes.insert(k.clone(), sizes);
             }
         }
-        Ok(Manifest { dir: dir.to_path_buf(), artifacts, domains: j.get("domains").clone(), batch_sizes })
+        let schema_version = j.get("schema_version").as_u64().unwrap_or(1);
+        if schema_version > MANIFEST_SCHEMA_VERSION {
+            bail!(
+                "manifest schema_version {schema_version} is newer than this binary \
+                 supports ({MANIFEST_SCHEMA_VERSION}) — rebuild or regenerate artifacts"
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            domains: j.get("domains").clone(),
+            batch_sizes,
+            schema_version,
+        })
+    }
+
+    /// FNV-1a 64 over a file's bytes — the manifest content-hash
+    /// function, shared with the verify path and the fleet swap probe.
+    pub fn hash_file(path: &Path) -> Result<u64> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Ok(fnv1a64(FNV_OFFSET, &bytes))
+    }
+
+    /// Check every artifact's declared `content_hash` against the bytes
+    /// on disk. Missing files are errors; missing hashes (schema v1) are
+    /// tallied, not failed — `wsfm verify-artifacts` decides how strict
+    /// to be.
+    pub fn verify_hashes(&self) -> Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        for a in &self.artifacts {
+            match a.content_hash {
+                None => report.unhashed += 1,
+                Some(declared) => {
+                    let actual = Self::hash_file(&self.hlo_path(a))
+                        .with_context(|| format!("hashing artifact {}", a.name))?;
+                    if actual == declared {
+                        report.verified += 1;
+                    } else {
+                        report.mismatches.push((a.name.clone(), declared, actual));
+                    }
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// All artifacts for a domain.
@@ -252,6 +344,7 @@ mod tests {
             artifacts: vec![ArtifactMeta::from_json(&meta_json()).unwrap()],
             domains: Json::Null,
             batch_sizes: BTreeMap::new(),
+            schema_version: 1,
         };
         assert!(m.find_step("d", "cold", 4).is_ok());
         assert!(m.find_step("d", "cold", 8).is_err());
@@ -271,5 +364,65 @@ mod tests {
     #[test]
     fn manifest_load_missing_dir_errors() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    /// Build a real on-disk manifest dir: one hashed artifact, one
+    /// legacy (unhashed) artifact.
+    fn write_fixture(dir: &Path) -> u64 {
+        let hlo = b"HloModule step, entry_computation_layout={()->f32[]}";
+        std::fs::write(dir.join("a.hlo.txt"), hlo).unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), b"HloModule other").unwrap();
+        let hash = fnv1a64(FNV_OFFSET, hlo);
+        let manifest = format!(
+            r#"{{"schema_version":2,"artifacts":[
+              {{"name":"a","hlo_file":"a.hlo.txt","content_hash":"{hash:016x}"}},
+              {{"name":"b","hlo_file":"b.hlo.txt"}}
+            ]}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        hash
+    }
+
+    #[test]
+    fn verify_hashes_passes_then_catches_tamper() {
+        let dir = std::env::temp_dir().join(format!("wsfm_verify_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let declared = write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.schema_version, 2);
+        assert_eq!(m.artifacts[0].content_hash, Some(declared));
+        assert_eq!(m.artifacts[1].content_hash, None);
+        let report = m.verify_hashes().unwrap();
+        assert!(report.ok());
+        assert_eq!((report.verified, report.unhashed), (1, 1));
+
+        // Flip one byte: the mismatch is caught and names the artifact.
+        std::fs::write(dir.join("a.hlo.txt"), b"HloModule step, tampered").unwrap();
+        let report = m.verify_hashes().unwrap();
+        assert!(!report.ok());
+        assert_eq!(report.mismatches.len(), 1);
+        assert_eq!(report.mismatches[0].0, "a");
+        assert_eq!(report.mismatches[0].1, declared);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn future_schema_version_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("wsfm_schema_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"schema_version":99,"artifacts":[{"name":"a","hlo_file":"a.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("newer than this binary"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_content_hash_string_errors() {
+        let j = Json::parse(r#"{"name":"x","hlo_file":"x.hlo","content_hash":"zzzz"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&j).is_err());
     }
 }

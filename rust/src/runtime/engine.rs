@@ -1071,6 +1071,7 @@ mod tests {
             artifacts: vec![],
             domains: crate::util::json::Json::Null,
             batch_sizes: BTreeMap::new(),
+            schema_version: 1,
         }
     }
 

@@ -302,6 +302,7 @@ pub(crate) mod testutil {
                     shape: vec![self.batch, self.seq_len, self.vocab],
                     dtype: "f32".into(),
                 }],
+                content_hash: None,
             })
         }
     }

@@ -1,5 +1,10 @@
-//! Blocking line-protocol client (used by examples, integration tests, and
-//! the load-generator in `examples/serve_text.rs`).
+//! Blocking wire client (used by examples, integration tests, and the
+//! load-generator in `examples/serve_text.rs`).
+//!
+//! Every connection starts on the legacy JSON-lines codec; call
+//! [`Client::negotiate`] to hello-upgrade to another wire codec (binary
+//! frames), or [`Client::connect_env`] to honor the `WSFM_WIRE_CODEC`
+//! environment variable (the CI wire-compat matrix hook).
 //!
 //! BUSY responses are flow control, not failures: [`Client::generate`]
 //! surfaces them as the typed [`Busy`] error carrying the server's
@@ -9,7 +14,11 @@
 //! concurrent clients with distinct seeds desynchronize instead of
 //! stampeding the admission queue in lockstep.
 
+use crate::coordinator::request::{DraftSpec, GenRequest};
 use crate::core::rng::Pcg64;
+use crate::core::schedule::WarpMode;
+use crate::server::codec::{self, Codec, JsonLines};
+use crate::server::protocol::{WireRequest, WireResponse};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -104,6 +113,7 @@ impl RetryPolicy {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    codec: Box<dyn Codec>,
 }
 
 /// Parsed generate reply.
@@ -117,14 +127,67 @@ pub struct GenerateReply {
 }
 
 impl Client {
+    /// Connect on the legacy JSON-lines codec (no hello sent).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_read_timeout(Some(Duration::from_secs(600)))?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { reader: BufReader::new(stream), writer, codec: Box::new(JsonLines) })
     }
 
-    /// Send one JSON line, read one JSON line.
+    /// Connect honoring `WSFM_WIRE_CODEC` (the CI wire-compat matrix):
+    /// unset or `json` stays on the hello-free legacy path; any other
+    /// supported name is negotiated before returning.
+    pub fn connect_env(addr: &str) -> Result<Client> {
+        let mut client = Self::connect(addr)?;
+        match std::env::var("WSFM_WIRE_CODEC") {
+            Ok(name) if !name.is_empty() && name != "json" => {
+                client.negotiate(&[&name])?;
+            }
+            _ => {}
+        }
+        Ok(client)
+    }
+
+    /// The active codec's name (`json` until a successful negotiate).
+    pub fn codec_name(&self) -> &str {
+        self.codec.name()
+    }
+
+    /// Give up the client and hand back the raw stream (tests that need
+    /// to write hostile bytes under an already-negotiated codec).
+    pub fn into_stream(self) -> TcpStream {
+        self.writer
+    }
+
+    /// Hello-negotiate a wire codec: offers `prefs` (most preferred
+    /// first), switches to whatever the server acks, and returns its
+    /// name. On a typed refusal (no mutual codec) the connection stays
+    /// usable on the current codec.
+    pub fn negotiate(&mut self, prefs: &[&str]) -> Result<String> {
+        let hello =
+            WireRequest::Hello { codecs: prefs.iter().map(|s| s.to_string()).collect() };
+        self.codec.write_request(&mut self.writer, &hello)?;
+        match self.codec.read_response(&mut self.reader)? {
+            WireResponse::HelloAck { codec: name } => {
+                if name != self.codec.name() {
+                    self.codec = codec::make(&name)
+                        .with_context(|| format!("server acked unknown codec {name:?}"))?;
+                }
+                Ok(name)
+            }
+            WireResponse::Error { msg, .. } => bail!("negotiate failed: {msg}"),
+            other => bail!("unexpected hello reply: {other:?}"),
+        }
+    }
+
+    fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.codec.write_request(&mut self.writer, req)?;
+        self.codec.read_response(&mut self.reader)
+    }
+
+    /// Send one raw JSON line, read one JSON line. Legacy escape hatch —
+    /// bypasses the active codec, only meaningful before a negotiate.
     pub fn roundtrip(&mut self, line: &str) -> Result<Json> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -138,20 +201,33 @@ impl Client {
     }
 
     pub fn ping(&mut self) -> Result<bool> {
-        let j = self.roundtrip(r#"{"cmd":"ping"}"#)?;
-        Ok(j.get("pong").as_bool().unwrap_or(false))
+        Ok(matches!(self.request(&WireRequest::Ping)?, WireResponse::Pong))
     }
 
+    /// Server metrics as a JSON object (`metrics`, `samples_per_sec`,
+    /// `completed`, `rejected`) — the same shape regardless of codec.
     pub fn metrics(&mut self) -> Result<Json> {
-        self.roundtrip(r#"{"cmd":"metrics"}"#)
+        match self.request(&WireRequest::Metrics)? {
+            WireResponse::Metrics { report, samples_per_sec, completed, rejected } => {
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("metrics", Json::str(report)),
+                    ("samples_per_sec", Json::num(samples_per_sec)),
+                    ("completed", Json::u64(completed)),
+                    ("rejected", Json::u64(rejected)),
+                ]))
+            }
+            other => bail!("unexpected metrics reply: {other:?}"),
+        }
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
-        let _ = self.roundtrip(r#"{"cmd":"shutdown"}"#)?;
+        let _ = self.request(&WireRequest::Shutdown)?;
         Ok(())
     }
 
-    /// Issue a generate command.
+    /// Issue a generate command. `seed` survives the wire exactly — even
+    /// above 2^53 — on both codecs.
     #[allow(clippy::too_many_arguments)]
     pub fn generate(
         &mut self,
@@ -164,54 +240,37 @@ impl Client {
         seed: u64,
         decode: bool,
     ) -> Result<GenerateReply> {
-        let req = Json::obj(vec![
-            ("cmd", Json::str("generate")),
-            ("domain", Json::str(domain)),
-            ("tag", Json::str(tag)),
-            ("draft", Json::str(draft)),
-            ("n_samples", Json::num(n_samples as f64)),
-            ("t0", Json::num(t0)),
-            ("steps", Json::num(steps as f64)),
-            ("seed", Json::num(seed as f64)),
-            ("decode", Json::Bool(decode)),
-        ]);
-        let j = self.roundtrip(&req.to_string())?;
-        if j.get("ok").as_bool() != Some(true) {
-            if j.get("busy").as_bool().unwrap_or(false) {
+        let request = GenRequest::from_wire(
+            domain.to_string(),
+            tag.to_string(),
+            DraftSpec::parse(draft)?,
+            n_samples,
+            t0,
+            steps,
+            WarpMode::Literal,
+            seed,
+        )?;
+        match self.request(&WireRequest::Generate { request, decode })? {
+            WireResponse::Generate { resp, texts } => Ok(GenerateReply {
+                nfe: resp.nfe,
+                total_us: resp.total_time.as_micros() as u64,
+                queue_us: resp.queue_wait.as_micros() as u64,
+                samples: resp.samples,
+                texts: texts.unwrap_or_default(),
+            }),
+            WireResponse::Busy { retry_after_ms } => {
                 // Typed flow-control signal: callers (and generate_retry)
                 // downcast to Busy and back off by the server's hint.
-                let retry_after_ms = j.get("retry_after_ms").as_usize().unwrap_or(1).max(1) as u64;
-                return Err(anyhow::Error::new(Busy { retry_after_ms }));
+                Err(anyhow::Error::new(Busy { retry_after_ms: retry_after_ms.max(1) }))
             }
-            bail!("generate failed: {}", j.get("error").as_str().unwrap_or("?"));
+            WireResponse::Error { msg, busy } => {
+                if busy {
+                    return Err(anyhow::Error::new(Busy { retry_after_ms: 1 }));
+                }
+                bail!("generate failed: {msg}")
+            }
+            other => bail!("unexpected generate reply: {other:?}"),
         }
-        let samples = j
-            .get("samples")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .map(|row| {
-                row.as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .map(|v| v.as_i64().unwrap_or(0) as i32)
-                    .collect()
-            })
-            .collect();
-        let texts = j
-            .get("texts")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .filter_map(|t| t.as_str().map(|s| s.to_string()))
-            .collect();
-        Ok(GenerateReply {
-            nfe: j.get("nfe").as_usize().unwrap_or(0),
-            total_us: j.get("total_us").as_f64().unwrap_or(0.0) as u64,
-            queue_us: j.get("queue_us").as_f64().unwrap_or(0.0) as u64,
-            samples,
-            texts,
-        })
     }
 
     /// [`Client::generate`] that honors BUSY backpressure: on a [`Busy`]
@@ -304,7 +363,8 @@ mod tests {
     /// service (tiny admission queue, slow refine), plain `generate`
     /// surfaces typed BUSY errors, while `generate_retry` absorbs them —
     /// every client completes, and the BUSY pressure is visible in the
-    /// retry counts.
+    /// retry counts. Runs under whichever codec `WSFM_WIRE_CODEC`
+    /// selects, so the CI matrix exercises retry flow on both wires.
     #[test]
     fn generate_retry_drains_a_saturated_service() {
         let mut exec = TestExec::drift(vec![1, 4], 2, 4, 1);
@@ -336,7 +396,7 @@ mod tests {
                         seed: i, // distinct jitter substreams per client
                         deadline: None,
                     };
-                    let mut c = Client::connect(&addr).unwrap();
+                    let mut c = Client::connect_env(&addr).unwrap();
                     c.generate_retry("mock", "cold", "noise", 1, 0.5, 10, i, false, &policy)
                 })
             })

@@ -1,0 +1,1018 @@
+//! Pluggable wire codecs: how [`WireRequest`]/[`WireResponse`] are framed
+//! on the socket.
+//!
+//! Two implementations (negotiated at connect via the client hello
+//! `{"cmd":"hello","codecs":[...]}`; absent hello ⇒ the server default,
+//! legacy JSON, so old clients work unchanged):
+//!
+//! - [`JsonLines`] — one JSON object per line, **byte-for-byte** the
+//!   pre-codec wire format. Golden tests below pin every response shape
+//!   to its exact legacy bytes.
+//! - [`Binary`] — length-prefixed frames. Layout:
+//!
+//!   ```text
+//!   [u32 LE payload length] [payload]
+//!   payload = [u8 version = 1] [u8 msg tag] [typed fields]
+//!   ```
+//!
+//!   Integers are little-endian, `f64` as LE bit pattern, strings are
+//!   `u32 len + UTF-8 bytes`, token rows are `u32 count + count × i32 LE`
+//!   — token arrays never round-trip through decimal strings. Frames
+//!   above [`MAX_FRAME`] are rejected *before* any allocation, and every
+//!   nested count is bounds-checked against the remaining payload, so a
+//!   hostile length field cannot allocate unbounded memory or hang the
+//!   connection.
+//!
+//! Both sides of the trait are implemented symmetrically (server reads
+//! requests / writes responses; client writes requests / reads
+//! responses), which is what lets the property tests drive full lossless
+//! round-trips through each codec.
+
+use crate::server::protocol::{
+    parse_request, parse_response, render_request, render_wire_response, WireRequest, WireResponse,
+};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
+use crate::core::schedule::WarpMode;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Read, Write};
+use std::time::Duration;
+
+/// Codec names in server preference order.
+pub const SUPPORTED: &[&str] = &["json", "binary"];
+
+/// Binary frame version byte.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Hard ceiling on one binary frame's payload (64 MiB). Checked against
+/// the length prefix before any payload allocation.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// One decoded inbound message, or a decode failure the server should
+/// surface as a typed error response.
+#[derive(Debug)]
+pub enum Decoded {
+    Request(WireRequest),
+    /// Undecodable input. `fatal` means framing is lost and the
+    /// connection must close after the error reply (binary framing
+    /// violations); non-fatal errors (a malformed JSON line, a bad field
+    /// inside a well-framed binary message) keep the connection open.
+    Malformed { msg: String, fatal: bool },
+}
+
+/// A wire framing: both directions of the protocol.
+pub trait Codec: Send {
+    fn name(&self) -> &'static str;
+    /// Server side: read the next request. `Ok(None)` = clean EOF.
+    fn read_request(&mut self, r: &mut dyn BufRead) -> Result<Option<Decoded>>;
+    /// Server side: write one response.
+    fn write_response(&mut self, w: &mut dyn Write, resp: &WireResponse) -> Result<()>;
+    /// Client side: write one request.
+    fn write_request(&mut self, w: &mut dyn Write, req: &WireRequest) -> Result<()>;
+    /// Client side: read one response.
+    fn read_response(&mut self, r: &mut dyn BufRead) -> Result<WireResponse>;
+}
+
+/// Construct a codec by negotiated name.
+pub fn make(name: &str) -> Option<Box<dyn Codec>> {
+    match name {
+        "json" => Some(Box::new(JsonLines)),
+        "binary" => Some(Box::new(Binary)),
+        _ => None,
+    }
+}
+
+/// Pick the codec for a hello: first client-preference name the server
+/// side also enables. `None` when the offers don't intersect.
+pub fn negotiate<'a>(server: &[String], client: &'a [String]) -> Option<&'a str> {
+    client.iter().map(String::as_str).find(|c| server.iter().any(|s| s == c))
+}
+
+// ---------------------------------------------------------------------------
+// JSON lines (legacy)
+// ---------------------------------------------------------------------------
+
+/// The legacy one-JSON-object-per-line framing.
+pub struct JsonLines;
+
+impl Codec for JsonLines {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn read_request(&mut self, r: &mut dyn BufRead) -> Result<Option<Decoded>> {
+        // Skip blank lines (legacy behavior); EOF ends the connection.
+        loop {
+            let mut line = String::new();
+            if r.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            return Ok(Some(match parse_request(&line) {
+                Ok(req) => Decoded::Request(req),
+                Err(e) => Decoded::Malformed { msg: format!("{e:#}"), fatal: false },
+            }));
+        }
+    }
+
+    fn write_response(&mut self, w: &mut dyn Write, resp: &WireResponse) -> Result<()> {
+        w.write_all(render_wire_response(resp).as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn write_request(&mut self, w: &mut dyn Write, req: &WireRequest) -> Result<()> {
+        w.write_all(render_request(req).as_bytes())?;
+        w.write_all(b"\n")?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn read_response(&mut self, r: &mut dyn BufRead) -> Result<WireResponse> {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("server closed connection");
+        }
+        parse_response(&line)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary (length-prefixed frames)
+// ---------------------------------------------------------------------------
+
+// Request tags.
+const RQ_PING: u8 = 1;
+const RQ_METRICS: u8 = 2;
+const RQ_INFO: u8 = 3;
+const RQ_SHUTDOWN: u8 = 4;
+const RQ_GENERATE: u8 = 5;
+const RQ_HELLO: u8 = 6;
+// Response tags.
+const RS_PONG: u8 = 1;
+const RS_METRICS: u8 = 2;
+const RS_INFO: u8 = 3;
+const RS_SHUTDOWN_ACK: u8 = 4;
+const RS_GENERATE: u8 = 5;
+const RS_ERROR: u8 = 6;
+const RS_BUSY: u8 = 7;
+const RS_HELLO_ACK: u8 = 8;
+
+/// Length-prefixed binary framing.
+pub struct Binary;
+
+impl Binary {
+    /// Encode one request's frame payload (version byte + tag + fields).
+    pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+        let mut p = vec![FRAME_VERSION];
+        match req {
+            WireRequest::Ping => p.push(RQ_PING),
+            WireRequest::Metrics => p.push(RQ_METRICS),
+            WireRequest::Info => p.push(RQ_INFO),
+            WireRequest::Shutdown => p.push(RQ_SHUTDOWN),
+            WireRequest::Hello { codecs } => {
+                p.push(RQ_HELLO);
+                put_u32(&mut p, codecs.len() as u32);
+                for c in codecs {
+                    put_str(&mut p, c);
+                }
+            }
+            WireRequest::Generate { request: r, decode } => {
+                p.push(RQ_GENERATE);
+                put_str(&mut p, &r.domain);
+                put_str(&mut p, &r.tag);
+                put_str(&mut p, r.draft.name());
+                put_u32(&mut p, r.n_samples as u32);
+                put_f64(&mut p, r.t0);
+                put_u32(&mut p, r.steps_cold as u32);
+                p.push(match r.warp_mode {
+                    WarpMode::Literal => 0,
+                    WarpMode::Exact => 1,
+                });
+                put_u64(&mut p, r.seed);
+                p.push(*decode as u8);
+            }
+        }
+        p
+    }
+
+    /// Decode one request frame payload.
+    pub fn decode_request(payload: &[u8]) -> Result<WireRequest> {
+        let mut rd = Rd { b: payload, i: 0 };
+        let ver = rd.u8().context("missing frame version")?;
+        if ver != FRAME_VERSION {
+            bail!("unsupported frame version {ver}");
+        }
+        let tag = rd.u8().context("missing message tag")?;
+        let req = match tag {
+            RQ_PING => WireRequest::Ping,
+            RQ_METRICS => WireRequest::Metrics,
+            RQ_INFO => WireRequest::Info,
+            RQ_SHUTDOWN => WireRequest::Shutdown,
+            RQ_HELLO => {
+                let n = rd.count(1)?;
+                let mut codecs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    codecs.push(rd.str()?);
+                }
+                WireRequest::Hello { codecs }
+            }
+            RQ_GENERATE => {
+                let domain = rd.str()?;
+                let tag_s = rd.str()?;
+                let draft = DraftSpec::parse(&rd.str()?)?;
+                let n_samples = rd.u32()? as usize;
+                let t0 = rd.f64()?;
+                let steps_cold = rd.u32()? as usize;
+                let warp_mode = match rd.u8()? {
+                    0 => WarpMode::Literal,
+                    1 => WarpMode::Exact,
+                    w => bail!("bad warp byte {w}"),
+                };
+                let seed = rd.u64()?;
+                let decode = rd.u8()? != 0;
+                let request = GenRequest::from_wire(
+                    domain, tag_s, draft, n_samples, t0, steps_cold, warp_mode, seed,
+                )?;
+                return rd.finish(WireRequest::Generate { request, decode });
+            }
+            other => bail!("unknown request tag {other}"),
+        };
+        rd.finish(req)
+    }
+
+    /// Encode one response's frame payload.
+    pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+        let mut p = vec![FRAME_VERSION];
+        match resp {
+            WireResponse::Pong => p.push(RS_PONG),
+            WireResponse::ShutdownAck => p.push(RS_SHUTDOWN_ACK),
+            WireResponse::HelloAck { codec } => {
+                p.push(RS_HELLO_ACK);
+                put_str(&mut p, codec);
+            }
+            WireResponse::Error { msg, busy } => {
+                p.push(RS_ERROR);
+                put_str(&mut p, msg);
+                p.push(*busy as u8);
+            }
+            WireResponse::Busy { retry_after_ms } => {
+                p.push(RS_BUSY);
+                put_u64(&mut p, *retry_after_ms);
+            }
+            WireResponse::Metrics { report, samples_per_sec, completed, rejected } => {
+                p.push(RS_METRICS);
+                put_str(&mut p, report);
+                put_f64(&mut p, *samples_per_sec);
+                put_u64(&mut p, *completed);
+                put_u64(&mut p, *rejected);
+            }
+            WireResponse::Info { domains, artifacts } => {
+                p.push(RS_INFO);
+                put_u32(&mut p, domains.len() as u32);
+                for d in domains {
+                    put_str(&mut p, d);
+                }
+                put_u64(&mut p, *artifacts as u64);
+            }
+            WireResponse::Generate { resp, texts } => {
+                p.push(RS_GENERATE);
+                put_u64(&mut p, resp.id);
+                put_u64(&mut p, resp.nfe as u64);
+                put_f64(&mut p, resp.t0_used);
+                put_u64(&mut p, resp.queue_wait.as_micros() as u64);
+                put_u64(&mut p, resp.draft_time.as_micros() as u64);
+                put_u64(&mut p, resp.refine_time.as_micros() as u64);
+                put_u64(&mut p, resp.total_time.as_micros() as u64);
+                match &resp.cascade {
+                    None => p.push(0),
+                    Some(c) => {
+                        p.push(1);
+                        put_u32(&mut p, c.stages_used as u32);
+                        put_u32(&mut p, c.nfe_per_stage.len() as u32);
+                        for &n in &c.nfe_per_stage {
+                            put_u32(&mut p, n as u32);
+                        }
+                        p.push(c.early_exit as u8);
+                    }
+                }
+                match &resp.degraded {
+                    None => p.push(0),
+                    Some(reason) => {
+                        p.push(1);
+                        put_str(&mut p, reason);
+                    }
+                }
+                put_u32(&mut p, resp.samples.len() as u32);
+                for row in &resp.samples {
+                    put_u32(&mut p, row.len() as u32);
+                    for &t in row {
+                        p.extend_from_slice(&t.to_le_bytes());
+                    }
+                }
+                match texts {
+                    None => p.push(0),
+                    Some(ts) => {
+                        p.push(1);
+                        put_u32(&mut p, ts.len() as u32);
+                        for t in ts {
+                            put_str(&mut p, t);
+                        }
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    /// Decode one response frame payload.
+    pub fn decode_response(payload: &[u8]) -> Result<WireResponse> {
+        let mut rd = Rd { b: payload, i: 0 };
+        let ver = rd.u8().context("missing frame version")?;
+        if ver != FRAME_VERSION {
+            bail!("unsupported frame version {ver}");
+        }
+        let tag = rd.u8().context("missing message tag")?;
+        let resp = match tag {
+            RS_PONG => WireResponse::Pong,
+            RS_SHUTDOWN_ACK => WireResponse::ShutdownAck,
+            RS_HELLO_ACK => WireResponse::HelloAck { codec: rd.str()? },
+            RS_ERROR => WireResponse::Error { msg: rd.str()?, busy: rd.u8()? != 0 },
+            RS_BUSY => WireResponse::Busy { retry_after_ms: rd.u64()? },
+            RS_METRICS => WireResponse::Metrics {
+                report: rd.str()?,
+                samples_per_sec: rd.f64()?,
+                completed: rd.u64()?,
+                rejected: rd.u64()?,
+            },
+            RS_INFO => {
+                let n = rd.count(1)?;
+                let mut domains = Vec::with_capacity(n);
+                for _ in 0..n {
+                    domains.push(rd.str()?);
+                }
+                WireResponse::Info { domains, artifacts: rd.u64()? as usize }
+            }
+            RS_GENERATE => {
+                let id = rd.u64()?;
+                let nfe = rd.u64()? as usize;
+                let t0_used = rd.f64()?;
+                let queue_wait = Duration::from_micros(rd.u64()?);
+                let draft_time = Duration::from_micros(rd.u64()?);
+                let refine_time = Duration::from_micros(rd.u64()?);
+                let total_time = Duration::from_micros(rd.u64()?);
+                let cascade = if rd.u8()? != 0 {
+                    let stages_used = rd.u32()? as usize;
+                    let n = rd.count(4)?;
+                    let mut nfe_per_stage = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        nfe_per_stage.push(rd.u32()? as usize);
+                    }
+                    Some(CascadeInfo { stages_used, nfe_per_stage, early_exit: rd.u8()? != 0 })
+                } else {
+                    None
+                };
+                let degraded = if rd.u8()? != 0 { Some(rd.str()?) } else { None };
+                let n_rows = rd.count(4)?;
+                let mut samples = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    let n = rd.count(4)?;
+                    let mut row = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        row.push(i32::from_le_bytes(rd.take(4)?.try_into().unwrap()));
+                    }
+                    samples.push(row);
+                }
+                let texts = if rd.u8()? != 0 {
+                    let n = rd.count(1)?;
+                    let mut ts = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        ts.push(rd.str()?);
+                    }
+                    Some(ts)
+                } else {
+                    None
+                };
+                let resp = GenResponse {
+                    id,
+                    samples,
+                    nfe,
+                    t0_used,
+                    cascade,
+                    queue_wait,
+                    draft_time,
+                    refine_time,
+                    total_time,
+                    degraded,
+                };
+                return rd.finish(WireResponse::Generate { resp, texts });
+            }
+            other => bail!("unknown response tag {other}"),
+        };
+        rd.finish(resp)
+    }
+
+    fn write_frame(w: &mut dyn Write, payload: &[u8]) -> Result<()> {
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame's payload. `Ok(None)` = clean EOF at a frame
+    /// boundary; a length prefix above [`MAX_FRAME`] errors *without*
+    /// allocating the claimed size.
+    fn read_frame(r: &mut dyn BufRead) -> Result<Option<Vec<u8>>> {
+        let mut len_buf = [0u8; 4];
+        // Distinguish clean EOF (no bytes) from truncation mid-length.
+        let mut filled = 0;
+        while filled < 4 {
+            let n = r.read(&mut len_buf[filled..])?;
+            if n == 0 {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                bail!("truncated frame: EOF inside length prefix ({filled}/4 bytes)");
+            }
+            filled += n;
+        }
+        let len = u32::from_le_bytes(len_buf);
+        if len > MAX_FRAME {
+            bail!("frame length {len} exceeds maximum {MAX_FRAME}");
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).context("truncated frame payload")?;
+        Ok(Some(payload))
+    }
+}
+
+impl Codec for Binary {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn read_request(&mut self, r: &mut dyn BufRead) -> Result<Option<Decoded>> {
+        let payload = match Binary::read_frame(r) {
+            Ok(None) => return Ok(None),
+            Ok(Some(p)) => p,
+            // Framing is lost (oversized/truncated length): the server
+            // sends a typed error and closes; it cannot resync.
+            Err(e) => return Ok(Some(Decoded::Malformed { msg: format!("{e:#}"), fatal: true })),
+        };
+        Ok(Some(match Binary::decode_request(&payload) {
+            Ok(req) => Decoded::Request(req),
+            // Frame boundaries are intact; only this message was bad.
+            Err(e) => Decoded::Malformed { msg: format!("{e:#}"), fatal: false },
+        }))
+    }
+
+    fn write_response(&mut self, w: &mut dyn Write, resp: &WireResponse) -> Result<()> {
+        Binary::write_frame(w, &Binary::encode_response(resp))
+    }
+
+    fn write_request(&mut self, w: &mut dyn Write, req: &WireRequest) -> Result<()> {
+        Binary::write_frame(w, &Binary::encode_request(req))
+    }
+
+    fn read_response(&mut self, r: &mut dyn BufRead) -> Result<WireResponse> {
+        match Binary::read_frame(r)? {
+            None => bail!("server closed connection"),
+            Some(payload) => Binary::decode_response(&payload),
+        }
+    }
+}
+
+// -- binary primitives ------------------------------------------------------
+
+fn put_u32(p: &mut Vec<u8>, v: u32) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(p: &mut Vec<u8>, v: u64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(p: &mut Vec<u8>, v: f64) {
+    p.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    put_u32(p, s.len() as u32);
+    p.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked payload reader. Every `count` is validated against the
+/// bytes actually remaining before any `Vec::with_capacity`, so a forged
+/// count cannot become an allocation bomb.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated frame: wanted {n} bytes, {} left", self.b.len() - self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// Read a u32 element count and check `count * min_elem_size` fits in
+    /// the remaining payload.
+    fn count(&mut self, min_elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.b.len() - self.i;
+        if n.saturating_mul(min_elem_size) > remaining {
+            bail!("corrupt frame: count {n} exceeds remaining {remaining} bytes");
+        }
+        Ok(n)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        Ok(std::str::from_utf8(self.take(n)?).context("invalid utf-8 in frame")?.to_string())
+    }
+    /// Require the payload to be fully consumed (catches messages with
+    /// trailing garbage, which would mean a codec mismatch).
+    fn finish<T>(&mut self, v: T) -> Result<T> {
+        if self.i != self.b.len() {
+            bail!("corrupt frame: {} trailing bytes", self.b.len() - self.i);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::util::prop::{check, Strategy};
+    use std::io::Cursor;
+
+    fn resp_fixture() -> GenResponse {
+        GenResponse {
+            id: 3,
+            samples: vec![vec![1, 2], vec![3, 4]],
+            nfe: 205,
+            t0_used: 0.8,
+            cascade: None,
+            queue_wait: Duration::from_micros(120),
+            draft_time: Duration::from_micros(900),
+            refine_time: Duration::from_micros(52_000),
+            total_time: Duration::from_micros(53_100),
+            degraded: None,
+        }
+    }
+
+    fn json_bytes(resp: &WireResponse) -> String {
+        let mut buf = Vec::new();
+        JsonLines.write_response(&mut buf, resp).unwrap();
+        String::from_utf8(buf).unwrap()
+    }
+
+    // -- goldens: the full legacy JSON wire surface, byte-exact ---------
+
+    #[test]
+    fn golden_generate_ok() {
+        assert_eq!(
+            json_bytes(&WireResponse::Generate { resp: resp_fixture(), texts: None }),
+            concat!(
+                r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
+                r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+                r#""samples":[[1,2],[3,4]]}"#,
+                "\n"
+            )
+        );
+    }
+
+    #[test]
+    fn golden_generate_with_texts() {
+        assert_eq!(
+            json_bytes(&WireResponse::Generate {
+                resp: resp_fixture(),
+                texts: Some(vec!["ab".into(), "cd".into()]),
+            }),
+            concat!(
+                r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
+                r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+                r#""samples":[[1,2],[3,4]],"texts":["ab","cd"]}"#,
+                "\n"
+            )
+        );
+    }
+
+    #[test]
+    fn golden_generate_cascade() {
+        let resp = GenResponse {
+            cascade: Some(CascadeInfo {
+                stages_used: 2,
+                nfe_per_stage: vec![150, 55],
+                early_exit: true,
+            }),
+            ..resp_fixture()
+        };
+        assert_eq!(
+            json_bytes(&WireResponse::Generate { resp, texts: None }),
+            concat!(
+                r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
+                r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+                r#""stages_used":2,"nfe_stages":[150,55],"early_exit":true,"#,
+                r#""samples":[[1,2],[3,4]]}"#,
+                "\n"
+            )
+        );
+    }
+
+    #[test]
+    fn golden_generate_degraded() {
+        let resp = GenResponse {
+            nfe: 0,
+            degraded: Some("refine failed: all fleet replicas are down".into()),
+            ..resp_fixture()
+        };
+        assert_eq!(
+            json_bytes(&WireResponse::Generate { resp, texts: None }),
+            concat!(
+                r#"{"ok":true,"id":3,"nfe":0,"t0_used":0.8,"queue_us":120,"#,
+                r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+                r#""degraded":true,"degraded_reason":"refine failed: all fleet replicas are down","#,
+                r#""samples":[[1,2],[3,4]]}"#,
+                "\n"
+            )
+        );
+    }
+
+    #[test]
+    fn golden_error_and_busy() {
+        assert_eq!(
+            json_bytes(&WireResponse::Error { msg: "unknown cmd \"explode\"".into(), busy: false }),
+            "{\"ok\":false,\"error\":\"unknown cmd \\\"explode\\\"\"}\n"
+        );
+        assert_eq!(
+            json_bytes(&WireResponse::Error { msg: "overload".into(), busy: true }),
+            r#"{"ok":false,"error":"overload","busy":true}"#.to_string() + "\n"
+        );
+        assert_eq!(
+            json_bytes(&WireResponse::Busy { retry_after_ms: 7 }),
+            concat!(
+                r#"{"ok":false,"error":"server busy: admission queue full","#,
+                r#""busy":true,"retry_after_ms":7}"#,
+                "\n"
+            )
+        );
+    }
+
+    #[test]
+    fn golden_ping_metrics_info_shutdown() {
+        assert_eq!(json_bytes(&WireResponse::Pong), "{\"ok\":true,\"pong\":true}\n");
+        assert_eq!(
+            json_bytes(&WireResponse::Metrics {
+                report: "report text".into(),
+                samples_per_sec: 12.5,
+                completed: 3,
+                rejected: 1,
+            }),
+            concat!(
+                r#"{"ok":true,"metrics":"report text","samples_per_sec":12.5,"#,
+                r#""completed":3,"rejected":1}"#,
+                "\n"
+            )
+        );
+        assert_eq!(
+            json_bytes(&WireResponse::Info {
+                domains: vec!["text8".into(), "two_moons".into()],
+                artifacts: 12,
+            }),
+            "{\"ok\":true,\"domains\":[\"text8\",\"two_moons\"],\"artifacts\":12}\n"
+        );
+        assert_eq!(json_bytes(&WireResponse::ShutdownAck), "{\"ok\":true}\n");
+    }
+
+    #[test]
+    fn golden_request_lines() {
+        let mut buf = Vec::new();
+        JsonLines.write_request(&mut buf, &WireRequest::Ping).unwrap();
+        assert_eq!(buf, b"{\"cmd\":\"ping\"}\n");
+        let req = GenRequest::from_wire(
+            "text8".into(),
+            "ws_t080".into(),
+            DraftSpec::Lstm,
+            2,
+            0.8,
+            1024,
+            WarpMode::Literal,
+            7,
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        JsonLines
+            .write_request(&mut buf, &WireRequest::Generate { request: req, decode: true })
+            .unwrap();
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            concat!(
+                r#"{"cmd":"generate","domain":"text8","tag":"ws_t080","draft":"lstm","#,
+                r#""n_samples":2,"t0":0.8,"steps":1024,"warp":"literal","seed":7,"decode":true}"#,
+                "\n"
+            )
+        );
+    }
+
+    // -- negotiation ----------------------------------------------------
+
+    #[test]
+    fn negotiate_picks_first_client_preference() {
+        let server: Vec<String> = vec!["json".into(), "binary".into()];
+        assert_eq!(negotiate(&server, &["binary".into(), "json".into()]), Some("binary"));
+        assert_eq!(negotiate(&server, &["json".into()]), Some("json"));
+        assert_eq!(negotiate(&server, &["zstd".into(), "json".into()]), Some("json"));
+        assert_eq!(negotiate(&server, &["zstd".into()]), None);
+        assert_eq!(negotiate(&server, &[]), None);
+        let json_only: Vec<String> = vec!["json".into()];
+        assert_eq!(negotiate(&json_only, &["binary".into()]), None);
+    }
+
+    #[test]
+    fn make_resolves_supported_names() {
+        for name in SUPPORTED {
+            assert_eq!(make(name).unwrap().name(), *name);
+        }
+        assert!(make("zstd").is_none());
+    }
+
+    // -- binary round-trips ---------------------------------------------
+
+    fn roundtrip_response(want: &WireResponse) {
+        let payload = Binary::encode_response(want);
+        let got = Binary::decode_response(&payload).unwrap();
+        assert_eq!(&got, want);
+        // And through the full framed stream path.
+        let mut buf = Vec::new();
+        Binary.write_response(&mut buf, want).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(&Binary.read_response(&mut cur).unwrap(), want);
+    }
+
+    #[test]
+    fn binary_roundtrips_every_response_type() {
+        roundtrip_response(&WireResponse::Pong);
+        roundtrip_response(&WireResponse::ShutdownAck);
+        roundtrip_response(&WireResponse::HelloAck { codec: "binary".into() });
+        roundtrip_response(&WireResponse::Error { msg: "no \"such\" cmd".into(), busy: false });
+        roundtrip_response(&WireResponse::Error { msg: "overload".into(), busy: true });
+        roundtrip_response(&WireResponse::Busy { retry_after_ms: u64::MAX });
+        roundtrip_response(&WireResponse::Metrics {
+            report: "multi\nline ünïcode".into(),
+            samples_per_sec: 1234.5678,
+            completed: u64::MAX,
+            rejected: 0,
+        });
+        roundtrip_response(&WireResponse::Info {
+            domains: vec!["text8".into(), "wiki".into()],
+            artifacts: 12,
+        });
+        roundtrip_response(&WireResponse::Generate { resp: resp_fixture(), texts: None });
+        roundtrip_response(&WireResponse::Generate {
+            resp: GenResponse {
+                cascade: Some(CascadeInfo {
+                    stages_used: 3,
+                    nfe_per_stage: vec![100, 50, 25],
+                    early_exit: true,
+                }),
+                degraded: Some("draft fallback".into()),
+                ..resp_fixture()
+            },
+            texts: Some(vec!["ab".into(), String::new(), "☃".into()]),
+        });
+        // Empty-everything edge.
+        roundtrip_response(&WireResponse::Generate {
+            resp: GenResponse { samples: vec![], ..resp_fixture() },
+            texts: Some(vec![]),
+        });
+    }
+
+    #[test]
+    fn binary_roundtrips_every_request_type() {
+        let cases = vec![
+            WireRequest::Ping,
+            WireRequest::Metrics,
+            WireRequest::Info,
+            WireRequest::Shutdown,
+            WireRequest::Hello { codecs: vec!["binary".into(), "json".into()] },
+            WireRequest::Hello { codecs: vec![] },
+            WireRequest::Generate {
+                request: GenRequest::from_wire(
+                    "text8".into(),
+                    "ws_t080".into(),
+                    DraftSpec::Lstm,
+                    2,
+                    0.8,
+                    1024,
+                    WarpMode::Exact,
+                    u64::MAX, // seed precision survives binary too
+                )
+                .unwrap(),
+                decode: true,
+            },
+        ];
+        for want in cases {
+            let payload = Binary::encode_request(&want);
+            let got = Binary::decode_request(&payload).unwrap();
+            assert_eq!(got, want);
+            let mut buf = Vec::new();
+            Binary.write_request(&mut buf, &want).unwrap();
+            let mut cur = Cursor::new(buf);
+            match Binary.read_request(&mut cur).unwrap().unwrap() {
+                Decoded::Request(r) => assert_eq!(r, want),
+                Decoded::Malformed { msg, .. } => panic!("malformed: {msg}"),
+            }
+        }
+    }
+
+    // -- property: random generate responses round-trip losslessly ------
+
+    struct GenRespStrategy;
+
+    impl Strategy for GenRespStrategy {
+        type Value = WireResponse;
+        fn generate(&self, rng: &mut Pcg64) -> WireResponse {
+            let n_rows = rng.below(5) as usize;
+            let row_len = rng.below(64) as usize;
+            let samples = (0..n_rows)
+                .map(|_| (0..row_len).map(|_| rng.next_u32() as i32).collect())
+                .collect();
+            let cascade = if rng.below(2) == 1 {
+                let stages = 1 + rng.below(4) as usize;
+                Some(CascadeInfo {
+                    stages_used: stages,
+                    nfe_per_stage: (0..stages).map(|_| rng.below(500) as usize).collect(),
+                    early_exit: rng.below(2) == 1,
+                })
+            } else {
+                None
+            };
+            let degraded =
+                if rng.below(4) == 0 { Some(format!("reason {}", rng.below(100))) } else { None };
+            let texts = if rng.below(2) == 1 {
+                Some((0..n_rows).map(|i| format!("text {i} é")).collect())
+            } else {
+                None
+            };
+            WireResponse::Generate {
+                resp: GenResponse {
+                    id: rng.next_u64(),
+                    samples,
+                    nfe: rng.below(10_000) as usize,
+                    t0_used: rng.uniform(),
+                    cascade,
+                    queue_wait: Duration::from_micros(rng.next_u32() as u64),
+                    draft_time: Duration::from_micros(rng.next_u32() as u64),
+                    refine_time: Duration::from_micros(rng.next_u32() as u64),
+                    total_time: Duration::from_micros(rng.next_u32() as u64),
+                    degraded,
+                },
+                texts,
+            }
+        }
+    }
+
+    #[test]
+    fn prop_binary_generate_roundtrip_lossless() {
+        check("binary generate round-trip", GenRespStrategy, |resp| {
+            let got = Binary::decode_response(&Binary::encode_response(resp))
+                .map_err(|e| format!("{e:#}"))?;
+            if &got == resp {
+                Ok(())
+            } else {
+                Err(format!("mismatch: {got:?}"))
+            }
+        });
+    }
+
+    /// The JSON codec round-trips the same random responses (it carries
+    /// µs-granularity ints and f64s, which is exactly what GenResponse
+    /// holds — so equality is exact here too).
+    #[test]
+    fn prop_json_generate_roundtrip() {
+        check("json generate round-trip", GenRespStrategy, |resp| {
+            let line = render_wire_response(resp);
+            let got = parse_response(&line).map_err(|e| format!("{e:#}"))?;
+            if &got == resp {
+                Ok(())
+            } else {
+                Err(format!("mismatch: {got:?} from {line}"))
+            }
+        });
+    }
+
+    // -- hostile input: truncation and oversized frames -----------------
+
+    #[test]
+    fn truncated_mid_length_prefix_is_fatal_not_a_hang() {
+        let mut cur = Cursor::new(vec![0x10u8, 0x00]); // 2 of 4 length bytes
+        match Binary.read_request(&mut cur).unwrap().unwrap() {
+            Decoded::Malformed { msg, fatal } => {
+                assert!(fatal, "lost framing must close the connection");
+                assert!(msg.contains("truncated"), "{msg}");
+            }
+            other => panic!("expected malformed, got {other:?}"),
+        }
+        // Clean EOF (zero bytes) is a normal connection end, not an error.
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(Binary.read_request(&mut empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_payload_is_fatal() {
+        let mut frame = 32u32.to_le_bytes().to_vec();
+        frame.extend_from_slice(&[FRAME_VERSION, RQ_PING]); // 2 of 32 bytes
+        let mut cur = Cursor::new(frame);
+        match Binary.read_request(&mut cur).unwrap().unwrap() {
+            Decoded::Malformed { fatal, .. } => assert!(fatal),
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        // Claims a 4 GiB-1 payload; must be rejected from the 4-byte
+        // prefix alone (the cursor holds nothing else to allocate from).
+        let mut cur = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        match Binary.read_request(&mut cur).unwrap().unwrap() {
+            Decoded::Malformed { msg, fatal } => {
+                assert!(fatal);
+                assert!(msg.contains("exceeds maximum"), "{msg}");
+            }
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forged_count_inside_frame_is_rejected_before_allocating() {
+        // A well-framed generate response whose row count claims 2^31
+        // rows with only a handful of payload bytes behind it.
+        let mut p = vec![FRAME_VERSION, RS_GENERATE];
+        put_u64(&mut p, 1); // id
+        put_u64(&mut p, 0); // nfe
+        put_f64(&mut p, 0.5);
+        for _ in 0..4 {
+            put_u64(&mut p, 0); // timings
+        }
+        p.push(0); // no cascade
+        p.push(0); // no degraded
+        put_u32(&mut p, 0x8000_0000); // forged row count
+        let err = Binary::decode_response(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("count"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_field_in_well_framed_request_is_nonfatal() {
+        // Unknown draft name inside an intact frame: the connection can
+        // keep serving after the error reply.
+        let mut p = vec![FRAME_VERSION, RQ_GENERATE];
+        put_str(&mut p, "text8");
+        put_str(&mut p, "cold");
+        put_str(&mut p, "warpdrive"); // not a draft
+        put_u32(&mut p, 1);
+        put_f64(&mut p, 0.5);
+        put_u32(&mut p, 10);
+        p.push(0);
+        put_u64(&mut p, 1);
+        p.push(0);
+        let mut frame = (p.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&p);
+        let mut cur = Cursor::new(frame);
+        match Binary.read_request(&mut cur).unwrap().unwrap() {
+            Decoded::Malformed { msg, fatal } => {
+                assert!(!fatal, "frame boundary intact — keep the connection");
+                assert!(msg.contains("draft"), "{msg}");
+            }
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_in_frame_is_rejected() {
+        let mut p = Binary::encode_request(&WireRequest::Ping);
+        p.push(0xFF);
+        assert!(Binary::decode_request(&p).unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn wrong_version_byte_is_rejected() {
+        let mut p = Binary::encode_request(&WireRequest::Ping);
+        p[0] = 9;
+        assert!(Binary::decode_request(&p).unwrap_err().to_string().contains("version"));
+    }
+}

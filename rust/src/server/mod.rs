@@ -1,15 +1,19 @@
-//! TCP serving front-end: newline-delimited JSON protocol over a threaded
-//! accept loop (no async runtime in the vendored crate set; execution
-//! streams scale via the engine fleet, not per-connection threads, so
-//! thread-per-connection with a shared [`crate::coordinator::Service`] is
-//! the right shape). BUSY backpressure is typed end to end: the wire
-//! response carries `retry_after_ms`, and [`client::RetryPolicy`] turns
-//! it into capped, jittered exponential backoff.
+//! TCP serving front-end: a threaded accept loop (no async runtime in the
+//! vendored crate set; execution streams scale via the engine fleet, not
+//! per-connection threads, so thread-per-connection with a shared
+//! [`crate::coordinator::Service`] is the right shape) speaking a
+//! negotiated wire codec ([`codec`]): newline-delimited JSON by default
+//! (legacy, byte-pinned) or length-prefixed binary frames after a client
+//! hello. BUSY backpressure is typed end to end: the wire response
+//! carries `retry_after_ms`, and [`client::RetryPolicy`] turns it into
+//! capped, jittered exponential backoff.
 
 pub mod client;
+pub mod codec;
 pub mod protocol;
 pub mod tcp;
 
 pub use client::{Busy, Client, RetryDeadline, RetryPolicy};
-pub use protocol::{parse_request, render_error, render_response, WireRequest};
+pub use codec::{Binary, Codec, Decoded, JsonLines};
+pub use protocol::{parse_request, render_error, render_response, WireRequest, WireResponse};
 pub use tcp::TcpServer;

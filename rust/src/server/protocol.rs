@@ -1,4 +1,10 @@
-//! Wire protocol: one JSON object per line.
+//! Codec-agnostic wire types + the legacy JSON-lines encoding.
+//!
+//! This module defines *what* travels over the wire — [`WireRequest`] and
+//! [`WireResponse`] — while `server::codec` defines *how* it is framed
+//! (JSON lines or length-prefixed binary). The JSON render/parse helpers
+//! here are the legacy one-object-per-line format, pinned byte-for-byte
+//! by golden tests in `server::codec`.
 //!
 //! Request:
 //! ```json
@@ -6,7 +12,8 @@
 //!  "n_samples":2,"t0":0.8,"steps":1024,"warp":"literal","seed":7,
 //!  "decode":true}
 //! ```
-//! Other commands: `{"cmd":"metrics"}`, `{"cmd":"info"}`, `{"cmd":"ping"}`.
+//! Other commands: `{"cmd":"metrics"}`, `{"cmd":"info"}`, `{"cmd":"ping"}`,
+//! and the codec hello `{"cmd":"hello","codecs":["binary","json"]}`.
 //!
 //! Response (generate):
 //! ```json
@@ -16,23 +23,44 @@
 //! ```
 //! Errors: `{"ok":false,"error":"...","busy":true?}`.
 
-use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
 use crate::core::schedule::WarpMode;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::time::Instant;
+use std::time::Duration;
 
 /// Parsed wire command.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum WireRequest {
     Generate { request: GenRequest, decode: bool },
     Metrics,
     Info,
     Ping,
     Shutdown,
+    /// Codec negotiation: client's supported codec names in preference
+    /// order. Absent hello ⇒ the connection stays on the server's
+    /// default codec (legacy JSON), so old clients work unchanged.
+    Hello { codecs: Vec<String> },
 }
 
-/// Parse one request line.
+/// Typed wire response — everything the server can say. Each variant has
+/// a pinned legacy JSON encoding (see the render helpers) and a binary
+/// encoding in `server::codec`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    Generate { resp: GenResponse, texts: Option<Vec<String>> },
+    Error { msg: String, busy: bool },
+    /// Typed backpressure: flow control, not failure.
+    Busy { retry_after_ms: u64 },
+    Pong,
+    Metrics { report: String, samples_per_sec: f64, completed: u64, rejected: u64 },
+    Info { domains: Vec<String>, artifacts: usize },
+    ShutdownAck,
+    /// Negotiation accept: the codec every subsequent message uses.
+    HelloAck { codec: String },
+}
+
+/// Parse one JSON request line.
 pub fn parse_request(line: &str) -> Result<WireRequest> {
     let j = Json::parse(line.trim()).context("malformed json")?;
     let cmd = j.get("cmd").as_str().context("missing cmd")?;
@@ -41,32 +69,61 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         "metrics" => Ok(WireRequest::Metrics),
         "info" => Ok(WireRequest::Info),
         "shutdown" => Ok(WireRequest::Shutdown),
+        "hello" => {
+            let codecs = j
+                .get("codecs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|c| c.as_str().map(str::to_string))
+                .collect();
+            Ok(WireRequest::Hello { codecs })
+        }
         "generate" => {
             let domain = j.get("domain").as_str().context("missing domain")?.to_string();
             let tag = j.get("tag").as_str().unwrap_or("cold").to_string();
             let draft = DraftSpec::parse(j.get("draft").as_str().unwrap_or("noise"))?;
-            let n_samples = j.get("n_samples").as_usize().unwrap_or(1);
+            let n_samples = j.get("n_samples").as_u64().map(|n| n as usize).unwrap_or(1);
             let t0 = j.get("t0").as_f64().unwrap_or(0.0);
-            let steps_cold = j.get("steps").as_usize().unwrap_or(128);
+            let steps_cold = j.get("steps").as_u64().map(|n| n as usize).unwrap_or(128);
             let warp_mode = WarpMode::parse(j.get("warp").as_str().unwrap_or("literal"))?;
-            let seed = j.get("seed").as_f64().unwrap_or(0.0) as u64;
+            // Integer-preserving: seeds above 2^53 must not round
+            // through f64 (`as_f64() as u64` silently corrupted them).
+            let seed = j.get("seed").as_u64().unwrap_or(0);
             let decode = j.get("decode").as_bool().unwrap_or(false);
-            let request = GenRequest {
-                id: 0,
-                domain,
-                tag,
-                draft,
-                n_samples,
-                t0,
-                steps_cold,
-                warp_mode,
-                seed,
-                submitted: Instant::now(),
-            };
-            request.validate()?;
+            let request =
+                GenRequest::from_wire(domain, tag, draft, n_samples, t0, steps_cold, warp_mode, seed)?;
             Ok(WireRequest::Generate { request, decode })
         }
         other => bail!("unknown cmd {other:?}"),
+    }
+}
+
+/// Render one request as a legacy JSON line (client side).
+pub fn render_request(req: &WireRequest) -> String {
+    match req {
+        WireRequest::Ping => r#"{"cmd":"ping"}"#.to_string(),
+        WireRequest::Metrics => r#"{"cmd":"metrics"}"#.to_string(),
+        WireRequest::Info => r#"{"cmd":"info"}"#.to_string(),
+        WireRequest::Shutdown => r#"{"cmd":"shutdown"}"#.to_string(),
+        WireRequest::Hello { codecs } => Json::obj(vec![
+            ("cmd", Json::str("hello")),
+            ("codecs", Json::arr(codecs.iter().map(|c| Json::str(c.clone())))),
+        ])
+        .to_string(),
+        WireRequest::Generate { request: r, decode } => Json::obj(vec![
+            ("cmd", Json::str("generate")),
+            ("domain", Json::str(r.domain.clone())),
+            ("tag", Json::str(r.tag.clone())),
+            ("draft", Json::str(r.draft.name())),
+            ("n_samples", Json::u64(r.n_samples as u64)),
+            ("t0", Json::num(r.t0)),
+            ("steps", Json::u64(r.steps_cold as u64)),
+            ("warp", Json::str(r.warp_mode.name())),
+            ("seed", Json::u64(r.seed)),
+            ("decode", Json::Bool(*decode)),
+        ])
+        .to_string(),
     }
 }
 
@@ -80,22 +137,22 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
 /// served draft tokens — with `cascade.mode = off` and refinement
 /// healthy the response stays **byte-for-byte** the pre-cascade wire
 /// format (pinned by tests).
-pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String {
+pub fn render_response(resp: &GenResponse, texts: Option<&[String]>) -> String {
     let mut fields = vec![
         ("ok", Json::Bool(true)),
-        ("id", Json::num(resp.id as f64)),
-        ("nfe", Json::num(resp.nfe as f64)),
+        ("id", Json::u64(resp.id)),
+        ("nfe", Json::u64(resp.nfe as u64)),
         ("t0_used", Json::num(resp.t0_used)),
-        ("queue_us", Json::num(resp.queue_wait.as_micros() as f64)),
-        ("draft_us", Json::num(resp.draft_time.as_micros() as f64)),
-        ("refine_us", Json::num(resp.refine_time.as_micros() as f64)),
-        ("total_us", Json::num(resp.total_time.as_micros() as f64)),
+        ("queue_us", Json::u64(resp.queue_wait.as_micros() as u64)),
+        ("draft_us", Json::u64(resp.draft_time.as_micros() as u64)),
+        ("refine_us", Json::u64(resp.refine_time.as_micros() as u64)),
+        ("total_us", Json::u64(resp.total_time.as_micros() as u64)),
     ];
     if let Some(c) = &resp.cascade {
-        fields.push(("stages_used", Json::num(c.stages_used as f64)));
+        fields.push(("stages_used", Json::u64(c.stages_used as u64)));
         fields.push((
             "nfe_stages",
-            Json::arr(c.nfe_per_stage.iter().map(|&n| Json::num(n as f64))),
+            Json::arr(c.nfe_per_stage.iter().map(|&n| Json::u64(n as u64))),
         ));
         fields.push(("early_exit", Json::Bool(c.early_exit)));
     }
@@ -110,7 +167,7 @@ pub fn render_response(resp: &GenResponse, texts: Option<Vec<String>>) -> String
         ),
     ));
     if let Some(ts) = texts {
-        fields.push(("texts", Json::arr(ts.into_iter().map(Json::str))));
+        fields.push(("texts", Json::arr(ts.iter().map(|t| Json::str(t.clone())))));
     }
     Json::obj(fields).to_string()
 }
@@ -128,14 +185,146 @@ pub fn render_error(msg: &str, busy: bool) -> String {
 /// is not a failure but a flow-control signal, so it carries a
 /// machine-readable `retry_after_ms` hint (derived from the batcher's
 /// flush interval) alongside `busy: true`.
-pub fn render_busy(retry_after: std::time::Duration) -> String {
+pub fn render_busy(retry_after: Duration) -> String {
+    render_busy_ms((retry_after.as_millis().max(1)) as u64)
+}
+
+fn render_busy_ms(retry_after_ms: u64) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str("server busy: admission queue full")),
         ("busy", Json::Bool(true)),
-        ("retry_after_ms", Json::num((retry_after.as_millis().max(1)) as f64)),
+        ("retry_after_ms", Json::u64(retry_after_ms)),
     ])
     .to_string()
+}
+
+/// Render any [`WireResponse`] as its pinned legacy JSON line.
+pub fn render_wire_response(resp: &WireResponse) -> String {
+    match resp {
+        WireResponse::Generate { resp, texts } => render_response(resp, texts.as_deref()),
+        WireResponse::Error { msg, busy } => render_error(msg, *busy),
+        WireResponse::Busy { retry_after_ms } => render_busy_ms((*retry_after_ms).max(1)),
+        WireResponse::Pong => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
+        }
+        WireResponse::Metrics { report, samples_per_sec, completed, rejected } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", Json::str(report.clone())),
+            ("samples_per_sec", Json::num(*samples_per_sec)),
+            ("completed", Json::u64(*completed)),
+            ("rejected", Json::u64(*rejected)),
+        ])
+        .to_string(),
+        WireResponse::Info { domains, artifacts } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("domains", Json::arr(domains.iter().map(|d| Json::str(d.clone())))),
+            ("artifacts", Json::u64(*artifacts as u64)),
+        ])
+        .to_string(),
+        WireResponse::ShutdownAck => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
+        WireResponse::HelloAck { codec } => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("codec", Json::str(codec.clone()))])
+                .to_string()
+        }
+    }
+}
+
+/// Parse one JSON response line back into the typed [`WireResponse`]
+/// (client side). Inverse of [`render_wire_response`] up to the
+/// microsecond granularity the encoding itself carries.
+pub fn parse_response(line: &str) -> Result<WireResponse> {
+    let j = Json::parse(line.trim()).context("malformed json")?;
+    let ok = j.get("ok").as_bool().context("missing ok")?;
+    if !ok {
+        let msg = j.get("error").as_str().unwrap_or("?").to_string();
+        let busy = j.get("busy").as_bool().unwrap_or(false);
+        if busy && !j.get("retry_after_ms").is_null() {
+            return Ok(WireResponse::Busy {
+                retry_after_ms: j.get("retry_after_ms").as_u64().unwrap_or(1).max(1),
+            });
+        }
+        return Ok(WireResponse::Error { msg, busy });
+    }
+    if j.get("pong").as_bool() == Some(true) {
+        return Ok(WireResponse::Pong);
+    }
+    if let Some(codec) = j.get("codec").as_str() {
+        return Ok(WireResponse::HelloAck { codec: codec.to_string() });
+    }
+    if let Some(report) = j.get("metrics").as_str() {
+        return Ok(WireResponse::Metrics {
+            report: report.to_string(),
+            samples_per_sec: j.get("samples_per_sec").as_f64().unwrap_or(0.0),
+            completed: j.get("completed").as_u64().unwrap_or(0),
+            rejected: j.get("rejected").as_u64().unwrap_or(0),
+        });
+    }
+    if !j.get("domains").is_null() {
+        let domains = j
+            .get("domains")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_str().map(str::to_string))
+            .collect();
+        return Ok(WireResponse::Info {
+            domains,
+            artifacts: j.get("artifacts").as_usize().unwrap_or(0),
+        });
+    }
+    if !j.get("samples").is_null() {
+        let samples = j
+            .get("samples")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|row| {
+                row.as_arr().unwrap_or(&[]).iter().map(|v| v.as_i64().unwrap_or(0) as i32).collect()
+            })
+            .collect();
+        let cascade = if !j.get("stages_used").is_null() {
+            Some(CascadeInfo {
+                stages_used: j.get("stages_used").as_usize().unwrap_or(0),
+                nfe_per_stage: j
+                    .get("nfe_stages")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|n| n.as_usize())
+                    .collect(),
+                early_exit: j.get("early_exit").as_bool().unwrap_or(false),
+            })
+        } else {
+            None
+        };
+        let texts = if j.get("texts").is_null() {
+            None
+        } else {
+            Some(
+                j.get("texts")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|t| t.as_str().map(str::to_string))
+                    .collect(),
+            )
+        };
+        let resp = GenResponse {
+            id: j.get("id").as_u64().unwrap_or(0),
+            samples,
+            nfe: j.get("nfe").as_usize().unwrap_or(0),
+            t0_used: j.get("t0_used").as_f64().unwrap_or(0.0),
+            cascade,
+            queue_wait: Duration::from_micros(j.get("queue_us").as_u64().unwrap_or(0)),
+            draft_time: Duration::from_micros(j.get("draft_us").as_u64().unwrap_or(0)),
+            refine_time: Duration::from_micros(j.get("refine_us").as_u64().unwrap_or(0)),
+            total_time: Duration::from_micros(j.get("total_us").as_u64().unwrap_or(0)),
+            degraded: j.get("degraded_reason").as_str().map(str::to_string),
+        };
+        return Ok(WireResponse::Generate { resp, texts });
+    }
+    Ok(WireResponse::ShutdownAck)
 }
 
 #[cfg(test)]
@@ -174,6 +363,57 @@ mod tests {
         }
     }
 
+    /// Satellite pin: seeds above 2^53 survive the wire exactly. The old
+    /// `as_f64() as u64` path would have rounded u64::MAX to 2^64 (and
+    /// then saturated), corrupting the request's reproducibility seed.
+    #[test]
+    fn parse_seed_is_exact_at_u64_max() {
+        let line = format!(
+            r#"{{"cmd":"generate","domain":"text8","seed":{}}}"#,
+            u64::MAX
+        );
+        match parse_request(&line).unwrap() {
+            WireRequest::Generate { request, .. } => {
+                assert_eq!(request.seed, u64::MAX);
+                // And the client-side encoding round-trips it.
+                let back = render_request(&WireRequest::Generate {
+                    request: request.clone(),
+                    decode: false,
+                });
+                assert!(back.contains(&u64::MAX.to_string()), "{back}");
+                match parse_request(&back).unwrap() {
+                    WireRequest::Generate { request: again, .. } => {
+                        assert_eq!(again.seed, u64::MAX)
+                    }
+                    other => panic!("wrong parse: {other:?}"),
+                }
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        // 2^53 + 1: the first integer f64 silently mangles.
+        let line = r#"{"cmd":"generate","domain":"x","seed":9007199254740993}"#;
+        match parse_request(line).unwrap() {
+            WireRequest::Generate { request, .. } => {
+                assert_eq!(request.seed, 9_007_199_254_740_993)
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_hello() {
+        let line = r#"{"cmd":"hello","codecs":["binary","json"]}"#;
+        match parse_request(line).unwrap() {
+            WireRequest::Hello { codecs } => assert_eq!(codecs, vec!["binary", "json"]),
+            other => panic!("wrong parse: {other:?}"),
+        }
+        // Hello with no codec list parses as an empty offer.
+        match parse_request(r#"{"cmd":"hello"}"#).unwrap() {
+            WireRequest::Hello { codecs } => assert!(codecs.is_empty()),
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
     #[test]
     fn parse_other_cmds_and_errors() {
         assert!(matches!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), WireRequest::Ping));
@@ -203,7 +443,7 @@ mod tests {
 
     #[test]
     fn render_roundtrip() {
-        let line = render_response(&resp_without_cascade(), Some(vec!["ab".into()]));
+        let line = render_response(&resp_without_cascade(), Some(&["ab".to_string()]));
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").as_bool(), Some(true));
         assert_eq!(j.get("nfe").as_usize(), Some(205));
@@ -283,5 +523,45 @@ mod tests {
         // Sub-millisecond hints round up to 1 ms, never 0.
         let j = Json::parse(&render_busy(Duration::from_micros(10))).unwrap();
         assert_eq!(j.get("retry_after_ms").as_usize(), Some(1));
+    }
+
+    /// Every response variant parses back to itself from its JSON line
+    /// (micro-granularity is all the encoding carries, so equality is
+    /// exact on re-parsed values).
+    #[test]
+    fn json_response_parse_inverts_render() {
+        let cases = vec![
+            WireResponse::Pong,
+            WireResponse::ShutdownAck,
+            WireResponse::HelloAck { codec: "binary".into() },
+            WireResponse::Error { msg: "nope".into(), busy: false },
+            WireResponse::Error { msg: "overload".into(), busy: true },
+            WireResponse::Busy { retry_after_ms: 9 },
+            WireResponse::Metrics {
+                report: "r\nmultiline".into(),
+                samples_per_sec: 12.5,
+                completed: 3,
+                rejected: 1,
+            },
+            WireResponse::Info { domains: vec!["text8".into(), "wiki".into()], artifacts: 7 },
+            WireResponse::Generate { resp: resp_without_cascade(), texts: None },
+            WireResponse::Generate {
+                resp: GenResponse {
+                    cascade: Some(CascadeInfo {
+                        stages_used: 2,
+                        nfe_per_stage: vec![150, 55],
+                        early_exit: false,
+                    }),
+                    degraded: Some("draft fallback".into()),
+                    ..resp_without_cascade()
+                },
+                texts: Some(vec!["ab".into()]),
+            },
+        ];
+        for want in cases {
+            let line = render_wire_response(&want);
+            let got = parse_response(&line).unwrap();
+            assert_eq!(got, want, "parse(render(x)) != x for {line}");
+        }
     }
 }

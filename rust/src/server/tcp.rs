@@ -1,14 +1,18 @@
 //! Threaded TCP server: accept loop + one handler thread per connection,
-//! all sharing the coordinator [`Service`].
+//! all sharing the coordinator [`Service`]. Each connection speaks a
+//! [`Codec`](crate::server::codec::Codec): the configured default
+//! (legacy JSON lines unless `wire.default` says otherwise) until a
+//! client hello negotiates another one.
 
+use crate::config::WireConfig;
 use crate::coordinator::request::GenResponse;
 use crate::coordinator::Service;
 use crate::data::tokenizer::{CharTokenizer, WordTokenizer};
 use crate::runtime::Manifest;
-use crate::server::protocol::{parse_request, render_busy, render_error, render_response, WireRequest};
-use crate::util::json::Json;
+use crate::server::codec::{self, Decoded};
+use crate::server::protocol::{WireRequest, WireResponse};
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -22,11 +26,24 @@ pub struct TcpServer {
     stop: Arc<AtomicBool>,
     pub local_addr: std::net::SocketAddr,
     listener: TcpListener,
+    wire: WireConfig,
 }
 
 impl TcpServer {
-    /// Bind. Pass `addr = "127.0.0.1:0"` for an ephemeral port (tests).
+    /// Bind with the default wire config (legacy JSON + binary offered,
+    /// connections start on JSON). Pass `addr = "127.0.0.1:0"` for an
+    /// ephemeral port (tests).
     pub fn bind(addr: &str, service: Service, manifest: Manifest) -> Result<TcpServer> {
+        Self::bind_with(addr, service, manifest, WireConfig::default())
+    }
+
+    /// Bind with an explicit `wire.{codecs,default}` config.
+    pub fn bind_with(
+        addr: &str,
+        service: Service,
+        manifest: Manifest,
+        wire: WireConfig,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
         // Word tokenizer for the wiki domain, if its vocab is present.
@@ -42,6 +59,7 @@ impl TcpServer {
             stop: Arc::new(AtomicBool::new(false)),
             local_addr,
             listener,
+            wire,
         })
     }
 
@@ -62,8 +80,10 @@ impl TcpServer {
                     let manifest = self.manifest.clone();
                     let word_tok = self.word_tok.clone();
                     let stop = self.stop.clone();
+                    let wire = self.wire.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, service, manifest, word_tok, stop) {
+                        if let Err(e) = handle_conn(stream, service, manifest, word_tok, stop, wire)
+                        {
                             crate::debug!("connection ended: {e:#}");
                         }
                     });
@@ -99,60 +119,92 @@ fn handle_conn(
     manifest: Arc<Manifest>,
     word_tok: Option<Arc<WordTokenizer>>,
     stop: Arc<AtomicBool>,
+    wire: WireConfig,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match parse_request(&line) {
-            Err(e) => render_error(&format!("{e:#}"), false),
-            Ok(WireRequest::Ping) => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
-            Ok(WireRequest::Metrics) => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("metrics", Json::str(service.metrics.report())),
-                ("samples_per_sec", Json::num(service.metrics.samples.per_second())),
-                ("completed", Json::num(service.metrics.requests_completed.get() as f64)),
-                ("rejected", Json::num(service.metrics.requests_rejected.get() as f64)),
-            ])
-            .to_string(),
-            Ok(WireRequest::Info) => {
-                let domains = manifest.domain_names();
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("domains", Json::arr(domains.iter().map(|d| Json::str(d.clone())))),
-                    ("artifacts", Json::num(manifest.artifacts.len() as f64)),
-                ])
-                .to_string()
+    let mut reader = BufReader::new(stream);
+    // Every connection starts on the configured default codec; a hello
+    // can switch it. `wire.default` is validated against the supported
+    // set at config load, so `make` cannot miss here.
+    let mut active =
+        codec::make(&wire.default).with_context(|| format!("unknown codec {:?}", wire.default))?;
+    loop {
+        let decoded = match active.read_request(&mut reader)? {
+            None => break, // clean EOF
+            Some(d) => d,
+        };
+        let mut fatal = false;
+        let reply = match decoded {
+            Decoded::Malformed { msg, fatal: f } => {
+                service.metrics.wire_malformed.inc();
+                fatal = f;
+                WireResponse::Error { msg, busy: false }
             }
-            Ok(WireRequest::Shutdown) => {
+            Decoded::Request(WireRequest::Ping) => WireResponse::Pong,
+            Decoded::Request(WireRequest::Metrics) => WireResponse::Metrics {
+                report: service.metrics.report(),
+                samples_per_sec: service.metrics.samples.per_second(),
+                completed: service.metrics.requests_completed.get(),
+                rejected: service.metrics.requests_rejected.get(),
+            },
+            Decoded::Request(WireRequest::Info) => WireResponse::Info {
+                domains: manifest.domain_names(),
+                artifacts: manifest.artifacts.len(),
+            },
+            Decoded::Request(WireRequest::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
-                Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+                WireResponse::ShutdownAck
             }
-            Ok(WireRequest::Generate { request, decode }) => {
+            Decoded::Request(WireRequest::Hello { codecs }) => {
+                service.metrics.wire_hellos.inc();
+                match codec::negotiate(&wire.codecs, &codecs) {
+                    Some(name) => {
+                        // Ack in the *current* codec, then switch: the
+                        // client reads the ack before re-framing.
+                        active.write_response(
+                            &mut writer,
+                            &WireResponse::HelloAck { codec: name.to_string() },
+                        )?;
+                        if name != active.name() {
+                            service.metrics.wire_codec_switches.inc();
+                            active = codec::make(name)
+                                .with_context(|| format!("negotiated codec {name:?}"))?;
+                        }
+                        continue;
+                    }
+                    None => WireResponse::Error {
+                        msg: format!(
+                            "no mutually supported codec (server offers {:?})",
+                            wire.codecs
+                        ),
+                        busy: false,
+                    },
+                }
+            }
+            Decoded::Request(WireRequest::Generate { request, decode }) => {
                 let domain = request.domain.clone();
                 match service.submit(request) {
                     // Typed BUSY: backpressure with a retry-after hint,
                     // not a generic error string.
-                    Err(_) => render_busy(service.retry_after()),
+                    Err(_) => WireResponse::Busy {
+                        retry_after_ms: (service.retry_after().as_millis().max(1)) as u64,
+                    },
                     Ok(rx) => match rx.recv() {
                         Ok(Ok(resp)) => {
                             let texts =
                                 if decode { decode_samples(&domain, &resp, &word_tok) } else { None };
-                            render_response(&resp, texts)
+                            WireResponse::Generate { resp, texts }
                         }
-                        Ok(Err(msg)) => render_error(&msg, false),
-                        Err(_) => render_error("coordinator gone", false),
+                        Ok(Err(msg)) => WireResponse::Error { msg, busy: false },
+                        Err(_) => {
+                            WireResponse::Error { msg: "coordinator gone".into(), busy: false }
+                        }
                     },
                 }
             }
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if stop.load(Ordering::SeqCst) {
+        active.write_response(&mut writer, &reply)?;
+        if fatal || stop.load(Ordering::SeqCst) {
             break;
         }
     }
@@ -164,7 +216,148 @@ mod tests {
     use super::*;
     use crate::config::WsfmConfig;
     use crate::coordinator::testutil::{mock_manifest, TestExec};
+    use crate::server::client::Client;
+    use std::io::{BufRead, Read, Write};
     use std::time::Duration;
+
+    fn start_server() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<Result<()>>, Service) {
+        let exec = TestExec::drift(vec![1, 4], 2, 4, 1);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 2, 4);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.max_wait_us = 2_000;
+        let service = Service::start(exec, manifest, cfg);
+        let server =
+            TcpServer::bind("127.0.0.1:0", service.clone(), mock_manifest(&["cold"], &[1, 4], 2, 4))
+                .unwrap();
+        let addr = server.local_addr.to_string();
+        let stop = server.stop_handle();
+        let thread = std::thread::spawn(move || server.run());
+        (addr, stop, thread, service)
+    }
+
+    /// Tentpole pin: a client that never sends a hello gets the legacy
+    /// JSON wire format **byte-for-byte** — raw socket, exact bytes.
+    #[test]
+    fn absent_hello_is_byte_identical_legacy_json() {
+        let (addr, stop, thread, service) = start_server();
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        sock.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut reader = std::io::BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "{\"ok\":true,\"pong\":true}\n");
+        sock.write_all(b"{\"cmd\":\"info\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "{\"ok\":true,\"domains\":[\"mock\"],\"artifacts\":2}\n");
+        // Malformed line: typed error, connection stays open.
+        sock.write_all(b"not json\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("{\"ok\":false,\"error\":\"malformed json"), "{line}");
+        sock.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "{\"ok\":true,\"pong\":true}\n");
+        assert_eq!(service.metrics.wire_malformed.get(), 1);
+        assert_eq!(service.metrics.wire_hellos.get(), 0);
+        stop.store(true, Ordering::SeqCst);
+        drop(reader);
+        let _ = TcpStream::connect(&addr); // nudge the accept loop
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
+
+    /// Negotiation: hello → ack (in the old codec) → binary frames both
+    /// ways, including a full generate.
+    #[test]
+    fn hello_negotiates_binary_and_serves_generate() {
+        let (addr, stop, thread, service) = start_server();
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(c.negotiate(&["binary", "json"]).unwrap(), "binary");
+        assert_eq!(c.codec_name(), "binary");
+        assert!(c.ping().unwrap());
+        let reply = c.generate("mock", "cold", "noise", 2, 0.5, 10, 7, false).unwrap();
+        assert_eq!(reply.samples.len(), 2);
+        assert!(c.metrics().unwrap().get("completed").as_u64().unwrap_or(0) >= 1);
+        assert_eq!(service.metrics.wire_hellos.get(), 1);
+        assert_eq!(service.metrics.wire_codec_switches.get(), 1);
+        stop.store(true, Ordering::SeqCst);
+        drop(c);
+        let _ = TcpStream::connect(&addr);
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
+
+    /// Edge: a hello offering only unknown codecs gets a typed error and
+    /// the connection keeps serving on the current codec.
+    #[test]
+    fn unknown_codec_hello_errors_and_stays_on_json() {
+        let (addr, stop, thread, service) = start_server();
+        let mut c = Client::connect(&addr).unwrap();
+        let err = c.negotiate(&["zstd", "capnp"]).unwrap_err();
+        assert!(format!("{err:#}").contains("no mutually supported codec"), "{err:#}");
+        // Still on JSON, still serving.
+        assert_eq!(c.codec_name(), "json");
+        assert!(c.ping().unwrap());
+        stop.store(true, Ordering::SeqCst);
+        drop(c);
+        let _ = TcpStream::connect(&addr);
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
+
+    /// Edge: on a binary connection, an oversized length prefix gets a
+    /// typed error reply and the connection closes (framing is lost) —
+    /// no hang, no allocation of the claimed size.
+    #[test]
+    fn binary_oversized_frame_gets_typed_error_then_close() {
+        use crate::server::codec::Binary;
+        use crate::server::codec::Codec as _;
+        let (addr, stop, thread, service) = start_server();
+        let mut c = Client::connect(&addr).unwrap();
+        c.negotiate(&["binary"]).unwrap();
+        // Hand-write a hostile frame under the negotiated codec.
+        let mut sock = c.into_stream();
+        sock.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        sock.flush().unwrap();
+        let mut reader = std::io::BufReader::new(sock.try_clone().unwrap());
+        let resp = Binary.read_response(&mut reader).unwrap();
+        match resp {
+            WireResponse::Error { msg, busy } => {
+                assert!(!busy);
+                assert!(msg.contains("exceeds maximum"), "{msg}");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // Server closed after the fatal framing error.
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server left bytes after fatal error");
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(&addr);
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
+
+    /// CI matrix hook: the same socket workout under whichever codec
+    /// `WSFM_WIRE_CODEC` selects (json when unset).
+    #[test]
+    fn socket_workout_under_env_codec() {
+        let (addr, stop, thread, service) = start_server();
+        let mut c = Client::connect_env(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        let reply = c.generate("mock", "cold", "noise", 1, 0.5, 10, 3, false).unwrap();
+        assert_eq!(reply.samples.len(), 1);
+        let m = c.metrics().unwrap();
+        assert!(m.get("completed").as_u64().unwrap_or(0) >= 1, "{m}");
+        stop.store(true, Ordering::SeqCst);
+        drop(c);
+        let _ = TcpStream::connect(&addr);
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
 
     /// End-to-end BUSY: saturate a tiny admission queue behind a slow
     /// refine and assert the wire response is the typed backpressure

@@ -3,21 +3,127 @@
 //! Supports the full JSON data model with a recursive-descent parser and a
 //! compact serializer. Used for artifact metadata (`*.meta.json`,
 //! `manifest.json`), the wire protocol of the TCP server, and the config
-//! system. Numbers are kept as `f64` (ints round-trip exactly up to 2^53,
-//! far beyond anything in our metadata).
+//! system.
+//!
+//! Two properties matter for the wire layer and are part of this module's
+//! contract:
+//!
+//! - **Objects preserve insertion order.** The serialized key order of
+//!   [`Json::obj`] is the construction order, and parsing keeps document
+//!   order. The legacy wire format is pinned byte-for-byte by golden tests
+//!   in `server::codec`, which requires field order to be stable and
+//!   author-controlled rather than alphabetical.
+//! - **Unsigned integers are exact.** The parser keeps non-negative integer
+//!   literals that fit `u64` as [`Json::U64`], so values above 2^53 (e.g.
+//!   RNG seeds near `u64::MAX`) survive a round-trip without drifting
+//!   through `f64`. All other numbers are `f64` as before.
 
-use std::collections::BTreeMap;
 use std::fmt;
 
+/// An order-preserving string→[`Json`] map backed by a `Vec`.
+///
+/// Lookup is linear, which is fine for wire/config objects (tens of keys).
+/// `insert` replaces the value of an existing key *in place*, so duplicate
+/// JSON keys collapse to the last value without disturbing field order.
+#[derive(Debug, Clone, Default)]
+pub struct JsonMap {
+    entries: Vec<(String, Json)>,
+}
+
+impl JsonMap {
+    pub fn new() -> JsonMap {
+        JsonMap { entries: Vec::new() }
+    }
+
+    pub fn insert(&mut self, key: String, value: Json) {
+        if let Some(slot) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+        } else {
+            self.entries.push((key, value));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn contains_key(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+}
+
+impl FromIterator<(String, Json)> for JsonMap {
+    fn from_iter<I: IntoIterator<Item = (String, Json)>>(iter: I) -> JsonMap {
+        let mut m = JsonMap::new();
+        for (k, v) in iter {
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+impl<'a> IntoIterator for &'a JsonMap {
+    type Item = (&'a String, &'a Json);
+    type IntoIter = std::iter::Map<
+        std::slice::Iter<'a, (String, Json)>,
+        fn(&'a (String, Json)) -> (&'a String, &'a Json),
+    >;
+    fn into_iter(self) -> Self::IntoIter {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+}
+
+/// Key-set equality (order-insensitive): two maps are equal when they hold
+/// the same keys with equal values, regardless of insertion order. Display
+/// order is a *serialization* property; equality is semantic.
+impl PartialEq for JsonMap {
+    fn eq(&self, other: &JsonMap) -> bool {
+        self.entries.len() == other.entries.len()
+            && self.entries.iter().all(|(k, v)| other.get(k) == Some(v))
+    }
+}
+
 /// A JSON value.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Non-negative integer kept exact (seeds can exceed 2^53).
+    U64(u64),
     Str(String),
     Arr(Vec<Json>),
-    Obj(BTreeMap<String, Json>),
+    Obj(JsonMap),
+}
+
+/// `U64` and `Num` compare equal when they denote the same number, so
+/// callers that construct `Json::Num(42.0)` still match a parsed `42`.
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::U64(a), Json::U64(b)) => a == b,
+            (Json::U64(a), Json::Num(b)) | (Json::Num(b), Json::U64(a)) => *a as f64 == *b,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -43,14 +149,32 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::U64(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+    /// Exact unsigned integer value. `Num` qualifies only when it is a
+    /// non-negative integer below 2^53 (where `f64` is still exact).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::U64(u) => Some(*u),
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9_007_199_254_740_992.0 => {
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|n| n as i64)
+        match self {
+            Json::U64(u) => i64::try_from(*u).ok(),
+            _ => self.as_f64().map(|n| n as i64),
+        }
     }
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
+        match self {
+            Json::U64(u) => usize::try_from(*u).ok(),
+            _ => self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None }),
+        }
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -64,7 +188,7 @@ impl Json {
             _ => None,
         }
     }
-    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+    pub fn as_obj(&self) -> Option<&JsonMap> {
         match self {
             Json::Obj(o) => Some(o),
             _ => None,
@@ -95,6 +219,9 @@ impl Json {
     }
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
+    }
+    pub fn u64(n: u64) -> Json {
+        Json::U64(n)
     }
 }
 
@@ -166,7 +293,7 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
-        let mut map = BTreeMap::new();
+        let mut map = JsonMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
@@ -281,19 +408,23 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
+        let mut integral = true;
         if self.peek() == Some(b'-') {
+            integral = false; // negative values stay f64 (exact to 2^53)
             self.i += 1;
         }
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.i += 1;
         }
         if self.peek() == Some(b'.') {
+            integral = false;
             self.i += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.i += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.i += 1;
@@ -303,6 +434,13 @@ impl<'a> Parser<'a> {
             }
         }
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if integral {
+            // All-digit unsigned literal: keep exact when it fits u64
+            // (seeds near u64::MAX must not round through f64).
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(Json::U64(u));
+            }
+        }
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }
@@ -332,6 +470,7 @@ impl fmt::Display for Json {
                     write!(f, "{n}")
                 }
             }
+            Json::U64(u) => write!(f, "{u}"),
             Json::Str(s) => write_escaped(f, s),
             Json::Arr(a) => {
                 write!(f, "[")?;
@@ -404,7 +543,7 @@ mod tests {
 
     #[test]
     fn parse_whitespace_and_empty() {
-        assert_eq!(Json::parse(" { } ").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(Json::parse(" { } ").unwrap(), Json::Obj(JsonMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
     }
 
@@ -446,5 +585,61 @@ mod tests {
         assert_eq!(v.get("missing").as_str(), None);
         assert!(v.get("missing").is_null());
         assert_eq!(v.get("a").get("nope"), &Json::Null);
+    }
+
+    #[test]
+    fn objects_preserve_insertion_order() {
+        // Serialization follows construction / document order, not
+        // alphabetical order — the wire format depends on this.
+        let v = Json::obj(vec![
+            ("zeta", Json::num(1.0)),
+            ("alpha", Json::num(2.0)),
+            ("mid", Json::num(3.0)),
+        ]);
+        assert_eq!(v.to_string(), r#"{"zeta":1,"alpha":2,"mid":3}"#);
+        let p = Json::parse(r#"{"b":1,"a":2}"#).unwrap();
+        assert_eq!(p.to_string(), r#"{"b":1,"a":2}"#);
+        // Duplicate keys: last value wins, first position kept.
+        let d = Json::parse(r#"{"k":1,"x":2,"k":3}"#).unwrap();
+        assert_eq!(d.to_string(), r#"{"k":3,"x":2}"#);
+    }
+
+    #[test]
+    fn object_equality_is_order_insensitive() {
+        let a = Json::parse(r#"{"x":1,"y":2}"#).unwrap();
+        let b = Json::parse(r#"{"y":2,"x":1}"#).unwrap();
+        assert_eq!(a, b);
+        let c = Json::parse(r#"{"x":1,"y":3}"#).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn u64_is_exact_at_max() {
+        // u64::MAX = 18446744073709551615 would collapse to 2^64 as f64.
+        let s = format!("{{\"seed\":{}}}", u64::MAX);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("seed").as_u64(), Some(u64::MAX));
+        // Round-trip through the serializer keeps every digit.
+        assert_eq!(v.to_string(), s);
+        let again = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(again.get("seed").as_u64(), Some(u64::MAX));
+        // 2^53 + 1 is the first integer f64 cannot represent.
+        let tricky = Json::parse("9007199254740993").unwrap();
+        assert_eq!(tricky.as_u64(), Some(9_007_199_254_740_993));
+        assert_eq!(tricky.to_string(), "9007199254740993");
+    }
+
+    #[test]
+    fn u64_num_cross_equality_and_accessors() {
+        assert_eq!(Json::U64(42), Json::Num(42.0));
+        assert_eq!(Json::Num(42.0), Json::U64(42));
+        assert_ne!(Json::U64(43), Json::Num(42.0));
+        assert_eq!(Json::U64(7).as_f64(), Some(7.0));
+        assert_eq!(Json::U64(7).as_i64(), Some(7));
+        assert_eq!(Json::U64(u64::MAX).as_i64(), None);
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(7.5).as_u64(), None);
+        assert_eq!(Json::u64(9).to_string(), "9");
     }
 }

@@ -89,6 +89,7 @@ impl Executor for DriftExec {
                 shape: vec![self.batch, self.seq_len, self.vocab],
                 dtype: "f32".into(),
             }],
+            content_hash: None,
         })
     }
 }

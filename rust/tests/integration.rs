@@ -47,6 +47,20 @@ fn request(domain: &str, tag: &str, draft: DraftSpec, n: usize, t0: f64, steps: 
     }
 }
 
+/// The checked-in schema-v2 fixture (no `make artifacts` needed): loads,
+/// carries a content hash, and verifies bit-for-bit — the same check the
+/// CI reproducible-manifest step runs via `wsfm verify-artifacts`.
+#[test]
+fn checked_in_fixture_manifest_verifies() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/manifest_v2");
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.schema_version, 2);
+    assert!(m.artifacts[0].content_hash.is_some());
+    let report = m.verify_hashes().unwrap();
+    assert!(report.ok(), "{report}");
+    assert_eq!((report.verified, report.unhashed), (1, 0));
+}
+
 #[test]
 fn manifest_selfcheck_passes() {
     let dir = require_artifacts!();
