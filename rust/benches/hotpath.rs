@@ -8,7 +8,7 @@
 //! fleet's replica scaling (replicas=1 vs 4 on a flat-cost stage mock),
 //! the step-level batch composer (per-bundle vs composed refinement on a
 //! flat per-call-cost mock), the watchdog-guarded vs bare engine-call
-//! reply wait — and the engine
+//! reply wait, the obs tracing layer off vs on — and the engine
 //! step itself per domain/batch, so the "coordinator must not be the
 //! bottleneck" target is quantified.
 //!
@@ -96,6 +96,7 @@ fn bench_l3_components(results: &mut Vec<(String, f64)>) {
         steps_cold: 128,
         warp_mode: WarpMode::Literal,
         seed: i,
+        timing: false,
         submitted: Instant::now(),
     };
     rec(results, b.run("batcher offer x32 + flush", || {
@@ -148,6 +149,7 @@ fn bench_wire_codecs(results: &mut Vec<(String, f64)>) {
             refine_time: Duration::from_micros(2600),
             total_time: Duration::from_micros(3520),
             degraded: None,
+            timing: None,
         },
         texts: None,
     };
@@ -494,6 +496,7 @@ fn run_serve_bench<E: Executor + 'static>(exec: E, mut cfg: WsfmConfig, n_reques
         steps_cold: 10,
         warp_mode: WarpMode::Exact,
         seed,
+        timing: false,
         submitted: Instant::now(),
     };
     cfg.batcher.max_batch = batch;
@@ -638,6 +641,35 @@ fn bench_composer_throughput(results: &mut Vec<(String, f64)>) {
         cfg.pipeline_depth = 8;
         cfg.draft_workers = 2;
         cfg.composer.enabled = composed;
+        let ns = run_serve_bench(exec, cfg, 32);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observability overhead on the serve path
+// ---------------------------------------------------------------------------
+
+/// Serve the same bundle load with tracing disabled vs enabled (the
+/// default). The obs layer's per-bundle cost is a handful of atomic ring
+/// pushes (admit/wait/draft/segment spans) behind one `enabled` load, so
+/// the on/off gap bounds the telemetry tax on the hot path — the ISSUE's
+/// acceptance bar is "within a few percent".
+fn bench_obs_overhead(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, enabled) in [("serve bundle obs off", false), ("serve bundle obs on", true)] {
+        let exec = StageCostExec {
+            batch,
+            seq_len,
+            vocab,
+            draft_cost: Duration::from_micros(50),
+            refine_cost: Duration::from_micros(200),
+        };
+        let mut cfg = WsfmConfig::default();
+        cfg.pipeline_depth = 2;
+        cfg.draft_workers = 1;
+        cfg.obs.enabled = enabled;
         let ns = run_serve_bench(exec, cfg, 32);
         println!("{label:<38} {:>10.0} ns/bundle", ns);
         results.push((label.to_string(), ns));
@@ -804,6 +836,9 @@ fn main() {
 
     println!("\n== composer: per-bundle vs continuous cross-bundle batching ==");
     bench_composer_throughput(&mut results);
+
+    println!("\n== observability: tracing off vs on ==");
+    bench_obs_overhead(&mut results);
 
     println!("\n== watchdog: bare vs guarded engine-call reply wait ==");
     bench_watchdog_overhead(&mut results);

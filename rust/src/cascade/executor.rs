@@ -22,6 +22,12 @@ pub struct StageOutcome {
     pub score: Option<f64>,
     /// Wall-clock of the gate evaluation.
     pub gate_eval: Option<Duration>,
+    /// Wall-clock of the stage's engine dispatch (the per-segment entry
+    /// of the opt-in timing breakdown). `Duration::ZERO` on the composed
+    /// path, where a shared cross-bundle step's wall-clock is not
+    /// attributable to one bundle; purely observational either way —
+    /// never an input to gating or scheduling.
+    pub elapsed: Duration,
 }
 
 /// The executed cascade for one chunk.
@@ -104,7 +110,9 @@ pub fn run_segments(
         let mut spec = LoopSpec::full(seg.artifact.clone(), steps_cold, run_t0, warp, seed, false);
         spec.t_start = seg.t_start;
         spec.t_end = seg.t_end;
+        let seg_start = Instant::now();
         let report = exec.run_loop(&spec, tokens, scratch)?;
+        let seg_elapsed = seg_start.elapsed();
         debug_assert_eq!(report.nfe, seg.nfe(), "segment schedule diverged from plan");
         let mut stage = StageOutcome {
             t_start: seg.t_start,
@@ -112,6 +120,7 @@ pub fn run_segments(
             nfe: report.nfe,
             score: None,
             gate_eval: None,
+            elapsed: seg_elapsed,
         };
         let is_last = si + 1 == plan.len();
         if !is_last {

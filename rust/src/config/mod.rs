@@ -41,6 +41,31 @@ pub struct WsfmConfig {
     pub composer: ComposerConfig,
     /// Wire codec negotiation ([`crate::server::codec`]).
     pub wire: WireConfig,
+    /// Observability journals ([`crate::obs`]).
+    pub obs: ObsConfig,
+}
+
+/// Observability tuning (`obs` subsystem).
+///
+/// Caps the bounded span/event journals ([`crate::obs`]) and gates
+/// recording entirely. Purely observational: toggling any of these never
+/// changes an output byte (pinned by the serving determinism sweep).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record spans/events at all (default on; journal memory is bounded
+    /// by the caps below either way, and recording is lock-cheap).
+    pub enabled: bool,
+    /// Span-journal ring capacity *per span kind* (oldest overwritten).
+    pub span_cap: usize,
+    /// Event-journal capacity (FIFO eviction; sequence numbers stay
+    /// gap-free so consumers can detect eviction).
+    pub event_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: true, span_cap: 4096, event_cap: 1024 }
+    }
 }
 
 /// Wire-codec tuning (`wire` subsystem).
@@ -275,6 +300,7 @@ impl Default for WsfmConfig {
             robustness: RobustnessConfig::default(),
             composer: ComposerConfig::default(),
             wire: WireConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -400,6 +426,16 @@ impl WsfmConfig {
         if let Some(d) = w.get("default").as_str() {
             c.wire.default = d.to_string();
         }
+        let o = j.get("obs");
+        if let Some(b) = o.get("enabled").as_bool() {
+            c.obs.enabled = b;
+        }
+        if let Some(n) = o.get("span_cap").as_usize() {
+            c.obs.span_cap = n;
+        }
+        if let Some(n) = o.get("event_cap").as_usize() {
+            c.obs.event_cap = n;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -472,6 +508,14 @@ impl WsfmConfig {
                         Json::arr(self.wire.codecs.iter().map(|c| Json::str(c.clone()))),
                     ),
                     ("default", Json::str(self.wire.default.clone())),
+                ]),
+            ),
+            (
+                "obs",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.obs.enabled)),
+                    ("span_cap", Json::num(self.obs.span_cap as f64)),
+                    ("event_cap", Json::num(self.obs.event_cap as f64)),
                 ]),
             ),
             (
@@ -595,6 +639,12 @@ impl WsfmConfig {
                 self.wire.default,
                 self.wire.codecs
             );
+        }
+        if self.obs.span_cap == 0 {
+            bail!("obs.span_cap must be positive");
+        }
+        if self.obs.event_cap == 0 {
+            bail!("obs.event_cap must be positive");
         }
         Ok(())
     }
@@ -722,6 +772,21 @@ mod tests {
     }
 
     #[test]
+    fn obs_section_layering() {
+        let j = Json::parse(r#"{"obs":{"enabled":false,"span_cap":64,"event_cap":16}}"#).unwrap();
+        let c = WsfmConfig::from_json(&j).unwrap();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.span_cap, 64);
+        assert_eq!(c.obs.event_cap, 16);
+        // Untouched -> defaults: journals on, bounded caps.
+        let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.obs, ObsConfig::default());
+        assert!(d.obs.enabled);
+        assert_eq!(d.obs.span_cap, 4096);
+        assert_eq!(d.obs.event_cap, 1024);
+    }
+
+    #[test]
     fn config_seed_is_exact_above_2_53() {
         let j = Json::parse(&format!("{{\"seed\":{}}}", u64::MAX)).unwrap();
         let c = WsfmConfig::from_json(&j).unwrap();
@@ -758,6 +823,8 @@ mod tests {
             r#"{"robustness":{"respawn_backoff_ms":0}}"#,
             r#"{"robustness":{"respawn_backoff_cap_ms":10}}"#,
             r#"{"robustness":{"max_respawns":0}}"#,
+            r#"{"obs":{"span_cap":0}}"#,
+            r#"{"obs":{"event_cap":0}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

@@ -33,11 +33,17 @@ pub struct WorkBundle {
     /// count as `early_flushes` instead — a negative lag must never be
     /// clamped into the lag histogram.
     pub deadline: Option<Instant>,
+    /// Observability identity ([`crate::obs`]): minted by the service at
+    /// dispatch (`Obs::next_bundle_id`), 0 when untraced. Joins a
+    /// request's spans to its bundle's spans in `{"cmd":"trace"}`
+    /// replies. Never feeds RNG, batching, or scheduling — ids must not
+    /// perturb outputs.
+    pub bundle_id: u64,
 }
 
 impl WorkBundle {
     pub fn new(key: BundleKey, requests: Vec<GenRequest>) -> WorkBundle {
-        WorkBundle { key, requests, deadline: None }
+        WorkBundle { key, requests, deadline: None, bundle_id: 0 }
     }
 
     pub fn total_samples(&self) -> usize {
@@ -160,6 +166,7 @@ mod tests {
             steps_cold: 64,
             warp_mode: WarpMode::Literal,
             seed: id,
+            timing: false,
             submitted: Instant::now(),
         }
     }

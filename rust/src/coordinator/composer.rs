@@ -52,8 +52,9 @@
 
 use crate::cascade::executor::eval_gate;
 use crate::cascade::{Segment, StageOutcome};
-use crate::coordinator::request::{CascadeInfo, GenResponse};
+use crate::coordinator::request::{CascadeInfo, GenResponse, TimingInfo};
 use crate::coordinator::scheduler::{DraftedBundle, Scheduler, REFINE_LANE};
+use crate::obs::SpanKind;
 use crate::core::prob::sample_row_seeded;
 use crate::core::rng::Pcg64;
 use crate::core::schedule::Schedule;
@@ -382,6 +383,11 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
                 nfe: c.schedule.nfe(),
                 score: None,
                 gate_eval: None,
+                // Composed steps interleave many chunks in one dispatch,
+                // so per-stage wall-clock is not attributable to one
+                // chunk; the timing breakdown reports the per-job
+                // refine_time instead and stage durations stay zero.
+                elapsed: Duration::ZERO,
             };
             let is_last = c.seg_idx + 1 == c.plan.len();
             if !is_last {
@@ -422,6 +428,14 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
         }
 
         let elapsed = step_start.elapsed();
+        self.sched.metrics.obs.span(
+            0,
+            0, // a composed step spans many bundles; no single id applies
+            SpanKind::ComposedStep,
+            total_rows as u32,
+            step_start,
+            elapsed,
+        );
         for slot in active_jobs {
             if let Some(job) = self.jobs[slot].as_mut() {
                 job.refine_time += elapsed;
@@ -499,6 +513,9 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
         let nfe_budget = self.sched.controller().nfe_budget(key.steps_cold, key.t0());
         m.chosen_t0.record(t0);
         let cascade_off = self.sched.cascade().is_off();
+        let want_timing = bundle.requests.iter().any(|r| r.timing);
+        let mut seg_timing: Vec<(usize, u64)> = Vec::new();
+        let mut gate_us: Vec<u64> = Vec::new();
 
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(n_total);
         let mut nfe = 0usize;
@@ -521,6 +538,7 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
                     m.cascade_stage_nfe.record(stage.nfe as f64);
                     if let Some(d) = stage.gate_eval {
                         m.gate_eval.record(d);
+                        gate_us.push(d.as_micros() as u64);
                     }
                 }
                 let info = cascade_info.get_or_insert(CascadeInfo {
@@ -531,6 +549,8 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
                 if dc.stages.len() > info.stages_used {
                     info.stages_used = dc.stages.len();
                     info.nfe_per_stage = dc.stages.iter().map(|s| s.nfe).collect();
+                    seg_timing =
+                        dc.stages.iter().map(|s| (s.nfe, s.elapsed.as_micros() as u64)).collect();
                 }
                 info.early_exit |= dc.early_exit;
             }
@@ -539,6 +559,21 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
             }
         }
         debug_assert_eq!(rows.len(), n_total);
+
+        if cascade_off {
+            seg_timing = vec![(nfe, refine_time.as_micros() as u64)];
+        }
+        // The per-bundle path's TimingInfo, mirrored: same NFE floor and
+        // segment NFEs. Replica/reroute trails stay empty — a composed
+        // step's dispatches serve many bundles at once, so a per-response
+        // attribution would be fiction.
+        let timing_proto = want_timing.then(|| TimingInfo {
+            nfe_floor: nfe_budget,
+            segments: seg_timing,
+            gate_us,
+            replicas: Vec::new(),
+            reroutes: 0,
+        });
 
         let total_time = started.elapsed();
         let now = Instant::now();
@@ -558,6 +593,7 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
                 refine_time,
                 total_time,
                 degraded: None,
+                timing: if req.timing { timing_proto.clone() } else { None },
             });
             m.requests_completed.inc();
             m.samples.record(req.n_samples as u64);

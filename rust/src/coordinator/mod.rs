@@ -234,6 +234,7 @@ pub(crate) mod testutil {
             steps_cold: 10,
             warp_mode: WarpMode::Exact,
             seed: id,
+            timing: false,
             submitted: Instant::now(),
         }
     }

@@ -59,6 +59,11 @@ pub struct GenRequest {
     pub warp_mode: WarpMode,
     /// Request RNG seed (reproducibility).
     pub seed: u64,
+    /// Opt-in per-response timing/NFE breakdown (`"timing": true` on the
+    /// wire → [`GenResponse::timing`] populated). Off by default so the
+    /// legacy wire layout is untouched. Never part of the bundle key or
+    /// any RNG derivation — observation must not perturb outputs.
+    pub timing: bool,
     pub submitted: Instant,
 }
 
@@ -76,6 +81,7 @@ impl PartialEq for GenRequest {
             && self.steps_cold == other.steps_cold
             && self.warp_mode == other.warp_mode
             && self.seed == other.seed
+            && self.timing == other.timing
     }
 }
 
@@ -104,6 +110,7 @@ impl GenRequest {
             steps_cold,
             warp_mode,
             seed,
+            timing: false,
             submitted: Instant::now(),
         };
         request.validate()?;
@@ -203,6 +210,32 @@ pub struct CascadeInfo {
     pub early_exit: bool,
 }
 
+/// Opt-in per-response timing/NFE breakdown (requested with
+/// `"timing": true` on the wire). The per-sample evidence for the paper's
+/// guaranteed-NFE claim: where the wall-clock went (per refine segment,
+/// per gate eval — queue/draft/total already ride the response), how the
+/// executed NFE compares to the `guaranteed_nfe(steps_cold, t0_min)`
+/// floor, and which fleet replicas did the work. Absent from the wire
+/// when not requested, so the legacy byte layout is untouched.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TimingInfo {
+    /// The guarantee-floor NFE budget this bundle was admitted under;
+    /// `GenResponse::nfe` ≤ this is the invariant on the normal path.
+    pub nfe_floor: usize,
+    /// Per executed refine segment: (NFE, wall-clock µs). One entry on
+    /// the single-segment path; one per executed ladder stage under a
+    /// cascade. Composed-path durations are 0 (shared-cohort wall-clock
+    /// is not attributable to one bundle) while NFE stays exact.
+    pub segments: Vec<(usize, u64)>,
+    /// Wall-clock µs of each mid-cascade quality-gate evaluation.
+    pub gate_us: Vec<u64>,
+    /// Fleet replica indices that served this bundle's engine calls, in
+    /// first-dispatch order (empty on a fleet-less executor).
+    pub replicas: Vec<u32>,
+    /// Fleet reroutes absorbed while refining this bundle.
+    pub reroutes: u32,
+}
+
 /// Completed generation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenResponse {
@@ -228,6 +261,10 @@ pub struct GenResponse {
     /// normal path — the wire format then carries no degraded fields at
     /// all, keeping the legacy byte layout.
     pub degraded: Option<String>,
+    /// Per-response breakdown, present only when the request set
+    /// `timing: true` (absent on degraded responses: the refine trail
+    /// that would populate it is the thing that failed).
+    pub timing: Option<TimingInfo>,
 }
 
 #[cfg(test)]
@@ -245,12 +282,23 @@ mod tests {
             steps_cold: 1024,
             warp_mode: WarpMode::Literal,
             seed: 0,
+            timing: false,
             submitted: Instant::now(),
         }
     }
 
     #[test]
     fn bundle_key_groups_compatible() {
+        // The timing flag is pure observability: it must never split a
+        // batch (not part of the bundle key).
+        let a = req();
+        let mut t = req();
+        t.timing = true;
+        assert_eq!(a.bundle_key(), t.bundle_key());
+    }
+
+    #[test]
+    fn bundle_key_groups_compatible_fields() {
         let a = req();
         let mut b = req();
         b.id = 2;

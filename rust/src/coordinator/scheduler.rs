@@ -29,8 +29,9 @@
 use crate::cascade::{self, Cascade};
 use crate::control::{ControlDecision, Controller, ControllerMode};
 use crate::coordinator::batcher::WorkBundle;
-use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse, TimingInfo};
 use crate::core::rng::{splitmix64, Pcg64};
+use crate::obs::{scope, SpanKind};
 use crate::core::tensor::TokenBatch;
 use crate::draft::{Draft, DraftNoise, HloDraft, MixtureDraft, NoiseDraft};
 use crate::metrics::ServingMetrics;
@@ -310,23 +311,47 @@ impl<'a> Scheduler<'a> {
             }
         }
 
-        Ok(DraftedBundle {
-            bundle,
-            bundle_seed: seed,
-            chunks,
-            decision,
-            draft_time: started.elapsed(),
-            started,
-        })
+        let draft_time = started.elapsed();
+        self.metrics.obs.span(0, bundle.bundle_id, SpanKind::Draft, 0, started, draft_time);
+        Ok(DraftedBundle { bundle, bundle_seed: seed, chunks, decision, draft_time, started })
     }
 
     /// REFINE phase: the warm-start Euler loop over each drafted chunk,
     /// padding strip, and FIFO scatter back to per-request responses.
+    ///
+    /// Opens an observability scope ([`crate::obs::scope`]) keyed by the
+    /// bundle id for the duration, so fleet engine-call spans and the
+    /// replica/reroute trail attribute to this bundle without widening
+    /// the [`Executor`] trait. The scope (like all of [`crate::obs`]) is
+    /// write-only from the sampler's perspective: nothing it carries
+    /// feeds RNG, batching, or scheduling.
     pub fn refine_bundle(&self, drafted: DraftedBundle) -> Result<Vec<GenResponse>> {
+        let prev = scope::begin(drafted.bundle.bundle_id);
+        let out = self.refine_inner(drafted);
+        let trail = scope::end(prev);
+        let mut responses = out?;
+        if let Some(trail) = trail {
+            for resp in &mut responses {
+                if let Some(ti) = resp.timing.as_mut() {
+                    ti.replicas = trail.replicas.clone();
+                    ti.reroutes = trail.reroutes;
+                }
+            }
+        }
+        Ok(responses)
+    }
+
+    fn refine_inner(&self, drafted: DraftedBundle) -> Result<Vec<GenResponse>> {
         let DraftedBundle { bundle, bundle_seed: seed, chunks, decision, draft_time, started } =
             drafted;
         let key = &bundle.key;
         let n_total = bundle.total_samples();
+        let bundle_id = bundle.bundle_id;
+        let want_timing = bundle.requests.iter().any(|r| r.timing);
+        // Opt-in timing accumulators ([`TimingInfo`]); dead weight only
+        // when some request asked for the breakdown.
+        let mut seg_timing: Vec<(usize, u64)> = Vec::new();
+        let mut gate_us: Vec<u64> = Vec::new();
 
         // The controller's per-bundle t0 (== the requested t0 under the
         // static controller). The guarantee floor: adaptive schedules can
@@ -361,7 +386,16 @@ impl<'a> Scheduler<'a> {
                     false,
                     &mut self.scratch.borrow_mut(),
                 )?;
-                refine_time += t_refine.elapsed();
+                let seg_elapsed = t_refine.elapsed();
+                refine_time += seg_elapsed;
+                self.metrics.obs.span(
+                    0,
+                    bundle_id,
+                    SpanKind::RefineSegment,
+                    0,
+                    t_refine,
+                    seg_elapsed,
+                );
                 nfe = out.nfe; // same schedule for every chunk in the bundle
                 debug_assert!(out.nfe <= nfe_budget, "NFE guarantee floor violated");
                 self.metrics.nfe_saved.add(nfe_budget.saturating_sub(out.nfe) as u64);
@@ -407,10 +441,27 @@ impl<'a> Scheduler<'a> {
                 if outcome.early_exit {
                     self.metrics.cascade_early_exits.inc();
                 }
-                for stage in &outcome.stages {
+                for (si, stage) in outcome.stages.iter().enumerate() {
                     self.metrics.cascade_stage_nfe.record(stage.nfe as f64);
+                    self.metrics.obs.span(
+                        0,
+                        bundle_id,
+                        SpanKind::RefineSegment,
+                        si as u32,
+                        t_refine,
+                        stage.elapsed,
+                    );
                     if let Some(d) = stage.gate_eval {
                         self.metrics.gate_eval.record(d);
+                        self.metrics.obs.span(
+                            0,
+                            bundle_id,
+                            SpanKind::GateEval,
+                            si as u32,
+                            t_refine,
+                            d,
+                        );
+                        gate_us.push(d.as_micros() as u64);
                     }
                 }
                 let info = cascade_info.get_or_insert(CascadeInfo {
@@ -421,6 +472,11 @@ impl<'a> Scheduler<'a> {
                 if outcome.stages_used() > info.stages_used {
                     info.stages_used = outcome.stages_used();
                     info.nfe_per_stage = outcome.stages.iter().map(|s| s.nfe).collect();
+                    seg_timing = outcome
+                        .stages
+                        .iter()
+                        .map(|s| (s.nfe, s.elapsed.as_micros() as u64))
+                        .collect();
                 }
                 info.early_exit |= outcome.early_exit;
                 self.metrics.denoiser_calls.add(total as u64);
@@ -438,6 +494,18 @@ impl<'a> Scheduler<'a> {
         // Scatter rows back to requests in FIFO order.
         let total_time = started.elapsed();
         let now = Instant::now();
+        if self.cascade.is_off() {
+            // Single-segment path: one breakdown entry covering the whole
+            // refine loop (summed over chunks, like `refine_time`).
+            seg_timing = vec![(nfe, refine_time.as_micros() as u64)];
+        }
+        let timing_proto = want_timing.then(|| TimingInfo {
+            nfe_floor: nfe_budget,
+            segments: seg_timing,
+            gate_us,
+            replicas: Vec::new(), // filled from the scope trail by the wrapper
+            reroutes: 0,
+        });
         let mut responses = Vec::with_capacity(bundle.requests.len());
         let mut cursor = 0;
         for req in &bundle.requests {
@@ -454,6 +522,7 @@ impl<'a> Scheduler<'a> {
                 refine_time,
                 total_time,
                 degraded: None,
+                timing: if req.timing { timing_proto.clone() } else { None },
             });
             self.metrics.requests_completed.inc();
             self.metrics.samples.record(req.n_samples as u64);

@@ -59,6 +59,7 @@ use crate::coordinator::queue::{BoundedQueue, QueueFull};
 use crate::coordinator::request::{BundleKey, GenRequest, GenResponse};
 use crate::coordinator::scheduler::{DraftedBundle, Scheduler};
 use crate::metrics::ServingMetrics;
+use crate::obs::{EventKind, Obs, SpanKind};
 use crate::runtime::engine::Executor;
 use crate::runtime::Manifest;
 use anyhow::Result;
@@ -137,7 +138,13 @@ impl Service {
     /// Start the coordinator threads over an executor + manifest.
     pub fn start<E: Executor + 'static>(exec: E, manifest: Manifest, config: WsfmConfig) -> Service {
         let queue = Arc::new(BoundedQueue::<Envelope>::new(config.queue_capacity));
-        let metrics = Arc::new(ServingMetrics::default());
+        // Observability hub ([`crate::obs`], tuned by `config.obs`):
+        // bounded span/event journals shared by every stage thread
+        // through the metrics handle. Strictly write-only with respect to
+        // scheduling — disabling it changes no output byte.
+        let obs =
+            Arc::new(Obs::new(config.obs.enabled, config.obs.span_cap, config.obs.event_cap));
+        let metrics = Arc::new(ServingMetrics::with_obs(obs));
         let running = Arc::new(AtomicBool::new(true));
         // Backpressure hint unit: roughly one flush interval, floored at
         // 1 ms; `retry_after()` scales it by live occupancy.
@@ -187,7 +194,9 @@ impl Service {
                     let scheduler = Scheduler::with_policies(
                         &*exec, &*manifest, &*m, seed, controller, cascade,
                     );
-                    admission_loop(&q, &r, policy, stage_poll, |bundle, envelopes| {
+                    admission_loop(&q, &r, policy, stage_poll, |mut bundle, envelopes| {
+                        bundle.bundle_id = m.obs.next_bundle_id();
+                        record_admission_spans(&m, &bundle);
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
                         m.inflight_bundles.inc();
@@ -273,7 +282,9 @@ impl Service {
             std::thread::Builder::new()
                 .name("wsfm-coordinator".into())
                 .spawn(move || {
-                    admission_loop(&q, &r, policy, stage_poll, |bundle, envelopes| {
+                    admission_loop(&q, &r, policy, stage_poll, |mut bundle, envelopes| {
+                        bundle.bundle_id = m.obs.next_bundle_id();
+                        record_admission_spans(&m, &bundle);
                         let responders = take_responders(&bundle, envelopes);
                         record_flush_lag(&m, &bundle);
                         gate.acquire();
@@ -372,6 +383,29 @@ fn take_responders(bundle: &WorkBundle, envelopes: &mut HashMap<u64, Responder>)
     responders
 }
 
+/// Record per-request `admit` + `batcher_wait` spans at dispatch: `admit`
+/// pins the submission instant (zero duration), `batcher_wait` covers
+/// submit → flush. Both are request-scoped (they carry the request id as
+/// well as the freshly-minted bundle id), so `{"cmd":"trace"}` can join
+/// them to the bundle-scoped draft/refine spans.
+fn record_admission_spans(metrics: &ServingMetrics, bundle: &WorkBundle) {
+    if !metrics.obs.enabled() {
+        return;
+    }
+    let now = Instant::now();
+    for r in &bundle.requests {
+        metrics.obs.span(r.id, bundle.bundle_id, SpanKind::Admit, 0, r.submitted, Duration::ZERO);
+        metrics.obs.span(
+            r.id,
+            bundle.bundle_id,
+            SpanKind::BatcherWait,
+            0,
+            r.submitted,
+            now.saturating_duration_since(r.submitted),
+        );
+    }
+}
+
 /// Record how a bundle's dispatch relates to its flush deadline. A bundle
 /// can flush *before* its deadline (size-triggered); its negative lag
 /// used to clamp to a garbage 0 µs sample in `flush_lag`, dragging the
@@ -453,6 +487,7 @@ impl FallbackPlan {
                 refine_time: Duration::ZERO,
                 total_time,
                 degraded: Some(reason.to_string()),
+                timing: None,
             });
         }
         responses
@@ -509,6 +544,7 @@ fn deliver_or_degrade(
                 key.domain,
                 key.tag
             );
+            metrics.obs.event(EventKind::Degraded, None, reason.clone());
             let responses = plan.into_responses(&reason);
             debug_assert_eq!(responses.len(), responders.len());
             for (resp, tx) in responses.into_iter().zip(responders) {
@@ -1582,5 +1618,225 @@ mod tests {
         assert!(completed > 0, "some submissions must have completed");
         assert_eq!(svc.metrics.requests_completed.get(), completed);
         svc.shutdown(); // idempotent
+    }
+
+    /// [`fleet_outputs_composer`] with every request asking for the
+    /// opt-in timing breakdown and the observability journals toggled —
+    /// the "observation never perturbs outputs" sweep. Also asserts the
+    /// breakdown's internal invariants on every response.
+    fn observed_outputs(
+        timing: bool,
+        obs_enabled: bool,
+        replicas: usize,
+        refine_workers: usize,
+        depth: usize,
+        composed: bool,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
+        use crate::fleet::FleetHandle;
+        let execs: Vec<Arc<dyn Executor>> = (0..replicas)
+            .map(|_| Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2)) as Arc<dyn Executor>)
+            .collect();
+        let fleet = FleetHandle::from_executors(execs);
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.pipeline_depth = depth;
+        cfg.draft_workers = 2;
+        cfg.fleet.refine_workers = refine_workers;
+        cfg.seed = 99;
+        cfg.cascade.mode = "gated".into();
+        cfg.composer.enabled = composed;
+        cfg.obs.enabled = obs_enabled;
+        let svc = Service::start(fleet, manifest, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut r = request(0, (i as usize % 3) + 1);
+            r.seed = 1000 + i;
+            r.timing = timing;
+            rxs.push(svc.submit(r).unwrap());
+        }
+        let out = rxs
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+                if timing {
+                    let ti = resp.timing.as_ref().expect("timing requested but absent");
+                    assert!(ti.nfe_floor >= resp.nfe, "NFE above the reported floor");
+                    assert_eq!(
+                        ti.segments.iter().map(|(n, _)| *n).sum::<usize>(),
+                        resp.nfe,
+                        "segment NFE must sum to the reported NFE"
+                    );
+                } else {
+                    assert!(resp.timing.is_none(), "timing must be strictly opt-in");
+                }
+                (resp.t0_used, resp.samples)
+            })
+            .collect();
+        svc.shutdown();
+        out
+    }
+
+    #[test]
+    fn timing_and_observability_never_perturb_outputs() {
+        // Acceptance sweep: the opt-in timing breakdown and the obs
+        // journals are pure observation. Reference is the serial,
+        // fleet-less, untraced gated path; tracing on across fleet
+        // replicas {1, 4} × refine_workers {1, 2} × pipeline depth
+        // {1, 4} × composer on/off reproduces it byte for byte.
+        let reference = pipeline_outputs_cascade(1, 1, "static", "gated");
+        for composed in [false, true] {
+            for depth in [1usize, 4] {
+                for (replicas, refine_workers) in [(1, 1), (1, 2), (4, 1), (4, 2)] {
+                    assert_eq!(
+                        reference,
+                        observed_outputs(true, true, replicas, refine_workers, depth, composed),
+                        "timing=true perturbed outputs at replicas={replicas} \
+                         refine_workers={refine_workers} depth={depth} composed={composed}"
+                    );
+                }
+            }
+        }
+        // Journals disabled: same bytes again (and the breakdown still
+        // works — it derives from the refine trail, not the journal).
+        assert_eq!(reference, observed_outputs(true, false, 4, 2, 4, true));
+        assert_eq!(reference, observed_outputs(false, false, 1, 1, 1, false));
+    }
+
+    #[test]
+    fn span_journal_joins_a_request_to_its_bundle_spans() {
+        let svc = Service::start(
+            TestExec::drift(vec![1, 4, 8], 3, 4, 2),
+            mock_manifest(&["cold"], &[1, 4, 8], 3, 4),
+            test_config(),
+        );
+        let mut r = request(0, 2);
+        r.timing = true;
+        let resp = svc.generate(r).unwrap();
+        let spans = svc.metrics.obs.spans.for_request(resp.id);
+        let kind_count = |k: SpanKind| spans.iter().filter(|s| s.kind == k).count();
+        assert_eq!(kind_count(SpanKind::Admit), 1);
+        assert_eq!(kind_count(SpanKind::BatcherWait), 1);
+        assert!(kind_count(SpanKind::Draft) >= 1, "bundle draft span must join via bundle id");
+        assert!(kind_count(SpanKind::RefineSegment) >= 1);
+        let ti = resp.timing.expect("timing requested");
+        assert_eq!(ti.nfe_floor, 5); // guaranteed_nfe(10, 0.5)
+        assert_eq!(ti.segments.iter().map(|(n, _)| *n).sum::<usize>(), resp.nfe);
+        // An unknown request id joins nothing (the wire layer turns this
+        // into a typed error).
+        assert!(svc.metrics.obs.spans.for_request(9_999_999).is_empty());
+        svc.shutdown();
+    }
+
+    /// [`chaos_run`] with tracing on and the fleet's event journal
+    /// attached: returns the outcomes, the journal, and a fleet probe.
+    fn chaos_run_observed(
+        plan: crate::faults::FaultPlan,
+        rb: &crate::config::RobustnessConfig,
+    ) -> (Vec<Result<GenResponse, String>>, Arc<Obs>, crate::fleet::FleetHandle) {
+        use crate::faults::FaultyExec;
+        use crate::fleet::{FleetHandle, ReplicaFactory};
+        let factories: Vec<ReplicaFactory> = (0..4)
+            .map(|_| {
+                let plan = plan.clone();
+                Box::new(move || {
+                    let inner = Arc::new(TestExec::stochastic(vec![1, 4, 8], 16, 5, 2))
+                        as Arc<dyn Executor>;
+                    let faulty = FaultyExec::new(inner, plan.clone())
+                        .with_watchdog(Duration::from_millis(2));
+                    Ok(Arc::new(faulty) as Arc<dyn Executor>)
+                }) as ReplicaFactory
+            })
+            .collect();
+        let fleet = FleetHandle::from_factories(factories, rb).unwrap();
+        let obs = Arc::new(Obs::default());
+        fleet.attach_obs(obs.clone());
+        let probe = fleet.clone();
+        let manifest = mock_manifest(&["cold"], &[1, 4, 8], 16, 5);
+        let mut cfg = WsfmConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.pipeline_depth = 4;
+        cfg.draft_workers = 2;
+        cfg.fleet.refine_workers = 2;
+        cfg.seed = 99;
+        cfg.cascade.mode = "gated".into();
+        cfg.robustness = rb.clone();
+        let svc = Service::start(fleet, manifest, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut r = request(0, (i as usize % 3) + 1);
+            r.seed = 1000 + i;
+            r.timing = true;
+            rxs.push(svc.submit(r).unwrap());
+        }
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("chaos hung a response"))
+            .collect();
+        svc.shutdown();
+        (out, obs, probe)
+    }
+
+    #[test]
+    fn chaos_event_journal_mirrors_fleet_counters() {
+        use crate::config::RobustnessConfig;
+        use crate::faults::FaultPlan;
+        // Satellite: the chaos run re-run with tracing on. Every fleet
+        // fault-handling counter increment leaves a matching typed event
+        // in the journal, and anything that refined is still
+        // bitwise-identical to the fault-free reference — tracing a
+        // failing fleet perturbs nothing.
+        let rb = RobustnessConfig {
+            stage_poll_ms: 10,
+            respawn_backoff_ms: 1,
+            respawn_backoff_cap_ms: 5,
+            max_respawns: 1000,
+            ..RobustnessConfig::default()
+        };
+        let expected = pipeline_outputs_cascade(1, 1, "static", "gated");
+        for seed in [7u64, 21] {
+            let (out, obs, probe) = chaos_run_observed(FaultPlan::chaos(seed), &rb);
+            assert_eq!(out.len(), expected.len(), "lost envelopes (seed {seed})");
+            for (got, want) in out.iter().zip(&expected) {
+                if let Ok(resp) = got {
+                    if resp.degraded.is_none() {
+                        assert_eq!(
+                            (resp.t0_used, resp.samples.clone()),
+                            *want,
+                            "traced chaos output diverged (seed {seed})"
+                        );
+                    }
+                }
+            }
+            // Counter/journal agreement, allowing the async health loop a
+            // moment to finish whichever transition it was mid-way
+            // through when the last response landed.
+            let count = |k: EventKind| obs.events.of_kind(k).len() as u64;
+            let settled = Instant::now() + Duration::from_secs(2);
+            loop {
+                let fm = probe.metrics();
+                let ok = count(EventKind::Quarantine) == fm.replica_unhealthy.get()
+                    && count(EventKind::Reroute) == fm.fleet_reroutes.get()
+                    && count(EventKind::Respawn) == fm.replica_respawns.get()
+                    && count(EventKind::RespawnFailed) == fm.respawn_failures.get()
+                    && count(EventKind::EngineTimeout) == fm.engine_timeouts.get();
+                if ok {
+                    break;
+                }
+                if Instant::now() > settled {
+                    assert_eq!(count(EventKind::Quarantine), fm.replica_unhealthy.get());
+                    assert_eq!(count(EventKind::Reroute), fm.fleet_reroutes.get());
+                    assert_eq!(count(EventKind::Respawn), fm.replica_respawns.get());
+                    assert_eq!(count(EventKind::RespawnFailed), fm.respawn_failures.get());
+                    assert_eq!(count(EventKind::EngineTimeout), fm.engine_timeouts.get());
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let fm = probe.metrics();
+            assert!(
+                fm.replica_unhealthy.get() > 0 || fm.engine_timeouts.get() > 0,
+                "chaos seed {seed} exercised no fault path"
+            );
+        }
     }
 }

@@ -64,6 +64,7 @@ pub mod router;
 use crate::config::RobustnessConfig;
 use crate::fleet::router::{route, Candidate};
 use crate::metrics::FleetMetrics;
+use crate::obs::{scope, EventKind, Obs, SpanKind};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::runtime::engine::{
     EngineDead, EngineHandle, EngineStats, EngineTimeout, Executor, LoopReport, LoopScratch,
@@ -172,6 +173,25 @@ struct FleetInner {
     swap_epoch: AtomicU64,
     /// Serializes concurrent `swap_artifacts` calls.
     swap_lock: Mutex<()>,
+    /// Observability hub ([`FleetHandle::attach_obs`]): typed lifecycle
+    /// events mirror the [`FleetMetrics`] counters 1:1 and dispatches
+    /// record engine-call spans. `None` (unattached) records nothing.
+    obs: Mutex<Option<Arc<Obs>>>,
+}
+
+impl FleetInner {
+    /// The attached, enabled hub — `None` short-circuits every recording.
+    fn obs(&self) -> Option<Arc<Obs>> {
+        self.obs.lock().unwrap().as_ref().filter(|o| o.enabled()).cloned()
+    }
+
+    /// Journal one lifecycle event. `detail` is lazy so the hot path pays
+    /// no allocation when no hub is attached (or it is disabled).
+    fn event(&self, kind: EventKind, replica: Option<usize>, detail: impl FnOnce() -> String) {
+        if let Some(obs) = self.obs() {
+            obs.event(kind, replica, detail());
+        }
+    }
 }
 
 /// Health-loop poll cadence (how often quarantined slots are checked for
@@ -270,6 +290,7 @@ impl FleetHandle {
                 stop: AtomicBool::new(false),
                 swap_epoch: AtomicU64::new(0),
                 swap_lock: Mutex::new(()),
+                obs: Mutex::new(None),
             }),
         }
     }
@@ -307,6 +328,17 @@ impl FleetHandle {
     /// unhealthy + reroute + respawn counters).
     pub fn metrics(&self) -> &FleetMetrics {
         &self.inner.metrics
+    }
+
+    /// Attach an observability hub ([`crate::obs::Obs`]): every fleet
+    /// lifecycle transition (quarantine, reroute, respawn, watchdog
+    /// timeout, artifact swap/rollback) is journaled as a typed event
+    /// exactly 1:1 with its counter increment, and each dispatch records
+    /// an engine-call span tagged with the replica index and the ambient
+    /// bundle id ([`crate::obs::scope`]). The serving CLI attaches the
+    /// service's hub at startup; an unattached fleet records nothing.
+    pub fn attach_obs(&self, obs: Arc<Obs>) {
+        *self.inner.obs.lock().unwrap() = Some(obs);
     }
 
     /// Route + claim a replica for `artifact` under the router lock:
@@ -358,6 +390,9 @@ impl FleetHandle {
         // calls observe the same death.
         if replica.healthy.swap(false, Ordering::SeqCst) {
             self.inner.metrics.replica_unhealthy.inc();
+            self.inner.event(EventKind::Quarantine, Some(idx), || {
+                format!("replica {idx} dead or wedged (gen {generation})")
+            });
             crate::error!("fleet: replica {idx} unusable (dead or wedged); re-routing its work");
         }
     }
@@ -383,10 +418,26 @@ impl FleetHandle {
             let (idx, generation, exec) = self.claim(artifact)?;
             if attempt > 0 {
                 m.fleet_reroutes.inc();
+                scope::note_reroute();
+                self.inner.event(EventKind::Reroute, Some(idx), || {
+                    format!("attempt {} for {artifact} re-routed to replica {idx}", attempt + 1)
+                });
             }
             attempt += 1;
+            scope::note_replica(idx as u32);
+            let t_call = Instant::now();
             let result = call(&*exec);
             m.replica_inflight[idx].dec();
+            if let Some(obs) = self.inner.obs() {
+                obs.span(
+                    0,
+                    scope::bundle_id(),
+                    SpanKind::EngineCall,
+                    idx as u32,
+                    t_call,
+                    t_call.elapsed(),
+                );
+            }
             match result {
                 Err(e)
                     if e.downcast_ref::<EngineDead>().is_some()
@@ -394,6 +445,9 @@ impl FleetHandle {
                 {
                     if e.downcast_ref::<EngineTimeout>().is_some() {
                         m.engine_timeouts.inc();
+                        self.inner.event(EventKind::EngineTimeout, Some(idx), || {
+                            format!("watchdog timeout on {artifact}")
+                        });
                     }
                     self.quarantine(idx, generation);
                     if attempt >= max_attempts {
@@ -517,6 +571,9 @@ impl FleetHandle {
         if !report.ok() {
             self.inner.metrics.artifact_swap_rollbacks.inc();
             let names: Vec<&str> = report.mismatches.iter().map(|(n, _, _)| n.as_str()).collect();
+            self.inner.event(EventKind::ArtifactRollback, None, || {
+                format!("content hash mismatch for {names:?}")
+            });
             anyhow::bail!("artifact swap rejected: content hash mismatch for {names:?} ({report})");
         }
         let call_timeout = match &self.inner.respawner {
@@ -560,6 +617,7 @@ impl FleetHandle {
                         b.shutdown();
                     }
                     self.inner.metrics.artifact_swap_rollbacks.inc();
+                    self.inner.event(EventKind::ArtifactRollback, None, || format!("{e:#}"));
                     return Err(e.context("artifact swap rolled back; old fleet untouched"));
                 }
             }
@@ -589,6 +647,7 @@ impl FleetHandle {
             repair.retired = false;
         }
         self.inner.metrics.artifact_swaps.inc();
+        self.inner.event(EventKind::ArtifactSwap, None, || format!("published epoch {epoch}"));
         crate::info!("fleet: artifact swap published (epoch {epoch})");
         Ok(())
     }
@@ -682,10 +741,14 @@ fn try_repair(inner: &Arc<FleetInner>, idx: usize) {
             }
             replica.repair.lock().unwrap().consecutive_failures = 0;
             inner.metrics.replica_respawns.inc();
+            inner.event(EventKind::Respawn, Some(idx), || {
+                format!("replica {idx} resurrected (probe passed)")
+            });
             crate::info!("fleet: replica {idx} resurrected (probe passed)");
         }
         Err(e) => {
             inner.metrics.respawn_failures.inc();
+            inner.event(EventKind::RespawnFailed, Some(idx), || format!("{e:#}"));
             let mut repair = replica.repair.lock().unwrap();
             repair.consecutive_failures += 1;
             if repair.consecutive_failures >= inner.robustness.max_respawns {
@@ -1237,6 +1300,44 @@ mod tests {
         assert_eq!(fleet.metrics().artifact_swaps.get(), SWAPS);
         assert_eq!(fleet.metrics().artifact_swap_rollbacks.get(), 0);
         fleet.shutdown();
+    }
+
+    #[test]
+    fn attached_obs_journals_lifecycle_events_and_engine_call_spans() {
+        // One dead replica + one live one, a scope open as the scheduler
+        // would: the rerouted dispatch must journal Quarantine and
+        // Reroute events exactly 1:1 with the counters, tag engine-call
+        // spans with the ambient bundle id and replica index, and leave
+        // the replica/reroute trail in the scope.
+        let obs = Arc::new(Obs::default());
+        let fleet = FleetHandle::from_executors(vec![
+            Arc::new(dead_engine()) as Arc<dyn Executor>,
+            Arc::new(mock()) as Arc<dyn Executor>,
+        ]);
+        fleet.attach_obs(obs.clone());
+        let prev = scope::begin(99);
+        let mut out = Vec::new();
+        fleet.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        let trail = scope::end(prev).expect("scope was open");
+        let m = fleet.metrics();
+        assert_eq!(
+            obs.events.of_kind(EventKind::Quarantine).len() as u64,
+            m.replica_unhealthy.get()
+        );
+        assert_eq!(obs.events.of_kind(EventKind::Reroute).len() as u64, m.fleet_reroutes.get());
+        assert_eq!(obs.events.of_kind(EventKind::Quarantine)[0].replica, Some(0));
+        assert_eq!(obs.events.of_kind(EventKind::Reroute)[0].replica, Some(1));
+        assert_eq!(trail.replicas, vec![0, 1], "both attempts left the dispatch trail");
+        assert_eq!(trail.reroutes, 1);
+        let spans = obs.spans.for_request(0); // bundle-scoped spans join via bundle 99
+        let call_replicas: Vec<u32> =
+            spans.iter().filter(|s| s.kind == SpanKind::EngineCall).map(|s| s.detail).collect();
+        assert_eq!(call_replicas, vec![0, 1], "one span per attempt, detail = replica");
+        assert!(spans.iter().all(|s| s.bundle_id == 99), "ambient bundle id rode the scope");
+        // Unattached fleets record nothing (the pre-PR-9 behaviour).
+        let bare = FleetHandle::from_executors(vec![Arc::new(mock()) as Arc<dyn Executor>]);
+        bare.step_into("mock_cold_step_b4", &[0i32; 8], 0.0, 0.1, 1.0, &mut out).unwrap();
+        assert_eq!(obs.spans.for_request(0).len(), spans.len());
     }
 
     #[test]

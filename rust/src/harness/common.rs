@@ -60,6 +60,7 @@ impl Env {
             steps_cold,
             warp_mode: warp,
             seed,
+            timing: false,
             submitted: Instant::now(),
         };
         let resp = self.scheduler().run_single(req)?;
@@ -92,6 +93,7 @@ impl Env {
             steps_cold,
             warp_mode: warp,
             seed,
+            timing: false,
             submitted: Instant::now(),
         };
         let scheduler =
@@ -128,6 +130,7 @@ impl Env {
             steps_cold,
             warp_mode: warp,
             seed,
+            timing: false,
             submitted: Instant::now(),
         };
         let scheduler = Scheduler::with_policies(

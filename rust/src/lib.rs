@@ -127,6 +127,27 @@
 //! the wire — the paper's "drafts are already decent" claim as a
 //! graceful-degradation contract. See EXPERIMENTS.md §Robustness.
 //!
+//! ## Observability
+//!
+//! The paper's claim is a *measurable* speed-up, so the serving stack
+//! carries its own evidence: [`obs`] holds a bounded span journal
+//! (typed, fixed-size records — admit, batcher-wait, draft,
+//! refine-segment, gate-eval, engine-call, composed-step — in
+//! preallocated per-kind rings; recording never allocates) and a
+//! sequence-numbered event journal for every fleet/fault lifecycle
+//! transition (quarantine, respawn, reroute, watchdog timeout, artifact
+//! swap/rollback, degraded response, codec switch). A live stats
+//! surface rides the wire — `{"cmd":"stats"}` returns a typed
+//! [`metrics::MetricsSnapshot`] on either codec, `{"cmd":"trace"}`
+//! returns one request's span path, and `wsfm stats` renders
+//! Prometheus-style text — while `"timing": true` on a generate request
+//! opts into a per-response breakdown (queue wait, draft, per-segment
+//! refine, gate evals, chosen t0, NFE vs the guarantee floor, replica
+//! ids, reroute count): the per-sample evidence for the guaranteed-NFE
+//! claim. Observation never perturbs outputs — the determinism sweeps
+//! run with tracing on and off — and everything is strictly bounded by
+//! `config.obs` ring caps. See EXPERIMENTS.md §Observability.
+//!
 //! ## The wire and the artifact contract
 //!
 //! The TCP protocol is a pluggable codec ([`server::codec`]): requests
@@ -162,6 +183,7 @@ pub mod faults;
 pub mod fleet;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod server;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `serve`       — start the TCP serving front-end.
 //! * `generate`    — one-shot local generation (no server).
+//! * `stats`       — fetch a running server's live metrics snapshot.
 //! * `info`        — artifact/manifest inventory.
 //! * `selfcheck`   — validate artifacts + run a smoke execution.
 //! * `bench-table1..4` — regenerate the paper's tables (see EXPERIMENTS.md).
@@ -39,6 +40,7 @@ USAGE: wsfm <subcommand> [options]
 SUBCOMMANDS:
   serve          start the TCP server (negotiated json/binary wire codecs)
   generate       one-shot local generation
+  stats          fetch live stats from a running server (Prometheus text)
   info           print the artifact inventory
   selfcheck      validate artifacts and run a smoke execution
   verify-artifacts  check manifest content hashes against the files on disk
@@ -59,6 +61,7 @@ fn run(args: &[String]) -> Result<()> {
     match sub.as_str() {
         "serve" => cmd_serve(rest),
         "generate" => cmd_generate(rest),
+        "stats" => cmd_stats(rest),
         "info" => cmd_info(rest),
         "selfcheck" => cmd_selfcheck(rest),
         "verify-artifacts" => cmd_verify_artifacts(rest),
@@ -123,8 +126,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     }
 
     let service = Service::start(fleet.clone(), manifest.clone(), cfg.clone());
+    // Wire the fleet into the observability hub: lifecycle transitions
+    // (quarantine/respawn/reroute/swap) land in the event journal and
+    // engine calls record spans, 1:1 with the fleet counters.
+    fleet.attach_obs(service.metrics.obs.clone());
     let server =
-        TcpServer::bind_with(&cfg.listen_addr, service.clone(), manifest, cfg.wire.clone())?;
+        TcpServer::bind_with(&cfg.listen_addr, service.clone(), manifest, cfg.wire.clone())?
+            .with_fleet(fleet.clone());
     println!("wsfm serving on {} (artifacts: {:?})", server.local_addr, cfg.artifacts_dir);
     println!("wire: codecs={:?} default={}", cfg.wire.codecs, cfg.wire.default);
     if cfg.pipeline_depth > 1 {
@@ -136,6 +144,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         println!("pipeline: depth=1 (serial admission+execution)");
     }
     println!("fleet: {} engine replica(s), least-loaded routing", fleet.replicas());
+    if cfg.obs.enabled {
+        println!(
+            "obs: tracing on (span cap {}/kind, event cap {}) — `wsfm stats`, \
+             {{\"cmd\":\"stats\"}}, {{\"cmd\":\"trace\",\"request_id\":N}}",
+            cfg.obs.span_cap, cfg.obs.event_cap
+        );
+    } else {
+        println!("obs: tracing off (obs.enabled=false)");
+    }
     println!(
         "control: mode={} t0 in [{}, {}] grid {:?}{}",
         cfg.control.mode,
@@ -200,6 +217,7 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
         steps_cold: args.get_usize("steps").map_err(|m| anyhow::anyhow!(m))?,
         warp_mode: WarpMode::parse(args.get("warp"))?,
         seed: args.get_u64("seed").map_err(|m| anyhow::anyhow!(m))?,
+        timing: false,
         submitted: std::time::Instant::now(),
     };
     let resp = scheduler.run_single(req.clone())?;
@@ -230,6 +248,39 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
         }
     }
     engine.shutdown();
+    Ok(())
+}
+
+fn cmd_stats(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("wsfm stats", "fetch a running server's live metrics snapshot")
+        .opt("addr", "127.0.0.1:7871", "server address")
+        .opt("codec", "json", "wire codec to use (json|binary)")
+        .opt("trace", "", "also fetch the span trace for this request id")
+        .flag("json", "print the raw stats JSON instead of Prometheus-style text");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let mut client = wsfm::server::Client::connect(args.get("addr"))?;
+    if args.get("codec") != "json" {
+        client.negotiate(&[args.get("codec")])?;
+    }
+    let snapshot = client.stats()?;
+    if args.flag("json") {
+        println!("{}", snapshot.to_json());
+    } else {
+        print!("{}", snapshot.render_prometheus());
+    }
+    if !args.get("trace").is_empty() {
+        let id: u64 = args.get("trace").parse().context("bad --trace request id")?;
+        for s in client.trace(id)? {
+            println!(
+                "trace {id}: {:<14} bundle={} detail={} start_us={} dur_us={}",
+                s.kind.name(),
+                s.bundle_id,
+                s.detail,
+                s.start_us,
+                s.dur_us
+            );
+        }
+    }
     Ok(())
 }
 
@@ -334,6 +385,7 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
         steps_cold: 8,
         warp_mode: WarpMode::Exact,
         seed: 0,
+        timing: false,
         submitted: std::time::Instant::now(),
     };
     let resp = scheduler.run_single(req)?;

@@ -1,9 +1,21 @@
 //! Serving metrics: counters, latency histograms with percentile queries,
 //! and throughput meters. Lock-cheap (atomics + a mutex-guarded histogram)
 //! and shared across coordinator workers.
+//!
+//! Since PR 9 everything renders through typed snapshots: [`ServingMetrics
+//! ::snapshot`]/[`FleetMetrics::snapshot`] capture a point-in-time
+//! [`ServingSnapshot`]/[`FleetSnapshot`], and [`MetricsSnapshot`] bundles
+//! both for the live stats wire surface (`{"cmd":"stats"}`). The legacy
+//! one-shot summary strings are *renderings* of the same snapshot
+//! ([`ServingSnapshot::render_legacy`], pinned byte-identical by a golden
+//! test), alongside JSON (`to_json`/`from_json`, durations as exact
+//! nanosecond integers) and Prometheus-style text exposition
+//! ([`MetricsSnapshot::render_prometheus`], served by `wsfm stats`).
 
+use crate::obs::Obs;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Monotonic counter.
@@ -117,7 +129,7 @@ impl LatencyHistogram {
 }
 
 /// Point-in-time percentile view.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct LatencySnapshot {
     pub count: u64,
     pub mean: Duration,
@@ -133,6 +145,32 @@ impl LatencySnapshot {
             "{name}: n={} mean={:.2?} p50={:.2?} p95={:.2?} p99={:.2?} max={:.2?}",
             self.count, self.mean, self.p50, self.p95, self.p99, self.max
         )
+    }
+
+    /// Durations as exact nanosecond integers, so a wire round-trip on
+    /// either codec reproduces the snapshot bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        let ns = |d: Duration| Json::u64(d.as_nanos().min(u64::MAX as u128) as u64);
+        Json::obj(vec![
+            ("count", Json::u64(self.count)),
+            ("mean_ns", ns(self.mean)),
+            ("p50_ns", ns(self.p50)),
+            ("p95_ns", ns(self.p95)),
+            ("p99_ns", ns(self.p99)),
+            ("max_ns", ns(self.max)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> LatencySnapshot {
+        let ns = |k: &str| Duration::from_nanos(j.get(k).as_u64().unwrap_or(0));
+        LatencySnapshot {
+            count: j.get("count").as_u64().unwrap_or(0),
+            mean: ns("mean_ns"),
+            p50: ns("p50_ns"),
+            p95: ns("p95_ns"),
+            p99: ns("p99_ns"),
+            max: ns("max_ns"),
+        }
     }
 }
 
@@ -208,7 +246,7 @@ impl ValueHistogram {
 
 /// Point-in-time view of a [`ValueHistogram`], with percentile summaries
 /// (p50/p95 over the retained reservoir) like its latency counterpart.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct ValueSnapshot {
     pub count: u64,
     pub mean: f64,
@@ -224,6 +262,29 @@ impl ValueSnapshot {
             "{name}: n={} mean={:.3} p50={:.3} p95={:.3} min={:.3} max={:.3}",
             self.count, self.mean, self.p50, self.p95, self.min, self.max
         )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::u64(self.count)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ValueSnapshot {
+        let f = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+        ValueSnapshot {
+            count: j.get("count").as_u64().unwrap_or(0),
+            mean: f("mean"),
+            p50: f("p50"),
+            p95: f("p95"),
+            min: f("min"),
+            max: f("max"),
+        }
     }
 }
 
@@ -278,30 +339,142 @@ impl FleetMetrics {
         }
     }
 
+    /// Capture a point-in-time typed view.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            replicas: self.replica_inflight.len(),
+            replica_inflight: self.replica_inflight.iter().map(|g| g.get()).collect(),
+            replica_dispatched: self.replica_dispatched.iter().map(|c| c.get()).collect(),
+            replica_unhealthy: self.replica_unhealthy.get(),
+            fleet_reroutes: self.fleet_reroutes.get(),
+            replica_respawns: self.replica_respawns.get(),
+            respawn_failures: self.respawn_failures.get(),
+            engine_timeouts: self.engine_timeouts.get(),
+            artifact_swaps: self.artifact_swaps.get(),
+            artifact_swap_rollbacks: self.artifact_swap_rollbacks.get(),
+        }
+    }
+
     /// One-line rendering for the serve/selfcheck summary.
     pub fn summary(&self) -> String {
-        let join = |it: Vec<String>| it.join(",");
-        format!(
-            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={} replica_respawns={} respawn_failures={} engine_timeouts={} artifact_swaps={} artifact_swap_rollbacks={}",
-            self.replica_inflight.len(),
-            join(self.replica_inflight.iter().map(|g| g.get().to_string()).collect()),
-            join(self.replica_dispatched.iter().map(|c| c.get().to_string()).collect()),
-            self.replica_unhealthy.get(),
-            self.fleet_reroutes.get(),
-            self.replica_respawns.get(),
-            self.respawn_failures.get(),
-            self.engine_timeouts.get(),
-            self.artifact_swaps.get(),
-            self.artifact_swap_rollbacks.get()
-        )
+        self.snapshot().render_legacy()
     }
 }
 
-/// Throughput meter: events per second over the meter's lifetime.
+/// Point-in-time typed view of [`FleetMetrics`] (the `fleet:` summary
+/// line, the stats wire surface, and the Prometheus exposition all render
+/// from this).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FleetSnapshot {
+    pub replicas: usize,
+    pub replica_inflight: Vec<i64>,
+    pub replica_dispatched: Vec<u64>,
+    pub replica_unhealthy: u64,
+    pub fleet_reroutes: u64,
+    pub replica_respawns: u64,
+    pub respawn_failures: u64,
+    pub engine_timeouts: u64,
+    pub artifact_swaps: u64,
+    pub artifact_swap_rollbacks: u64,
+}
+
+impl FleetSnapshot {
+    /// The pre-PR-9 `FleetMetrics::summary` string, byte-identical.
+    pub fn render_legacy(&self) -> String {
+        let join = |it: Vec<String>| it.join(",");
+        format!(
+            "replicas={} replica_inflight=[{}] replica_dispatched=[{}] replica_unhealthy={} fleet_reroutes={} replica_respawns={} respawn_failures={} engine_timeouts={} artifact_swaps={} artifact_swap_rollbacks={}",
+            self.replicas,
+            join(self.replica_inflight.iter().map(|g| g.to_string()).collect()),
+            join(self.replica_dispatched.iter().map(|c| c.to_string()).collect()),
+            self.replica_unhealthy,
+            self.fleet_reroutes,
+            self.replica_respawns,
+            self.respawn_failures,
+            self.engine_timeouts,
+            self.artifact_swaps,
+            self.artifact_swap_rollbacks
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::u64(self.replicas as u64)),
+            (
+                "replica_inflight",
+                Json::arr(self.replica_inflight.iter().map(|&g| Json::num(g as f64))),
+            ),
+            (
+                "replica_dispatched",
+                Json::arr(self.replica_dispatched.iter().map(|&c| Json::u64(c))),
+            ),
+            ("replica_unhealthy", Json::u64(self.replica_unhealthy)),
+            ("fleet_reroutes", Json::u64(self.fleet_reroutes)),
+            ("replica_respawns", Json::u64(self.replica_respawns)),
+            ("respawn_failures", Json::u64(self.respawn_failures)),
+            ("engine_timeouts", Json::u64(self.engine_timeouts)),
+            ("artifact_swaps", Json::u64(self.artifact_swaps)),
+            ("artifact_swap_rollbacks", Json::u64(self.artifact_swap_rollbacks)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> FleetSnapshot {
+        let u = |k: &str| j.get(k).as_u64().unwrap_or(0);
+        FleetSnapshot {
+            replicas: j.get("replicas").as_usize().unwrap_or(0),
+            replica_inflight: j
+                .get("replica_inflight")
+                .as_arr()
+                .map(|a| a.iter().map(|v| v.as_i64().unwrap_or(0)).collect())
+                .unwrap_or_default(),
+            replica_dispatched: j
+                .get("replica_dispatched")
+                .as_arr()
+                .map(|a| a.iter().map(|v| v.as_u64().unwrap_or(0)).collect())
+                .unwrap_or_default(),
+            replica_unhealthy: u("replica_unhealthy"),
+            fleet_reroutes: u("fleet_reroutes"),
+            replica_respawns: u("replica_respawns"),
+            respawn_failures: u("respawn_failures"),
+            engine_timeouts: u("engine_timeouts"),
+            artifact_swaps: u("artifact_swaps"),
+            artifact_swap_rollbacks: u("artifact_swap_rollbacks"),
+        }
+    }
+}
+
+/// Sliding-window width of [`Throughput::windowed_per_second`], seconds.
+pub const THROUGHPUT_WINDOW_SECS: u64 = 10;
+
+/// Throughput meter: lifetime events-per-second plus a sliding
+/// 10-second-window rate.
+///
+/// The lifetime rate ([`per_second`]) divides total events by total
+/// uptime, so an idle server dilutes it toward 0 no matter how fast the
+/// last burst ran. [`windowed_per_second`] fixes that: events land in
+/// ten one-second buckets keyed by absolute uptime second (a stale
+/// bucket is reset on first write to its second), and the rate is the
+/// sum of in-window buckets over the window width — a burst reads at
+/// its true recent rate, and after ten idle seconds the windowed rate
+/// is exactly 0 (idle, not diluted). Both are exposed on the stats
+/// surface; the legacy `report()` line keeps the lifetime rate for
+/// byte-compatibility.
+///
+/// [`per_second`]: Throughput::per_second
+/// [`windowed_per_second`]: Throughput::windowed_per_second
 #[derive(Debug)]
 pub struct Throughput {
     start: Instant,
     events: Counter,
+    window: Mutex<WindowInner>,
+}
+
+#[derive(Debug)]
+struct WindowInner {
+    /// Events counted during the second recorded in `stamps[i]`.
+    buckets: [u64; THROUGHPUT_WINDOW_SECS as usize],
+    /// Absolute uptime second each bucket belongs to (slot = sec % W).
+    stamps: [u64; THROUGHPUT_WINDOW_SECS as usize],
 }
 
 impl Default for Throughput {
@@ -312,11 +485,20 @@ impl Default for Throughput {
 
 impl Throughput {
     pub fn new() -> Self {
-        Throughput { start: Instant::now(), events: Counter::default() }
+        Throughput {
+            start: Instant::now(),
+            events: Counter::default(),
+            window: Mutex::new(WindowInner {
+                buckets: [0; THROUGHPUT_WINDOW_SECS as usize],
+                stamps: [0; THROUGHPUT_WINDOW_SECS as usize],
+            }),
+        }
     }
     pub fn record(&self, n: u64) {
         self.events.add(n);
+        self.record_at(self.start.elapsed().as_secs(), n);
     }
+    /// Lifetime rate (diluted by idle time; kept for the legacy report).
     pub fn per_second(&self) -> f64 {
         let secs = self.start.elapsed().as_secs_f64();
         if secs <= 0.0 {
@@ -324,8 +506,35 @@ impl Throughput {
         }
         self.events.get() as f64 / secs
     }
+    /// Rate over the trailing [`THROUGHPUT_WINDOW_SECS`] seconds.
+    pub fn windowed_per_second(&self) -> f64 {
+        self.rate_at(self.start.elapsed().as_secs())
+    }
     pub fn total(&self) -> u64 {
         self.events.get()
+    }
+
+    /// Bucket an event batch under absolute uptime second `sec`
+    /// (separated from [`record`](Throughput::record) so tests can pin
+    /// the window arithmetic without sleeping).
+    fn record_at(&self, sec: u64, n: u64) {
+        let mut w = self.window.lock().unwrap();
+        let slot = (sec % THROUGHPUT_WINDOW_SECS) as usize;
+        if w.stamps[slot] != sec {
+            w.stamps[slot] = sec;
+            w.buckets[slot] = 0;
+        }
+        w.buckets[slot] += n;
+    }
+
+    /// Windowed rate as seen at absolute uptime second `now_sec`.
+    fn rate_at(&self, now_sec: u64) -> f64 {
+        let w = self.window.lock().unwrap();
+        let sum: u64 = (0..THROUGHPUT_WINDOW_SECS as usize)
+            .filter(|&i| now_sec.saturating_sub(w.stamps[i]) < THROUGHPUT_WINDOW_SECS)
+            .map(|i| w.buckets[i])
+            .sum();
+        sum as f64 / THROUGHPUT_WINDOW_SECS as f64
     }
 }
 
@@ -398,6 +607,10 @@ pub struct ServingMetrics {
     /// Undecodable inbound wire messages (malformed JSON lines, bad
     /// binary frames) answered with a typed error.
     pub wire_malformed: Counter,
+    /// The observability hub ([`crate::obs`]): bounded span + event
+    /// journals and the bundle-id mint, shared by everything that holds
+    /// the serving metrics (coordinator stages, fleet wiring, server).
+    pub obs: Arc<Obs>,
 }
 
 impl Default for ServingMetrics {
@@ -431,43 +644,335 @@ impl Default for ServingMetrics {
             wire_hellos: Counter::default(),
             wire_codec_switches: Counter::default(),
             wire_malformed: Counter::default(),
+            obs: Arc::new(Obs::default()),
         }
     }
 }
 
 impl ServingMetrics {
+    /// Construct with an explicit observability hub (from `config.obs`).
+    pub fn with_obs(obs: Arc<Obs>) -> ServingMetrics {
+        ServingMetrics { obs, ..ServingMetrics::default() }
+    }
+
+    /// Capture a point-in-time typed view of every serving metric.
+    pub fn snapshot(&self) -> ServingSnapshot {
+        ServingSnapshot {
+            admitted: self.requests_admitted.get(),
+            rejected: self.requests_rejected.get(),
+            completed: self.requests_completed.get(),
+            batches: self.batches_executed.get(),
+            denoiser_calls: self.denoiser_calls.get(),
+            draft_calls: self.draft_calls.get(),
+            draft_models_resolved: self.draft_models_resolved.get(),
+            padded_rows: self.padded_rows.get(),
+            inflight_bundles: self.inflight_bundles.get(),
+            nfe_saved: self.nfe_saved.get(),
+            cascade_early_exits: self.cascade_early_exits.get(),
+            early_flushes: self.early_flushes.get(),
+            degraded: self.degraded_responses.get(),
+            batch_occupancy: self.batch_occupancy.get(),
+            wire_hellos: self.wire_hellos.get(),
+            wire_codec_switches: self.wire_codec_switches.get(),
+            wire_malformed: self.wire_malformed.get(),
+            samples_total: self.samples.total(),
+            samples_per_sec: self.samples.per_second(),
+            samples_per_sec_windowed: self.samples.windowed_per_second(),
+            obs_spans_recorded: self.obs.spans.recorded_by_kind().iter().map(|&(_, n)| n).sum(),
+            obs_events_recorded: self.obs.events.recorded(),
+            chosen_t0: self.chosen_t0.snapshot(),
+            rows_per_step: self.rows_per_step.snapshot(),
+            cascade_stage_nfe: self.cascade_stage_nfe.snapshot(),
+            gate_eval: self.gate_eval.snapshot(),
+            queue_wait: self.queue_wait.snapshot(),
+            draft_queue_wait: self.draft_queue_wait.snapshot(),
+            flush_lag: self.flush_lag.snapshot(),
+            flush_early: self.flush_early.snapshot(),
+            batch_exec: self.batch_exec.snapshot(),
+            request_latency: self.request_latency.snapshot(),
+        }
+    }
+
+    /// The one-shot serve/selfcheck summary (legacy format, rendered
+    /// from [`snapshot`](ServingMetrics::snapshot)).
     pub fn report(&self) -> String {
+        self.snapshot().render_legacy()
+    }
+}
+
+/// Point-in-time typed view of [`ServingMetrics`]. One capture renders
+/// the legacy summary string, the stats wire payload (JSON or binary),
+/// and the Prometheus text exposition — the numbers can never disagree
+/// across surfaces.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServingSnapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub denoiser_calls: u64,
+    pub draft_calls: u64,
+    pub draft_models_resolved: u64,
+    pub padded_rows: u64,
+    pub inflight_bundles: i64,
+    pub nfe_saved: u64,
+    pub cascade_early_exits: u64,
+    pub early_flushes: u64,
+    pub degraded: u64,
+    pub batch_occupancy: i64,
+    pub wire_hellos: u64,
+    pub wire_codec_switches: u64,
+    pub wire_malformed: u64,
+    pub samples_total: u64,
+    /// Lifetime samples/s (idle-diluted; what the legacy report prints).
+    pub samples_per_sec: f64,
+    /// Trailing-window samples/s ([`THROUGHPUT_WINDOW_SECS`]).
+    pub samples_per_sec_windowed: f64,
+    /// Lifetime spans recorded across all span-journal shards.
+    pub obs_spans_recorded: u64,
+    /// Lifetime events recorded in the event journal.
+    pub obs_events_recorded: u64,
+    pub chosen_t0: ValueSnapshot,
+    pub rows_per_step: ValueSnapshot,
+    pub cascade_stage_nfe: ValueSnapshot,
+    pub gate_eval: LatencySnapshot,
+    pub queue_wait: LatencySnapshot,
+    pub draft_queue_wait: LatencySnapshot,
+    pub flush_lag: LatencySnapshot,
+    pub flush_early: LatencySnapshot,
+    pub batch_exec: LatencySnapshot,
+    pub request_latency: LatencySnapshot,
+}
+
+impl ServingSnapshot {
+    /// The pre-PR-9 `ServingMetrics::report()` string, byte-identical
+    /// (pinned by a golden test). The windowed rate and obs totals are
+    /// deliberately absent — they render only on the new surfaces.
+    pub fn render_legacy(&self) -> String {
         format!(
             "admitted={} rejected={} completed={} batches={} denoiser_calls={} draft_calls={} draft_models_resolved={} padded_rows={} inflight_bundles={} nfe_saved={} cascade_early_exits={} early_flushes={} degraded={} batch_occupancy={} wire_hellos={} wire_codec_switches={} wire_malformed={} samples/s={:.2}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
-            self.requests_admitted.get(),
-            self.requests_rejected.get(),
-            self.requests_completed.get(),
-            self.batches_executed.get(),
-            self.denoiser_calls.get(),
-            self.draft_calls.get(),
-            self.draft_models_resolved.get(),
-            self.padded_rows.get(),
-            self.inflight_bundles.get(),
-            self.nfe_saved.get(),
-            self.cascade_early_exits.get(),
-            self.early_flushes.get(),
-            self.degraded_responses.get(),
-            self.batch_occupancy.get(),
-            self.wire_hellos.get(),
-            self.wire_codec_switches.get(),
-            self.wire_malformed.get(),
-            self.samples.per_second(),
-            self.chosen_t0.snapshot().report("chosen_t0"),
-            self.rows_per_step.snapshot().report("rows_per_step"),
-            self.cascade_stage_nfe.snapshot().report("cascade_stage_nfe"),
-            self.gate_eval.snapshot().report("gate_eval"),
-            self.queue_wait.snapshot().report("queue_wait"),
-            self.draft_queue_wait.snapshot().report("draft_queue_wait"),
-            self.flush_lag.snapshot().report("flush_lag"),
-            self.flush_early.snapshot().report("flush_early"),
-            self.batch_exec.snapshot().report("batch_exec"),
-            self.request_latency.snapshot().report("request_latency"),
+            self.admitted,
+            self.rejected,
+            self.completed,
+            self.batches,
+            self.denoiser_calls,
+            self.draft_calls,
+            self.draft_models_resolved,
+            self.padded_rows,
+            self.inflight_bundles,
+            self.nfe_saved,
+            self.cascade_early_exits,
+            self.early_flushes,
+            self.degraded,
+            self.batch_occupancy,
+            self.wire_hellos,
+            self.wire_codec_switches,
+            self.wire_malformed,
+            self.samples_per_sec,
+            self.chosen_t0.report("chosen_t0"),
+            self.rows_per_step.report("rows_per_step"),
+            self.cascade_stage_nfe.report("cascade_stage_nfe"),
+            self.gate_eval.report("gate_eval"),
+            self.queue_wait.report("queue_wait"),
+            self.draft_queue_wait.report("draft_queue_wait"),
+            self.flush_lag.report("flush_lag"),
+            self.flush_early.report("flush_early"),
+            self.batch_exec.report("batch_exec"),
+            self.request_latency.report("request_latency"),
         )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::u64(self.admitted)),
+            ("rejected", Json::u64(self.rejected)),
+            ("completed", Json::u64(self.completed)),
+            ("batches", Json::u64(self.batches)),
+            ("denoiser_calls", Json::u64(self.denoiser_calls)),
+            ("draft_calls", Json::u64(self.draft_calls)),
+            ("draft_models_resolved", Json::u64(self.draft_models_resolved)),
+            ("padded_rows", Json::u64(self.padded_rows)),
+            ("inflight_bundles", Json::num(self.inflight_bundles as f64)),
+            ("nfe_saved", Json::u64(self.nfe_saved)),
+            ("cascade_early_exits", Json::u64(self.cascade_early_exits)),
+            ("early_flushes", Json::u64(self.early_flushes)),
+            ("degraded", Json::u64(self.degraded)),
+            ("batch_occupancy", Json::num(self.batch_occupancy as f64)),
+            ("wire_hellos", Json::u64(self.wire_hellos)),
+            ("wire_codec_switches", Json::u64(self.wire_codec_switches)),
+            ("wire_malformed", Json::u64(self.wire_malformed)),
+            ("samples_total", Json::u64(self.samples_total)),
+            ("samples_per_sec", Json::num(self.samples_per_sec)),
+            ("samples_per_sec_windowed", Json::num(self.samples_per_sec_windowed)),
+            ("obs_spans_recorded", Json::u64(self.obs_spans_recorded)),
+            ("obs_events_recorded", Json::u64(self.obs_events_recorded)),
+            ("chosen_t0", self.chosen_t0.to_json()),
+            ("rows_per_step", self.rows_per_step.to_json()),
+            ("cascade_stage_nfe", self.cascade_stage_nfe.to_json()),
+            ("gate_eval", self.gate_eval.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("draft_queue_wait", self.draft_queue_wait.to_json()),
+            ("flush_lag", self.flush_lag.to_json()),
+            ("flush_early", self.flush_early.to_json()),
+            ("batch_exec", self.batch_exec.to_json()),
+            ("request_latency", self.request_latency.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ServingSnapshot {
+        let u = |k: &str| j.get(k).as_u64().unwrap_or(0);
+        let f = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+        ServingSnapshot {
+            admitted: u("admitted"),
+            rejected: u("rejected"),
+            completed: u("completed"),
+            batches: u("batches"),
+            denoiser_calls: u("denoiser_calls"),
+            draft_calls: u("draft_calls"),
+            draft_models_resolved: u("draft_models_resolved"),
+            padded_rows: u("padded_rows"),
+            inflight_bundles: j.get("inflight_bundles").as_i64().unwrap_or(0),
+            nfe_saved: u("nfe_saved"),
+            cascade_early_exits: u("cascade_early_exits"),
+            early_flushes: u("early_flushes"),
+            degraded: u("degraded"),
+            batch_occupancy: j.get("batch_occupancy").as_i64().unwrap_or(0),
+            wire_hellos: u("wire_hellos"),
+            wire_codec_switches: u("wire_codec_switches"),
+            wire_malformed: u("wire_malformed"),
+            samples_total: u("samples_total"),
+            samples_per_sec: f("samples_per_sec"),
+            samples_per_sec_windowed: f("samples_per_sec_windowed"),
+            obs_spans_recorded: u("obs_spans_recorded"),
+            obs_events_recorded: u("obs_events_recorded"),
+            chosen_t0: ValueSnapshot::from_json(j.get("chosen_t0")),
+            rows_per_step: ValueSnapshot::from_json(j.get("rows_per_step")),
+            cascade_stage_nfe: ValueSnapshot::from_json(j.get("cascade_stage_nfe")),
+            gate_eval: LatencySnapshot::from_json(j.get("gate_eval")),
+            queue_wait: LatencySnapshot::from_json(j.get("queue_wait")),
+            draft_queue_wait: LatencySnapshot::from_json(j.get("draft_queue_wait")),
+            flush_lag: LatencySnapshot::from_json(j.get("flush_lag")),
+            flush_early: LatencySnapshot::from_json(j.get("flush_early")),
+            batch_exec: LatencySnapshot::from_json(j.get("batch_exec")),
+            request_latency: LatencySnapshot::from_json(j.get("request_latency")),
+        }
+    }
+}
+
+/// The full live stats payload: serving metrics plus the fleet's (when a
+/// fleet is attached to the server). This is what `{"cmd":"stats"}`
+/// returns on either codec and what `wsfm stats` renders as
+/// Prometheus-style text.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    pub serving: ServingSnapshot,
+    pub fleet: Option<FleetSnapshot>,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("serving", self.serving.to_json())];
+        if let Some(fl) = &self.fleet {
+            fields.push(("fleet", fl.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> MetricsSnapshot {
+        MetricsSnapshot {
+            serving: ServingSnapshot::from_json(j.get("serving")),
+            fleet: (!j.get("fleet").is_null()).then(|| FleetSnapshot::from_json(j.get("fleet"))),
+        }
+    }
+
+    /// Prometheus text exposition (`wsfm stats`): counters and gauges as
+    /// plain samples, histograms as quantile-labelled samples + `_count`,
+    /// per-replica fleet series with a `replica` label.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let s = &self.serving;
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!("# TYPE wsfm_{name} counter\nwsfm_{name} {v}\n"));
+        };
+        counter("requests_admitted_total", s.admitted);
+        counter("requests_rejected_total", s.rejected);
+        counter("requests_completed_total", s.completed);
+        counter("batches_executed_total", s.batches);
+        counter("denoiser_calls_total", s.denoiser_calls);
+        counter("draft_calls_total", s.draft_calls);
+        counter("draft_models_resolved_total", s.draft_models_resolved);
+        counter("padded_rows_total", s.padded_rows);
+        counter("nfe_saved_total", s.nfe_saved);
+        counter("cascade_early_exits_total", s.cascade_early_exits);
+        counter("early_flushes_total", s.early_flushes);
+        counter("degraded_responses_total", s.degraded);
+        counter("wire_hellos_total", s.wire_hellos);
+        counter("wire_codec_switches_total", s.wire_codec_switches);
+        counter("wire_malformed_total", s.wire_malformed);
+        counter("samples_total", s.samples_total);
+        counter("obs_spans_recorded_total", s.obs_spans_recorded);
+        counter("obs_events_recorded_total", s.obs_events_recorded);
+        let mut gauge = |name: &str, v: f64| {
+            out.push_str(&format!("# TYPE wsfm_{name} gauge\nwsfm_{name} {v}\n"));
+        };
+        gauge("inflight_bundles", s.inflight_bundles as f64);
+        gauge("batch_occupancy", s.batch_occupancy as f64);
+        gauge("samples_per_sec", s.samples_per_sec);
+        gauge("samples_per_sec_windowed", s.samples_per_sec_windowed);
+        let mut lat = |name: &str, h: &LatencySnapshot| {
+            out.push_str(&format!("# TYPE wsfm_{name}_seconds summary\n"));
+            for (q, d) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+                out.push_str(&format!(
+                    "wsfm_{name}_seconds{{quantile=\"{q}\"}} {}\n",
+                    d.as_secs_f64()
+                ));
+            }
+            out.push_str(&format!("wsfm_{name}_seconds_count {}\n", h.count));
+        };
+        lat("gate_eval", &s.gate_eval);
+        lat("queue_wait", &s.queue_wait);
+        lat("draft_queue_wait", &s.draft_queue_wait);
+        lat("flush_lag", &s.flush_lag);
+        lat("flush_early", &s.flush_early);
+        lat("batch_exec", &s.batch_exec);
+        lat("request_latency", &s.request_latency);
+        let mut val = |name: &str, h: &ValueSnapshot| {
+            out.push_str(&format!("# TYPE wsfm_{name} summary\n"));
+            for (q, v) in [("0.5", h.p50), ("0.95", h.p95)] {
+                out.push_str(&format!("wsfm_{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("wsfm_{name}_count {}\n", h.count));
+        };
+        val("chosen_t0", &s.chosen_t0);
+        val("rows_per_step", &s.rows_per_step);
+        val("cascade_stage_nfe", &s.cascade_stage_nfe);
+        if let Some(fl) = &self.fleet {
+            out.push_str(&format!(
+                "# TYPE wsfm_fleet_replicas gauge\nwsfm_fleet_replicas {}\n",
+                fl.replicas
+            ));
+            out.push_str("# TYPE wsfm_fleet_replica_inflight gauge\n");
+            for (i, g) in fl.replica_inflight.iter().enumerate() {
+                out.push_str(&format!("wsfm_fleet_replica_inflight{{replica=\"{i}\"}} {g}\n"));
+            }
+            out.push_str("# TYPE wsfm_fleet_replica_dispatched_total counter\n");
+            for (i, c) in fl.replica_dispatched.iter().enumerate() {
+                out.push_str(&format!(
+                    "wsfm_fleet_replica_dispatched_total{{replica=\"{i}\"}} {c}\n"
+                ));
+            }
+            let mut fc = |name: &str, v: u64| {
+                out.push_str(&format!("# TYPE wsfm_fleet_{name} counter\nwsfm_fleet_{name} {v}\n"));
+            };
+            fc("replica_unhealthy_total", fl.replica_unhealthy);
+            fc("reroutes_total", fl.fleet_reroutes);
+            fc("replica_respawns_total", fl.replica_respawns);
+            fc("respawn_failures_total", fl.respawn_failures);
+            fc("engine_timeouts_total", fl.engine_timeouts);
+            fc("artifact_swaps_total", fl.artifact_swaps);
+            fc("artifact_swap_rollbacks_total", fl.artifact_swap_rollbacks);
+        }
+        out
     }
 }
 
@@ -623,6 +1128,118 @@ mod tests {
         assert!(s.contains("replica_respawns=1"), "{s}");
         assert!(s.contains("respawn_failures=3"), "{s}");
         assert!(s.contains("engine_timeouts=2"), "{s}");
+    }
+
+    #[test]
+    fn report_renders_the_exact_legacy_string() {
+        // Golden pin: the PR-9 snapshot refactor must keep the one-shot
+        // serve/selfcheck summary byte-identical to the pre-refactor
+        // format string. A default (all-zero) instance has a fully
+        // deterministic rendering, including the lifetime samples/s.
+        let m = ServingMetrics::default();
+        let hist = |name: &str| format!("{name}: n=0 mean=0.00ns p50=0.00ns p95=0.00ns p99=0.00ns max=0.00ns");
+        let vhist = |name: &str| format!("{name}: n=0 mean=0.000 p50=0.000 p95=0.000 min=0.000 max=0.000");
+        let expected = format!(
+            "admitted=0 rejected=0 completed=0 batches=0 denoiser_calls=0 draft_calls=0 draft_models_resolved=0 padded_rows=0 inflight_bundles=0 nfe_saved=0 cascade_early_exits=0 early_flushes=0 degraded=0 batch_occupancy=0 wire_hellos=0 wire_codec_switches=0 wire_malformed=0 samples/s=0.00\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
+            vhist("chosen_t0"),
+            vhist("rows_per_step"),
+            vhist("cascade_stage_nfe"),
+            hist("gate_eval"),
+            hist("queue_wait"),
+            hist("draft_queue_wait"),
+            hist("flush_lag"),
+            hist("flush_early"),
+            hist("batch_exec"),
+            hist("request_latency"),
+        );
+        assert_eq!(m.report(), expected);
+        // Poked counters land in the same positions as before.
+        m.requests_admitted.add(3);
+        m.nfe_saved.add(12);
+        m.batch_occupancy.set(87);
+        let r = m.report();
+        assert!(r.starts_with("admitted=3 rejected=0"), "{r}");
+        assert!(r.contains("nfe_saved=12"), "{r}");
+        assert!(r.contains("batch_occupancy=87"), "{r}");
+        // And the fleet summary delegates through its snapshot verbatim.
+        let fm = FleetMetrics::new(2);
+        assert_eq!(fm.summary(), fm.snapshot().render_legacy());
+    }
+
+    #[test]
+    fn windowed_throughput_reads_bursts_and_goes_idle() {
+        let t = Throughput::new();
+        // A 50-sample burst during uptime second 3.
+        t.record_at(3, 50);
+        assert_eq!(t.rate_at(3), 5.0, "50 over a 10s window");
+        assert_eq!(t.rate_at(12), 5.0, "second 3 is still inside [3, 12]");
+        assert_eq!(t.rate_at(13), 0.0, "window slid past the burst: idle reads 0");
+        // A second burst 10s later lands in the same slot (13 % 10 == 3)
+        // and must displace the stale bucket, not add to it.
+        t.record_at(13, 10);
+        assert_eq!(t.rate_at(13), 1.0);
+        // Spread across several buckets, all in-window.
+        t.record_at(14, 10);
+        t.record_at(15, 10);
+        assert_eq!(t.rate_at(15), 3.0);
+    }
+
+    #[test]
+    fn lifetime_rate_dilutes_while_windowed_rate_does_not() {
+        // The satellite's motivating scenario: a burst followed by idle
+        // time. The lifetime rate keeps shrinking as uptime grows; the
+        // windowed rate reports the burst at full strength while it is
+        // in-window and exactly 0 once it is not.
+        let t = Throughput::new();
+        t.record_at(0, 100);
+        let early = t.rate_at(5);
+        let late = t.rate_at(9);
+        assert_eq!(early, 10.0);
+        assert_eq!(late, 10.0, "windowed rate is idle-invariant in-window");
+        assert_eq!(t.rate_at(100), 0.0, "and truly zero once idle");
+    }
+
+    #[test]
+    fn metrics_snapshot_json_round_trips_exactly() {
+        let m = ServingMetrics::default();
+        m.requests_admitted.add(7);
+        m.queue_wait.record(Duration::from_nanos(123_456_789));
+        m.chosen_t0.record(0.8);
+        m.samples.record(40);
+        m.obs.event(crate::obs::EventKind::Reroute, Some(1), "x");
+        let fm = FleetMetrics::new(2);
+        fm.replica_dispatched[1].add(9);
+        fm.fleet_reroutes.inc();
+        let snap = MetricsSnapshot { serving: m.snapshot(), fleet: Some(fm.snapshot()) };
+        let wire = snap.to_json().to_string();
+        let back = MetricsSnapshot::from_json(&Json::parse(&wire).unwrap());
+        assert_eq!(back, snap, "durations ride as exact ns integers");
+        assert_eq!(back.serving.obs_events_recorded, 1);
+        // Fleet-less snapshot omits the fleet key entirely.
+        let solo = MetricsSnapshot { serving: m.snapshot(), fleet: None };
+        assert!(!solo.to_json().to_string().contains("\"fleet\""));
+        assert_eq!(MetricsSnapshot::from_json(&solo.to_json()).fleet, None);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_typed_samples() {
+        let m = ServingMetrics::default();
+        m.requests_completed.add(5);
+        m.request_latency.record(Duration::from_millis(2));
+        let fm = FleetMetrics::new(2);
+        fm.replica_dispatched[0].add(3);
+        let snap = MetricsSnapshot { serving: m.snapshot(), fleet: Some(fm.snapshot()) };
+        let text = snap.render_prometheus();
+        assert!(text.contains("# TYPE wsfm_requests_completed_total counter\n"), "{text}");
+        assert!(text.contains("wsfm_requests_completed_total 5\n"), "{text}");
+        assert!(text.contains("wsfm_request_latency_seconds{quantile=\"0.5\"} 0.002"), "{text}");
+        assert!(text.contains("wsfm_request_latency_seconds_count 1\n"), "{text}");
+        assert!(text.contains("wsfm_fleet_replica_dispatched_total{replica=\"0\"} 3\n"), "{text}");
+        assert!(text.contains("wsfm_fleet_replica_dispatched_total{replica=\"1\"} 0\n"), "{text}");
+        assert!(text.contains("wsfm_samples_per_sec_windowed"), "{text}");
+        // Fleet-less exposition omits fleet series.
+        let solo = MetricsSnapshot { serving: m.snapshot(), fleet: None };
+        assert!(!solo.render_prometheus().contains("wsfm_fleet_"));
     }
 
     #[test]

@@ -1,0 +1,599 @@
+//! Serving observability: request-scoped span tracing + structured event
+//! journal (EXPERIMENTS.md §Observability).
+//!
+//! Two bounded, lock-cheap journals back the live stats surface:
+//!
+//! * [`SpanJournal`] — typed, fixed-size [`SpanRecord`]s (admit,
+//!   batcher-wait, draft, refine-segment k, gate-eval, engine-call on
+//!   replica r, composed-step) written by the serving hot path. Records
+//!   are `Copy` and land in per-kind ring shards preallocated at
+//!   construction, so a recording is one short shard-lock + one slot
+//!   write — no allocation, no global contention across stages.
+//! * [`EventJournal`] — sequence-numbered lifecycle [`EventRecord`]s for
+//!   every fleet/fault transition (quarantine, respawn, reroute, watchdog
+//!   timeout, artifact swap/rollback, degraded response, codec switch),
+//!   turning the counter-only view into *when/which/why*.
+//!
+//! Both are strictly bounded (ring caps from `config.obs`, pinned by
+//! tests) and both gate on [`Obs::enabled`]: with observability off every
+//! recording call is a single relaxed atomic load. The contract that
+//! matters most is **observation never perturbs outputs** — nothing in
+//! this module touches RNG, scheduling decisions, or token data, so the
+//! bitwise-determinism sweeps hold with tracing on or off.
+//!
+//! Identity threading: the admission path mints a `bundle_id` per flushed
+//! [`crate::coordinator::WorkBundle`] (`Obs::next_bundle_id`), and spans
+//! record `(request_id, bundle_id)`. Stages that work per-bundle (draft,
+//! engine calls) record with `request_id = 0` and the bundle id; the
+//! [`SpanJournal::for_request`] query joins the two by bundle id so a
+//! `{"cmd":"trace"}` reply shows the full path of one request. Executor
+//! internals (fleet dispatch) learn the ambient bundle through a
+//! thread-local [`scope`] rather than a trait change, keeping the
+//! `Executor` object surface stable.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Typed span kinds, one ring shard per kind. `#[repr(u8)]` so records
+/// serialize to the binary wire as a single tag byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Request admitted into the batcher (duration = submit → admit).
+    Admit = 0,
+    /// Request waited in the batcher before its bundle flushed.
+    BatcherWait = 1,
+    /// DRAFT stage over one bundle.
+    Draft = 2,
+    /// One cascade REFINE segment (detail = segment index).
+    RefineSegment = 3,
+    /// Mid-cascade quality-gate evaluation (detail = segment index).
+    GateEval = 4,
+    /// One engine dispatch (detail = fleet replica index).
+    EngineCall = 5,
+    /// One composed cross-bundle step (detail = rows stepped).
+    ComposedStep = 6,
+}
+
+impl SpanKind {
+    /// Number of kinds == number of ring shards.
+    pub const COUNT: usize = 7;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::BatcherWait => "batcher_wait",
+            SpanKind::Draft => "draft",
+            SpanKind::RefineSegment => "refine_segment",
+            SpanKind::GateEval => "gate_eval",
+            SpanKind::EngineCall => "engine_call",
+            SpanKind::ComposedStep => "composed_step",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::Admit,
+            1 => SpanKind::BatcherWait,
+            2 => SpanKind::Draft,
+            3 => SpanKind::RefineSegment,
+            4 => SpanKind::GateEval,
+            5 => SpanKind::EngineCall,
+            6 => SpanKind::ComposedStep,
+            _ => return None,
+        })
+    }
+
+    fn all() -> [SpanKind; SpanKind::COUNT] {
+        [
+            SpanKind::Admit,
+            SpanKind::BatcherWait,
+            SpanKind::Draft,
+            SpanKind::RefineSegment,
+            SpanKind::GateEval,
+            SpanKind::EngineCall,
+            SpanKind::ComposedStep,
+        ]
+    }
+}
+
+/// One fixed-size span record. `Copy` so ring writes are slot stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Wire request id, or 0 for bundle-scoped spans (joined by bundle).
+    pub request_id: u64,
+    /// Bundle id minted at flush, or 0 before a request joins a bundle.
+    pub bundle_id: u64,
+    pub kind: SpanKind,
+    /// Kind-specific detail: segment index, replica index, or row count.
+    pub detail: u32,
+    /// Span start, microseconds since the journal's origin.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+#[derive(Debug)]
+struct ShardInner {
+    /// Preallocated to the shard cap at construction; `next` wraps.
+    slots: Vec<SpanRecord>,
+    next: usize,
+}
+
+#[derive(Debug)]
+struct Shard {
+    inner: Mutex<ShardInner>,
+    recorded: AtomicU64,
+}
+
+/// Bounded span storage: one ring of `cap_per_shard` preallocated slots
+/// per [`SpanKind`]. Total memory is `COUNT * cap_per_shard *
+/// size_of::<SpanRecord>()` forever — recording never allocates.
+#[derive(Debug)]
+pub struct SpanJournal {
+    cap_per_shard: usize,
+    origin: Instant,
+    shards: [Shard; SpanKind::COUNT],
+}
+
+impl SpanJournal {
+    pub fn new(cap_per_shard: usize) -> SpanJournal {
+        let cap = cap_per_shard.max(1);
+        SpanJournal {
+            cap_per_shard: cap,
+            origin: Instant::now(),
+            shards: std::array::from_fn(|_| Shard {
+                inner: Mutex::new(ShardInner { slots: Vec::with_capacity(cap), next: 0 }),
+                recorded: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Ring capacity per kind (the bound pinned by tests).
+    pub fn cap_per_shard(&self) -> usize {
+        self.cap_per_shard
+    }
+
+    /// Microseconds since the journal's origin for `at` (0 if earlier).
+    pub fn us_since_origin(&self, at: Instant) -> u64 {
+        at.checked_duration_since(self.origin).unwrap_or(Duration::ZERO).as_micros() as u64
+    }
+
+    /// Record one span that started at `start` and ran for `dur`.
+    pub fn record(
+        &self,
+        request_id: u64,
+        bundle_id: u64,
+        kind: SpanKind,
+        detail: u32,
+        start: Instant,
+        dur: Duration,
+    ) {
+        let rec = SpanRecord {
+            request_id,
+            bundle_id,
+            kind,
+            detail,
+            start_us: self.us_since_origin(start),
+            dur_us: dur.as_micros() as u64,
+        };
+        let shard = &self.shards[kind as usize];
+        let mut inner = shard.inner.lock().unwrap();
+        if inner.slots.len() < self.cap_per_shard {
+            inner.slots.push(rec);
+        } else {
+            let at = inner.next;
+            inner.slots[at] = rec;
+        }
+        inner.next = (inner.next + 1) % self.cap_per_shard;
+        drop(inner);
+        shard.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Spans currently retained (≤ `COUNT * cap_per_shard`).
+    pub fn retained(&self) -> usize {
+        self.shards.iter().map(|s| s.inner.lock().unwrap().slots.len()).sum()
+    }
+
+    /// Lifetime spans recorded per kind (overflow means older ones were
+    /// overwritten in that kind's ring).
+    pub fn recorded_by_kind(&self) -> [(SpanKind, u64); SpanKind::COUNT] {
+        let mut out = [(SpanKind::Admit, 0u64); SpanKind::COUNT];
+        for (i, k) in SpanKind::all().into_iter().enumerate() {
+            out[i] = (k, self.shards[i].recorded.load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// All retained spans for one request, joined with bundle-scoped
+    /// spans (`request_id == 0`) whose bundle id matches any of the
+    /// request's spans, sorted by start time.
+    pub fn for_request(&self, request_id: u64) -> Vec<SpanRecord> {
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.inner.lock().unwrap().slots.iter().copied());
+        }
+        let bundles: Vec<u64> = all
+            .iter()
+            .filter(|r| r.request_id == request_id && r.bundle_id != 0)
+            .map(|r| r.bundle_id)
+            .collect();
+        let mut out: Vec<SpanRecord> = all
+            .into_iter()
+            .filter(|r| {
+                r.request_id == request_id
+                    || (r.request_id == 0 && r.bundle_id != 0 && bundles.contains(&r.bundle_id))
+            })
+            .collect();
+        out.sort_by_key(|r| (r.start_us, r.kind as u8, r.detail));
+        out
+    }
+}
+
+/// Typed lifecycle events (the *when/which/why* behind the counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    Quarantine = 0,
+    Respawn = 1,
+    RespawnFailed = 2,
+    Reroute = 3,
+    EngineTimeout = 4,
+    ArtifactSwap = 5,
+    ArtifactRollback = 6,
+    Degraded = 7,
+    CodecSwitch = 8,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Quarantine => "quarantine",
+            EventKind::Respawn => "respawn",
+            EventKind::RespawnFailed => "respawn_failed",
+            EventKind::Reroute => "reroute",
+            EventKind::EngineTimeout => "engine_timeout",
+            EventKind::ArtifactSwap => "artifact_swap",
+            EventKind::ArtifactRollback => "artifact_rollback",
+            EventKind::Degraded => "degraded",
+            EventKind::CodecSwitch => "codec_switch",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::Quarantine,
+            1 => EventKind::Respawn,
+            2 => EventKind::RespawnFailed,
+            3 => EventKind::Reroute,
+            4 => EventKind::EngineTimeout,
+            5 => EventKind::ArtifactSwap,
+            6 => EventKind::ArtifactRollback,
+            7 => EventKind::Degraded,
+            8 => EventKind::CodecSwitch,
+            _ => return None,
+        })
+    }
+}
+
+/// One journal entry. `seq` is a gap-free global sequence number, so a
+/// consumer can detect eviction (retained front's seq > last seen + 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventRecord {
+    pub seq: u64,
+    /// Microseconds since the journal's origin.
+    pub at_us: u64,
+    pub kind: EventKind,
+    /// Fleet replica index, when the event concerns one.
+    pub replica: Option<usize>,
+    /// Short human-readable cause ("probe failed", reroute reason, …).
+    pub detail: String,
+}
+
+/// Bounded, sequence-numbered event storage (FIFO eviction at `cap`).
+#[derive(Debug)]
+pub struct EventJournal {
+    cap: usize,
+    origin: Instant,
+    seq: AtomicU64,
+    inner: Mutex<VecDeque<EventRecord>>,
+}
+
+impl EventJournal {
+    pub fn new(cap: usize) -> EventJournal {
+        let cap = cap.max(1);
+        EventJournal {
+            cap,
+            origin: Instant::now(),
+            seq: AtomicU64::new(0),
+            inner: Mutex::new(VecDeque::with_capacity(cap)),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Append one event; evicts the oldest entry at the cap.
+    pub fn record(&self, kind: EventKind, replica: Option<usize>, detail: impl Into<String>) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let at_us =
+            Instant::now().checked_duration_since(self.origin).unwrap_or(Duration::ZERO).as_micros()
+                as u64;
+        let rec = EventRecord { seq, at_us, kind, replica, detail: detail.into() };
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(rec);
+    }
+
+    /// Lifetime events recorded (== next seq).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Retained entries, oldest first.
+    pub fn snapshot(&self) -> Vec<EventRecord> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Retained entries of one kind, oldest first.
+    pub fn of_kind(&self, kind: EventKind) -> Vec<EventRecord> {
+        self.inner.lock().unwrap().iter().filter(|e| e.kind == kind).cloned().collect()
+    }
+}
+
+/// The per-service observability hub: both journals plus the bundle-id
+/// mint, behind a single enable gate. Lives on
+/// [`crate::metrics::ServingMetrics`] so everything that already holds
+/// the metrics (scheduler, fleet wiring, server) can record.
+#[derive(Debug)]
+pub struct Obs {
+    enabled: AtomicBool,
+    pub spans: SpanJournal,
+    pub events: EventJournal,
+    next_bundle: AtomicU64,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new(true, 4096, 1024)
+    }
+}
+
+impl Obs {
+    pub fn new(enabled: bool, span_cap: usize, event_cap: usize) -> Obs {
+        Obs {
+            enabled: AtomicBool::new(enabled),
+            spans: SpanJournal::new(span_cap),
+            events: EventJournal::new(event_cap),
+            next_bundle: AtomicU64::new(1),
+        }
+    }
+
+    /// Disabled hub: every record call short-circuits on one atomic load.
+    pub fn disabled() -> Obs {
+        Obs::new(false, 1, 1)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Mint a bundle id (1-based; 0 means "no bundle"). Minting stays
+    /// live even when disabled so toggling obs mid-run can't collide ids.
+    pub fn next_bundle_id(&self) -> u64 {
+        self.next_bundle.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record a span iff enabled.
+    pub fn span(
+        &self,
+        request_id: u64,
+        bundle_id: u64,
+        kind: SpanKind,
+        detail: u32,
+        start: Instant,
+        dur: Duration,
+    ) {
+        if self.enabled() {
+            self.spans.record(request_id, bundle_id, kind, detail, start, dur);
+        }
+    }
+
+    /// Record a lifecycle event iff enabled.
+    pub fn event(&self, kind: EventKind, replica: Option<usize>, detail: impl Into<String>) {
+        if self.enabled() {
+            self.events.record(kind, replica, detail);
+        }
+    }
+}
+
+/// Ambient per-thread refine scope: carries the current bundle id into
+/// executor internals (fleet dispatch) without widening the `Executor`
+/// trait, and accumulates the replica-id / reroute trail for the opt-in
+/// per-response timing breakdown. All calls are no-ops when no scope is
+/// open, so executors used outside the coordinator are unaffected.
+pub mod scope {
+    use std::cell::RefCell;
+
+    #[derive(Debug, Default, Clone)]
+    pub struct ScopeData {
+        pub bundle_id: u64,
+        /// Fleet replica indices touched, in dispatch order (deduped).
+        pub replicas: Vec<u32>,
+        pub reroutes: u32,
+    }
+
+    thread_local! {
+        static SCOPE: RefCell<Option<ScopeData>> = const { RefCell::new(None) };
+    }
+
+    /// Open a scope for the current thread's in-flight bundle. The
+    /// previous scope (if any) is returned for restore-on-drop callers;
+    /// the coordinator's stages never nest, so they pass it straight to
+    /// [`end`].
+    pub fn begin(bundle_id: u64) -> Option<ScopeData> {
+        SCOPE.with(|s| s.replace(Some(ScopeData { bundle_id, ..ScopeData::default() })))
+    }
+
+    /// Close the current scope, returning its accumulated trail and
+    /// restoring `prev`.
+    pub fn end(prev: Option<ScopeData>) -> Option<ScopeData> {
+        SCOPE.with(|s| s.replace(prev))
+    }
+
+    /// Current bundle id, or 0 outside any scope.
+    pub fn bundle_id() -> u64 {
+        SCOPE.with(|s| s.borrow().as_ref().map_or(0, |d| d.bundle_id))
+    }
+
+    /// Note a dispatch landing on fleet replica `idx`.
+    pub fn note_replica(idx: u32) {
+        SCOPE.with(|s| {
+            if let Some(d) = s.borrow_mut().as_mut() {
+                if !d.replicas.contains(&idx) {
+                    d.replicas.push(idx);
+                }
+            }
+        });
+    }
+
+    /// Note a fleet reroute (failed dispatch retried elsewhere).
+    pub fn note_reroute() {
+        SCOPE.with(|s| {
+            if let Some(d) = s.borrow_mut().as_mut() {
+                d.reroutes += 1;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ring_is_strictly_bounded_and_overwrites_oldest() {
+        let j = SpanJournal::new(4);
+        let t0 = Instant::now();
+        for i in 0..10u64 {
+            j.record(i, 1, SpanKind::Draft, 0, t0, Duration::from_micros(i));
+        }
+        assert_eq!(j.retained(), 4, "ring must cap at 4");
+        let by_kind = j.recorded_by_kind();
+        assert_eq!(by_kind[SpanKind::Draft as usize].1, 10);
+        // The survivors are the 4 newest records (6..=9).
+        let mut ids: Vec<u64> = j
+            .for_request(6)
+            .iter()
+            .chain(j.for_request(7).iter())
+            .chain(j.for_request(8).iter())
+            .chain(j.for_request(9).iter())
+            .map(|r| r.request_id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        assert!(j.for_request(3).is_empty(), "overwritten record must be gone");
+    }
+
+    #[test]
+    fn span_memory_bound_holds_across_all_shards() {
+        let j = SpanJournal::new(2);
+        let t0 = Instant::now();
+        for k in SpanKind::all() {
+            for i in 0..5u64 {
+                j.record(i, 0, k, 0, t0, Duration::ZERO);
+            }
+        }
+        assert_eq!(j.retained(), 2 * SpanKind::COUNT);
+    }
+
+    #[test]
+    fn for_request_joins_bundle_scoped_spans_and_sorts() {
+        let j = SpanJournal::new(64);
+        let t0 = Instant::now();
+        let t = |us: u64| t0 + Duration::from_micros(us);
+        // Request 42 rode bundle 7; request 43 rode bundle 8.
+        j.record(42, 7, SpanKind::BatcherWait, 0, t(5), Duration::from_micros(3));
+        j.record(42, 7, SpanKind::Admit, 0, t(1), Duration::ZERO);
+        j.record(0, 7, SpanKind::Draft, 0, t(10), Duration::from_micros(20));
+        j.record(0, 7, SpanKind::EngineCall, 2, t(31), Duration::from_micros(9));
+        j.record(0, 8, SpanKind::Draft, 0, t(11), Duration::from_micros(20));
+        j.record(43, 8, SpanKind::Admit, 0, t(2), Duration::ZERO);
+        let spans = j.for_request(42);
+        let kinds: Vec<SpanKind> = spans.iter().map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![SpanKind::Admit, SpanKind::BatcherWait, SpanKind::Draft, SpanKind::EngineCall],
+            "sorted by start, bundle-7 spans joined, bundle-8 excluded"
+        );
+        assert_eq!(spans[3].detail, 2, "replica index rides detail");
+        assert!(j.for_request(999).is_empty());
+    }
+
+    #[test]
+    fn event_journal_caps_fifo_and_keeps_gap_free_seq() {
+        let j = EventJournal::new(3);
+        for i in 0..7 {
+            j.record(EventKind::Quarantine, Some(i % 2), format!("e{i}"));
+        }
+        assert_eq!(j.recorded(), 7);
+        let kept = j.snapshot();
+        assert_eq!(kept.len(), 3, "FIFO eviction at cap");
+        let seqs: Vec<u64> = kept.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![4, 5, 6], "oldest evicted, seq gap-free");
+        assert_eq!(kept[0].detail, "e4");
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing_but_still_mints_bundle_ids() {
+        let o = Obs::disabled();
+        o.span(1, 1, SpanKind::Admit, 0, Instant::now(), Duration::ZERO);
+        o.event(EventKind::Reroute, None, "x");
+        assert_eq!(o.spans.retained(), 0);
+        assert_eq!(o.events.recorded(), 0);
+        assert_eq!(o.next_bundle_id(), 1);
+        assert_eq!(o.next_bundle_id(), 2);
+        o.set_enabled(true);
+        o.event(EventKind::Reroute, None, "y");
+        assert_eq!(o.events.recorded(), 1);
+    }
+
+    #[test]
+    fn scope_carries_bundle_and_trail_and_is_noop_outside() {
+        scope::note_replica(5); // no scope open: must not panic, must not leak
+        assert_eq!(scope::bundle_id(), 0);
+        let prev = scope::begin(17);
+        assert_eq!(scope::bundle_id(), 17);
+        scope::note_replica(2);
+        scope::note_replica(2);
+        scope::note_replica(0);
+        scope::note_reroute();
+        let data = scope::end(prev).expect("scope was open");
+        assert_eq!(data.bundle_id, 17);
+        assert_eq!(data.replicas, vec![2, 0], "deduped, dispatch order");
+        assert_eq!(data.reroutes, 1);
+        assert_eq!(scope::bundle_id(), 0, "scope closed");
+    }
+
+    #[test]
+    fn span_kind_and_event_kind_round_trip_u8() {
+        for k in SpanKind::all() {
+            assert_eq!(SpanKind::from_u8(k as u8), Some(k));
+        }
+        assert_eq!(SpanKind::from_u8(200), None);
+        for v in 0..=8u8 {
+            let k = EventKind::from_u8(v).unwrap();
+            assert_eq!(k as u8, v);
+        }
+        assert_eq!(EventKind::from_u8(9), None);
+    }
+}

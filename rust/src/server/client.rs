@@ -14,9 +14,11 @@
 //! concurrent clients with distinct seeds desynchronize instead of
 //! stampeding the admission queue in lockstep.
 
-use crate::coordinator::request::{DraftSpec, GenRequest};
+use crate::coordinator::request::{DraftSpec, GenRequest, GenResponse};
 use crate::core::rng::Pcg64;
 use crate::core::schedule::WarpMode;
+use crate::metrics::MetricsSnapshot;
+use crate::obs::SpanRecord;
 use crate::server::codec::{self, Codec, JsonLines};
 use crate::server::protocol::{WireRequest, WireResponse};
 use crate::util::json::Json;
@@ -224,6 +226,64 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request(&WireRequest::Shutdown)?;
         Ok(())
+    }
+
+    /// Typed live stats (`{"cmd":"stats"}`): the full
+    /// [`MetricsSnapshot`], identical in shape on either codec. The
+    /// `fleet` section is present only when the server was started with
+    /// a fleet attached.
+    pub fn stats(&mut self) -> Result<MetricsSnapshot> {
+        match self.request(&WireRequest::Stats)? {
+            WireResponse::Stats { snapshot } => Ok(snapshot),
+            other => bail!("unexpected stats reply: {other:?}"),
+        }
+    }
+
+    /// Span trace for one wire request id
+    /// (`{"cmd":"trace","request_id":N}`). An unknown id (or tracing
+    /// disabled server-side) surfaces the server's typed error — never a
+    /// hang.
+    pub fn trace(&mut self, request_id: u64) -> Result<Vec<SpanRecord>> {
+        match self.request(&WireRequest::Trace { request_id })? {
+            WireResponse::Trace { spans, .. } => Ok(spans),
+            WireResponse::Error { msg, .. } => bail!("trace failed: {msg}"),
+            other => bail!("unexpected trace reply: {other:?}"),
+        }
+    }
+
+    /// Generate with the opt-in `"timing":true` flag set, returning the
+    /// full typed response (id for a follow-up [`Client::trace`], plus
+    /// the per-segment timing breakdown).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_timed(
+        &mut self,
+        domain: &str,
+        tag: &str,
+        draft: &str,
+        n_samples: usize,
+        t0: f64,
+        steps: usize,
+        seed: u64,
+    ) -> Result<GenResponse> {
+        let mut request = GenRequest::from_wire(
+            domain.to_string(),
+            tag.to_string(),
+            DraftSpec::parse(draft)?,
+            n_samples,
+            t0,
+            steps,
+            WarpMode::Literal,
+            seed,
+        )?;
+        request.timing = true;
+        match self.request(&WireRequest::Generate { request, decode: false })? {
+            WireResponse::Generate { resp, .. } => Ok(resp),
+            WireResponse::Busy { retry_after_ms } => {
+                Err(anyhow::Error::new(Busy { retry_after_ms: retry_after_ms.max(1) }))
+            }
+            WireResponse::Error { msg, .. } => bail!("generate failed: {msg}"),
+            other => bail!("unexpected generate reply: {other:?}"),
+        }
     }
 
     /// Issue a generate command. `seed` survives the wire exactly — even

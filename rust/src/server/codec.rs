@@ -31,8 +31,10 @@
 use crate::server::protocol::{
     parse_request, parse_response, render_request, render_wire_response, WireRequest, WireResponse,
 };
-use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse, TimingInfo};
 use crate::core::schedule::WarpMode;
+use crate::metrics::MetricsSnapshot;
+use crate::obs::{SpanKind, SpanRecord};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Read, Write};
 use std::time::Duration;
@@ -150,6 +152,8 @@ const RQ_INFO: u8 = 3;
 const RQ_SHUTDOWN: u8 = 4;
 const RQ_GENERATE: u8 = 5;
 const RQ_HELLO: u8 = 6;
+const RQ_STATS: u8 = 7;
+const RQ_TRACE: u8 = 8;
 // Response tags.
 const RS_PONG: u8 = 1;
 const RS_METRICS: u8 = 2;
@@ -159,6 +163,12 @@ const RS_GENERATE: u8 = 5;
 const RS_ERROR: u8 = 6;
 const RS_BUSY: u8 = 7;
 const RS_HELLO_ACK: u8 = 8;
+const RS_STATS: u8 = 9;
+const RS_TRACE: u8 = 10;
+
+/// Fixed byte width of one span record in an RS_TRACE payload
+/// (request_id u64 + bundle_id u64 + kind u8 + detail u32 + start/dur u64).
+const SPAN_WIRE_BYTES: usize = 8 + 8 + 1 + 4 + 8 + 8;
 
 /// Length-prefixed binary framing.
 pub struct Binary;
@@ -172,6 +182,11 @@ impl Binary {
             WireRequest::Metrics => p.push(RQ_METRICS),
             WireRequest::Info => p.push(RQ_INFO),
             WireRequest::Shutdown => p.push(RQ_SHUTDOWN),
+            WireRequest::Stats => p.push(RQ_STATS),
+            WireRequest::Trace { request_id } => {
+                p.push(RQ_TRACE);
+                put_u64(&mut p, *request_id);
+            }
             WireRequest::Hello { codecs } => {
                 p.push(RQ_HELLO);
                 put_u32(&mut p, codecs.len() as u32);
@@ -193,6 +208,7 @@ impl Binary {
                 });
                 put_u64(&mut p, r.seed);
                 p.push(*decode as u8);
+                p.push(r.timing as u8);
             }
         }
         p
@@ -211,6 +227,8 @@ impl Binary {
             RQ_METRICS => WireRequest::Metrics,
             RQ_INFO => WireRequest::Info,
             RQ_SHUTDOWN => WireRequest::Shutdown,
+            RQ_STATS => WireRequest::Stats,
+            RQ_TRACE => WireRequest::Trace { request_id: rd.u64()? },
             RQ_HELLO => {
                 let n = rd.count(1)?;
                 let mut codecs = Vec::with_capacity(n);
@@ -233,9 +251,11 @@ impl Binary {
                 };
                 let seed = rd.u64()?;
                 let decode = rd.u8()? != 0;
-                let request = GenRequest::from_wire(
+                let timing = rd.u8()? != 0;
+                let mut request = GenRequest::from_wire(
                     domain, tag_s, draft, n_samples, t0, steps_cold, warp_mode, seed,
                 )?;
+                request.timing = timing;
                 return rd.finish(WireRequest::Generate { request, decode });
             }
             other => bail!("unknown request tag {other}"),
@@ -277,6 +297,28 @@ impl Binary {
                 }
                 put_u64(&mut p, *artifacts as u64);
             }
+            // The snapshot is deeply nested (histograms, per-replica
+            // series); its canonical JSON object rides inside the binary
+            // frame as one string. `to_json`/`from_json` round-trip
+            // exactly (durations as integer ns), so no precision is lost
+            // and the two codecs can never disagree on field semantics.
+            WireResponse::Stats { snapshot } => {
+                p.push(RS_STATS);
+                put_str(&mut p, &snapshot.to_json().to_string());
+            }
+            WireResponse::Trace { request_id, spans } => {
+                p.push(RS_TRACE);
+                put_u64(&mut p, *request_id);
+                put_u32(&mut p, spans.len() as u32);
+                for s in spans {
+                    put_u64(&mut p, s.request_id);
+                    put_u64(&mut p, s.bundle_id);
+                    p.push(s.kind as u8);
+                    put_u32(&mut p, s.detail);
+                    put_u64(&mut p, s.start_us);
+                    put_u64(&mut p, s.dur_us);
+                }
+            }
             WireResponse::Generate { resp, texts } => {
                 p.push(RS_GENERATE);
                 put_u64(&mut p, resp.id);
@@ -303,6 +345,27 @@ impl Binary {
                     Some(reason) => {
                         p.push(1);
                         put_str(&mut p, reason);
+                    }
+                }
+                match &resp.timing {
+                    None => p.push(0),
+                    Some(t) => {
+                        p.push(1);
+                        put_u64(&mut p, t.nfe_floor as u64);
+                        put_u32(&mut p, t.segments.len() as u32);
+                        for &(nfe, us) in &t.segments {
+                            put_u32(&mut p, nfe as u32);
+                            put_u64(&mut p, us);
+                        }
+                        put_u32(&mut p, t.gate_us.len() as u32);
+                        for &us in &t.gate_us {
+                            put_u64(&mut p, us);
+                        }
+                        put_u32(&mut p, t.replicas.len() as u32);
+                        for &r in &t.replicas {
+                            put_u32(&mut p, r);
+                        }
+                        put_u32(&mut p, t.reroutes);
                     }
                 }
                 put_u32(&mut p, resp.samples.len() as u32);
@@ -355,6 +418,33 @@ impl Binary {
                 }
                 WireResponse::Info { domains, artifacts: rd.u64()? as usize }
             }
+            RS_STATS => {
+                let json = rd.str()?;
+                let j = crate::util::json::Json::parse(&json)
+                    .context("corrupt stats json inside binary frame")?;
+                WireResponse::Stats { snapshot: MetricsSnapshot::from_json(&j) }
+            }
+            RS_TRACE => {
+                let request_id = rd.u64()?;
+                let n = rd.count(SPAN_WIRE_BYTES)?;
+                let mut spans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let span_request_id = rd.u64()?;
+                    let bundle_id = rd.u64()?;
+                    let kind_byte = rd.u8()?;
+                    let kind = SpanKind::from_u8(kind_byte)
+                        .with_context(|| format!("unknown span kind byte {kind_byte}"))?;
+                    spans.push(SpanRecord {
+                        request_id: span_request_id,
+                        bundle_id,
+                        kind,
+                        detail: rd.u32()?,
+                        start_us: rd.u64()?,
+                        dur_us: rd.u64()?,
+                    });
+                }
+                WireResponse::Trace { request_id, spans }
+            }
             RS_GENERATE => {
                 let id = rd.u64()?;
                 let nfe = rd.u64()? as usize;
@@ -375,6 +465,28 @@ impl Binary {
                     None
                 };
                 let degraded = if rd.u8()? != 0 { Some(rd.str()?) } else { None };
+                let timing = if rd.u8()? != 0 {
+                    let nfe_floor = rd.u64()? as usize;
+                    let n_segs = rd.count(12)?;
+                    let mut segments = Vec::with_capacity(n_segs);
+                    for _ in 0..n_segs {
+                        let nfe = rd.u32()? as usize;
+                        segments.push((nfe, rd.u64()?));
+                    }
+                    let n_gates = rd.count(8)?;
+                    let mut gate_us = Vec::with_capacity(n_gates);
+                    for _ in 0..n_gates {
+                        gate_us.push(rd.u64()?);
+                    }
+                    let n_reps = rd.count(4)?;
+                    let mut replicas = Vec::with_capacity(n_reps);
+                    for _ in 0..n_reps {
+                        replicas.push(rd.u32()?);
+                    }
+                    Some(TimingInfo { nfe_floor, segments, gate_us, replicas, reroutes: rd.u32()? })
+                } else {
+                    None
+                };
                 let n_rows = rd.count(4)?;
                 let mut samples = Vec::with_capacity(n_rows);
                 for _ in 0..n_rows {
@@ -406,6 +518,7 @@ impl Binary {
                     refine_time,
                     total_time,
                     degraded,
+                    timing,
                 };
                 return rd.finish(WireResponse::Generate { resp, texts });
             }
@@ -572,6 +685,7 @@ mod tests {
             refine_time: Duration::from_micros(52_000),
             total_time: Duration::from_micros(53_100),
             degraded: None,
+            timing: None,
         }
     }
 
@@ -729,6 +843,137 @@ mod tests {
         );
     }
 
+    // -- goldens: the PR-9 observability surface ------------------------
+
+    fn stats_fixture() -> MetricsSnapshot {
+        use crate::metrics::{FleetSnapshot, ServingSnapshot};
+        MetricsSnapshot {
+            serving: ServingSnapshot {
+                completed: 3,
+                samples_per_sec: 12.5,
+                ..ServingSnapshot::default()
+            },
+            fleet: Some(FleetSnapshot {
+                replicas: 2,
+                replica_inflight: vec![0, 1],
+                replica_dispatched: vec![5, 6],
+                fleet_reroutes: 1,
+                ..FleetSnapshot::default()
+            }),
+        }
+    }
+
+    fn trace_fixture() -> WireResponse {
+        WireResponse::Trace {
+            request_id: 9,
+            spans: vec![
+                SpanRecord {
+                    request_id: 9,
+                    bundle_id: 4,
+                    kind: SpanKind::Admit,
+                    detail: 0,
+                    start_us: 10,
+                    dur_us: 3,
+                },
+                SpanRecord {
+                    request_id: 0,
+                    bundle_id: 4,
+                    kind: SpanKind::EngineCall,
+                    detail: 2,
+                    start_us: 40,
+                    dur_us: 1_200,
+                },
+            ],
+        }
+    }
+
+    /// Pin the exact JSON-lines bytes of a stats reply: field order and
+    /// numeric rendering are part of the wire contract now.
+    #[test]
+    fn golden_stats_line() {
+        const ZERO_VAL: &str = r#"{"count":0,"mean":0,"p50":0,"p95":0,"min":0,"max":0}"#;
+        const ZERO_LAT: &str =
+            r#"{"count":0,"mean_ns":0,"p50_ns":0,"p95_ns":0,"p99_ns":0,"max_ns":0}"#;
+        let want = format!(
+            concat!(
+                r#"{{"ok":true,"stats":{{"serving":{{"admitted":0,"rejected":0,"#,
+                r#""completed":3,"batches":0,"denoiser_calls":0,"draft_calls":0,"#,
+                r#""draft_models_resolved":0,"padded_rows":0,"inflight_bundles":0,"#,
+                r#""nfe_saved":0,"cascade_early_exits":0,"early_flushes":0,"#,
+                r#""degraded":0,"batch_occupancy":0,"wire_hellos":0,"#,
+                r#""wire_codec_switches":0,"wire_malformed":0,"samples_total":0,"#,
+                r#""samples_per_sec":12.5,"samples_per_sec_windowed":0,"#,
+                r#""obs_spans_recorded":0,"obs_events_recorded":0,"#,
+                r#""chosen_t0":{v},"rows_per_step":{v},"cascade_stage_nfe":{v},"#,
+                r#""gate_eval":{l},"queue_wait":{l},"draft_queue_wait":{l},"#,
+                r#""flush_lag":{l},"flush_early":{l},"batch_exec":{l},"#,
+                r#""request_latency":{l}}},"#,
+                r#""fleet":{{"replicas":2,"replica_inflight":[0,1],"#,
+                r#""replica_dispatched":[5,6],"replica_unhealthy":0,"#,
+                r#""fleet_reroutes":1,"replica_respawns":0,"respawn_failures":0,"#,
+                r#""engine_timeouts":0,"artifact_swaps":0,"#,
+                r#""artifact_swap_rollbacks":0}}}}}}"#,
+                "\n"
+            ),
+            v = ZERO_VAL,
+            l = ZERO_LAT,
+        );
+        assert_eq!(json_bytes(&WireResponse::Stats { snapshot: stats_fixture() }), want);
+    }
+
+    #[test]
+    fn golden_stats_and_trace_request_lines() {
+        let mut buf = Vec::new();
+        JsonLines.write_request(&mut buf, &WireRequest::Stats).unwrap();
+        assert_eq!(buf, b"{\"cmd\":\"stats\"}\n");
+        let mut buf = Vec::new();
+        JsonLines.write_request(&mut buf, &WireRequest::Trace { request_id: 7 }).unwrap();
+        assert_eq!(buf, b"{\"cmd\":\"trace\",\"request_id\":7}\n");
+    }
+
+    #[test]
+    fn golden_trace_line() {
+        assert_eq!(
+            json_bytes(&trace_fixture()),
+            concat!(
+                r#"{"ok":true,"request_id":9,"spans":["#,
+                r#"{"request_id":9,"bundle_id":4,"kind":"admit","detail":0,"#,
+                r#""start_us":10,"dur_us":3},"#,
+                r#"{"request_id":0,"bundle_id":4,"kind":"engine_call","detail":2,"#,
+                r#""start_us":40,"dur_us":1200}]}"#,
+                "\n"
+            )
+        );
+    }
+
+    /// The opt-in timing breakdown renders only when present — a
+    /// non-opted generate response stays byte-identical to the legacy
+    /// golden above (`golden_generate_ok` pins that side).
+    #[test]
+    fn golden_generate_with_timing() {
+        let resp = GenResponse {
+            timing: Some(TimingInfo {
+                nfe_floor: 205,
+                segments: vec![(150, 41_000), (55, 11_000)],
+                gate_us: vec![12],
+                replicas: vec![0, 2],
+                reroutes: 1,
+            }),
+            ..resp_fixture()
+        };
+        assert_eq!(
+            json_bytes(&WireResponse::Generate { resp, texts: None }),
+            concat!(
+                r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
+                r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
+                r#""timing":{"nfe_floor":205,"segments":[[150,41000],[55,11000]],"#,
+                r#""gate_us":[12],"replicas":[0,2],"reroutes":1},"#,
+                r#""samples":[[1,2],[3,4]]}"#,
+                "\n"
+            )
+        );
+    }
+
     // -- negotiation ----------------------------------------------------
 
     #[test]
@@ -800,6 +1045,30 @@ mod tests {
             resp: GenResponse { samples: vec![], ..resp_fixture() },
             texts: Some(vec![]),
         });
+        // PR-9 observability surface: stats + trace survive the binary
+        // framing exactly, including a timing-bearing generate response.
+        roundtrip_response(&WireResponse::Stats { snapshot: stats_fixture() });
+        roundtrip_response(&WireResponse::Stats { snapshot: MetricsSnapshot::default() });
+        roundtrip_response(&trace_fixture());
+        roundtrip_response(&WireResponse::Trace { request_id: 1, spans: vec![] });
+        roundtrip_response(&WireResponse::Generate {
+            resp: GenResponse {
+                timing: Some(TimingInfo {
+                    nfe_floor: 205,
+                    segments: vec![(150, 41_000), (55, 11_000)],
+                    gate_us: vec![12, 9],
+                    replicas: vec![0, 2],
+                    reroutes: 1,
+                }),
+                ..resp_fixture()
+            },
+            texts: None,
+        });
+        // Empty timing vectors (cascade off, no gates) round-trip too.
+        roundtrip_response(&WireResponse::Generate {
+            resp: GenResponse { timing: Some(TimingInfo::default()), ..resp_fixture() },
+            texts: None,
+        });
     }
 
     #[test]
@@ -811,6 +1080,26 @@ mod tests {
             WireRequest::Shutdown,
             WireRequest::Hello { codecs: vec!["binary".into(), "json".into()] },
             WireRequest::Hello { codecs: vec![] },
+            WireRequest::Stats,
+            WireRequest::Trace { request_id: u64::MAX },
+            WireRequest::Generate {
+                request: {
+                    let mut r = GenRequest::from_wire(
+                        "text8".into(),
+                        "ws_t080".into(),
+                        DraftSpec::Lstm,
+                        1,
+                        0.8,
+                        128,
+                        WarpMode::Literal,
+                        7,
+                    )
+                    .unwrap();
+                    r.timing = true; // opt-in flag survives the frame
+                    r
+                },
+                decode: false,
+            },
             WireRequest::Generate {
                 request: GenRequest::from_wire(
                     "text8".into(),
@@ -864,6 +1153,19 @@ mod tests {
             };
             let degraded =
                 if rng.below(4) == 0 { Some(format!("reason {}", rng.below(100))) } else { None };
+            let timing = if rng.below(3) == 0 {
+                Some(TimingInfo {
+                    nfe_floor: rng.below(500) as usize,
+                    segments: (0..rng.below(4))
+                        .map(|_| (rng.below(500) as usize, rng.next_u32() as u64))
+                        .collect(),
+                    gate_us: (0..rng.below(4)).map(|_| rng.next_u32() as u64).collect(),
+                    replicas: (0..rng.below(3)).map(|_| rng.below(8) as u32).collect(),
+                    reroutes: rng.below(3) as u32,
+                })
+            } else {
+                None
+            };
             let texts = if rng.below(2) == 1 {
                 Some((0..n_rows).map(|i| format!("text {i} é")).collect())
             } else {
@@ -881,6 +1183,7 @@ mod tests {
                     refine_time: Duration::from_micros(rng.next_u32() as u64),
                     total_time: Duration::from_micros(rng.next_u32() as u64),
                     degraded,
+                    timing,
                 },
                 texts,
             }
@@ -971,6 +1274,7 @@ mod tests {
         }
         p.push(0); // no cascade
         p.push(0); // no degraded
+        p.push(0); // no timing
         put_u32(&mut p, 0x8000_0000); // forged row count
         let err = Binary::decode_response(&p).unwrap_err();
         assert!(format!("{err:#}").contains("count"), "{err:#}");
@@ -1000,6 +1304,39 @@ mod tests {
             }
             other => panic!("expected malformed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn forged_span_count_in_trace_frame_is_rejected_before_allocating() {
+        // A trace reply claiming 100M spans with 4 bytes of payload: the
+        // count check (37 bytes per span) rejects it pre-allocation.
+        let mut p = vec![FRAME_VERSION, RS_TRACE];
+        put_u64(&mut p, 9);
+        put_u32(&mut p, 100_000_000);
+        put_u32(&mut p, 0); // a few real bytes, nowhere near 100M spans
+        let err = Binary::decode_response(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("count"), "{err:#}");
+        // And an unknown span-kind byte inside a well-formed frame is a
+        // typed decode error, not a panic.
+        let mut p = vec![FRAME_VERSION, RS_TRACE];
+        put_u64(&mut p, 9);
+        put_u32(&mut p, 1);
+        put_u64(&mut p, 9); // span request_id
+        put_u64(&mut p, 4); // bundle_id
+        p.push(200); // not a SpanKind
+        put_u32(&mut p, 0);
+        put_u64(&mut p, 0);
+        put_u64(&mut p, 0);
+        let err = Binary::decode_response(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("span kind"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_stats_json_inside_binary_frame_is_rejected() {
+        let mut p = vec![FRAME_VERSION, RS_STATS];
+        put_str(&mut p, r#"{"serving":{"admitted":"#); // cut mid-object
+        let err = Binary::decode_response(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("stats json"), "{err:#}");
     }
 
     #[test]

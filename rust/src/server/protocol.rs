@@ -13,7 +13,14 @@
 //!  "decode":true}
 //! ```
 //! Other commands: `{"cmd":"metrics"}`, `{"cmd":"info"}`, `{"cmd":"ping"}`,
+//! the observability surface `{"cmd":"stats"}` (typed metrics snapshot) and
+//! `{"cmd":"trace","request_id":7}` (span journal lookup),
 //! and the codec hello `{"cmd":"hello","codecs":["binary","json"]}`.
+//!
+//! A generate request may opt into a per-response timing breakdown with
+//! `"timing":true`; the response then carries a `"timing"` object. Both
+//! the flag and the object are **absent** from the wire unless requested,
+//! so the legacy byte-pinned encodings are unchanged.
 //!
 //! Response (generate):
 //! ```json
@@ -23,8 +30,10 @@
 //! ```
 //! Errors: `{"ok":false,"error":"...","busy":true?}`.
 
-use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse};
+use crate::coordinator::request::{CascadeInfo, DraftSpec, GenRequest, GenResponse, TimingInfo};
 use crate::core::schedule::WarpMode;
+use crate::metrics::MetricsSnapshot;
+use crate::obs::{SpanKind, SpanRecord};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
@@ -37,6 +46,12 @@ pub enum WireRequest {
     Info,
     Ping,
     Shutdown,
+    /// Typed metrics snapshot (serving + optional fleet) — the PR-9
+    /// observability surface, machine-readable on both codecs.
+    Stats,
+    /// Span-journal lookup for one wire request id. Unknown ids get a
+    /// typed error reply, never a hang.
+    Trace { request_id: u64 },
     /// Codec negotiation: client's supported codec names in preference
     /// order. Absent hello ⇒ the connection stays on the server's
     /// default codec (legacy JSON), so old clients work unchanged.
@@ -55,6 +70,12 @@ pub enum WireResponse {
     Pong,
     Metrics { report: String, samples_per_sec: f64, completed: u64, rejected: u64 },
     Info { domains: Vec<String>, artifacts: usize },
+    /// Typed metrics snapshot: the structured counterpart of the legacy
+    /// string-valued `Metrics` reply.
+    Stats { snapshot: MetricsSnapshot },
+    /// Every retained span for one request, joined across its bundle and
+    /// sorted by start time.
+    Trace { request_id: u64, spans: Vec<SpanRecord> },
     ShutdownAck,
     /// Negotiation accept: the codec every subsequent message uses.
     HelloAck { codec: String },
@@ -69,6 +90,11 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         "metrics" => Ok(WireRequest::Metrics),
         "info" => Ok(WireRequest::Info),
         "shutdown" => Ok(WireRequest::Shutdown),
+        "stats" => Ok(WireRequest::Stats),
+        "trace" => {
+            let request_id = j.get("request_id").as_u64().context("trace missing request_id")?;
+            Ok(WireRequest::Trace { request_id })
+        }
         "hello" => {
             let codecs = j
                 .get("codecs")
@@ -91,8 +117,11 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
             // through f64 (`as_f64() as u64` silently corrupted them).
             let seed = j.get("seed").as_u64().unwrap_or(0);
             let decode = j.get("decode").as_bool().unwrap_or(false);
-            let request =
+            let mut request =
                 GenRequest::from_wire(domain, tag, draft, n_samples, t0, steps_cold, warp_mode, seed)?;
+            // Opt-in timing breakdown; absent ⇒ false, keeping legacy
+            // request lines parsing (and rendering) unchanged.
+            request.timing = j.get("timing").as_bool().unwrap_or(false);
             Ok(WireRequest::Generate { request, decode })
         }
         other => bail!("unknown cmd {other:?}"),
@@ -106,24 +135,37 @@ pub fn render_request(req: &WireRequest) -> String {
         WireRequest::Metrics => r#"{"cmd":"metrics"}"#.to_string(),
         WireRequest::Info => r#"{"cmd":"info"}"#.to_string(),
         WireRequest::Shutdown => r#"{"cmd":"shutdown"}"#.to_string(),
+        WireRequest::Stats => r#"{"cmd":"stats"}"#.to_string(),
+        WireRequest::Trace { request_id } => Json::obj(vec![
+            ("cmd", Json::str("trace")),
+            ("request_id", Json::u64(*request_id)),
+        ])
+        .to_string(),
         WireRequest::Hello { codecs } => Json::obj(vec![
             ("cmd", Json::str("hello")),
             ("codecs", Json::arr(codecs.iter().map(|c| Json::str(c.clone())))),
         ])
         .to_string(),
-        WireRequest::Generate { request: r, decode } => Json::obj(vec![
-            ("cmd", Json::str("generate")),
-            ("domain", Json::str(r.domain.clone())),
-            ("tag", Json::str(r.tag.clone())),
-            ("draft", Json::str(r.draft.name())),
-            ("n_samples", Json::u64(r.n_samples as u64)),
-            ("t0", Json::num(r.t0)),
-            ("steps", Json::u64(r.steps_cold as u64)),
-            ("warp", Json::str(r.warp_mode.name())),
-            ("seed", Json::u64(r.seed)),
-            ("decode", Json::Bool(*decode)),
-        ])
-        .to_string(),
+        WireRequest::Generate { request: r, decode } => {
+            let mut fields = vec![
+                ("cmd", Json::str("generate")),
+                ("domain", Json::str(r.domain.clone())),
+                ("tag", Json::str(r.tag.clone())),
+                ("draft", Json::str(r.draft.name())),
+                ("n_samples", Json::u64(r.n_samples as u64)),
+                ("t0", Json::num(r.t0)),
+                ("steps", Json::u64(r.steps_cold as u64)),
+                ("warp", Json::str(r.warp_mode.name())),
+                ("seed", Json::u64(r.seed)),
+                ("decode", Json::Bool(*decode)),
+            ];
+            // Only emitted when set: a non-timing request line stays
+            // byte-identical to the pre-PR-9 encoding.
+            if r.timing {
+                fields.push(("timing", Json::Bool(true)));
+            }
+            Json::obj(fields).to_string()
+        }
     }
 }
 
@@ -160,6 +202,11 @@ pub fn render_response(resp: &GenResponse, texts: Option<&[String]>) -> String {
         fields.push(("degraded", Json::Bool(true)));
         fields.push(("degraded_reason", Json::str(reason)));
     }
+    // Present only on `"timing":true` requests — requests that don't opt
+    // in keep the exact legacy byte layout (pinned below and in codec).
+    if let Some(t) = &resp.timing {
+        fields.push(("timing", timing_to_json(t)));
+    }
     fields.push((
         "samples",
         Json::arr(
@@ -170,6 +217,80 @@ pub fn render_response(resp: &GenResponse, texts: Option<&[String]>) -> String {
         fields.push(("texts", Json::arr(ts.iter().map(|t| Json::str(t.clone())))));
     }
     Json::obj(fields).to_string()
+}
+
+/// JSON encoding of the opt-in per-response timing breakdown.
+fn timing_to_json(t: &TimingInfo) -> Json {
+    Json::obj(vec![
+        ("nfe_floor", Json::u64(t.nfe_floor as u64)),
+        (
+            "segments",
+            Json::arr(
+                t.segments
+                    .iter()
+                    .map(|&(nfe, us)| Json::arr(vec![Json::u64(nfe as u64), Json::u64(us)])),
+            ),
+        ),
+        ("gate_us", Json::arr(t.gate_us.iter().map(|&us| Json::u64(us)))),
+        ("replicas", Json::arr(t.replicas.iter().map(|&r| Json::u64(r as u64)))),
+        ("reroutes", Json::u64(t.reroutes as u64)),
+    ])
+}
+
+fn timing_from_json(j: &Json) -> TimingInfo {
+    TimingInfo {
+        nfe_floor: j.get("nfe_floor").as_usize().unwrap_or(0),
+        segments: j
+            .get("segments")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().unwrap_or(&[]);
+                (
+                    p.first().and_then(Json::as_usize).unwrap_or(0),
+                    p.get(1).and_then(Json::as_u64).unwrap_or(0),
+                )
+            })
+            .collect(),
+        gate_us: j.get("gate_us").as_arr().unwrap_or(&[]).iter().filter_map(Json::as_u64).collect(),
+        replicas: j
+            .get("replicas")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|r| r.as_u64().map(|v| v as u32))
+            .collect(),
+        reroutes: j.get("reroutes").as_u64().unwrap_or(0) as u32,
+    }
+}
+
+/// JSON encoding of one trace span (kind as its human-readable name).
+fn span_to_json(s: &SpanRecord) -> Json {
+    Json::obj(vec![
+        ("request_id", Json::u64(s.request_id)),
+        ("bundle_id", Json::u64(s.bundle_id)),
+        ("kind", Json::str(s.kind.name())),
+        ("detail", Json::u64(s.detail as u64)),
+        ("start_us", Json::u64(s.start_us)),
+        ("dur_us", Json::u64(s.dur_us)),
+    ])
+}
+
+fn span_from_json(j: &Json) -> Result<SpanRecord> {
+    let name = j.get("kind").as_str().context("span missing kind")?;
+    let kind = (0..SpanKind::COUNT as u8)
+        .filter_map(SpanKind::from_u8)
+        .find(|k| k.name() == name)
+        .with_context(|| format!("unknown span kind {name:?}"))?;
+    Ok(SpanRecord {
+        request_id: j.get("request_id").as_u64().unwrap_or(0),
+        bundle_id: j.get("bundle_id").as_u64().unwrap_or(0),
+        kind,
+        detail: j.get("detail").as_u64().unwrap_or(0) as u32,
+        start_us: j.get("start_us").as_u64().unwrap_or(0),
+        dur_us: j.get("dur_us").as_u64().unwrap_or(0),
+    })
 }
 
 /// Render an error (busy = backpressure).
@@ -222,6 +343,15 @@ pub fn render_wire_response(resp: &WireResponse) -> String {
             ("artifacts", Json::u64(*artifacts as u64)),
         ])
         .to_string(),
+        WireResponse::Stats { snapshot } => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("stats", snapshot.to_json())]).to_string()
+        }
+        WireResponse::Trace { request_id, spans } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("request_id", Json::u64(*request_id)),
+            ("spans", Json::arr(spans.iter().map(span_to_json))),
+        ])
+        .to_string(),
         WireResponse::ShutdownAck => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
         WireResponse::HelloAck { codec } => {
             Json::obj(vec![("ok", Json::Bool(true)), ("codec", Json::str(codec.clone()))])
@@ -258,6 +388,22 @@ pub fn parse_response(line: &str) -> Result<WireResponse> {
             samples_per_sec: j.get("samples_per_sec").as_f64().unwrap_or(0.0),
             completed: j.get("completed").as_u64().unwrap_or(0),
             rejected: j.get("rejected").as_u64().unwrap_or(0),
+        });
+    }
+    if !j.get("stats").is_null() {
+        return Ok(WireResponse::Stats { snapshot: MetricsSnapshot::from_json(j.get("stats")) });
+    }
+    if !j.get("spans").is_null() {
+        let spans = j
+            .get("spans")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(span_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(WireResponse::Trace {
+            request_id: j.get("request_id").as_u64().context("trace reply missing request_id")?,
+            spans,
         });
     }
     if !j.get("domains").is_null() {
@@ -321,6 +467,11 @@ pub fn parse_response(line: &str) -> Result<WireResponse> {
             refine_time: Duration::from_micros(j.get("refine_us").as_u64().unwrap_or(0)),
             total_time: Duration::from_micros(j.get("total_us").as_u64().unwrap_or(0)),
             degraded: j.get("degraded_reason").as_str().map(str::to_string),
+            timing: if j.get("timing").is_null() {
+                None
+            } else {
+                Some(timing_from_json(j.get("timing")))
+            },
         };
         return Ok(WireResponse::Generate { resp, texts });
     }
@@ -438,6 +589,7 @@ mod tests {
             refine_time: Duration::from_micros(52_000),
             total_time: Duration::from_micros(53_100),
             degraded: None,
+            timing: None,
         }
     }
 
@@ -461,6 +613,7 @@ mod tests {
         assert!(!line.contains("nfe_stages"), "{line}");
         assert!(!line.contains("early_exit"), "{line}");
         assert!(!line.contains("degraded"), "{line}");
+        assert!(!line.contains("timing"), "non-opted response must omit timing: {line}");
         let expected = concat!(
             r#"{"ok":true,"id":3,"nfe":205,"t0_used":0.8,"queue_us":120,"#,
             r#""draft_us":900,"refine_us":52000,"total_us":53100,"#,
@@ -557,11 +710,134 @@ mod tests {
                 },
                 texts: Some(vec!["ab".into()]),
             },
+            WireResponse::Generate {
+                resp: GenResponse { timing: Some(timing_fixture()), ..resp_without_cascade() },
+                texts: None,
+            },
+            WireResponse::Stats { snapshot: MetricsSnapshot::default() },
+            WireResponse::Trace { request_id: 7, spans: vec![] },
+            WireResponse::Trace { request_id: 9, spans: span_fixtures() },
         ];
         for want in cases {
             let line = render_wire_response(&want);
             let got = parse_response(&line).unwrap();
             assert_eq!(got, want, "parse(render(x)) != x for {line}");
         }
+    }
+
+    fn timing_fixture() -> TimingInfo {
+        TimingInfo {
+            nfe_floor: 55,
+            segments: vec![(150, 41_000), (55, 11_000)],
+            gate_us: vec![12, 9],
+            replicas: vec![0, 2],
+            reroutes: 1,
+        }
+    }
+
+    fn span_fixtures() -> Vec<SpanRecord> {
+        vec![
+            SpanRecord {
+                request_id: 9,
+                bundle_id: 4,
+                kind: SpanKind::Admit,
+                detail: 0,
+                start_us: 10,
+                dur_us: 3,
+            },
+            SpanRecord {
+                request_id: 0,
+                bundle_id: 4,
+                kind: SpanKind::EngineCall,
+                detail: 2,
+                start_us: 40,
+                dur_us: 1_200,
+            },
+        ]
+    }
+
+    #[test]
+    fn parse_stats_and_trace_requests() {
+        assert!(matches!(parse_request(r#"{"cmd":"stats"}"#).unwrap(), WireRequest::Stats));
+        match parse_request(r#"{"cmd":"trace","request_id":12}"#).unwrap() {
+            WireRequest::Trace { request_id } => assert_eq!(request_id, 12),
+            other => panic!("wrong parse: {other:?}"),
+        }
+        // A trace probe without a request id is a typed parse error, not
+        // a silently-defaulted lookup of request 0.
+        let err = parse_request(r#"{"cmd":"trace"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("request_id"), "{err:#}");
+        // Round-trip through the client-side renderers.
+        assert_eq!(render_request(&WireRequest::Stats), r#"{"cmd":"stats"}"#);
+        let line = render_request(&WireRequest::Trace { request_id: 12 });
+        assert_eq!(line, r#"{"cmd":"trace","request_id":12}"#);
+        assert_eq!(parse_request(&line).unwrap(), WireRequest::Trace { request_id: 12 });
+    }
+
+    #[test]
+    fn timing_flag_is_opt_in_on_the_request_line() {
+        let req = GenRequest::from_wire(
+            "text8".into(),
+            "ws_t080".into(),
+            DraftSpec::Lstm,
+            1,
+            0.8,
+            128,
+            WarpMode::Literal,
+            7,
+        )
+        .unwrap();
+        // Off (the default): the rendered line carries no timing key —
+        // byte-compatible with every pre-PR-9 client and server.
+        let line =
+            render_request(&WireRequest::Generate { request: req.clone(), decode: false });
+        assert!(!line.contains("timing"), "{line}");
+        // On: the flag renders and parses back.
+        let mut on = req;
+        on.timing = true;
+        let line = render_request(&WireRequest::Generate { request: on, decode: false });
+        assert!(line.contains(r#""timing":true"#), "{line}");
+        match parse_request(&line).unwrap() {
+            WireRequest::Generate { request, .. } => assert!(request.timing),
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn timing_breakdown_renders_and_parses_exactly() {
+        let resp =
+            GenResponse { timing: Some(timing_fixture()), ..resp_without_cascade() };
+        let line = render_response(&resp, None);
+        let j = Json::parse(&line).unwrap();
+        let t = j.get("timing");
+        assert_eq!(t.get("nfe_floor").as_usize(), Some(55));
+        let segs = t.get("segments").as_arr().unwrap();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].as_arr().unwrap()[0].as_usize(), Some(150));
+        assert_eq!(segs[0].as_arr().unwrap()[1].as_u64(), Some(41_000));
+        assert_eq!(t.get("reroutes").as_u64(), Some(1));
+        match parse_response(&line).unwrap() {
+            WireResponse::Generate { resp: got, .. } => {
+                assert_eq!(got.timing, Some(timing_fixture()))
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_reply_carries_named_span_kinds() {
+        let line = render_wire_response(&WireResponse::Trace {
+            request_id: 9,
+            spans: span_fixtures(),
+        });
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("request_id").as_u64(), Some(9));
+        let spans = j.get("spans").as_arr().unwrap();
+        assert_eq!(spans[0].get("kind").as_str(), Some("admit"));
+        assert_eq!(spans[1].get("kind").as_str(), Some("engine_call"));
+        assert_eq!(spans[1].get("detail").as_u64(), Some(2));
+        // An unknown kind name is a typed parse error on the client.
+        let bad = line.replace("engine_call", "warp_core");
+        assert!(parse_response(&bad).is_err());
     }
 }

@@ -8,6 +8,9 @@ use crate::config::WireConfig;
 use crate::coordinator::request::GenResponse;
 use crate::coordinator::Service;
 use crate::data::tokenizer::{CharTokenizer, WordTokenizer};
+use crate::fleet::FleetHandle;
+use crate::metrics::MetricsSnapshot;
+use crate::obs::EventKind;
 use crate::runtime::Manifest;
 use crate::server::codec::{self, Decoded};
 use crate::server::protocol::{WireRequest, WireResponse};
@@ -27,6 +30,11 @@ pub struct TcpServer {
     pub local_addr: std::net::SocketAddr,
     listener: TcpListener,
     wire: WireConfig,
+    /// Fleet handle for the stats surface (`{"cmd":"stats"}` includes a
+    /// fleet section only when one is attached via [`with_fleet`]).
+    ///
+    /// [`with_fleet`]: TcpServer::with_fleet
+    fleet: Option<FleetHandle>,
 }
 
 impl TcpServer {
@@ -60,7 +68,16 @@ impl TcpServer {
             local_addr,
             listener,
             wire,
+            fleet: None,
         })
+    }
+
+    /// Expose a fleet's metrics on the stats surface. The serving CLI
+    /// attaches the same fleet it hands the coordinator, so one stats
+    /// reply carries both the serving and per-replica views.
+    pub fn with_fleet(mut self, fleet: FleetHandle) -> Self {
+        self.fleet = Some(fleet);
+        self
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
@@ -81,8 +98,10 @@ impl TcpServer {
                     let word_tok = self.word_tok.clone();
                     let stop = self.stop.clone();
                     let wire = self.wire.clone();
+                    let fleet = self.fleet.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, service, manifest, word_tok, stop, wire)
+                        if let Err(e) =
+                            handle_conn(stream, service, manifest, word_tok, stop, wire, fleet)
                         {
                             crate::debug!("connection ended: {e:#}");
                         }
@@ -120,6 +139,7 @@ fn handle_conn(
     word_tok: Option<Arc<WordTokenizer>>,
     stop: Arc<AtomicBool>,
     wire: WireConfig,
+    fleet: Option<FleetHandle>,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -151,6 +171,27 @@ fn handle_conn(
                 domains: manifest.domain_names(),
                 artifacts: manifest.artifacts.len(),
             },
+            Decoded::Request(WireRequest::Stats) => WireResponse::Stats {
+                snapshot: MetricsSnapshot {
+                    serving: service.metrics.snapshot(),
+                    fleet: fleet.as_ref().map(|f| f.metrics().snapshot()),
+                },
+            },
+            Decoded::Request(WireRequest::Trace { request_id }) => {
+                let spans = service.metrics.obs.spans.for_request(request_id);
+                if spans.is_empty() {
+                    // Typed error, never a hang: unknown id, tracing
+                    // disabled, or the spans aged out of the ring.
+                    WireResponse::Error {
+                        msg: format!(
+                            "no trace for request_id {request_id} (unknown id, tracing disabled, or spans evicted)"
+                        ),
+                        busy: false,
+                    }
+                } else {
+                    WireResponse::Trace { request_id, spans }
+                }
+            }
             Decoded::Request(WireRequest::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 WireResponse::ShutdownAck
@@ -167,6 +208,11 @@ fn handle_conn(
                         )?;
                         if name != active.name() {
                             service.metrics.wire_codec_switches.inc();
+                            service.metrics.obs.event(
+                                EventKind::CodecSwitch,
+                                None,
+                                format!("connection re-framed {} -> {name}", active.name()),
+                            );
                             active = codec::make(name)
                                 .with_context(|| format!("negotiated codec {name:?}"))?;
                         }
@@ -352,8 +398,58 @@ mod tests {
         assert_eq!(reply.samples.len(), 1);
         let m = c.metrics().unwrap();
         assert!(m.get("completed").as_u64().unwrap_or(0) >= 1, "{m}");
+        // PR-9: the typed stats surface rides the same matrix — both
+        // codecs must agree with the legacy metrics counter.
+        let snap = c.stats().unwrap();
+        assert!(snap.serving.completed >= 1, "{:?}", snap.serving);
+        assert_eq!(snap.serving.completed, m.get("completed").as_u64().unwrap());
         stop.store(true, Ordering::SeqCst);
         drop(c);
+        let _ = TcpStream::connect(&addr);
+        let _ = thread.join().unwrap();
+        service.shutdown();
+    }
+
+    /// Tentpole: the live stats + trace surface end to end on BOTH
+    /// codecs. A traced generate carries its timing breakdown, its spans
+    /// are retrievable by request id, and an unknown id gets a typed
+    /// error instead of a hang — on the legacy JSON wire and again after
+    /// negotiating binary frames.
+    #[test]
+    fn stats_and_trace_serve_on_both_codecs() {
+        let (addr, stop, thread, service) = start_server();
+        for codec in ["json", "binary"] {
+            let mut c = Client::connect(&addr).unwrap();
+            if codec == "binary" {
+                assert_eq!(c.negotiate(&["binary"]).unwrap(), "binary");
+            }
+            let resp = c.generate_timed("mock", "cold", "noise", 1, 0.5, 10, 7).unwrap();
+            let t = resp.timing.as_ref().unwrap_or_else(|| panic!("[{codec}] timing absent"));
+            assert!(t.nfe_floor >= resp.nfe, "[{codec}] floor {} < nfe {}", t.nfe_floor, resp.nfe);
+            assert!(!t.segments.is_empty(), "[{codec}] no segments");
+            // Typed stats: the serving section counts this request; no
+            // fleet was attached, so that section is absent.
+            let snap = c.stats().unwrap();
+            assert!(snap.serving.completed >= 1, "[{codec}] {:?}", snap.serving);
+            assert!(snap.serving.obs_spans_recorded >= 1, "[{codec}] no spans recorded");
+            assert!(snap.fleet.is_none(), "[{codec}] fleet section without a fleet");
+            // Trace by the id the generate reply carried.
+            let spans = c.trace(resp.id).unwrap();
+            assert!(!spans.is_empty(), "[{codec}] empty trace for id {}", resp.id);
+            assert!(
+                spans.iter().any(|s| s.kind == crate::obs::SpanKind::Admit),
+                "[{codec}] trace missing the admission span: {spans:?}"
+            );
+            assert!(
+                spans.windows(2).all(|w| w[0].start_us <= w[1].start_us),
+                "[{codec}] spans not time-ordered"
+            );
+            // Unknown id: typed error, connection keeps serving.
+            let err = c.trace(u64::MAX).unwrap_err();
+            assert!(format!("{err:#}").contains("no trace"), "[{codec}] {err:#}");
+            assert!(c.ping().unwrap(), "[{codec}] connection died after trace error");
+        }
+        stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(&addr);
         let _ = thread.join().unwrap();
         service.shutdown();

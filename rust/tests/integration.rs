@@ -43,6 +43,7 @@ fn request(domain: &str, tag: &str, draft: DraftSpec, n: usize, t0: f64, steps: 
         steps_cold: steps,
         warp_mode: WarpMode::Literal,
         seed: 7,
+        timing: false,
         submitted: Instant::now(),
     }
 }
