@@ -676,6 +676,32 @@ fn bench_obs_overhead(results: &mut Vec<(String, f64)>) {
     }
 }
 
+/// Serve the same bundle load with the decision ledger disabled vs
+/// enabled (the default), tracing held at its default in both rows so
+/// the gap isolates the ledger tax: one `DecisionRecord` build + audit +
+/// drift-window fold + ring push per bundle, off the token path. The
+/// ISSUE's acceptance bar is the same as tracing — within a few percent.
+fn bench_ledger_overhead(results: &mut Vec<(String, f64)>) {
+    let (batch, seq_len, vocab) = SERVE_BENCH_SHAPE;
+    for (label, enabled) in [("serve bundle ledger off", false), ("serve bundle ledger on", true)]
+    {
+        let exec = StageCostExec {
+            batch,
+            seq_len,
+            vocab,
+            draft_cost: Duration::from_micros(50),
+            refine_cost: Duration::from_micros(200),
+        };
+        let mut cfg = WsfmConfig::default();
+        cfg.pipeline_depth = 2;
+        cfg.draft_workers = 1;
+        cfg.obs.ledger.enabled = enabled;
+        let ns = run_serve_bench(exec, cfg, 32);
+        println!("{label:<38} {:>10.0} ns/bundle", ns);
+        results.push((label.to_string(), ns));
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Watchdog overhead on the engine-call reply path
 // ---------------------------------------------------------------------------
@@ -839,6 +865,9 @@ fn main() {
 
     println!("\n== observability: tracing off vs on ==");
     bench_obs_overhead(&mut results);
+
+    println!("\n== decision ledger: off vs on ==");
+    bench_ledger_overhead(&mut results);
 
     println!("\n== watchdog: bare vs guarded engine-call reply wait ==");
     bench_watchdog_overhead(&mut results);

@@ -122,6 +122,12 @@ impl Cascade {
         self.mode == CascadeMode::Off
     }
 
+    /// The configured boundary ladder (ascending, deduped) — recorded
+    /// per bundle by the decision ledger.
+    pub fn ladder(&self) -> &[f64] {
+        &self.ladder
+    }
+
     /// The gate threshold [`executor::run_segments`] should apply —
     /// `None` outside `gated` mode (no scoring work is done at all).
     pub fn gate_threshold(&self) -> Option<f64> {

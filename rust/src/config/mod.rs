@@ -60,11 +60,41 @@ pub struct ObsConfig {
     /// Event-journal capacity (FIFO eviction; sequence numbers stay
     /// gap-free so consumers can detect eviction).
     pub event_cap: usize,
+    /// Decision ledger + guarantee auditor ([`crate::obs::ledger`]).
+    pub ledger: LedgerConfig,
 }
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        ObsConfig { enabled: true, span_cap: 4096, event_cap: 1024 }
+        ObsConfig { enabled: true, span_cap: 4096, event_cap: 1024, ledger: LedgerConfig::default() }
+    }
+}
+
+/// Decision-ledger tuning (`obs.ledger` subsystem).
+///
+/// Every refined (or degraded) bundle appends one
+/// [`crate::obs::ledger::DecisionRecord`] — what the controller/cascade
+/// decided and what it cost — audited on append against the NFE
+/// guarantee. Independent of `obs.enabled` (spans/events), so the
+/// guarantee auditor can stay live with tracing off. Purely
+/// observational: toggling never changes an output byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LedgerConfig {
+    /// Record decisions at all (default on; the ring is bounded and an
+    /// append is one audit + one lock-cheap push).
+    pub enabled: bool,
+    /// In-memory ring capacity (oldest records FIFO-evicted; the sink,
+    /// when configured, still has them).
+    pub cap: usize,
+    /// Append-only JSONL sink path ("" = in-memory only). One record
+    /// per line, flushed per append, so a crash mid-write loses at most
+    /// the final line — `wsfm audit`/`wsfm replay` consume this file.
+    pub path: String,
+}
+
+impl Default for LedgerConfig {
+    fn default() -> Self {
+        LedgerConfig { enabled: true, cap: 1024, path: String::new() }
     }
 }
 
@@ -436,6 +466,16 @@ impl WsfmConfig {
         if let Some(n) = o.get("event_cap").as_usize() {
             c.obs.event_cap = n;
         }
+        let l = o.get("ledger");
+        if let Some(b) = l.get("enabled").as_bool() {
+            c.obs.ledger.enabled = b;
+        }
+        if let Some(n) = l.get("cap").as_usize() {
+            c.obs.ledger.cap = n;
+        }
+        if let Some(p) = l.get("path").as_str() {
+            c.obs.ledger.path = p.to_string();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -516,6 +556,14 @@ impl WsfmConfig {
                     ("enabled", Json::Bool(self.obs.enabled)),
                     ("span_cap", Json::num(self.obs.span_cap as f64)),
                     ("event_cap", Json::num(self.obs.event_cap as f64)),
+                    (
+                        "ledger",
+                        Json::obj(vec![
+                            ("enabled", Json::Bool(self.obs.ledger.enabled)),
+                            ("cap", Json::num(self.obs.ledger.cap as f64)),
+                            ("path", Json::str(self.obs.ledger.path.clone())),
+                        ]),
+                    ),
                 ]),
             ),
             (
@@ -646,6 +694,9 @@ impl WsfmConfig {
         if self.obs.event_cap == 0 {
             bail!("obs.event_cap must be positive");
         }
+        if self.obs.ledger.cap == 0 {
+            bail!("obs.ledger.cap must be positive");
+        }
         Ok(())
     }
 }
@@ -773,17 +824,32 @@ mod tests {
 
     #[test]
     fn obs_section_layering() {
-        let j = Json::parse(r#"{"obs":{"enabled":false,"span_cap":64,"event_cap":16}}"#).unwrap();
+        let j = Json::parse(
+            r#"{"obs":{"enabled":false,"span_cap":64,"event_cap":16,"ledger":{"enabled":false,"cap":32,"path":"/tmp/wsfm.ledger"}}}"#,
+        )
+        .unwrap();
         let c = WsfmConfig::from_json(&j).unwrap();
         assert!(!c.obs.enabled);
         assert_eq!(c.obs.span_cap, 64);
         assert_eq!(c.obs.event_cap, 16);
-        // Untouched -> defaults: journals on, bounded caps.
+        assert!(!c.obs.ledger.enabled);
+        assert_eq!(c.obs.ledger.cap, 32);
+        assert_eq!(c.obs.ledger.path, "/tmp/wsfm.ledger");
+        // Untouched -> defaults: journals on, bounded caps, ledger on
+        // in-memory (no sink).
         let d = WsfmConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(d.obs, ObsConfig::default());
         assert!(d.obs.enabled);
         assert_eq!(d.obs.span_cap, 4096);
         assert_eq!(d.obs.event_cap, 1024);
+        assert!(d.obs.ledger.enabled);
+        assert_eq!(d.obs.ledger.cap, 1024);
+        assert!(d.obs.ledger.path.is_empty());
+        // Ledger fields layer independently of the obs gate.
+        let e = Json::parse(r#"{"obs":{"ledger":{"cap":8}}}"#).unwrap();
+        let c = WsfmConfig::from_json(&e).unwrap();
+        assert!(c.obs.enabled && c.obs.ledger.enabled);
+        assert_eq!(c.obs.ledger.cap, 8);
     }
 
     #[test]
@@ -825,6 +891,7 @@ mod tests {
             r#"{"robustness":{"max_respawns":0}}"#,
             r#"{"obs":{"span_cap":0}}"#,
             r#"{"obs":{"event_cap":0}}"#,
+            r#"{"obs":{"ledger":{"cap":0}}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(WsfmConfig::from_json(&j).is_err(), "should reject {bad}");

@@ -149,6 +149,12 @@ impl Controller {
         self.t0_max
     }
 
+    /// The discrete t0 grid decisions are chosen from (ascending,
+    /// deduped, clamped) — recorded per bundle by the decision ledger.
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
     /// Whether [`Controller::decide`] wants a [`proxy_score`] of the
     /// drafted batch (only the `scored` mode pays for scoring).
     pub fn needs_score(&self) -> bool {

@@ -506,7 +506,17 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
         refine_time: Duration,
     ) -> Result<Vec<GenResponse>> {
         let m = self.sched.metrics;
-        let DraftedBundle { bundle, chunks, decision, draft_time, started, .. } = drafted;
+        let DraftedBundle { bundle, bundle_seed, chunks, decision, draft_time, started, .. } =
+            drafted;
+        // The composed path appends its own ledger record (the
+        // per-bundle path's record rides `refine_bundle`, which composed
+        // bundles never reach except on fail-over). Replica trails stay
+        // empty for the same reason as TimingInfo below.
+        let mut record = m
+            .obs
+            .ledger
+            .enabled()
+            .then(|| self.sched.decision_record_base(&bundle, bundle_seed, &decision));
         let key = &bundle.key;
         let n_total = bundle.total_samples();
         let t0 = decision.t0;
@@ -551,8 +561,18 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
                     info.nfe_per_stage = dc.stages.iter().map(|s| s.nfe).collect();
                     seg_timing =
                         dc.stages.iter().map(|s| (s.nfe, s.elapsed.as_micros() as u64)).collect();
+                    if let Some(rec) = record.as_mut() {
+                        rec.gate_scores = dc.stages.iter().filter_map(|s| s.score).collect();
+                    }
                 }
                 info.early_exit |= dc.early_exit;
+                if dc.early_exit {
+                    if let Some(rec) = record.as_mut() {
+                        if rec.exit_score.is_none() {
+                            rec.exit_score = dc.stages.last().and_then(|s| s.score);
+                        }
+                    }
+                }
             }
             for r in 0..chunk.chunk_len {
                 rows.push(dc.tokens[r * chunk.meta.seq_len..(r + 1) * chunk.meta.seq_len].to_vec());
@@ -575,13 +595,23 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
             reroutes: 0,
         });
 
+        if let Some(rec) = record.as_mut() {
+            rec.nfe = nfe;
+            if let Some(info) = &cascade_info {
+                rec.nfe_per_stage = info.nfe_per_stage.clone();
+                rec.early_exit = info.early_exit;
+            }
+        }
         let total_time = started.elapsed();
         let now = Instant::now();
         let mut responses = Vec::with_capacity(bundle.requests.len());
         let mut cursor = 0;
-        for req in &bundle.requests {
+        for (ri, req) in bundle.requests.iter().enumerate() {
             let samples = rows[cursor..cursor + req.n_samples].to_vec();
             cursor += req.n_samples;
+            if let Some(rec) = record.as_mut() {
+                rec.requests[ri].out_hash = crate::obs::ledger::hash_samples(&samples);
+            }
             responses.push(GenResponse {
                 id: req.id,
                 samples,
@@ -599,6 +629,9 @@ impl<'s, 'a, C> ComposedRefiner<'s, 'a, C> {
             m.samples.record(req.n_samples as u64);
         }
         m.batch_exec.record(total_time);
+        if let Some(rec) = record {
+            m.obs.ledger.append(rec);
+        }
         Ok(responses)
     }
 }

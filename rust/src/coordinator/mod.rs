@@ -34,6 +34,7 @@
 pub mod batcher;
 pub mod composer;
 pub mod queue;
+pub mod replay;
 pub mod request;
 pub mod scheduler;
 pub mod service;

@@ -1,0 +1,318 @@
+//! Deterministic replay of decision-ledger records (`wsfm replay`).
+//!
+//! A [`crate::obs::ledger::DecisionRecord`] carries everything the
+//! scheduler needs to re-execute its bundle: the bundle key fields, the
+//! controller and cascade policy that were in force, the stateless seeds,
+//! and the per-request output hashes. Replay rebuilds the requests and
+//! policies from the record alone, re-runs DRAFT → REFINE against a live
+//! manifest, and asserts the outputs are **bitwise identical** to what
+//! was served — `hash_samples` over every response's rows, plus the
+//! realized NFE and chosen t0.
+//!
+//! The one decision replay does *not* re-derive is the controller's t0
+//! choice: the recorded [`crate::control::ControlDecision`] is injected
+//! after the DRAFT phase, exactly where the live path computed it. This
+//! makes replay robust to calibration-table drift (the table is not part
+//! of the record) while still exercising the full RNG substream
+//! derivation, chunk planning, drafting, and refinement — if any of
+//! those changed since the record was written, the hashes diverge and
+//! the mismatch names the bundle.
+//!
+//! Degraded records are skipped (their outputs are draft tokens from a
+//! failed refine — there is nothing deterministic to reproduce), as are
+//! records whose artifacts are absent from the manifest at hand
+//! (reported separately so CI can stay strict while ad-hoc runs stay
+//! usable).
+
+use crate::cascade::Cascade;
+use crate::config::{CascadeConfig, ControlConfig};
+use crate::control::{ControlDecision, Controller};
+use crate::coordinator::batcher::WorkBundle;
+use crate::coordinator::request::{DraftSpec, GenRequest};
+use crate::coordinator::scheduler::Scheduler;
+use crate::core::schedule::WarpMode;
+use crate::metrics::ServingMetrics;
+use crate::obs::ledger::{hash_samples, DecisionRecord};
+use crate::runtime::engine::Executor;
+use crate::runtime::Manifest;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Outcome of replaying one ledger file's records.
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    /// Records re-executed with bitwise-identical outputs.
+    pub matched: usize,
+    /// `(bundle_id, reason)` for records that re-executed but diverged,
+    /// or whose recorded policies no longer parse.
+    pub mismatched: Vec<(u64, String)>,
+    /// Degraded records carry no refined output to reproduce.
+    pub skipped_degraded: usize,
+    /// `(bundle_id, reason)` for records whose artifacts the manifest
+    /// at hand cannot serve (e.g. replaying a production ledger against
+    /// a smoke-test artifact set).
+    pub skipped_unavailable: Vec<(u64, String)>,
+}
+
+impl ReplayReport {
+    /// No divergence among the records that could be re-executed.
+    pub fn is_clean(&self) -> bool {
+        self.mismatched.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "replayed {} record(s): {} matched, {} mismatched, {} degraded skipped, {} unavailable\n",
+            self.matched + self.mismatched.len(),
+            self.matched,
+            self.mismatched.len(),
+            self.skipped_degraded,
+            self.skipped_unavailable.len(),
+        );
+        for (id, reason) in &self.mismatched {
+            out.push_str(&format!("  MISMATCH bundle {id}: {reason}\n"));
+        }
+        for (id, reason) in &self.skipped_unavailable {
+            out.push_str(&format!("  skipped bundle {id}: {reason}\n"));
+        }
+        out
+    }
+}
+
+/// Rebuild the requests a record was served for. Ids, seeds, and sample
+/// counts come straight from the record; `submitted` is now (it never
+/// participates in RNG or batching).
+fn rebuild_requests(rec: &DecisionRecord) -> Result<Vec<GenRequest>> {
+    let draft = DraftSpec::parse(&rec.draft)
+        .with_context(|| format!("bundle {}: recorded draft kind", rec.bundle_id))?;
+    let warp_mode = if rec.warp_literal { WarpMode::Literal } else { WarpMode::Exact };
+    rec.requests
+        .iter()
+        .map(|r| {
+            let req = GenRequest {
+                id: r.id,
+                domain: rec.domain.clone(),
+                tag: rec.tag.clone(),
+                draft,
+                n_samples: r.n_samples,
+                t0: rec.requested_t0,
+                steps_cold: rec.steps_cold,
+                warp_mode,
+                seed: r.seed,
+                timing: false,
+                submitted: Instant::now(),
+            };
+            req.validate().with_context(|| format!("bundle {}: recorded request", rec.bundle_id))?;
+            Ok(req)
+        })
+        .collect()
+}
+
+/// Rebuild the warm-start controller a record ran under. The calibration
+/// table is deliberately empty: the recorded decision is injected
+/// verbatim, so only the mode/bounds matter — and they must match so the
+/// NFE budget (hence the `debug_assert` guarantee check) is computed the
+/// way the live path computed it.
+fn rebuild_controller(rec: &DecisionRecord) -> Result<Controller> {
+    Controller::from_config(&ControlConfig {
+        mode: rec.control_mode.clone(),
+        t0_min: rec.t0_min,
+        t0_max: rec.t0_max,
+        grid: rec.grid.clone(),
+        calibration: Vec::new(),
+    })
+    .with_context(|| format!("bundle {}: recorded controller", rec.bundle_id))
+}
+
+fn rebuild_cascade(rec: &DecisionRecord) -> Result<Cascade> {
+    Cascade::from_config(&CascadeConfig {
+        mode: rec.cascade_mode.clone(),
+        ladder: rec.ladder.clone(),
+        gate_threshold: rec.gate_threshold.unwrap_or(CascadeConfig::default().gate_threshold),
+    })
+    .with_context(|| format!("bundle {}: recorded cascade", rec.bundle_id))
+}
+
+/// Re-execute one record and return `Err(reason)` on any divergence.
+/// `Ok(())` means every response hash, the realized NFE, and the chosen
+/// t0 came out bitwise/exactly equal to the record.
+fn replay_one(
+    exec: &dyn Executor,
+    manifest: &Manifest,
+    metrics: &ServingMetrics,
+    rec: &DecisionRecord,
+) -> Result<()> {
+    let requests = rebuild_requests(rec)?;
+    let controller = rebuild_controller(rec)?;
+    let cascade = rebuild_cascade(rec)?;
+    let sched =
+        Scheduler::with_policies(exec, manifest, metrics, rec.config_seed, controller, cascade);
+
+    let key = requests[0].bundle_key();
+    let mut bundle = WorkBundle::new(key, requests);
+    bundle.bundle_id = rec.bundle_id;
+    let derived = sched.bundle_seed(&bundle);
+    if derived != rec.bundle_seed {
+        anyhow::bail!(
+            "bundle seed derivation diverged: derived {derived:#x}, recorded {:#x}",
+            rec.bundle_seed
+        );
+    }
+
+    let mut drafted = sched.draft_bundle(bundle)?;
+    // Inject the recorded decision at the DRAFT→REFINE hand-off — the
+    // exact point the live path set it.
+    drafted.decision = ControlDecision { t0: rec.chosen_t0, score: rec.score };
+    let responses = sched.refine_bundle(drafted)?;
+
+    if responses.len() != rec.requests.len() {
+        anyhow::bail!("{} responses for {} recorded requests", responses.len(), rec.requests.len());
+    }
+    for (resp, rr) in responses.iter().zip(&rec.requests) {
+        if resp.id != rr.id {
+            anyhow::bail!("response order diverged: got id {}, recorded {}", resp.id, rr.id);
+        }
+        let h = hash_samples(&resp.samples);
+        if h != rr.out_hash {
+            anyhow::bail!(
+                "request {}: output hash {h:#x} != recorded {:#x} (tokens diverged)",
+                rr.id,
+                rr.out_hash
+            );
+        }
+        if resp.nfe != rec.nfe {
+            anyhow::bail!("request {}: nfe {} != recorded {}", rr.id, resp.nfe, rec.nfe);
+        }
+        if resp.t0_used != rec.chosen_t0 {
+            anyhow::bail!("request {}: t0 {} != recorded {}", rr.id, resp.t0_used, rec.chosen_t0);
+        }
+    }
+    Ok(())
+}
+
+/// Replay every record against `exec`/`manifest`, sorting each into
+/// matched / mismatched / skipped. Never fails as a whole: a corrupt or
+/// un-servable record is that record's problem, reported in the result.
+pub fn replay_records(
+    exec: &dyn Executor,
+    manifest: &Manifest,
+    records: &[DecisionRecord],
+) -> ReplayReport {
+    let metrics = ServingMetrics::default();
+    let mut report = ReplayReport::default();
+    for rec in records {
+        if rec.degraded {
+            report.skipped_degraded += 1;
+            continue;
+        }
+        if manifest.step_batches(&rec.domain, &rec.tag).is_empty() {
+            report
+                .skipped_unavailable
+                .push((rec.bundle_id, format!("no step artifacts for {}/{}", rec.domain, rec.tag)));
+            continue;
+        }
+        match replay_one(exec, manifest, &metrics, rec) {
+            Ok(()) => report.matched += 1,
+            Err(e) => report.mismatched.push((rec.bundle_id, format!("{e:#}"))),
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{mock_manifest, request, TestExec};
+
+    /// Run a bundle live with the default in-memory ledger, then replay
+    /// what the ledger captured.
+    fn serve_and_capture(
+        cascade_mode: &str,
+        control_mode: &str,
+        config_seed: u64,
+    ) -> (Vec<DecisionRecord>, Vec<Vec<Vec<i32>>>) {
+        let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+        let metrics = ServingMetrics::default();
+        let controller = Controller::from_config(&ControlConfig {
+            mode: control_mode.into(),
+            ..ControlConfig::default()
+        })
+        .unwrap();
+        let cascade = Cascade::from_config(&CascadeConfig {
+            mode: cascade_mode.into(),
+            ..CascadeConfig::default()
+        })
+        .unwrap();
+        let sched =
+            Scheduler::with_policies(&exec, &manifest, &metrics, config_seed, controller, cascade);
+        let reqs = vec![request(1, 3), request(2, 2)];
+        let bundle = WorkBundle::new(reqs[0].bundle_key(), reqs);
+        let responses = sched.run_bundle(bundle).unwrap();
+        let samples = responses.iter().map(|r| r.samples.clone()).collect();
+        (metrics.obs.ledger.snapshot(), samples)
+    }
+
+    #[test]
+    fn replay_reproduces_served_outputs_bitwise() {
+        for (cascade_mode, control_mode) in
+            [("off", "static"), ("fixed", "static"), ("gated", "scored"), ("off", "prior")]
+        {
+            let (records, _) = serve_and_capture(cascade_mode, control_mode, 77);
+            assert_eq!(records.len(), 1, "{cascade_mode}/{control_mode}");
+            // A fresh executor + manifest (fresh caches, fresh scratch):
+            // replay must still land on the identical hashes.
+            let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+            let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+            let report = replay_records(&exec, &manifest, &records);
+            assert!(
+                report.is_clean(),
+                "{cascade_mode}/{control_mode}: {}",
+                report.render()
+            );
+            assert_eq!(report.matched, 1);
+            assert_eq!(report.skipped_degraded, 0);
+            assert!(report.skipped_unavailable.is_empty());
+        }
+    }
+
+    #[test]
+    fn replay_detects_tampered_outputs_and_seeds() {
+        let (records, _) = serve_and_capture("off", "static", 5);
+        // Tampered output hash: the replayed tokens no longer match.
+        let mut tampered = records.clone();
+        tampered[0].requests[0].out_hash ^= 1;
+        let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+        let report = replay_records(&exec, &manifest, &tampered);
+        assert_eq!(report.mismatched.len(), 1);
+        assert!(report.mismatched[0].1.contains("output hash"), "{}", report.mismatched[0].1);
+        assert!(report.render().contains("MISMATCH"));
+        // Tampered bundle seed: caught before any engine work runs.
+        let mut reseeded = records.clone();
+        reseeded[0].bundle_seed ^= 1;
+        let report = replay_records(&exec, &manifest, &reseeded);
+        assert_eq!(report.mismatched.len(), 1);
+        assert!(report.mismatched[0].1.contains("seed derivation"), "{}", report.mismatched[0].1);
+    }
+
+    #[test]
+    fn replay_skips_degraded_and_unavailable_records() {
+        let (mut records, _) = serve_and_capture("off", "static", 5);
+        let mut degraded = records[0].clone();
+        degraded.bundle_id += 1;
+        degraded.degraded = true;
+        degraded.nfe = 0;
+        let mut foreign = records[0].clone();
+        foreign.bundle_id += 2;
+        foreign.domain = "text8".into();
+        records.extend([degraded, foreign]);
+        let exec = TestExec::stochastic(vec![1, 4], 4, 5, 2);
+        let manifest = mock_manifest(&["cold"], &[1, 4], 4, 5);
+        let report = replay_records(&exec, &manifest, &records);
+        assert_eq!(report.matched, 1);
+        assert_eq!(report.skipped_degraded, 1);
+        assert_eq!(report.skipped_unavailable.len(), 1);
+        assert!(report.is_clean(), "skips are not mismatches");
+    }
+}

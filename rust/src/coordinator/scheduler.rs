@@ -193,6 +193,60 @@ impl<'a> Scheduler<'a> {
         &self.cascade
     }
 
+    /// Start a [`crate::obs::ledger::DecisionRecord`] for one bundle
+    /// with everything known on the decision side (key, controller and
+    /// cascade policy, seeds). Outcome fields (NFE, gates, replicas,
+    /// per-request hashes) start zeroed for the refine path to fill;
+    /// the degraded-fallback path keeps them zeroed, which is exactly
+    /// the "billed nothing" shape the auditor demands.
+    pub(crate) fn decision_record_base(
+        &self,
+        bundle: &WorkBundle,
+        bundle_seed: u64,
+        decision: &ControlDecision,
+    ) -> crate::obs::ledger::DecisionRecord {
+        let key = &bundle.key;
+        crate::obs::ledger::DecisionRecord {
+            bundle_id: bundle.bundle_id,
+            domain: key.domain.clone(),
+            tag: key.tag.clone(),
+            draft: key.draft.name().to_string(),
+            steps_cold: key.steps_cold,
+            requested_t0: key.t0(),
+            warp_literal: key.warp_literal,
+            control_mode: self.controller.mode().name().to_string(),
+            t0_min: self.controller.t0_min(),
+            t0_max: self.controller.t0_max(),
+            grid: self.controller.grid().to_vec(),
+            score: decision.score,
+            chosen_t0: decision.t0,
+            cascade_mode: self.cascade.mode().name().to_string(),
+            ladder: self.cascade.ladder().to_vec(),
+            gate_threshold: self.cascade.gate_threshold(),
+            gate_scores: Vec::new(),
+            exit_score: None,
+            nfe_per_stage: Vec::new(),
+            early_exit: false,
+            nfe: 0,
+            nfe_floor: self.controller.nfe_budget(key.steps_cold, key.t0()),
+            degraded: false,
+            replicas: Vec::new(),
+            reroutes: 0,
+            config_seed: self.seed,
+            bundle_seed,
+            requests: bundle
+                .requests
+                .iter()
+                .map(|r| crate::obs::ledger::RequestRecord {
+                    id: r.id,
+                    n_samples: r.n_samples,
+                    seed: r.seed,
+                    out_hash: 0,
+                })
+                .collect(),
+        }
+    }
+
     /// Resolve the draft model for a bundle at a given compiled batch size
     /// (cache-miss path; counted in `draft_models_resolved`).
     fn resolve_draft(
@@ -329,8 +383,8 @@ impl<'a> Scheduler<'a> {
         let prev = scope::begin(drafted.bundle.bundle_id);
         let out = self.refine_inner(drafted);
         let trail = scope::end(prev);
-        let mut responses = out?;
-        if let Some(trail) = trail {
+        let (mut responses, record) = out?;
+        if let Some(trail) = &trail {
             for resp in &mut responses {
                 if let Some(ti) = resp.timing.as_mut() {
                     ti.replicas = trail.replicas.clone();
@@ -338,12 +392,32 @@ impl<'a> Scheduler<'a> {
                 }
             }
         }
+        if let Some(mut rec) = record {
+            if let Some(trail) = trail {
+                rec.replicas = trail.replicas;
+                rec.reroutes = trail.reroutes;
+            }
+            self.metrics.obs.ledger.append(rec);
+        }
         Ok(responses)
     }
 
-    fn refine_inner(&self, drafted: DraftedBundle) -> Result<Vec<GenResponse>> {
+    /// REFINE body. The second return is the bundle's decision-ledger
+    /// record (`None` with the ledger disabled — the record build, hash
+    /// included, is skipped entirely so the off path pays one atomic
+    /// load); `refine_bundle` patches in the replica trail and appends.
+    fn refine_inner(
+        &self,
+        drafted: DraftedBundle,
+    ) -> Result<(Vec<GenResponse>, Option<crate::obs::ledger::DecisionRecord>)> {
         let DraftedBundle { bundle, bundle_seed: seed, chunks, decision, draft_time, started } =
             drafted;
+        let mut record = self
+            .metrics
+            .obs
+            .ledger
+            .enabled()
+            .then(|| self.decision_record_base(&bundle, seed, &decision));
         let key = &bundle.key;
         let n_total = bundle.total_samples();
         let bundle_id = bundle.bundle_id;
@@ -477,8 +551,20 @@ impl<'a> Scheduler<'a> {
                         .iter()
                         .map(|s| (s.nfe, s.elapsed.as_micros() as u64))
                         .collect();
+                    if let Some(rec) = record.as_mut() {
+                        rec.gate_scores = outcome.stages.iter().filter_map(|s| s.score).collect();
+                    }
                 }
                 info.early_exit |= outcome.early_exit;
+                if outcome.early_exit {
+                    // The exiting chunk's last gate score is the
+                    // auditor's witness that the exit was earned.
+                    if let Some(rec) = record.as_mut() {
+                        if rec.exit_score.is_none() {
+                            rec.exit_score = outcome.stages.last().and_then(|s| s.score);
+                        }
+                    }
+                }
                 self.metrics.denoiser_calls.add(total as u64);
                 self.metrics.batches_executed.inc();
                 self.metrics.padded_rows.add((init.batch - chunk.chunk_len) as u64);
@@ -506,11 +592,21 @@ impl<'a> Scheduler<'a> {
             replicas: Vec::new(), // filled from the scope trail by the wrapper
             reroutes: 0,
         });
+        if let Some(rec) = record.as_mut() {
+            rec.nfe = nfe;
+            if let Some(info) = &cascade_info {
+                rec.nfe_per_stage = info.nfe_per_stage.clone();
+                rec.early_exit = info.early_exit;
+            }
+        }
         let mut responses = Vec::with_capacity(bundle.requests.len());
         let mut cursor = 0;
-        for req in &bundle.requests {
+        for (ri, req) in bundle.requests.iter().enumerate() {
             let samples = rows[cursor..cursor + req.n_samples].to_vec();
             cursor += req.n_samples;
+            if let Some(rec) = record.as_mut() {
+                rec.requests[ri].out_hash = crate::obs::ledger::hash_samples(&samples);
+            }
             responses.push(GenResponse {
                 id: req.id,
                 samples,
@@ -528,7 +624,7 @@ impl<'a> Scheduler<'a> {
             self.metrics.samples.record(req.n_samples as u64);
         }
         self.metrics.batch_exec.record(total_time);
-        Ok(responses)
+        Ok((responses, record))
     }
 
     /// Execute one bundle serially (DRAFT then REFINE on the calling

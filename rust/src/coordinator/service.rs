@@ -142,8 +142,10 @@ impl Service {
         // bounded span/event journals shared by every stage thread
         // through the metrics handle. Strictly write-only with respect to
         // scheduling — disabling it changes no output byte.
-        let obs =
-            Arc::new(Obs::new(config.obs.enabled, config.obs.span_cap, config.obs.event_cap));
+        let obs = Arc::new(
+            Obs::new(config.obs.enabled, config.obs.span_cap, config.obs.event_cap)
+                .with_ledger(crate::obs::ledger::Ledger::from_config(&config.obs.ledger)),
+        );
         let metrics = Arc::new(ServingMetrics::with_obs(obs));
         let running = Arc::new(AtomicBool::new(true));
         // Backpressure hint unit: roughly one flush interval, floored at
@@ -203,7 +205,8 @@ impl Service {
                         let key = bundle.key.clone();
                         match scheduler.draft_bundle(bundle) {
                             Ok(drafted) => {
-                                let fallback = fallback_plan(&drafted, draft_fallback);
+                                let fallback =
+                                    fallback_plan(&scheduler, &drafted, draft_fallback);
                                 // Even serially the composer earns its
                                 // keep: a bundle's chunks (and cascade
                                 // segments) share engine steps.
@@ -462,13 +465,18 @@ struct FallbackPlan {
     t0: f64,
     draft_time: Duration,
     started: Instant,
+    /// Pre-built degraded decision-ledger record (outcome fields zeroed
+    /// = "billed nothing", hashes over the draft rows). Appended only if
+    /// the bundle actually degrades; dropped when refinement succeeds
+    /// (the refine path appends its own record).
+    record: Option<crate::obs::ledger::DecisionRecord>,
 }
 
 impl FallbackPlan {
     /// Scatter the drafted rows into degraded responses (`nfe: 0`, no
     /// cascade info, `degraded: Some(reason)`).
     fn into_responses(self, reason: &str) -> Vec<GenResponse> {
-        let FallbackPlan { rows, per_request, t0, draft_time, started } = self;
+        let FallbackPlan { rows, per_request, t0, draft_time, started, .. } = self;
         let total_time = started.elapsed();
         let now = Instant::now();
         let mut responses = Vec::with_capacity(per_request.len());
@@ -496,7 +504,12 @@ impl FallbackPlan {
 
 /// Capture the draft-fallback for a bundle about to refine. `None` when
 /// degradation is disabled (`robustness.draft_fallback = false`).
-fn fallback_plan(drafted: &DraftedBundle, enabled: bool) -> Option<FallbackPlan> {
+/// `sched` builds the degraded decision-ledger record (ledger-gated).
+fn fallback_plan(
+    sched: &Scheduler<'_>,
+    drafted: &DraftedBundle,
+    enabled: bool,
+) -> Option<FallbackPlan> {
     if !enabled {
         return None;
     }
@@ -506,6 +519,17 @@ fn fallback_plan(drafted: &DraftedBundle, enabled: bool) -> Option<FallbackPlan>
             rows.push(chunk.init.row(r).to_vec());
         }
     }
+    let record = sched.metrics.obs.ledger.enabled().then(|| {
+        let mut rec =
+            sched.decision_record_base(&drafted.bundle, drafted.bundle_seed, &drafted.decision);
+        rec.degraded = true;
+        let mut cursor = 0;
+        for rr in rec.requests.iter_mut() {
+            rr.out_hash = crate::obs::ledger::hash_samples(&rows[cursor..cursor + rr.n_samples]);
+            cursor += rr.n_samples;
+        }
+        rec
+    });
     Some(FallbackPlan {
         rows,
         per_request: drafted
@@ -517,6 +541,7 @@ fn fallback_plan(drafted: &DraftedBundle, enabled: bool) -> Option<FallbackPlan>
         t0: drafted.decision.t0,
         draft_time: drafted.draft_time,
         started: drafted.started,
+        record,
     })
 }
 
@@ -534,7 +559,7 @@ fn deliver_or_degrade(
 ) {
     match result {
         Err(e) => {
-            let Some(plan) = fallback else {
+            let Some(mut plan) = fallback else {
                 deliver(Err(e), responders, metrics, key);
                 return;
             };
@@ -545,6 +570,9 @@ fn deliver_or_degrade(
                 key.tag
             );
             metrics.obs.event(EventKind::Degraded, None, reason.clone());
+            if let Some(rec) = plan.record.take() {
+                metrics.obs.ledger.append(rec);
+            }
             let responses = plan.into_responses(&reason);
             debug_assert_eq!(responses.len(), responders.len());
             for (resp, tx) in responses.into_iter().zip(responders) {
@@ -638,7 +666,7 @@ fn draft_stage(
                             // drafts exist, so this still degrades
                             // rather than erroring.
                             let DraftedJob { drafted, responders } = handoff;
-                            let fallback = fallback_plan(&drafted, draft_fallback);
+                            let fallback = fallback_plan(&scheduler, &drafted, draft_fallback);
                             deliver_or_degrade(
                                 Err(anyhow::anyhow!("refine stage shut down")),
                                 fallback,
@@ -702,7 +730,7 @@ fn refine_stage(
             Some(job) => {
                 let DraftedJob { drafted, responders } = job;
                 let key = drafted.bundle.key.clone();
-                let fallback = fallback_plan(&drafted, draft_fallback);
+                let fallback = fallback_plan(&scheduler, &drafted, draft_fallback);
                 deliver_or_degrade(
                     scheduler.refine_bundle(drafted),
                     fallback,
@@ -751,7 +779,7 @@ fn composed_refine_loop(
         for job in ready {
             let DraftedJob { drafted, responders } = job;
             let key = drafted.bundle.key.clone();
-            let fallback = fallback_plan(&drafted, draft_fallback);
+            let fallback = fallback_plan(scheduler, &drafted, draft_fallback);
             comp.admit(RefineCtx { key, fallback, responders }, drafted);
         }
         comp.step();
@@ -944,6 +972,17 @@ mod tests {
         cascade_mode: &str,
         composed: bool,
     ) -> Vec<(f64, Vec<Vec<i32>>)> {
+        pipeline_outputs_full(depth, workers, mode, cascade_mode, composed, true)
+    }
+
+    fn pipeline_outputs_full(
+        depth: usize,
+        workers: usize,
+        mode: &str,
+        cascade_mode: &str,
+        composed: bool,
+        ledger: bool,
+    ) -> Vec<(f64, Vec<Vec<i32>>)> {
         // seq_len 16 keeps the different-seed inequality check below safe
         // from chance collisions (the drift keeps ~40% per-token overlap).
         let exec = TestExec::stochastic(vec![1, 4, 8], 16, 5, 2);
@@ -958,6 +997,7 @@ mod tests {
         cfg.control.mode = mode.into();
         cfg.cascade.mode = cascade_mode.into();
         cfg.composer.enabled = composed;
+        cfg.obs.ledger.enabled = ledger;
         let svc = Service::start(exec, manifest, cfg);
         let mut rxs = Vec::new();
         for i in 0..6u64 {
@@ -1157,6 +1197,30 @@ mod tests {
     }
 
     #[test]
+    fn decision_ledger_never_perturbs_outputs() {
+        // Acceptance sweep: the decision ledger is pure observation.
+        // Every sweep above already runs with the ledger on (the config
+        // default); here ledger-off must reproduce ledger-on byte for
+        // byte across composer on/off × cascade off|fixed|gated, on both
+        // the serial and the pipelined path.
+        for cascade in ["off", "fixed", "gated"] {
+            let with_ledger = pipeline_outputs_full(1, 1, "static", cascade, false, true);
+            for composed in [false, true] {
+                assert_eq!(
+                    with_ledger,
+                    pipeline_outputs_full(1, 1, "static", cascade, composed, false),
+                    "ledger toggle perturbed serial outputs (cascade={cascade} composed={composed})"
+                );
+                assert_eq!(
+                    with_ledger,
+                    pipeline_outputs_full(4, 2, "static", cascade, composed, false),
+                    "ledger toggle perturbed pipelined outputs (cascade={cascade} composed={composed})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn composed_serving_respects_the_nfe_guarantee() {
         // The paper's per-request guarantee survives composition: every
         // response refined through shared engine steps still reports
@@ -1352,6 +1416,15 @@ mod tests {
         assert!(resp.cascade.is_none());
         assert_eq!(svc.metrics.degraded_responses.get(), 1);
         assert_eq!(svc.metrics.requests_completed.get(), 1);
+        // The degraded bundle left a ledger record billing zero NFE —
+        // exactly the shape the guarantee auditor accepts.
+        let records = svc.metrics.obs.ledger.snapshot();
+        assert_eq!(records.len(), 1);
+        assert!(records[0].degraded);
+        assert_eq!(records[0].nfe, 0);
+        assert_eq!(records[0].requests.len(), 1);
+        assert_ne!(records[0].requests[0].out_hash, 0, "fallback drafts are still hashed");
+        assert_eq!(svc.metrics.obs.ledger.violations(), 0);
         svc.shutdown();
     }
 
@@ -1422,10 +1495,25 @@ mod tests {
             r.seed = 1000 + i;
             rxs.push(svc.submit(r).unwrap());
         }
-        let out = rxs
+        let out: Vec<Result<GenResponse, String>> = rxs
             .into_iter()
             .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("chaos hung a response"))
             .collect();
+        // The decision ledger audited every appended bundle in-line:
+        // zero guarantee violations under every fault seed is the CI
+        // chaos-matrix assertion (ledger on by default in this config).
+        let resolved = out.iter().filter(|r| r.is_ok()).count();
+        if resolved > 0 {
+            assert!(svc.metrics.obs.ledger.appended() > 0, "responses without ledger records");
+        }
+        assert_eq!(
+            svc.metrics.obs.ledger.violations(),
+            0,
+            "guarantee auditor flagged a violation under chaos"
+        );
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.guarantee_violations, 0);
+        assert_eq!(snap.ledger_records, svc.metrics.obs.ledger.appended());
         svc.shutdown();
         out
     }

@@ -148,6 +148,28 @@
 //! run with tracing on and off — and everything is strictly bounded by
 //! `config.obs` ring caps. See EXPERIMENTS.md §Observability.
 //!
+//! ## The decision ledger and guarantee audit
+//!
+//! The guarantee is per-request, so [`obs::ledger`] records it
+//! per-bundle: every delivered bundle (refined or degraded) appends one
+//! `DecisionRecord` — what was requested, what the controller and
+//! cascade decided and why (proxy scores, chosen t0, gate verdicts,
+//! per-stage NFE), what it cost (realized NFE vs the `guaranteed_nfe`
+//! floor), and the exact RNG inputs (config seed, bundle seed,
+//! per-request seeds and output hashes). An in-line auditor checks each
+//! record against the serving invariants (never over the floor unless
+//! degraded; stage sums consistent; early exits gate-passed; degraded
+//! bills zero) and bumps the `guarantee_violations` counter — pinned to
+//! 0 by the CI chaos matrix. Sliding per-`(domain, draft)` windows
+//! detect drift of the proxy scores against the controller's
+//! calibration table. Records ring-buffer in memory
+//! (`obs.ledger.cap`) and optionally stream to an append-only JSONL
+//! sink (`obs.ledger.path`; a crash loses at most the torn final
+//! line). `wsfm audit` analyzes a recorded ledger offline;
+//! `wsfm replay` re-executes it — recorded decisions injected in place
+//! of live control — and asserts bitwise-identical outputs
+//! ([`coordinator::replay`]). See EXPERIMENTS.md §Audit.
+//!
 //! ## The wire and the artifact contract
 //!
 //! The TCP protocol is a pluggable codec ([`server::codec`]): requests

@@ -6,6 +6,8 @@
 //! * `stats`       — fetch a running server's live metrics snapshot.
 //! * `info`        — artifact/manifest inventory.
 //! * `selfcheck`   — validate artifacts + run a smoke execution.
+//! * `audit`       — offline analysis of a decision-ledger JSONL file.
+//! * `replay`      — re-execute a recorded ledger, assert bitwise-identical outputs.
 //! * `bench-table1..4` — regenerate the paper's tables (see EXPERIMENTS.md).
 //! * `figures`     — dump the paper's figure data (Fig 4/5/6/7/10/14).
 
@@ -44,6 +46,8 @@ SUBCOMMANDS:
   info           print the artifact inventory
   selfcheck      validate artifacts and run a smoke execution
   verify-artifacts  check manifest content hashes against the files on disk
+  audit          analyze a decision-ledger JSONL file (guarantees, drift)
+  replay         re-execute a recorded ledger, assert bitwise-identical outputs
   bench-table1   two-moons SKL/NFE table (paper Table 1, Figs 4/5)
   bench-table2   text8 NLL/entropy/time table (paper Table 2, Fig 10)
   bench-table3   wiki perplexity table (paper Table 3, Fig 14)
@@ -65,6 +69,8 @@ fn run(args: &[String]) -> Result<()> {
         "info" => cmd_info(rest),
         "selfcheck" => cmd_selfcheck(rest),
         "verify-artifacts" => cmd_verify_artifacts(rest),
+        "audit" => cmd_audit(rest),
+        "replay" => cmd_replay(rest),
         "bench-table1" => harness::table1::main(rest),
         "bench-table2" => harness::table2::main(rest),
         "bench-table3" => harness::table3::main(rest),
@@ -152,6 +158,20 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         );
     } else {
         println!("obs: tracing off (obs.enabled=false)");
+    }
+    if cfg.obs.ledger.enabled {
+        println!(
+            "ledger: on (cap {}{}) — per-bundle decision records, guarantee auditor, \
+             drift windows; analyze with `wsfm audit` / `wsfm replay`",
+            cfg.obs.ledger.cap,
+            if cfg.obs.ledger.path.is_empty() {
+                ", in-memory".to_string()
+            } else {
+                format!(", sink {:?}", cfg.obs.ledger.path)
+            }
+        );
+    } else {
+        println!("ledger: off (obs.ledger.enabled=false)");
     }
     println!(
         "control: mode={} t0 in [{}, {}] grid {:?}{}",
@@ -267,6 +287,15 @@ fn cmd_stats(rest: &[String]) -> Result<()> {
         println!("{}", snapshot.to_json());
     } else {
         print!("{}", snapshot.render_prometheus());
+    }
+    // Event-journal eviction means `{"cmd":"trace"}` histories have a
+    // sequence gap: seqs [0, obs_events_evicted) are gone from the ring.
+    if snapshot.serving.obs_events_evicted > 0 {
+        eprintln!(
+            "warning: {} journal event(s) evicted (cap reached) — event seqs 0..{} are \
+             no longer retrievable; raise obs.event_cap to keep longer histories",
+            snapshot.serving.obs_events_evicted, snapshot.serving.obs_events_evicted
+        );
     }
     if !args.get("trace").is_empty() {
         let id: u64 = args.get("trace").parse().context("bad --trace request id")?;
@@ -403,5 +432,138 @@ fn cmd_selfcheck(rest: &[String]) -> Result<()> {
     // (microsecond-resolution compile/exec counters per replica).
     println!("fleet: {}", fleet.summary());
     fleet.shutdown();
+    Ok(())
+}
+
+/// Parse a calibration table for drift banding: either the
+/// `control_calibration.json` that `wsfm selfcheck --calibrate` writes
+/// (top-level `calibration` array) or a full config file
+/// (`control.calibration`).
+fn load_calibration(path: &str) -> Result<Vec<(f64, f64)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = wsfm::util::json::Json::parse(&text).context("calibration JSON")?;
+    let arr = match j.get("calibration").as_arr() {
+        Some(a) => a,
+        None => j
+            .get("control")
+            .get("calibration")
+            .as_arr()
+            .context("no calibration array (expected `calibration` or `control.calibration`)")?,
+    };
+    arr.iter()
+        .map(|e| {
+            Ok((
+                e.get("min_score").as_f64().context("calibration entry min_score")?,
+                e.get("t0").as_f64().context("calibration entry t0")?,
+            ))
+        })
+        .collect()
+}
+
+fn cmd_audit(rest: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "wsfm audit <ledger.jsonl>",
+        "offline decision-ledger analysis: guarantee audit + drift detection",
+    )
+    .opt("calibration", "", "calibration JSON for drift banding (selfcheck --calibrate output)");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let path = args.positional.first().context("usage: wsfm audit <ledger.jsonl>")?;
+    let (records, torn) = wsfm::obs::ledger::read_ledger(std::path::Path::new(path))?;
+    if torn {
+        eprintln!("warning: dropped a torn final line (crash mid-write); records before it are intact");
+    }
+    if records.is_empty() {
+        println!("ledger {path:?} holds no records");
+        return Ok(());
+    }
+    print!("{}", wsfm::obs::ledger::render_audit(&records));
+
+    // Re-run the guarantee auditor record by record so every violation is
+    // named, not just counted.
+    let failures: Vec<String> =
+        records.iter().filter_map(|r| wsfm::obs::ledger::audit(r).err()).collect();
+
+    // Drift view: re-feed the records through a fresh ledger's windows —
+    // identical banding to what the live server computes.
+    let calibration = if args.get("calibration").is_empty() {
+        Vec::new()
+    } else {
+        load_calibration(args.get("calibration"))?
+    };
+    let scratch = wsfm::obs::ledger::Ledger::new(true, records.len().max(1));
+    for r in &records {
+        scratch.append(r.clone());
+    }
+    println!("\ndrift (windowed proxy scores / nfe_saved per domain × draft):");
+    for cell in scratch.drift_report(&calibration) {
+        println!(
+            "  {:<12} {:<8} status={:<8} score: n={} mean={:.4} var={:.4} p50={:.4} p95={:.4}{} \
+             | nfe_saved: mean={:.2} p95={:.2}",
+            cell.domain,
+            cell.draft,
+            cell.status,
+            cell.score.count,
+            cell.score.mean,
+            cell.score.var,
+            cell.score.p50,
+            cell.score.p95,
+            match cell.band {
+                Some(b) => format!(" band={b}"),
+                None => String::new(),
+            },
+            cell.nfe_saved.mean,
+            cell.nfe_saved.p95,
+        );
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("VIOLATION: {f}");
+        }
+        bail!("{} of {} record(s) violate the serving guarantees", failures.len(), records.len());
+    }
+    println!("\nall {} record(s) pass the guarantee audit", records.len());
+    Ok(())
+}
+
+fn cmd_replay(rest: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "wsfm replay <ledger.jsonl>",
+        "re-execute recorded bundles and assert bitwise-identical outputs",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .flag("strict", "also fail when records are skipped (artifacts unavailable)");
+    let args = cli.parse(rest).map_err(|m| anyhow::anyhow!("{m}"))?;
+    let path = args.positional.first().context("usage: wsfm replay <ledger.jsonl>")?;
+    let (records, torn) = wsfm::obs::ledger::read_ledger(std::path::Path::new(path))?;
+    if torn {
+        eprintln!("warning: dropped a torn final line (crash mid-write); records before it are intact");
+    }
+    if records.is_empty() {
+        println!("ledger {path:?} holds no records; nothing to replay");
+        return Ok(());
+    }
+    // Replay needs the artifacts the records were served from. A missing
+    // artifact set is a skip, not a failure, unless --strict: fixture
+    // ledgers must stay checkable in environments without build outputs.
+    let manifest = match Manifest::load(std::path::Path::new(args.get("artifacts"))) {
+        Ok(m) => m,
+        Err(e) if !args.flag("strict") => {
+            println!("artifacts unavailable ({e:#}); skipping replay of {} record(s)", records.len());
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
+    let engine = EngineHandle::spawn(manifest.clone())?;
+    let report = wsfm::coordinator::replay::replay_records(&engine, &manifest, &records);
+    print!("{}", report.render());
+    engine.shutdown();
+    if !report.is_clean() {
+        bail!("{} record(s) did not replay bitwise-identically", report.mismatched.len());
+    }
+    if args.flag("strict") && !report.skipped_unavailable.is_empty() {
+        bail!("{} record(s) skipped with --strict", report.skipped_unavailable.len());
+    }
+    println!("replay ok: every re-executed bundle reproduced its recorded outputs bitwise");
     Ok(())
 }

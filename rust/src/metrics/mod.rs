@@ -238,6 +238,7 @@ impl ValueHistogram {
             mean: if g.count > 0 { g.sum / g.count as f64 } else { 0.0 },
             p50: pct(50.0),
             p95: pct(95.0),
+            p99: pct(99.0),
             min: if g.count > 0 { g.min } else { 0.0 },
             max: if g.count > 0 { g.max } else { 0.0 },
         }
@@ -245,13 +246,15 @@ impl ValueHistogram {
 }
 
 /// Point-in-time view of a [`ValueHistogram`], with percentile summaries
-/// (p50/p95 over the retained reservoir) like its latency counterpart.
+/// (p50/p95/p99 over the retained reservoir) like its latency
+/// counterpart.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct ValueSnapshot {
     pub count: u64,
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -259,8 +262,8 @@ pub struct ValueSnapshot {
 impl ValueSnapshot {
     pub fn report(&self, name: &str) -> String {
         format!(
-            "{name}: n={} mean={:.3} p50={:.3} p95={:.3} min={:.3} max={:.3}",
-            self.count, self.mean, self.p50, self.p95, self.min, self.max
+            "{name}: n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} min={:.3} max={:.3}",
+            self.count, self.mean, self.p50, self.p95, self.p99, self.min, self.max
         )
     }
 
@@ -270,6 +273,7 @@ impl ValueSnapshot {
             ("mean", Json::num(self.mean)),
             ("p50", Json::num(self.p50)),
             ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
             ("min", Json::num(self.min)),
             ("max", Json::num(self.max)),
         ])
@@ -282,6 +286,7 @@ impl ValueSnapshot {
             mean: f("mean"),
             p50: f("p50"),
             p95: f("p95"),
+            p99: f("p99"),
             min: f("min"),
             max: f("max"),
         }
@@ -680,6 +685,9 @@ impl ServingMetrics {
             samples_per_sec_windowed: self.samples.windowed_per_second(),
             obs_spans_recorded: self.obs.spans.recorded_by_kind().iter().map(|&(_, n)| n).sum(),
             obs_events_recorded: self.obs.events.recorded(),
+            obs_events_evicted: self.obs.events.evicted(),
+            ledger_records: self.obs.ledger.appended(),
+            guarantee_violations: self.obs.ledger.violations(),
             chosen_t0: self.chosen_t0.snapshot(),
             rows_per_step: self.rows_per_step.snapshot(),
             cascade_stage_nfe: self.cascade_stage_nfe.snapshot(),
@@ -732,6 +740,14 @@ pub struct ServingSnapshot {
     pub obs_spans_recorded: u64,
     /// Lifetime events recorded in the event journal.
     pub obs_events_recorded: u64,
+    /// Events FIFO-evicted from the bounded journal (`recorded -
+    /// evicted` are retained; nonzero means history was dropped).
+    pub obs_events_evicted: u64,
+    /// Decision-ledger records appended ([`crate::obs::ledger`]).
+    pub ledger_records: u64,
+    /// Guarantee-auditor failures over appended ledger records. The
+    /// paper's serving contract in one number: **must stay 0**.
+    pub guarantee_violations: u64,
     pub chosen_t0: ValueSnapshot,
     pub rows_per_step: ValueSnapshot,
     pub cascade_stage_nfe: ValueSnapshot,
@@ -806,6 +822,9 @@ impl ServingSnapshot {
             ("samples_per_sec_windowed", Json::num(self.samples_per_sec_windowed)),
             ("obs_spans_recorded", Json::u64(self.obs_spans_recorded)),
             ("obs_events_recorded", Json::u64(self.obs_events_recorded)),
+            ("obs_events_evicted", Json::u64(self.obs_events_evicted)),
+            ("ledger_records", Json::u64(self.ledger_records)),
+            ("guarantee_violations", Json::u64(self.guarantee_violations)),
             ("chosen_t0", self.chosen_t0.to_json()),
             ("rows_per_step", self.rows_per_step.to_json()),
             ("cascade_stage_nfe", self.cascade_stage_nfe.to_json()),
@@ -845,6 +864,9 @@ impl ServingSnapshot {
             samples_per_sec_windowed: f("samples_per_sec_windowed"),
             obs_spans_recorded: u("obs_spans_recorded"),
             obs_events_recorded: u("obs_events_recorded"),
+            obs_events_evicted: u("obs_events_evicted"),
+            ledger_records: u("ledger_records"),
+            guarantee_violations: u("guarantee_violations"),
             chosen_t0: ValueSnapshot::from_json(j.get("chosen_t0")),
             rows_per_step: ValueSnapshot::from_json(j.get("rows_per_step")),
             cascade_stage_nfe: ValueSnapshot::from_json(j.get("cascade_stage_nfe")),
@@ -912,6 +934,9 @@ impl MetricsSnapshot {
         counter("samples_total", s.samples_total);
         counter("obs_spans_recorded_total", s.obs_spans_recorded);
         counter("obs_events_recorded_total", s.obs_events_recorded);
+        counter("obs_events_evicted_total", s.obs_events_evicted);
+        counter("ledger_records_total", s.ledger_records);
+        counter("guarantee_violations_total", s.guarantee_violations);
         let mut gauge = |name: &str, v: f64| {
             out.push_str(&format!("# TYPE wsfm_{name} gauge\nwsfm_{name} {v}\n"));
         };
@@ -938,7 +963,7 @@ impl MetricsSnapshot {
         lat("request_latency", &s.request_latency);
         let mut val = |name: &str, h: &ValueSnapshot| {
             out.push_str(&format!("# TYPE wsfm_{name} summary\n"));
-            for (q, v) in [("0.5", h.p50), ("0.95", h.p95)] {
+            for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
                 out.push_str(&format!("wsfm_{name}{{quantile=\"{q}\"}} {v}\n"));
             }
             out.push_str(&format!("wsfm_{name}_count {}\n", h.count));
@@ -1087,10 +1112,12 @@ mod tests {
         assert!((s.mean - 0.68).abs() < 1e-9);
         assert!(s.p50 >= s.min && s.p50 <= s.max);
         assert!(s.p95 >= s.p50 && s.p95 <= s.max, "percentiles must be ordered");
+        assert!(s.p99 >= s.p95 && s.p99 <= s.max, "p99 sits between p95 and max");
         assert_eq!(s.p50, 0.8);
         assert_eq!(s.p95, 0.95);
+        assert_eq!(s.p99, 0.95);
         let rep = s.report("chosen_t0");
-        assert!(rep.contains("n=5") && rep.contains("p95="), "{rep}");
+        assert!(rep.contains("n=5") && rep.contains("p95=") && rep.contains("p99="), "{rep}");
     }
 
     #[test]
@@ -1102,9 +1129,10 @@ mod tests {
         let s = h.snapshot();
         assert!((s.p50 - 50.0).abs() <= 2.0, "{}", s.p50);
         assert!((s.p95 - 95.0).abs() <= 2.0, "{}", s.p95);
-        // Empty snapshot keeps both at zero.
+        assert!((s.p99 - 99.0).abs() <= 2.0, "{}", s.p99);
+        // Empty snapshot keeps all percentiles at zero.
         let e = ValueHistogram::new(16).snapshot();
-        assert_eq!((e.p50, e.p95), (0.0, 0.0));
+        assert_eq!((e.p50, e.p95, e.p99), (0.0, 0.0, 0.0));
     }
 
     #[test]
@@ -1138,7 +1166,7 @@ mod tests {
         // deterministic rendering, including the lifetime samples/s.
         let m = ServingMetrics::default();
         let hist = |name: &str| format!("{name}: n=0 mean=0.00ns p50=0.00ns p95=0.00ns p99=0.00ns max=0.00ns");
-        let vhist = |name: &str| format!("{name}: n=0 mean=0.000 p50=0.000 p95=0.000 min=0.000 max=0.000");
+        let vhist = |name: &str| format!("{name}: n=0 mean=0.000 p50=0.000 p95=0.000 p99=0.000 min=0.000 max=0.000");
         let expected = format!(
             "admitted=0 rejected=0 completed=0 batches=0 denoiser_calls=0 draft_calls=0 draft_models_resolved=0 padded_rows=0 inflight_bundles=0 nfe_saved=0 cascade_early_exits=0 early_flushes=0 degraded=0 batch_occupancy=0 wire_hellos=0 wire_codec_switches=0 wire_malformed=0 samples/s=0.00\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}\n  {}",
             vhist("chosen_t0"),
@@ -1233,13 +1261,78 @@ mod tests {
         assert!(text.contains("# TYPE wsfm_requests_completed_total counter\n"), "{text}");
         assert!(text.contains("wsfm_requests_completed_total 5\n"), "{text}");
         assert!(text.contains("wsfm_request_latency_seconds{quantile=\"0.5\"} 0.002"), "{text}");
+        assert!(text.contains("wsfm_request_latency_seconds{quantile=\"0.99\"} 0.002"), "{text}");
         assert!(text.contains("wsfm_request_latency_seconds_count 1\n"), "{text}");
+        assert!(text.contains("wsfm_obs_events_evicted_total 0\n"), "{text}");
+        assert!(text.contains("wsfm_ledger_records_total 0\n"), "{text}");
+        assert!(text.contains("wsfm_guarantee_violations_total 0\n"), "{text}");
         assert!(text.contains("wsfm_fleet_replica_dispatched_total{replica=\"0\"} 3\n"), "{text}");
         assert!(text.contains("wsfm_fleet_replica_dispatched_total{replica=\"1\"} 0\n"), "{text}");
         assert!(text.contains("wsfm_samples_per_sec_windowed"), "{text}");
         // Fleet-less exposition omits fleet series.
         let solo = MetricsSnapshot { serving: m.snapshot(), fleet: None };
         assert!(!solo.render_prometheus().contains("wsfm_fleet_"));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_the_exact_golden_string() {
+        // Golden pin: the scrape surface is a contract. A default
+        // (all-zero, fleet-less) snapshot renders deterministically;
+        // any renamed, reordered, or newly added series must show up
+        // here as an explicit diff.
+        let counter = |n: &str| format!("# TYPE wsfm_{n} counter\nwsfm_{n} 0\n");
+        let gauge = |n: &str| format!("# TYPE wsfm_{n} gauge\nwsfm_{n} 0\n");
+        let summary = |n: &str| {
+            format!(
+                "# TYPE wsfm_{n} summary\nwsfm_{n}{{quantile=\"0.5\"}} 0\nwsfm_{n}{{quantile=\"0.95\"}} 0\nwsfm_{n}{{quantile=\"0.99\"}} 0\nwsfm_{n}_count 0\n"
+            )
+        };
+        let mut expected = String::new();
+        for c in [
+            "requests_admitted_total",
+            "requests_rejected_total",
+            "requests_completed_total",
+            "batches_executed_total",
+            "denoiser_calls_total",
+            "draft_calls_total",
+            "draft_models_resolved_total",
+            "padded_rows_total",
+            "nfe_saved_total",
+            "cascade_early_exits_total",
+            "early_flushes_total",
+            "degraded_responses_total",
+            "wire_hellos_total",
+            "wire_codec_switches_total",
+            "wire_malformed_total",
+            "samples_total",
+            "obs_spans_recorded_total",
+            "obs_events_recorded_total",
+            "obs_events_evicted_total",
+            "ledger_records_total",
+            "guarantee_violations_total",
+        ] {
+            expected.push_str(&counter(c));
+        }
+        for g in
+            ["inflight_bundles", "batch_occupancy", "samples_per_sec", "samples_per_sec_windowed"]
+        {
+            expected.push_str(&gauge(g));
+        }
+        for h in [
+            "gate_eval_seconds",
+            "queue_wait_seconds",
+            "draft_queue_wait_seconds",
+            "flush_lag_seconds",
+            "flush_early_seconds",
+            "batch_exec_seconds",
+            "request_latency_seconds",
+        ] {
+            expected.push_str(&summary(h));
+        }
+        for v in ["chosen_t0", "rows_per_step", "cascade_stage_nfe"] {
+            expected.push_str(&summary(v));
+        }
+        assert_eq!(MetricsSnapshot::default().render_prometheus(), expected);
     }
 
     #[test]

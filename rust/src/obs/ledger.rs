@@ -1,0 +1,905 @@
+//! The decision ledger and guarantee auditor (EXPERIMENTS.md §Audit).
+//!
+//! The paper's headline claim is a *guaranteed* speed-up: adaptive
+//! warm-start NFE must never exceed the static `t0_min` floor, and a
+//! degraded response must never bill refinement it did not run. Until
+//! now that contract lived in `debug_assert`s and fixed-seed tests —
+//! invisible in production. This module makes it a live, queryable
+//! surface:
+//!
+//! * [`DecisionRecord`] — one typed record per refined (or degraded)
+//!   bundle: what the controller/cascade *decided* (chosen t0 and the
+//!   grid it came from, proxy score, gate threshold/verdicts) and what
+//!   it *cost* (per-stage NFE, realized NFE vs the guarantee floor,
+//!   replica trail), plus everything deterministic replay needs
+//!   (config/bundle seeds, per-request seeds, output hashes).
+//! * [`Ledger`] — a bounded in-memory ring of records plus an optional
+//!   append-only JSONL sink (`config.obs.ledger.{enabled,cap,path}`).
+//!   Each record is one line, written and flushed atomically under the
+//!   sink lock, so a crash mid-write loses at most the final record —
+//!   [`read_ledger`] tolerates exactly that torn tail.
+//! * [`audit`] — the production invariant checker run on every append:
+//!   realized NFE ≤ floor, per-stage NFE sums to the total, early exit
+//!   implies a passed gate, degraded implies NFE 0. Violations bump the
+//!   `guarantee_violations` counter surfaced in the stats snapshot; in
+//!   a healthy deployment it is 0 forever.
+//! * [`Ledger::drift_report`] — windowed Welford statistics (mean/var +
+//!   p50/p95) of proxy scores and `nfe_saved` per `(domain, draft)`
+//!   cell, banded against the calibration table so an operator can see
+//!   a draft model drifting away from its calibrated score range before
+//!   quality regresses.
+//!
+//! Like everything in [`crate::obs`], the ledger is strictly write-only
+//! with respect to scheduling: records are built *after* the tokens
+//! exist, nothing here feeds RNG or batching, and the determinism
+//! sweeps pin that outputs are bitwise-identical with the ledger on or
+//! off.
+
+use crate::core::rng::{fnv1a64, FNV_OFFSET};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-request slice of a [`DecisionRecord`]: identity, demand, the
+/// request's RNG seed (a `bundle_seed` input), and the FNV-1a hash of
+/// the response's sample rows — the replay comparison target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub n_samples: usize,
+    pub seed: u64,
+    /// [`hash_samples`] over the rows this request received.
+    pub out_hash: u64,
+}
+
+/// One bundle's decision + outcome, as recorded by the refine paths
+/// (per-bundle, composed, and degraded-fallback).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    pub bundle_id: u64,
+    pub domain: String,
+    pub tag: String,
+    /// Draft kind name ([`crate::coordinator::request::DraftSpec`]).
+    pub draft: String,
+    pub steps_cold: usize,
+    /// The *requested* t0 (bundle-key resolution) — a `bundle_seed`
+    /// input, distinct from `chosen_t0` under adaptive controllers.
+    pub requested_t0: f64,
+    pub warp_literal: bool,
+    /// Controller mode name plus the clamp range and discrete grid the
+    /// choice was made from — enough to rebuild the controller offline.
+    pub control_mode: String,
+    pub t0_min: f64,
+    pub t0_max: f64,
+    pub grid: Vec<f64>,
+    /// Draft-quality proxy score (scored mode only).
+    pub score: Option<f64>,
+    pub chosen_t0: f64,
+    pub cascade_mode: String,
+    pub ladder: Vec<f64>,
+    /// Gate threshold in effect (`gated` mode only).
+    pub gate_threshold: Option<f64>,
+    /// Gate scores of the deepest chunk, in stage order (the chunk that
+    /// defined `nfe_per_stage`).
+    pub gate_scores: Vec<f64>,
+    /// The gate score that triggered the earliest exit among chunks,
+    /// when any chunk exited early — the auditor's gate-pass witness.
+    pub exit_score: Option<f64>,
+    /// Per-stage NFE of the deepest chunk (empty when the cascade is
+    /// off).
+    pub nfe_per_stage: Vec<usize>,
+    pub early_exit: bool,
+    /// Realized NFE billed to every response in the bundle.
+    pub nfe: usize,
+    /// `guaranteed_nfe` floor the controller budgeted against.
+    pub nfe_floor: usize,
+    pub degraded: bool,
+    /// Fleet replica trail (deduped, dispatch order); empty on the
+    /// composed path, where dispatches serve many bundles at once.
+    pub replicas: Vec<u32>,
+    pub reroutes: u32,
+    pub config_seed: u64,
+    pub bundle_seed: u64,
+    pub requests: Vec<RequestRecord>,
+}
+
+/// Process-stable FNV-1a hash of sample rows, length-framed so row
+/// boundaries cannot alias. The replay comparison target.
+pub fn hash_samples(samples: &[Vec<i32>]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for row in samples {
+        h = fnv1a64(h, &(row.len() as u64).to_le_bytes());
+        for &t in row {
+            h = fnv1a64(h, &t.to_le_bytes());
+        }
+    }
+    h
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x)))
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x as f64)))
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::num(v),
+        None => Json::Null,
+    }
+}
+
+fn parse_f64_arr(j: &Json, field: &str) -> Result<Vec<f64>> {
+    j.as_arr()
+        .with_context(|| format!("ledger record: {field} must be an array"))?
+        .iter()
+        .map(|v| v.as_f64().with_context(|| format!("ledger record: {field} entry not a number")))
+        .collect()
+}
+
+fn parse_usize_arr(j: &Json, field: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .with_context(|| format!("ledger record: {field} must be an array"))?
+        .iter()
+        .map(|v| {
+            v.as_usize().with_context(|| format!("ledger record: {field} entry not an integer"))
+        })
+        .collect()
+}
+
+impl RequestRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::u64(self.id)),
+            ("n", Json::num(self.n_samples as f64)),
+            ("seed", Json::u64(self.seed)),
+            ("out_hash", Json::u64(self.out_hash)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RequestRecord> {
+        Ok(RequestRecord {
+            id: j.get("id").as_u64().context("request record: id")?,
+            n_samples: j.get("n").as_usize().context("request record: n")?,
+            seed: j.get("seed").as_u64().context("request record: seed")?,
+            out_hash: j.get("out_hash").as_u64().context("request record: out_hash")?,
+        })
+    }
+}
+
+impl DecisionRecord {
+    /// Canonical JSON object (fixed key order; seeds and hashes as exact
+    /// u64, so values ≥ 2^53 survive the round trip).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bundle_id", Json::u64(self.bundle_id)),
+            ("domain", Json::str(self.domain.clone())),
+            ("tag", Json::str(self.tag.clone())),
+            ("draft", Json::str(self.draft.clone())),
+            ("steps_cold", Json::num(self.steps_cold as f64)),
+            ("requested_t0", Json::num(self.requested_t0)),
+            ("warp_literal", Json::Bool(self.warp_literal)),
+            ("control_mode", Json::str(self.control_mode.clone())),
+            ("t0_min", Json::num(self.t0_min)),
+            ("t0_max", Json::num(self.t0_max)),
+            ("grid", f64_arr(&self.grid)),
+            ("score", opt_num(self.score)),
+            ("chosen_t0", Json::num(self.chosen_t0)),
+            ("cascade_mode", Json::str(self.cascade_mode.clone())),
+            ("ladder", f64_arr(&self.ladder)),
+            ("gate_threshold", opt_num(self.gate_threshold)),
+            ("gate_scores", f64_arr(&self.gate_scores)),
+            ("exit_score", opt_num(self.exit_score)),
+            ("nfe_per_stage", usize_arr(&self.nfe_per_stage)),
+            ("early_exit", Json::Bool(self.early_exit)),
+            ("nfe", Json::num(self.nfe as f64)),
+            ("nfe_floor", Json::num(self.nfe_floor as f64)),
+            ("degraded", Json::Bool(self.degraded)),
+            ("replicas", Json::arr(self.replicas.iter().map(|&r| Json::num(r as f64)))),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("config_seed", Json::u64(self.config_seed)),
+            ("bundle_seed", Json::u64(self.bundle_seed)),
+            ("requests", Json::arr(self.requests.iter().map(|r| r.to_json()))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DecisionRecord> {
+        let opt = |key: &str| -> Result<Option<f64>> {
+            let v = j.get(key);
+            if v.is_null() {
+                Ok(None)
+            } else {
+                Ok(Some(v.as_f64().with_context(|| format!("ledger record: {key}"))?))
+            }
+        };
+        Ok(DecisionRecord {
+            bundle_id: j.get("bundle_id").as_u64().context("ledger record: bundle_id")?,
+            domain: j.get("domain").as_str().context("ledger record: domain")?.to_string(),
+            tag: j.get("tag").as_str().context("ledger record: tag")?.to_string(),
+            draft: j.get("draft").as_str().context("ledger record: draft")?.to_string(),
+            steps_cold: j.get("steps_cold").as_usize().context("ledger record: steps_cold")?,
+            requested_t0: j.get("requested_t0").as_f64().context("ledger record: requested_t0")?,
+            warp_literal: j.get("warp_literal").as_bool().context("ledger record: warp_literal")?,
+            control_mode: j
+                .get("control_mode")
+                .as_str()
+                .context("ledger record: control_mode")?
+                .to_string(),
+            t0_min: j.get("t0_min").as_f64().context("ledger record: t0_min")?,
+            t0_max: j.get("t0_max").as_f64().context("ledger record: t0_max")?,
+            grid: parse_f64_arr(j.get("grid"), "grid")?,
+            score: opt("score")?,
+            chosen_t0: j.get("chosen_t0").as_f64().context("ledger record: chosen_t0")?,
+            cascade_mode: j
+                .get("cascade_mode")
+                .as_str()
+                .context("ledger record: cascade_mode")?
+                .to_string(),
+            ladder: parse_f64_arr(j.get("ladder"), "ladder")?,
+            gate_threshold: opt("gate_threshold")?,
+            gate_scores: parse_f64_arr(j.get("gate_scores"), "gate_scores")?,
+            exit_score: opt("exit_score")?,
+            nfe_per_stage: parse_usize_arr(j.get("nfe_per_stage"), "nfe_per_stage")?,
+            early_exit: j.get("early_exit").as_bool().context("ledger record: early_exit")?,
+            nfe: j.get("nfe").as_usize().context("ledger record: nfe")?,
+            nfe_floor: j.get("nfe_floor").as_usize().context("ledger record: nfe_floor")?,
+            degraded: j.get("degraded").as_bool().context("ledger record: degraded")?,
+            replicas: parse_usize_arr(j.get("replicas"), "replicas")?
+                .into_iter()
+                .map(|r| r as u32)
+                .collect(),
+            reroutes: j.get("reroutes").as_usize().context("ledger record: reroutes")? as u32,
+            config_seed: j.get("config_seed").as_u64().context("ledger record: config_seed")?,
+            bundle_seed: j.get("bundle_seed").as_u64().context("ledger record: bundle_seed")?,
+            requests: j
+                .get("requests")
+                .as_arr()
+                .context("ledger record: requests")?
+                .iter()
+                .map(RequestRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Total samples across the bundle's requests.
+    pub fn total_samples(&self) -> usize {
+        self.requests.iter().map(|r| r.n_samples).sum()
+    }
+}
+
+/// The guarantee auditor: check one record against the serving
+/// invariants. `Err` names the violated invariant (the caller counts it
+/// in `guarantee_violations`).
+///
+/// 1. A refined bundle never exceeds the guarantee floor:
+///    `!degraded ⇒ nfe ≤ nfe_floor`.
+/// 2. Stage accounting is consistent: a non-empty `nfe_per_stage` sums
+///    to `nfe`.
+/// 3. An early exit is only ever the result of a *passed* gate:
+///    `early_exit ⇒ exit_score ≥ gate_threshold`.
+/// 4. A degraded response bills no refinement: `degraded ⇒ nfe == 0`.
+pub fn audit(rec: &DecisionRecord) -> Result<(), String> {
+    if !rec.degraded && rec.nfe > rec.nfe_floor {
+        return Err(format!(
+            "guarantee violated: nfe {} > floor {} (bundle {})",
+            rec.nfe, rec.nfe_floor, rec.bundle_id
+        ));
+    }
+    if !rec.nfe_per_stage.is_empty() && rec.nfe_per_stage.iter().sum::<usize>() != rec.nfe {
+        return Err(format!(
+            "stage accounting inconsistent: {:?} does not sum to nfe {} (bundle {})",
+            rec.nfe_per_stage, rec.nfe, rec.bundle_id
+        ));
+    }
+    if rec.early_exit {
+        match (rec.exit_score, rec.gate_threshold) {
+            (Some(s), Some(th)) if s >= th => {}
+            _ => {
+                return Err(format!(
+                    "early exit without a passed gate: exit_score {:?} threshold {:?} (bundle {})",
+                    rec.exit_score, rec.gate_threshold, rec.bundle_id
+                ));
+            }
+        }
+    }
+    if rec.degraded && rec.nfe != 0 {
+        return Err(format!(
+            "degraded response bills nfe {} (bundle {})",
+            rec.nfe, rec.bundle_id
+        ));
+    }
+    Ok(())
+}
+
+/// Sliding per-cell sample window for drift detection.
+const DRIFT_WINDOW: usize = 256;
+/// Below this many samples a cell reports `warming`, not a verdict.
+const DRIFT_MIN_SAMPLES: u64 = 16;
+
+#[derive(Debug, Default)]
+struct DriftWindow {
+    /// `(proxy score or NaN when unscored, nfe_saved)` per record,
+    /// oldest first, capped at [`DRIFT_WINDOW`].
+    samples: VecDeque<(f64, f64)>,
+    seen: u64,
+}
+
+/// Windowed summary statistics (Welford mean/variance + rank p50/p95)
+/// over one drift-cell dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftStats {
+    pub count: u64,
+    pub mean: f64,
+    /// Population variance of the window.
+    pub var: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl DriftStats {
+    /// Welford's online algorithm over the window (single pass, no
+    /// catastrophic cancellation), plus sorted-rank percentiles.
+    fn compute(values: &[f64]) -> DriftStats {
+        let (mut mean, mut m2, mut n) = (0.0f64, 0.0f64, 0u64);
+        for &x in values {
+            n += 1;
+            let d = x - mean;
+            mean += d / n as f64;
+            m2 += d * (x - mean);
+        }
+        let var = if n > 0 { m2 / n as f64 } else { 0.0 };
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+            sorted[idx.min(sorted.len() - 1)]
+        };
+        DriftStats { count: n, mean, var, p50: pct(50.0), p95: pct(95.0) }
+    }
+}
+
+/// One `(domain, draft)` drift cell: windowed stats for the proxy score
+/// and `nfe_saved`, banded against the calibration table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftCellReport {
+    pub domain: String,
+    pub draft: String,
+    /// Stats over *scored* records only (unscored modes leave no score).
+    pub score: DriftStats,
+    pub nfe_saved: DriftStats,
+    /// Calibration band index of the windowed mean score (row in the
+    /// descending `(min_score, t0)` table), when scores exist.
+    pub band: Option<usize>,
+    /// `warming` (window not yet full enough), `ok`, or `drifting`.
+    pub status: &'static str,
+}
+
+/// Calibration band lookup: index of the first row (descending
+/// `min_score` order, the controller's own convention) whose threshold
+/// the score meets.
+fn band_of(score: f64, calibration: &[(f64, f64)]) -> Option<usize> {
+    calibration.iter().position(|&(min_score, _)| score >= min_score)
+}
+
+/// The bounded decision ledger: in-memory ring + guarantee auditor +
+/// drift windows + optional JSONL sink. Lives on [`crate::obs::Obs`];
+/// every refine path appends exactly one record per bundle outcome.
+#[derive(Debug)]
+pub struct Ledger {
+    enabled: AtomicBool,
+    cap: usize,
+    appended: AtomicU64,
+    evicted: AtomicU64,
+    violations: AtomicU64,
+    sink_errors: AtomicU64,
+    inner: Mutex<LedgerInner>,
+    sink: Option<Mutex<File>>,
+}
+
+#[derive(Debug, Default)]
+struct LedgerInner {
+    ring: VecDeque<DecisionRecord>,
+    drift: BTreeMap<(String, String), DriftWindow>,
+}
+
+impl Default for Ledger {
+    fn default() -> Ledger {
+        Ledger::new(true, 1024)
+    }
+}
+
+impl Ledger {
+    /// In-memory ledger (no sink).
+    pub fn new(enabled: bool, cap: usize) -> Ledger {
+        Ledger {
+            enabled: AtomicBool::new(enabled),
+            cap: cap.max(1),
+            appended: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            violations: AtomicU64::new(0),
+            sink_errors: AtomicU64::new(0),
+            inner: Mutex::new(LedgerInner::default()),
+            sink: None,
+        }
+    }
+
+    /// Disabled ledger: every append short-circuits on one atomic load.
+    pub fn disabled() -> Ledger {
+        Ledger::new(false, 1)
+    }
+
+    /// Build from `config.obs.ledger`, opening the append-only JSONL
+    /// sink when a path is configured. A sink that cannot be opened
+    /// degrades to in-memory (serving must not die for observability).
+    pub fn from_config(cfg: &crate::config::LedgerConfig) -> Ledger {
+        let mut ledger = Ledger::new(cfg.enabled, cfg.cap);
+        if cfg.enabled && !cfg.path.is_empty() {
+            match OpenOptions::new().create(true).append(true).open(&cfg.path) {
+                Ok(f) => ledger.sink = Some(Mutex::new(f)),
+                Err(e) => crate::error!("ledger sink {:?} unavailable ({e}); in-memory only", cfg.path),
+            }
+        }
+        ledger
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime records appended.
+    pub fn appended(&self) -> u64 {
+        self.appended.load(Ordering::Relaxed)
+    }
+
+    /// Records evicted from the in-memory ring (the JSONL sink, when
+    /// configured, still has them).
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Auditor failures observed ([`audit`]); 0 in a healthy deployment.
+    pub fn violations(&self) -> u64 {
+        self.violations.load(Ordering::Relaxed)
+    }
+
+    /// Sink write failures (the record still landed in the ring).
+    pub fn sink_errors(&self) -> u64 {
+        self.sink_errors.load(Ordering::Relaxed)
+    }
+
+    /// Ring capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Retained records, oldest first.
+    pub fn snapshot(&self) -> Vec<DecisionRecord> {
+        self.inner.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Append one record: audit it, window it for drift, ring it, and
+    /// (when configured) write one JSONL line. Strictly observational —
+    /// never returns an error to the serving path.
+    pub fn append(&self, rec: DecisionRecord) {
+        if !self.enabled() {
+            return;
+        }
+        if let Err(why) = audit(&rec) {
+            self.violations.fetch_add(1, Ordering::Relaxed);
+            crate::error!("ledger auditor: {why}");
+        }
+        let line = if self.sink.is_some() { Some(rec.to_json().to_string()) } else { None };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let nfe_saved = rec.nfe_floor.saturating_sub(rec.nfe) as f64;
+            let cell = inner
+                .drift
+                .entry((rec.domain.clone(), rec.draft.clone()))
+                .or_default();
+            if cell.samples.len() == DRIFT_WINDOW {
+                cell.samples.pop_front();
+            }
+            cell.samples.push_back((rec.score.unwrap_or(f64::NAN), nfe_saved));
+            cell.seen += 1;
+            if inner.ring.len() == self.cap {
+                inner.ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            inner.ring.push_back(rec);
+        }
+        if let (Some(sink), Some(line)) = (&self.sink, line) {
+            let mut f = sink.lock().unwrap();
+            // One line per record, flushed under the lock: a crash can
+            // tear at most the final line, which `read_ledger` drops.
+            if writeln!(f, "{line}").and_then(|_| f.flush()).is_err() {
+                self.sink_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.appended.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drift report over every `(domain, draft)` cell, banded against a
+    /// calibration table (descending `(min_score, t0)` rows — the
+    /// controller's own table). A cell is `drifting` when its windowed
+    /// mean and median land in different calibration bands (the score
+    /// distribution straddles a decision boundary, so the controller's
+    /// t0 choices have become unstable for that draft source);
+    /// `warming` until the window holds [`DRIFT_MIN_SAMPLES`] records.
+    pub fn drift_report(&self, calibration: &[(f64, f64)]) -> Vec<DriftCellReport> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(inner.drift.len());
+        for ((domain, draft), win) in inner.drift.iter() {
+            let scores: Vec<f64> =
+                win.samples.iter().map(|&(s, _)| s).filter(|s| !s.is_nan()).collect();
+            let saved: Vec<f64> = win.samples.iter().map(|&(_, v)| v).collect();
+            let score = DriftStats::compute(&scores);
+            let nfe_saved = DriftStats::compute(&saved);
+            let band = (score.count > 0).then(|| band_of(score.mean, calibration)).flatten();
+            let status = if win.seen < DRIFT_MIN_SAMPLES {
+                "warming"
+            } else if score.count > 0
+                && band_of(score.mean, calibration) != band_of(score.p50, calibration)
+            {
+                "drifting"
+            } else {
+                "ok"
+            };
+            out.push(DriftCellReport {
+                domain: domain.clone(),
+                draft: draft.clone(),
+                score,
+                nfe_saved,
+                band,
+                status,
+            });
+        }
+        out
+    }
+}
+
+/// Parse a JSONL ledger file. Returns the records plus a `torn` flag:
+/// an unparseable **final** line on a file without a trailing newline is
+/// the documented crash-mid-write case and is dropped silently-but-
+/// flagged; garbage anywhere else is a real error.
+pub fn read_ledger(path: &Path) -> Result<(Vec<DecisionRecord>, bool)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading ledger {}", path.display()))?;
+    let clean_tail = text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut records = Vec::with_capacity(lines.len());
+    let mut torn = false;
+    for (i, line) in lines.iter().enumerate() {
+        let last = i + 1 == lines.len();
+        let parsed = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .and_then(|j| DecisionRecord::from_json(&j));
+        match parsed {
+            Ok(rec) => records.push(rec),
+            Err(_) if last && !clean_tail => {
+                // The torn-final-line contract: at most one record lost.
+                torn = true;
+            }
+            Err(e) => bail!("ledger {} line {}: {e:#}", path.display(), i + 1),
+        }
+    }
+    Ok((records, torn))
+}
+
+/// Render per-`(domain, draft)` decision/outcome tables for `wsfm
+/// audit`: record counts, NFE totals vs floors, early exits, degraded
+/// counts, and chosen-t0 spread — the offline view of what the
+/// controller did with each draft source.
+pub fn render_audit(records: &[DecisionRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut cells: BTreeMap<(String, String), Vec<&DecisionRecord>> = BTreeMap::new();
+    for r in records {
+        cells.entry((r.domain.clone(), r.draft.clone())).or_default().push(r);
+    }
+    let mut out = String::new();
+    let mut violations = 0usize;
+    let _ = writeln!(out, "ledger: {} records, {} cells", records.len(), cells.len());
+    let _ = writeln!(
+        out,
+        "{:<24} {:>7} {:>9} {:>9} {:>7} {:>9} {:>9} {:>10}",
+        "domain/draft", "records", "nfe", "floor", "saved", "early", "degraded", "t0 range"
+    );
+    for ((domain, draft), rs) in &cells {
+        let nfe: usize = rs.iter().map(|r| r.nfe).sum();
+        let floor: usize = rs.iter().map(|r| r.nfe_floor).sum();
+        let early = rs.iter().filter(|r| r.early_exit).count();
+        let degraded = rs.iter().filter(|r| r.degraded).count();
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for r in rs.iter() {
+            lo = lo.min(r.chosen_t0);
+            hi = hi.max(r.chosen_t0);
+        }
+        violations += rs.iter().filter(|r| audit(r).is_err()).count();
+        let _ = writeln!(
+            out,
+            "{:<24} {:>7} {:>9} {:>9} {:>7} {:>9} {:>9} {:>4.2}-{:<4.2}",
+            format!("{domain}/{draft}"),
+            rs.len(),
+            nfe,
+            floor,
+            floor.saturating_sub(nfe),
+            early,
+            degraded,
+            lo,
+            hi
+        );
+    }
+    let _ = writeln!(out, "guarantee violations: {violations}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(bundle_id: u64) -> DecisionRecord {
+        DecisionRecord {
+            bundle_id,
+            domain: "two_moons".into(),
+            tag: "cold".into(),
+            draft: "noise".into(),
+            steps_cold: 10,
+            requested_t0: 0.5,
+            warp_literal: true,
+            control_mode: "scored".into(),
+            t0_min: 0.35,
+            t0_max: 0.95,
+            grid: vec![0.35, 0.5, 0.8, 0.95],
+            score: Some(0.41),
+            chosen_t0: 0.5,
+            cascade_mode: "gated".into(),
+            ladder: vec![0.75, 0.9],
+            gate_threshold: Some(0.45),
+            gate_scores: vec![0.3, 0.5],
+            exit_score: Some(0.5),
+            nfe_per_stage: vec![3, 1],
+            early_exit: true,
+            nfe: 4,
+            nfe_floor: 7,
+            degraded: false,
+            replicas: vec![2, 0],
+            reroutes: 1,
+            config_seed: 99,
+            // Above 2^53: pins the exact-u64 JSON path.
+            bundle_seed: 0xDEAD_BEEF_CAFE_F00D,
+            requests: vec![
+                RequestRecord { id: 7, n_samples: 2, seed: 1000, out_hash: u64::MAX - 3 },
+                RequestRecord { id: 8, n_samples: 1, seed: 1001, out_hash: 42 },
+            ],
+        }
+    }
+
+    #[test]
+    fn record_json_round_trips_exactly() {
+        let rec = record(3);
+        let j = rec.to_json().to_string();
+        let back = DecisionRecord::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        // Seeds/hashes above 2^53 survive (the Json::u64 path).
+        assert_eq!(back.bundle_seed, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(back.requests[0].out_hash, u64::MAX - 3);
+        // A second serialization is byte-identical (canonical key order).
+        assert_eq!(back.to_json().to_string(), j);
+    }
+
+    #[test]
+    fn sample_hash_frames_row_boundaries() {
+        let a = hash_samples(&[vec![1, 2], vec![3]]);
+        let b = hash_samples(&[vec![1], vec![2, 3]]);
+        let c = hash_samples(&[vec![1, 2, 3]]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, hash_samples(&[vec![1, 2], vec![3]]));
+    }
+
+    #[test]
+    fn auditor_accepts_healthy_records() {
+        assert!(audit(&record(1)).is_ok());
+        // Cascade off: empty stages, no gates.
+        let mut plain = record(2);
+        plain.cascade_mode = "off".into();
+        plain.nfe_per_stage.clear();
+        plain.gate_scores.clear();
+        plain.gate_threshold = None;
+        plain.exit_score = None;
+        plain.early_exit = false;
+        plain.nfe = 5;
+        assert!(audit(&plain).is_ok());
+    }
+
+    #[test]
+    fn auditor_flags_each_invariant() {
+        // 1. NFE above the guarantee floor.
+        let mut r = record(1);
+        r.nfe = 8;
+        r.nfe_per_stage = vec![4, 4];
+        r.early_exit = false;
+        assert!(audit(&r).unwrap_err().contains("guarantee violated"));
+        // 2. Stage sum mismatch.
+        let mut r = record(2);
+        r.nfe_per_stage = vec![3, 3];
+        assert!(audit(&r).unwrap_err().contains("stage accounting"));
+        // 3. Early exit without a passed gate.
+        let mut r = record(3);
+        r.exit_score = Some(0.1);
+        assert!(audit(&r).unwrap_err().contains("early exit"));
+        let mut r = record(4);
+        r.exit_score = None;
+        assert!(audit(&r).unwrap_err().contains("early exit"));
+        // 4. Degraded response billing refinement.
+        let mut r = record(5);
+        r.degraded = true;
+        r.early_exit = false;
+        r.nfe_per_stage.clear();
+        assert!(audit(&r).unwrap_err().contains("degraded"));
+    }
+
+    #[test]
+    fn ledger_rings_audits_and_counts() {
+        let ledger = Ledger::new(true, 2);
+        for i in 0..3 {
+            ledger.append(record(i));
+        }
+        assert_eq!(ledger.appended(), 3);
+        assert_eq!(ledger.evicted(), 1);
+        assert_eq!(ledger.violations(), 0);
+        let kept = ledger.snapshot();
+        assert_eq!(kept.len(), 2, "ring caps at 2");
+        assert_eq!(kept[0].bundle_id, 1, "oldest evicted first");
+        // A violating record is retained AND counted.
+        let mut bad = record(9);
+        bad.nfe = 99;
+        bad.nfe_per_stage.clear();
+        bad.early_exit = false;
+        ledger.append(bad);
+        assert_eq!(ledger.violations(), 1);
+        assert_eq!(ledger.snapshot().last().unwrap().bundle_id, 9);
+    }
+
+    #[test]
+    fn disabled_ledger_records_nothing() {
+        let ledger = Ledger::disabled();
+        ledger.append(record(1));
+        assert_eq!(ledger.appended(), 0);
+        assert!(ledger.snapshot().is_empty());
+        assert_eq!(ledger.violations(), 0);
+    }
+
+    #[test]
+    fn jsonl_sink_round_trips_through_read_ledger() {
+        let dir = std::env::temp_dir().join(format!("wsfm_ledger_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let cfg = crate::config::LedgerConfig {
+            enabled: true,
+            cap: 8,
+            path: path.to_string_lossy().into_owned(),
+        };
+        let ledger = Ledger::from_config(&cfg);
+        let want: Vec<DecisionRecord> = (0..3).map(record).collect();
+        for r in &want {
+            ledger.append(r.clone());
+        }
+        assert_eq!(ledger.sink_errors(), 0);
+        let (got, torn) = read_ledger(&path).unwrap();
+        assert!(!torn);
+        assert_eq!(got, want, "write → parse must be identical records");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_and_flagged() {
+        let dir = std::env::temp_dir().join(format!("wsfm_ledger_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        let mut text = String::new();
+        text.push_str(&record(1).to_json().to_string());
+        text.push('\n');
+        text.push_str(&record(2).to_json().to_string());
+        text.push('\n');
+        // Crash mid-write: the final record is cut off, no newline.
+        let full = record(3).to_json().to_string();
+        text.push_str(&full[..full.len() / 2]);
+        std::fs::write(&path, &text).unwrap();
+        let (got, torn) = read_ledger(&path).unwrap();
+        assert!(torn, "torn tail must be flagged");
+        assert_eq!(got.len(), 2, "at most the final record is lost");
+        assert_eq!(got[0].bundle_id, 1);
+        assert_eq!(got[1].bundle_id, 2);
+        // Garbage mid-file is NOT the torn case: hard error.
+        let bad = format!("{}\nnot json\n{}\n", record(1).to_json(), record(2).to_json());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_ledger(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn drift_report_bands_and_flags_straddling_distributions() {
+        // Calibration table in the controller's descending convention.
+        let table = [(0.9, 0.95), (0.65, 0.8), (0.5, 0.65), (0.0, 0.35)];
+        let ledger = Ledger::new(true, 1024);
+        // Cell A: tight scores inside one band -> ok.
+        for i in 0..20 {
+            let mut r = record(i);
+            r.draft = "good".into();
+            r.score = Some(0.91 + (i % 3) as f64 * 0.01);
+            r.exit_score = Some(0.91);
+            ledger.append(r);
+        }
+        // Cell B: bimodal scores straddling a band boundary -> the mean
+        // lands in a different band than the median -> drifting.
+        for i in 0..20 {
+            let mut r = record(100 + i);
+            r.draft = "fair".into();
+            r.score = Some(if i % 2 == 0 { 0.95 } else { 0.05 });
+            r.exit_score = Some(0.95);
+            ledger.append(r);
+        }
+        // Cell C: too few samples -> warming.
+        for i in 0..3 {
+            let mut r = record(200 + i);
+            r.draft = "poor".into();
+            r.score = Some(0.3);
+            r.exit_score = Some(0.5);
+            ledger.append(r);
+        }
+        let report = ledger.drift_report(&table);
+        assert_eq!(report.len(), 3);
+        let cell = |d: &str| report.iter().find(|c| c.draft == d).unwrap();
+        let good = cell("good");
+        assert_eq!(good.status, "ok");
+        assert_eq!(good.band, Some(0));
+        assert_eq!(good.score.count, 20);
+        assert!(good.score.mean > 0.9 && good.score.var < 0.01);
+        assert_eq!(good.nfe_saved.count, 20);
+        assert_eq!(good.nfe_saved.p50, 3.0); // floor 7 - nfe 4
+        let fair = cell("fair");
+        assert_eq!(fair.status, "drifting", "straddling distribution must flag");
+        let poor = cell("poor");
+        assert_eq!(poor.status, "warming");
+        // Welford mean/var sanity on the bimodal cell: mean 0.5, var 0.2025.
+        assert!((fair.score.mean - 0.5).abs() < 1e-12);
+        assert!((fair.score.var - 0.2025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drift_window_is_bounded() {
+        let ledger = Ledger::new(true, 4);
+        for i in 0..(DRIFT_WINDOW as u64 + 50) {
+            ledger.append(record(i));
+        }
+        let report = ledger.drift_report(&[(0.0, 0.35)]);
+        assert_eq!(report.len(), 1);
+        assert_eq!(report[0].score.count as usize, DRIFT_WINDOW, "window must cap");
+        // The ring stayed at its own (smaller) cap.
+        assert_eq!(ledger.snapshot().len(), 4);
+    }
+
+    #[test]
+    fn audit_rendering_summarizes_cells() {
+        let mut records: Vec<DecisionRecord> = (0..4).map(record).collect();
+        records[3].degraded = true;
+        records[3].nfe = 0;
+        records[3].early_exit = false;
+        records[3].nfe_per_stage.clear();
+        let text = render_audit(&records);
+        assert!(text.contains("4 records"), "{text}");
+        assert!(text.contains("two_moons/noise"), "{text}");
+        assert!(text.contains("guarantee violations: 0"), "{text}");
+    }
+}

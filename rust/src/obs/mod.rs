@@ -13,13 +13,19 @@
 //!   every fleet/fault transition (quarantine, respawn, reroute, watchdog
 //!   timeout, artifact swap/rollback, degraded response, codec switch),
 //!   turning the counter-only view into *when/which/why*.
+//! * [`ledger`] — the decision ledger + guarantee auditor: one typed
+//!   [`ledger::DecisionRecord`] per bundle outcome (controller/cascade
+//!   decisions, realized NFE vs the guarantee floor, replay seeds and
+//!   output hashes), ring-buffered with an optional append-only JSONL
+//!   sink, audited on append, and windowed for calibration drift.
 //!
-//! Both are strictly bounded (ring caps from `config.obs`, pinned by
-//! tests) and both gate on [`Obs::enabled`]: with observability off every
-//! recording call is a single relaxed atomic load. The contract that
-//! matters most is **observation never perturbs outputs** — nothing in
-//! this module touches RNG, scheduling decisions, or token data, so the
-//! bitwise-determinism sweeps hold with tracing on or off.
+//! All three are strictly bounded (ring caps from `config.obs`, pinned
+//! by tests) and all gate on an enabled flag: with observability off
+//! every recording call is a single relaxed atomic load. The contract
+//! that matters most is **observation never perturbs outputs** — nothing
+//! in this module touches RNG, scheduling decisions, or token data, so
+//! the bitwise-determinism sweeps hold with tracing and the ledger on or
+//! off.
 //!
 //! Identity threading: the admission path mints a `bundle_id` per flushed
 //! [`crate::coordinator::WorkBundle`] (`Obs::next_bundle_id`), and spans
@@ -35,6 +41,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+pub mod ledger;
 
 /// Typed span kinds, one ring shard per kind. `#[repr(u8)]` so records
 /// serialize to the binary wire as a single tag byte.
@@ -244,6 +252,9 @@ pub enum EventKind {
     ArtifactRollback = 6,
     Degraded = 7,
     CodecSwitch = 8,
+    /// Typed BUSY admission rejection (detail carries retry_after_ms),
+    /// so overload episodes are reconstructible from the journal.
+    Busy = 9,
 }
 
 impl EventKind {
@@ -258,6 +269,7 @@ impl EventKind {
             EventKind::ArtifactRollback => "artifact_rollback",
             EventKind::Degraded => "degraded",
             EventKind::CodecSwitch => "codec_switch",
+            EventKind::Busy => "busy",
         }
     }
 
@@ -272,6 +284,7 @@ impl EventKind {
             6 => EventKind::ArtifactRollback,
             7 => EventKind::Degraded,
             8 => EventKind::CodecSwitch,
+            9 => EventKind::Busy,
             _ => return None,
         })
     }
@@ -297,6 +310,7 @@ pub struct EventJournal {
     cap: usize,
     origin: Instant,
     seq: AtomicU64,
+    evicted: AtomicU64,
     inner: Mutex<VecDeque<EventRecord>>,
 }
 
@@ -307,6 +321,7 @@ impl EventJournal {
             cap,
             origin: Instant::now(),
             seq: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
             inner: Mutex::new(VecDeque::with_capacity(cap)),
         }
     }
@@ -325,6 +340,7 @@ impl EventJournal {
         let mut q = self.inner.lock().unwrap();
         if q.len() == self.cap {
             q.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
         }
         q.push_back(rec);
     }
@@ -332,6 +348,14 @@ impl EventJournal {
     /// Lifetime events recorded (== next seq).
     pub fn recorded(&self) -> u64 {
         self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime events FIFO-evicted at the cap: `recorded - evicted`
+    /// entries are retained, and a consumer that sees the retained
+    /// front's seq exceed its last-seen seq + 1 knows history was
+    /// dropped rather than silently lost.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
     }
 
     /// Retained entries, oldest first.
@@ -354,6 +378,9 @@ pub struct Obs {
     enabled: AtomicBool,
     pub spans: SpanJournal,
     pub events: EventJournal,
+    /// Decision ledger + guarantee auditor. Gated by its own enabled
+    /// flag (`config.obs.ledger`), independent of span/event tracing.
+    pub ledger: ledger::Ledger,
     next_bundle: AtomicU64,
 }
 
@@ -369,13 +396,21 @@ impl Obs {
             enabled: AtomicBool::new(enabled),
             spans: SpanJournal::new(span_cap),
             events: EventJournal::new(event_cap),
+            ledger: ledger::Ledger::default(),
             next_bundle: AtomicU64::new(1),
         }
     }
 
+    /// Replace the default (in-memory, cap 1024) ledger — used by
+    /// service startup to apply `config.obs.ledger`.
+    pub fn with_ledger(mut self, ledger: ledger::Ledger) -> Obs {
+        self.ledger = ledger;
+        self
+    }
+
     /// Disabled hub: every record call short-circuits on one atomic load.
     pub fn disabled() -> Obs {
-        Obs::new(false, 1, 1)
+        Obs::new(false, 1, 1).with_ledger(ledger::Ledger::disabled())
     }
 
     pub fn enabled(&self) -> bool {
@@ -546,11 +581,13 @@ mod tests {
             j.record(EventKind::Quarantine, Some(i % 2), format!("e{i}"));
         }
         assert_eq!(j.recorded(), 7);
+        assert_eq!(j.evicted(), 4, "7 recorded - 3 retained = 4 evicted");
         let kept = j.snapshot();
         assert_eq!(kept.len(), 3, "FIFO eviction at cap");
         let seqs: Vec<u64> = kept.iter().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![4, 5, 6], "oldest evicted, seq gap-free");
         assert_eq!(kept[0].detail, "e4");
+        assert_eq!(j.recorded() - j.evicted(), kept.len() as u64);
     }
 
     #[test]
@@ -560,6 +597,7 @@ mod tests {
         o.event(EventKind::Reroute, None, "x");
         assert_eq!(o.spans.retained(), 0);
         assert_eq!(o.events.recorded(), 0);
+        assert!(!o.ledger.enabled(), "disabled hub disables the ledger too");
         assert_eq!(o.next_bundle_id(), 1);
         assert_eq!(o.next_bundle_id(), 2);
         o.set_enabled(true);
@@ -590,10 +628,10 @@ mod tests {
             assert_eq!(SpanKind::from_u8(k as u8), Some(k));
         }
         assert_eq!(SpanKind::from_u8(200), None);
-        for v in 0..=8u8 {
+        for v in 0..=9u8 {
             let k = EventKind::from_u8(v).unwrap();
             assert_eq!(k as u8, v);
         }
-        assert_eq!(EventKind::from_u8(9), None);
+        assert_eq!(EventKind::from_u8(10), None);
     }
 }

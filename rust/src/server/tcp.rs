@@ -231,10 +231,18 @@ fn handle_conn(
                 let domain = request.domain.clone();
                 match service.submit(request) {
                     // Typed BUSY: backpressure with a retry-after hint,
-                    // not a generic error string.
-                    Err(_) => WireResponse::Busy {
-                        retry_after_ms: (service.retry_after().as_millis().max(1)) as u64,
-                    },
+                    // not a generic error string. Journaled so admission
+                    // rejections are visible in `{"cmd":"trace"}` land.
+                    Err(_) => {
+                        let retry_after_ms =
+                            (service.retry_after().as_millis().max(1)) as u64;
+                        service.metrics.obs.event(
+                            EventKind::Busy,
+                            None,
+                            format!("retry_after_ms={retry_after_ms}"),
+                        );
+                        WireResponse::Busy { retry_after_ms }
+                    }
                     Ok(rx) => match rx.recv() {
                         Ok(Ok(resp)) => {
                             let texts =
@@ -512,6 +520,11 @@ mod tests {
         assert!(busy >= 1, "expected at least one BUSY rejection (ok={ok})");
         assert!(ok >= 1, "expected at least one completion");
         assert_eq!(ok + busy, 16);
+        // Every BUSY rejection is journaled with its retry hint: the
+        // event journal is how post-hoc analysis sees admission pressure.
+        let busy_events = service.metrics.obs.events.of_kind(crate::obs::EventKind::Busy);
+        assert_eq!(busy_events.len(), busy, "one Busy event per rejection");
+        assert!(busy_events.iter().all(|e| e.detail.starts_with("retry_after_ms=")));
         // The hint is occupancy-derived: rejections happened while the
         // pipeline was saturated, so at least one busy slot's flush
         // interval (5 ms) rode on top of the 1 ms floor.

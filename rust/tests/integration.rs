@@ -62,6 +62,33 @@ fn checked_in_fixture_manifest_verifies() {
     assert_eq!((report.verified, report.unhashed), (1, 0));
 }
 
+/// The checked-in decision-ledger fixture (no `make artifacts` needed):
+/// every line parses as a `DecisionRecord`, the file is not torn, and
+/// every record passes the guarantee auditor — the same invariants the
+/// CI wire-compat job exercises via `wsfm audit` / `wsfm replay` on this
+/// file. Guards the fixture against ledger schema drift.
+#[test]
+fn checked_in_fixture_ledger_parses_and_audits_clean() {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ledger_v1.jsonl");
+    let (records, torn) = wsfm::obs::ledger::read_ledger(&path).unwrap();
+    assert!(!torn, "fixture ledger must end on a complete line");
+    assert_eq!(records.len(), 3);
+    for rec in &records {
+        assert_eq!(wsfm::obs::ledger::audit(rec), Ok(()), "bundle {}", rec.bundle_id);
+    }
+    // One refined, one early-exit cascade, one degraded record — the
+    // three decision shapes the auditor distinguishes.
+    assert!(!records[0].degraded && !records[0].early_exit);
+    assert!(records[1].early_exit && records[1].exit_score.is_some());
+    assert!(records[2].degraded && records[2].nfe == 0);
+    // Round trip: canonical JSON survives parse → render → parse.
+    for rec in &records {
+        let back = wsfm::obs::ledger::DecisionRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(&back, rec);
+    }
+}
+
 #[test]
 fn manifest_selfcheck_passes() {
     let dir = require_artifacts!();
